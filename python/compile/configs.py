@@ -1,0 +1,263 @@
+"""Model-size presets and variant descriptors for the DQT reproduction.
+
+The paper (Table 2) trains 130M / 320M / 1B LLaMA-structured models. Those
+exact configs are kept here (used by the Rust memory model and available for
+AOT if you have the compute); the default presets are scaled-down versions
+("t130" / "t320" / "t1b") that preserve the *relative* scaling so the
+paper's size-trend experiments (Fig. 2) run on a CPU PJRT testbed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-structured transformer configuration (paper Table 2 schema)."""
+
+    name: str
+    vocab_size: int
+    hidden_size: int
+    intermediate_size: int
+    num_hidden_layers: int
+    num_attention_heads: int
+    max_seq_len: int
+    batch_size: int
+    tie_embeddings: bool = True
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden_size % self.num_attention_heads == 0
+        return self.hidden_size // self.num_attention_heads
+
+    def param_count(self) -> int:
+        """Exact parameter count for this config (used by the memory model)."""
+        v, h, i, l = (
+            self.vocab_size,
+            self.hidden_size,
+            self.intermediate_size,
+            self.num_hidden_layers,
+        )
+        emb = v * h
+        per_layer = (
+            4 * h * h  # q, k, v, o projections
+            + 3 * h * i  # gate, up, down
+            + 2 * h  # two RMSNorm scales
+        )
+        final_norm = h
+        head = 0 if self.tie_embeddings else v * h
+        return emb + l * per_layer + final_norm + head
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["head_dim"] = self.head_dim
+        d["param_count"] = self.param_count()
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Paper-exact configs (Table 2). vocab 32k ~ the released BitNet tokenizer.
+# ---------------------------------------------------------------------------
+PAPER_CONFIGS = {
+    "p130m": ModelConfig(
+        name="p130m",
+        vocab_size=32000,
+        hidden_size=768,
+        intermediate_size=2048,
+        num_hidden_layers=12,
+        num_attention_heads=12,
+        max_seq_len=512,
+        batch_size=64,
+    ),
+    "p320m": ModelConfig(
+        name="p320m",
+        vocab_size=32000,
+        hidden_size=1024,
+        intermediate_size=2048,
+        num_hidden_layers=24,
+        num_attention_heads=16,
+        max_seq_len=512,
+        batch_size=32,
+    ),
+    "p1b": ModelConfig(
+        name="p1b",
+        vocab_size=32000,
+        hidden_size=2048,
+        intermediate_size=3072,
+        num_hidden_layers=24,
+        num_attention_heads=32,
+        max_seq_len=512,
+        batch_size=16,
+    ),
+}
+
+# ---------------------------------------------------------------------------
+# Scaled testbed configs: same depth/width *ratios* as the paper triple, sized
+# for CPU PJRT. vocab matches the Rust BPE tokenizer (data/tokenizer.rs).
+# ---------------------------------------------------------------------------
+TESTBED_CONFIGS = {
+    # ~1.0M params
+    "t130": ModelConfig(
+        name="t130",
+        vocab_size=512,
+        hidden_size=96,
+        intermediate_size=256,
+        num_hidden_layers=6,
+        num_attention_heads=6,
+        max_seq_len=128,
+        batch_size=16,
+    ),
+    # ~2.8M params
+    "t320": ModelConfig(
+        name="t320",
+        vocab_size=512,
+        hidden_size=128,
+        intermediate_size=256,
+        num_hidden_layers=12,
+        num_attention_heads=8,
+        max_seq_len=128,
+        batch_size=8,
+    ),
+    # ~9.8M params
+    "t1b": ModelConfig(
+        name="t1b",
+        vocab_size=512,
+        hidden_size=256,
+        intermediate_size=384,
+        num_hidden_layers=12,
+        num_attention_heads=8,
+        max_seq_len=128,
+        batch_size=4,
+    ),
+    # micro config used by pytest only
+    "test": ModelConfig(
+        name="test",
+        vocab_size=64,
+        hidden_size=32,
+        intermediate_size=64,
+        num_hidden_layers=2,
+        num_attention_heads=2,
+        max_seq_len=16,
+        batch_size=2,
+    ),
+}
+
+ALL_CONFIGS = {**PAPER_CONFIGS, **TESTBED_CONFIGS}
+
+
+# ---------------------------------------------------------------------------
+# Quantization / training-variant descriptor
+# ---------------------------------------------------------------------------
+
+#: weight-handling modes (paper §3, §4, §5)
+MODES = (
+    "fp32",  # unquantized LLaMA baseline
+    "bitnet158",  # BitNet b1.58: FP32 master + STE, absmean ternary forward
+    "dqt",  # ours: grid-only weights + stochastic rounding (bits below)
+    "dqt_absmax",  # Fig. 5 ablation: requantize W' with round-to-nearest
+    "dqt_ternary_inf",  # §A.2: 8-bit DQT trained for ternary inference (STE)
+)
+
+#: precision environments (paper §4.3). These simulate reduced-memory
+#: training by casting optimizer state and transient dense updates.
+ENVS = ("fp32", "bf16", "fp8")
+
+OPTIMIZERS = ("adamw", "adafactor")
+
+#: Fig. 7 interventions on the bottom-20% smallest weight updates
+INTERVENTIONS = ("none", "force_remain", "force_update")
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantConfig:
+    """Full descriptor of one trainable variant == one artifact directory."""
+
+    model: ModelConfig
+    mode: str = "dqt"
+    bits: float = 1.58  # 1.58 => ternary {-1,0,1}; else integer n in [2,8]
+    env: str = "fp32"
+    optimizer: str = "adamw"
+    intervention: str = "none"
+    intervention_frac: float = 0.2
+    act_bits: int = 8  # activation quantization (BitNet setting)
+    recompute_scale: bool = False  # abl1: recompute grid scale each step
+    sr_seed_salt: int = 0
+    weight_decay: float = 0.01
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    grad_clip: float = 1.0
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+        assert self.env in ENVS, self.env
+        assert self.optimizer in OPTIMIZERS, self.optimizer
+        assert self.intervention in INTERVENTIONS, self.intervention
+        if self.mode in ("dqt", "dqt_absmax"):
+            assert self.bits == 1.58 or (
+                float(self.bits).is_integer() and 2 <= self.bits <= 8
+            ), f"bits={self.bits}"
+
+    @property
+    def quantized(self) -> bool:
+        return self.mode != "fp32"
+
+    @property
+    def bits_tag(self) -> str:
+        if self.mode in ("fp32",):
+            return "fp32"
+        if self.mode == "bitnet158":
+            return "1.58"
+        return f"{self.bits:g}"
+
+    @property
+    def variant_name(self) -> str:
+        """Stable directory name under artifacts/."""
+        parts = [self.model.name, self.mode]
+        if self.mode.startswith("dqt"):
+            parts.append(f"b{self.bits:g}".replace(".", "p"))
+        if self.env != "fp32":
+            parts.append(self.env)
+        if self.optimizer != "adamw":
+            parts.append(self.optimizer)
+        if self.intervention != "none":
+            parts.append(self.intervention)
+        if self.recompute_scale:
+            parts.append("rescale")
+        return "-".join(parts)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["model"] = self.model.to_json()
+        d["variant_name"] = self.variant_name
+        return d
+
+
+def variant_from_flags(
+    model: str,
+    mode: str,
+    bits: float = 1.58,
+    env: str = "fp32",
+    optimizer: str = "adamw",
+    intervention: str = "none",
+    recompute_scale: bool = False,
+) -> VariantConfig:
+    return VariantConfig(
+        model=ALL_CONFIGS[model],
+        mode=mode,
+        bits=bits,
+        env=env,
+        optimizer=optimizer,
+        intervention=intervention,
+        recompute_scale=recompute_scale,
+    )
+
+
+if __name__ == "__main__":
+    for name, cfg in ALL_CONFIGS.items():
+        print(f"{name}: {cfg.param_count():,} params")

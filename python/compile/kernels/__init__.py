@@ -1,0 +1,25 @@
+"""L1: Pallas kernels for the DQT hot spots + pure-jnp oracles.
+
+Public surface:
+  absmean_quantize(w, bits, s)          Eq. (4) grid projection
+  stochastic_round(x, seed, bits, s)    Eq. (1)/(5) SR onto the grid
+  qlinear(x, wq, act_bits)              fused act-quant + matmul fwd
+  rmsnorm(x, g, eps)                    row RMSNorm
+  adamw_sr_update(...)                  fused AdamW + SR (DQT update path)
+
+All kernels run under interpret=True (CPU PJRT). ref.py holds the oracles.
+"""
+
+from .adamw_sr import adamw_sr_update
+from .qlinear import qlinear
+from .quantize import absmean_quantize, stochastic_round, stochastic_round_hash_ref
+from .rmsnorm import rmsnorm
+
+__all__ = [
+    "absmean_quantize",
+    "stochastic_round",
+    "stochastic_round_hash_ref",
+    "qlinear",
+    "rmsnorm",
+    "adamw_sr_update",
+]

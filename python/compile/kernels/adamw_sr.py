@@ -1,0 +1,139 @@
+"""Fused AdamW + stochastic-rounding Pallas kernel — the DQT update hot path.
+
+This is the paper's core step (Fig. 1 lower, Eq. 5): the optimizer's dense
+update W' exists only *inside* the kernel's VMEM tile and is stochastically
+rounded back onto the INTn grid before it ever reaches HBM. That is the
+memory story of DQT made literal: no high-precision master copy is written
+anywhere. One HBM read of (w, g, m, v), one HBM write of (w', m', v').
+
+The kernel is elementwise over row tiles; uniform bits come from the shared
+counter-hash PRNG (prng.py) so the pure-jnp twin in tests matches exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import prng
+from .ref import qrange
+
+_BLOCK_ROWS = 256
+
+
+def _pick_block(n: int, maximum: int = _BLOCK_ROWS) -> int:
+    b = min(n, maximum)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _adamw_sr_kernel(
+    w_ref, g_ref, m_ref, v_ref, s_ref, seed_ref, lr_ref, bc_ref,
+    wo_ref, mo_ref, vo_ref,
+    *, qn, qp, b1, b2, eps, weight_decay, cols, block_rows,
+):
+    w = w_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    s = s_ref[0]
+    seed = seed_ref[0]
+    lr = lr_ref[0]
+    bc1 = bc_ref[0]  # 1 - b1^t
+    bc2 = bc_ref[1]  # 1 - b2^t
+
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    mhat = m_new / bc1
+    vhat = v_new / bc2
+    w_dense = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w)
+
+    # SR back onto the grid (Eq. 5) — W' dies here, in VMEM.
+    y = w_dense * s
+    lo = jnp.floor(y)
+    frac = y - lo
+    base = pl.program_id(0).astype(jnp.uint32) * jnp.uint32(block_rows * cols)
+    ctr = prng.counter_grid(w.shape, 0) + base
+    u = prng.uniform01(ctr, seed)
+    rounded = lo + (u < frac).astype(w.dtype)
+
+    wo_ref[...] = jnp.clip(rounded, qn, qp) / s
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+
+
+def adamw_sr_update(
+    w: jnp.ndarray,
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    seed: jnp.ndarray,
+    lr: jnp.ndarray,
+    step: jnp.ndarray,
+    bits: float,
+    s: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+):
+    """Fused AdamW step + SR projection. Returns (w_new, m_new, v_new).
+
+    ``step`` is the 1-based step count (f32 scalar), used for bias
+    correction; ``seed`` a uint32 scalar unique per (tensor, step).
+    """
+    qn, qp = qrange(bits)
+    shape = w.shape
+    w2 = w.reshape(-1, shape[-1]) if w.ndim != 2 else w
+    rows, cols = w2.shape
+    br = _pick_block(rows)
+    stepf = jnp.asarray(step, jnp.float32)
+    bc = jnp.stack([1.0 - b1 ** stepf, 1.0 - b2 ** stepf]).astype(jnp.float32)
+    args = (
+        w2,
+        g.reshape(rows, cols),
+        m.reshape(rows, cols),
+        v.reshape(rows, cols),
+        jnp.reshape(s.astype(jnp.float32), (1,)),
+        jnp.reshape(seed.astype(jnp.uint32), (1,)),
+        jnp.reshape(lr.astype(jnp.float32), (1,)),
+        bc,
+    )
+    tile = lambda i: (i, 0)
+    scalar = lambda i: (0,)
+    out = pl.pallas_call(
+        functools.partial(
+            _adamw_sr_kernel,
+            qn=qn, qp=qp, b1=b1, b2=b2, eps=eps,
+            weight_decay=weight_decay, cols=cols, block_rows=br,
+        ),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), tile),
+            pl.BlockSpec((br, cols), tile),
+            pl.BlockSpec((br, cols), tile),
+            pl.BlockSpec((br, cols), tile),
+            pl.BlockSpec((1,), scalar),
+            pl.BlockSpec((1,), scalar),
+            pl.BlockSpec((1,), scalar),
+            pl.BlockSpec((2,), scalar),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, cols), tile),
+            pl.BlockSpec((br, cols), tile),
+            pl.BlockSpec((br, cols), tile),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), w2.dtype),
+            jax.ShapeDtypeStruct((rows, cols), w2.dtype),
+            jax.ShapeDtypeStruct((rows, cols), w2.dtype),
+        ],
+        interpret=True,
+    )(*args)
+    w_new, m_new, v_new = out
+    return w_new.reshape(shape), m_new.reshape(shape), v_new.reshape(shape)

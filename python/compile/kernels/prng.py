@@ -1,0 +1,55 @@
+"""Counter-based in-kernel PRNG for stochastic rounding.
+
+Stochastic rounding needs one uniform sample per weight element per step.
+Materializing a full `jax.random.uniform` tensor per parameter in HBM would
+double the update's memory traffic, so the kernels generate bits *in place*
+from `(seed, element counter)` with a PCG-style integer hash — the GPU
+analogue is a curand state per thread, the TPU analogue is
+`pltpu.prng_random_bits`. The hash is pure uint32 jnp arithmetic, so it
+lowers identically inside a Pallas kernel body (interpret=True) and in the
+pure-jnp reference, which lets the pytest suite assert *exact* agreement
+between kernel and oracle.
+
+Quality: a 3-round xorshift-multiply mix (Steele & Vigna's splitmix-style
+finalizer truncated to 32 bits). SR only needs unbiasedness of the uniform
+in [0,1): the suite checks mean/variance and floor/ceil support explicitly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# numpy uint32 scalars (not jnp arrays): Pallas kernels may not close over
+# jnp array constants created outside the trace, and bare Python ints above
+# 2^31-1 overflow JAX's weak int32 typing. numpy scalars inline as literals.
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def hash_u32(counter: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """Mix a uint32 counter tensor with a uint32 seed into uniform bits."""
+    x = counter.astype(jnp.uint32) * _GOLDEN + seed.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * _M1
+    x = (x ^ (x >> 13)) * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def uniform01(counter: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """Uniform f32 in [0, 1) from (counter, seed).
+
+    Uses the top 24 bits so the f32 mantissa is exact (no rounding bias).
+    """
+    bits = hash_u32(counter, seed)
+    return (bits >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def counter_grid(shape: tuple[int, ...], offset) -> jnp.ndarray:
+    """Row-major element counters for `shape`, starting at `offset` (u32)."""
+    n = 1
+    for d in shape:
+        n *= d
+    idx = jnp.arange(n, dtype=jnp.uint32).reshape(shape)
+    return idx + jnp.uint32(offset)

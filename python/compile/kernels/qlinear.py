@@ -1,0 +1,98 @@
+"""Fused quantized-linear Pallas kernel (the forward hot path).
+
+Computes ``y = actquant8(x) @ wq.T`` in one pass: the per-token absmax
+reduction, the INT8 fake-quantization of activations, and the matmul against
+the already-on-grid weight tile all happen on the same VMEM-resident block —
+one HBM read of x per (M-block, N-block) pair instead of three kernel
+launches. On a GPU the paper's PyTorch code does this as three CUDA ops;
+the TPU mapping tiles M×N over the grid with the full K (reduction) axis in
+VMEM, feeding the MXU with [bm, K] × [K, bn] f32 tiles.
+
+The backward pass uses the straight-through estimator for the activation
+quantizer (BitNet's choice, which DQT keeps): dL/dx = dy @ wq,
+dL/dwq = dy.T @ xq. These are plain matmuls that XLA fuses well, so the
+VJP is expressed at the jnp level (and checked against finite differences
+in the test suite).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS, act_quantize_ref
+
+import os
+
+# Block shapes are the L1 tuning knobs (§Perf): overridable at lowering time
+# so the perf harness can sweep them without editing code. Defaults chosen
+# for the MXU story — see DESIGN.md §Hardware-Adaptation.
+_BLOCK_M = int(os.environ.get("DQT_QLINEAR_BLOCK_M", 128))
+_BLOCK_N = int(os.environ.get("DQT_QLINEAR_BLOCK_N", 128))
+
+
+def _pick_block(n: int, maximum: int) -> int:
+    b = min(n, maximum)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _qlinear_kernel(x_ref, w_ref, o_ref, *, qp: float):
+    x = x_ref[...]  # [bm, K]
+    w = w_ref[...]  # [bn, K]
+    scale = qp / jnp.clip(jnp.max(jnp.abs(x), axis=-1, keepdims=True), EPS, None)
+    xq = jnp.clip(jnp.round(x * scale), -qp - 1.0, qp) / scale
+    o_ref[...] = jnp.dot(xq, w.T, precision=jax.lax.Precision.HIGHEST)
+
+
+def _qlinear_fwd_pallas(x2: jnp.ndarray, wq: jnp.ndarray, act_bits: int):
+    m, k = x2.shape
+    n, k2 = wq.shape
+    assert k == k2, (x2.shape, wq.shape)
+    qp = float(2 ** (act_bits - 1) - 1)
+    bm = _pick_block(m, _BLOCK_M)
+    bn = _pick_block(n, _BLOCK_N)
+    return pl.pallas_call(
+        functools.partial(_qlinear_kernel, qp=qp),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x2.dtype),
+        interpret=True,
+    )(x2, wq)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def qlinear(x: jnp.ndarray, wq: jnp.ndarray, act_bits: int = 8) -> jnp.ndarray:
+    """Fused act-quant + matmul. x: [..., K], wq: [N, K] → [..., N]."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _qlinear_fwd_pallas(x2, wq, act_bits)
+    return y.reshape(*lead, wq.shape[0])
+
+
+def _qlinear_fwd(x, wq, act_bits):
+    return qlinear(x, wq, act_bits), (x, wq)
+
+
+def _qlinear_bwd(act_bits, res, dy):
+    x, wq = res
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    dy2 = dy.reshape(-1, wq.shape[0])
+    # STE through the activation quantizer: treat xq ≈ x for dL/dx.
+    dx = (dy2 @ wq).reshape(x.shape)
+    # Weight grad sees the *quantized* activations (what the matmul consumed).
+    xq = act_quantize_ref(x2, act_bits)
+    dwq = dy2.T @ xq
+    return dx, dwq
+
+
+qlinear.defvjp(_qlinear_fwd, _qlinear_bwd)

@@ -1,0 +1,149 @@
+"""Pallas kernels for the paper's quantization primitives.
+
+Two elementwise-tiled kernels:
+
+  * ``absmean_quantize``   — Eq. (4): project W onto the INTn grid given a
+    precomputed scale s (the AbsMean reduction, Eq. 2-3, is a one-shot
+    full-matrix reduction done at the jnp level — it is not a hot path).
+  * ``stochastic_round``   — Eq. (1)/(5): SR a transient dense update back
+    onto the grid, generating uniform bits in-kernel from (seed, counter).
+
+Both run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); on a real TPU the same BlockSpecs tile HBM→VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import prng
+from .ref import qrange
+
+import os
+
+# Block rows per grid step for 2-D tiles. 256 rows × ≤4096 cols of f32 is
+# ≤4 MiB — comfortably inside a TPU core's ~16 MiB VMEM with double-buffering.
+# Overridable for the §Perf block-shape sweep.
+_BLOCK_ROWS = int(os.environ.get("DQT_ELEMWISE_BLOCK_ROWS", 256))
+
+
+def _pick_block(n: int, maximum: int = _BLOCK_ROWS) -> int:
+    """Largest divisor of n that is ≤ maximum (keeps the grid exact)."""
+    b = min(n, maximum)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _as2d(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple[int, ...]]:
+    """Collapse any-rank input to [rows, cols] for row-tiled kernels."""
+    shape = x.shape
+    if x.ndim == 1:
+        return x.reshape(1, -1), shape
+    if x.ndim == 2:
+        return x, shape
+    return x.reshape(-1, shape[-1]), shape
+
+
+# ---------------------------------------------------------------------------
+# absmean quantize (Eq. 4)
+# ---------------------------------------------------------------------------
+
+def _absmean_kernel(w_ref, s_ref, o_ref, *, qn: float, qp: float):
+    s = s_ref[0]
+    w = w_ref[...]
+    o_ref[...] = jnp.clip(jnp.round(w * s), qn, qp) / s
+
+
+def absmean_quantize(w: jnp.ndarray, bits: float, s: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quantize ``w`` onto the INTn/s grid (Eq. 4), tiled by rows."""
+    qn, qp = qrange(bits)
+    w2, shape = _as2d(w)
+    rows, cols = w2.shape
+    br = _pick_block(rows)
+    s_arr = jnp.reshape(s.astype(jnp.float32), (1,))
+    out = pl.pallas_call(
+        functools.partial(_absmean_kernel, qn=qn, qp=qp),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), w2.dtype),
+        interpret=True,
+    )(w2, s_arr)
+    return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding (Eq. 1 / Eq. 5)
+# ---------------------------------------------------------------------------
+
+def _sr_kernel(x_ref, s_ref, seed_ref, o_ref, *, qn, qp, cols, block_rows):
+    s = s_ref[0]
+    seed = seed_ref[0]
+    x = x_ref[...]
+    y = x * s
+    lo = jnp.floor(y)
+    frac = y - lo
+    # element counter = global row-major index of this block's elements
+    base = pl.program_id(0).astype(jnp.uint32) * jnp.uint32(block_rows * cols)
+    ctr = prng.counter_grid(x.shape, 0) + base
+    u = prng.uniform01(ctr, seed)
+    rounded = lo + (u < frac).astype(x.dtype)
+    o_ref[...] = jnp.clip(rounded, qn, qp) / s
+
+
+def stochastic_round(
+    x: jnp.ndarray, seed: jnp.ndarray, bits: float, s: jnp.ndarray
+) -> jnp.ndarray:
+    """SR ``x`` onto the INTn/s grid; uniform bits from (seed, element index).
+
+    ``seed`` is a uint32 scalar; pass a distinct value per (tensor, step) —
+    the trainer derives it as hash(step, param_index, salt).
+    """
+    qn, qp = qrange(bits)
+    x2, shape = _as2d(x)
+    rows, cols = x2.shape
+    br = _pick_block(rows)
+    s_arr = jnp.reshape(s.astype(jnp.float32), (1,))
+    seed_arr = jnp.reshape(seed.astype(jnp.uint32), (1,))
+    out = pl.pallas_call(
+        functools.partial(
+            _sr_kernel, qn=qn, qp=qp, cols=cols, block_rows=br
+        ),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x2.dtype),
+        interpret=True,
+    )(x2, s_arr, seed_arr)
+    return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# hash-PRNG reference twin (exact-match oracle for the kernels above)
+# ---------------------------------------------------------------------------
+
+def stochastic_round_hash_ref(
+    x: jnp.ndarray, seed: jnp.ndarray, bits: float, s: jnp.ndarray
+) -> jnp.ndarray:
+    """Pure-jnp twin of ``stochastic_round`` using the same hash stream."""
+    qn, qp = qrange(bits)
+    x2, shape = _as2d(x)
+    y = x2 * s
+    lo = jnp.floor(y)
+    frac = y - lo
+    ctr = prng.counter_grid(x2.shape, 0)
+    u = prng.uniform01(ctr, jnp.asarray(seed, jnp.uint32))
+    rounded = lo + (u < frac).astype(x2.dtype)
+    return (jnp.clip(rounded, qn, qp) / s).reshape(shape)

@@ -1,0 +1,162 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+These are the ground truth the pytest/hypothesis suite checks the kernels
+against, and they double as the non-Pallas fallback path in the L2 model
+(`use_pallas=False`). Everything here follows the paper's equations:
+
+  Eq. (1)  stochastic rounding  SR(x) = floor(x) w.p. ceil(x)-x else ceil(x)
+  Eq. (2)  AbsMean(W) = mean(|W|)
+  Eq. (3)  s = Qp / AbsMean(W)
+  Eq. (4)  W~ = clip(round(W*s), Qn, Qp) / s
+  Eq. (5)  W~' = SR(W') on the same grid
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Quantization ranges
+# ---------------------------------------------------------------------------
+
+def qrange(bits: float) -> tuple[float, float]:
+    """Integer grid range [Qn, Qp] for an n-bit format.
+
+    bits == 1.58 is the paper's ternary format {-1, 0, 1}. For integer n,
+    Qn = -2^(n-1), Qp = 2^(n-1) - 1 (paper §3.2).
+    """
+    if bits == 1.58:
+        return -1.0, 1.0
+    n = int(bits)
+    return float(-(2 ** (n - 1))), float(2 ** (n - 1) - 1)
+
+
+# ---------------------------------------------------------------------------
+# AbsMean weight quantization (paper Eq. 2-4; BitNet b1.58 weight quant)
+# ---------------------------------------------------------------------------
+
+def absmean_scale(w: jnp.ndarray, bits: float) -> jnp.ndarray:
+    """Per-matrix scale s = Qp / AbsMean(W) (Eq. 3). Scalar array."""
+    _, qp = qrange(bits)
+    return qp / (jnp.mean(jnp.abs(w)) + EPS)
+
+
+def absmean_quantize_ref(w: jnp.ndarray, bits: float, s=None) -> jnp.ndarray:
+    """Eq. (4): fake-quantized weights on the INTn grid (values k/s)."""
+    if s is None:
+        s = absmean_scale(w, bits)
+    qn, qp = qrange(bits)
+    return jnp.clip(jnp.round(w * s), qn, qp) / s
+
+
+# ---------------------------------------------------------------------------
+# Stochastic rounding (paper Eq. 1) on an integer grid scaled by s
+# ---------------------------------------------------------------------------
+
+def stochastic_round_ref(
+    x: jnp.ndarray, key: jax.Array, bits: float, s: jnp.ndarray
+) -> jnp.ndarray:
+    """Eq. (5): project a dense update onto the INTn/s grid with SR.
+
+    y = x*s; floor w.p. (ceil(y) - y), ceil otherwise; clip to [Qn, Qp]; /s.
+    Unbiased: E[result * s] equals y wherever y is inside the clip range.
+    """
+    qn, qp = qrange(bits)
+    y = x * s
+    lo = jnp.floor(y)
+    frac = y - lo  # in [0, 1); P(ceil) = frac
+    u = jax.random.uniform(key, x.shape, dtype=x.dtype)
+    rounded = lo + (u < frac).astype(x.dtype)
+    return jnp.clip(rounded, qn, qp) / s
+
+
+def round_nearest_ref(x: jnp.ndarray, bits: float, s: jnp.ndarray) -> jnp.ndarray:
+    """Fig. 5 ablation: deterministic round-to-nearest onto the same grid."""
+    qn, qp = qrange(bits)
+    return jnp.clip(jnp.round(x * s), qn, qp) / s
+
+
+# ---------------------------------------------------------------------------
+# 8-bit absmax activation quantization (BitNet setting; per-token / per-row)
+# ---------------------------------------------------------------------------
+
+def act_quantize_ref(x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Per-row (last-dim) absmax fake-quantization to INTn for activations."""
+    qp = float(2 ** (bits - 1) - 1)
+    scale = qp / jnp.clip(jnp.max(jnp.abs(x), axis=-1, keepdims=True), EPS, None)
+    return jnp.clip(jnp.round(x * scale), -qp - 1, qp) / scale
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear forward: y = actquant(x) @ wq.T
+# (wq is already on the grid; the kernel fuses the act quant + matmul)
+# ---------------------------------------------------------------------------
+
+def qlinear_ref(x: jnp.ndarray, wq: jnp.ndarray, act_bits: int = 8) -> jnp.ndarray:
+    """x: [..., in], wq: [out, in] already fake-quantized. Returns [..., out]."""
+    xq = act_quantize_ref(x, act_bits)
+    return xq @ wq.T
+
+
+# ---------------------------------------------------------------------------
+# Fused AdamW-with-SR weight update (the DQT hot path, paper Eq. 5)
+# ---------------------------------------------------------------------------
+
+def adamw_sr_update_ref(
+    w: jnp.ndarray,
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    key: jax.Array,
+    *,
+    lr: jnp.ndarray,
+    step: jnp.ndarray,
+    bits: float,
+    s: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+):
+    """One AdamW step producing the transient dense W', then SR back to grid.
+
+    Returns (w_new_on_grid, m_new, v_new). `step` is 1-based.
+    """
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * jnp.square(g)
+    mhat = m_new / (1.0 - b1 ** step)
+    vhat = v_new / (1.0 - b2 ** step)
+    w_dense = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w)
+    w_new = stochastic_round_ref(w_dense, key, bits, s)
+    return w_new, m_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy (next-token LM loss)
+# ---------------------------------------------------------------------------
+
+def softmax_xent_ref(logits: jnp.ndarray, labels: jnp.ndarray, mask=None):
+    """Mean cross-entropy over (optionally masked) positions.
+
+    logits: [..., V] f32, labels: [...] i32, mask: [...] bool/float or None.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.clip(jnp.sum(mask), 1.0, None)

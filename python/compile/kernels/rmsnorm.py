@@ -1,0 +1,72 @@
+"""RMSNorm Pallas kernel with an analytic custom VJP.
+
+Row-tiled: each grid step normalizes a [block_rows, H] tile in VMEM. The
+backward is the closed-form RMSNorm gradient expressed in jnp (fuses into
+the surrounding HLO), validated against jax.grad of the reference in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK_ROWS = 256
+
+
+def _pick_block(n: int, maximum: int = _BLOCK_ROWS) -> int:
+    b = min(n, maximum)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    g = g_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(var + eps) * g
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """x: [..., H], g: [H] → [..., H]."""
+    lead = x.shape[:-1]
+    h = x.shape[-1]
+    x2 = x.reshape(-1, h)
+    rows = x2.shape[0]
+    br = _pick_block(rows)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, h), x2.dtype),
+        interpret=True,
+    )(x2, g)
+    return out.reshape(*lead, h)
+
+
+def _rmsnorm_fwd(x, g, eps):
+    return rmsnorm(x, g, eps), (x, g)
+
+
+def _rmsnorm_bwd(eps, res, dy):
+    x, g = res
+    h = x.shape[-1]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)  # 1/rms
+    xhat = x * r
+    dg = jnp.sum((dy * xhat).reshape(-1, h), axis=0)
+    dyg = dy * g
+    # d/dx [x * r(x)] : dx = r * (dyg - xhat * mean(dyg * xhat, -1))
+    dx = r * (dyg - xhat * jnp.mean(dyg * xhat, axis=-1, keepdims=True))
+    return dx, dg
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)

@@ -1,0 +1,81 @@
+"""Low-precision *environment* simulation (paper §4.3, Fig. 3, Table 3).
+
+The paper simulates training under FP32 / BF16 / FP8 (MS-AMP O2) memory
+environments. The mechanism that matters for the DQT-vs-BitNet contrast:
+
+  * BitNet keeps a high-precision **master copy**; in a BF16/FP8 environment
+    that master is *stored* in the low-precision format, so every optimizer
+    step's small update is round-to-nearest-absorbed — the update signal
+    below half a ULP vanishes. This is why BitNet degrades in Fig. 3.
+  * DQT has no master; its optimizer states are stored low-precision, but
+    the weight update goes through *stochastic rounding*, which is unbiased
+    at any storage precision — updates accumulate in expectation.
+
+These casts are value-level fake-quantizers in f32, bit-exact with the
+corresponding formats (validated against the Rust `quant/{bf16,fp8}.rs`
+codecs through golden vectors in the test suites).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# FP8 E4M3 (OCP FP8, "MS-AMP weights/grads" format): 4 exp bits (bias 7),
+# 3 mantissa bits, max normal 448, min normal 2^-6, subnormal step 2^-9.
+_E4M3_MAX = 448.0
+_E4M3_MIN_NORMAL = 2.0**-6
+_E4M3_SUB_STEP = 2.0**-9
+
+# FP8 E5M2: 5 exp bits (bias 15), 2 mantissa bits, max 57344.
+_E5M2_MAX = 57344.0
+_E5M2_MIN_NORMAL = 2.0**-14
+_E5M2_SUB_STEP = 2.0**-16
+
+
+def cast_bf16(x: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest-even BF16 storage, returned as f32 values."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _cast_fp8(x, mant_bits: int, max_val: float, min_normal: float, sub_step: float):
+    ax = jnp.abs(x)
+    # exponent of the enclosing binade, clamped into the normal range
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, min_normal)))
+    ulp_normal = jnp.exp2(e - mant_bits)
+    ulp = jnp.where(ax < min_normal, sub_step, ulp_normal)
+    q = jnp.round(ax / ulp) * ulp
+    q = jnp.minimum(q, max_val)  # saturate (MS-AMP saturating cast)
+    return jnp.where(x < 0, -q, q).astype(jnp.float32)
+
+
+def cast_fp8_e4m3(x: jnp.ndarray) -> jnp.ndarray:
+    """Saturating round-to-nearest FP8 E4M3 storage, as f32 values."""
+    return _cast_fp8(x, 3, _E4M3_MAX, _E4M3_MIN_NORMAL, _E4M3_SUB_STEP)
+
+
+def cast_fp8_e5m2(x: jnp.ndarray) -> jnp.ndarray:
+    """Saturating round-to-nearest FP8 E5M2 storage, as f32 values."""
+    return _cast_fp8(x, 2, _E5M2_MAX, _E5M2_MIN_NORMAL, _E5M2_SUB_STEP)
+
+
+def env_cast(x: jnp.ndarray, env: str) -> jnp.ndarray:
+    """Apply the storage-precision cast of environment ``env``."""
+    if env == "fp32":
+        return x
+    if env == "bf16":
+        return cast_bf16(x)
+    if env == "fp8":
+        return cast_fp8_e4m3(x)
+    raise ValueError(f"unknown env {env!r}")
+
+
+def env_state_cast(x: jnp.ndarray, env: str) -> jnp.ndarray:
+    """Cast for *optimizer second-moment* state.
+
+    E4M3's 448 max overflows Adam's v for large grads; MS-AMP keeps v in a
+    wider format, so in the fp8 env we store v as E5M2 (range over precision)
+    and m as E4M3 (precision over range) — the standard MS-AMP O2 split.
+    """
+    if env == "fp8":
+        return cast_fp8_e5m2(x)
+    return env_cast(x, env)

@@ -1,0 +1,234 @@
+"""L2: LLaMA-structured transformer (paper §4.1 / Table 2) in JAX.
+
+Architecture: token embedding → N × [RMSNorm → causal MHA with RoPE →
+residual → RMSNorm → SwiGLU MLP → residual] → final RMSNorm → tied LM head.
+
+All seven per-layer projection matrices (wq, wk, wv, wo, w_gate, w_up,
+w_down) go through `quant.quant_linear` and are the *quantized set* in
+BitNet/DQT modes (BitNet quantizes exactly the nn.Linear replacements;
+embeddings, norms and the tied head stay high-precision). Parameters are a
+flat name→array dict with a deterministic name order so the AOT manifest
+and the Rust side agree on buffer positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .configs import ModelConfig, VariantConfig
+
+PAD_ID = 0
+
+#: per-layer projection names, in parameter order
+LAYER_LINEARS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    """Deterministic parameter order (the manifest/Rust contract)."""
+    names = ["emb"]
+    for i in range(cfg.num_hidden_layers):
+        names.append(f"layers.{i}.attn_norm")
+        names.extend(f"layers.{i}.{n}" for n in LAYER_LINEARS[:4])
+        names.append(f"layers.{i}.mlp_norm")
+        names.extend(f"layers.{i}.{n}" for n in LAYER_LINEARS[4:])
+    names.append("final_norm")
+    if not cfg.tie_embeddings:
+        names.append("lm_head")
+    return names
+
+
+def quantized_param_names(cfg: ModelConfig) -> list[str]:
+    """The subset living on the INTn grid in quantized modes."""
+    return [
+        f"layers.{i}.{n}"
+        for i in range(cfg.num_hidden_layers)
+        for n in LAYER_LINEARS
+    ]
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    h, i_, v = cfg.hidden_size, cfg.intermediate_size, cfg.vocab_size
+    shapes: dict[str, tuple[int, ...]] = {"emb": (v, h)}
+    for l in range(cfg.num_hidden_layers):
+        shapes[f"layers.{l}.attn_norm"] = (h,)
+        shapes[f"layers.{l}.wq"] = (h, h)
+        shapes[f"layers.{l}.wk"] = (h, h)
+        shapes[f"layers.{l}.wv"] = (h, h)
+        shapes[f"layers.{l}.wo"] = (h, h)
+        shapes[f"layers.{l}.mlp_norm"] = (h,)
+        shapes[f"layers.{l}.w_gate"] = (i_, h)
+        shapes[f"layers.{l}.w_up"] = (i_, h)
+        shapes[f"layers.{l}.w_down"] = (h, i_)
+    shapes["final_norm"] = (h,)
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (v, h)
+    return shapes
+
+
+def grid_bits(vc: VariantConfig) -> float:
+    """Bit width of the stored weight grid for a DQT-family variant."""
+    if vc.mode == "dqt_ternary_inf":
+        return 8.0  # §A.2: train an 8-bit grid, deploy ternary
+    if vc.mode == "bitnet158":
+        return 1.58
+    return vc.bits
+
+
+def has_grid_weights(vc: VariantConfig) -> bool:
+    """DQT family stores grid weights (+ fixed scales); BitNet stores masters."""
+    return vc.quantized and vc.mode != "bitnet158"
+
+
+def init_params(vc: VariantConfig, key: jax.Array) -> dict[str, jnp.ndarray]:
+    """LLaMA-style init; DQT modes project linears onto their grid.
+
+    For each grid matrix `p` a companion scalar `p.s` (the fixed scale,
+    Eq. 3) is stored in the dict.
+    """
+    cfg = vc.model
+    shapes = param_shapes(cfg)
+    qset = set(quantized_param_names(cfg)) if has_grid_weights(vc) else set()
+    params: dict[str, jnp.ndarray] = {}
+    std = 0.02
+    for name in param_names(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+            continue
+        w = jax.random.normal(sub, shape, jnp.float32) * std
+        if name in qset:
+            wq, s = quant.init_grid_weight(w, grid_bits(vc))
+            params[name] = wq
+            params[name + ".s"] = jnp.asarray(s, jnp.float32)
+        else:
+            params[name] = w
+    return params
+
+
+def flat_param_names(vc: VariantConfig) -> list[str]:
+    """Names including the `.s` scale companions, in flattening order."""
+    cfg = vc.model
+    qset = set(quantized_param_names(cfg)) if has_grid_weights(vc) else set()
+    out = []
+    for name in param_names(cfg):
+        out.append(name)
+        if name in qset:
+            out.append(name + ".s")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_tables(seq_len: int, head_dim: int, theta: float):
+    """cos/sin tables [S, D/2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: [B, H, S, D] with D even; rotate adjacent pairs."""
+    x0 = x[..., 0::2]
+    x1 = x[..., 1::2]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    y0 = x0 * c - x1 * s
+    y1 = x0 * s + x1 * c
+    return jnp.stack([y0, y1], axis=-1).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def forward(
+    params: dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,  # [B, S] int32
+    vc: VariantConfig,
+    use_pallas: bool = True,
+    ternary_override: bool = False,
+) -> jnp.ndarray:
+    """Return logits [B, S, V].
+
+    ``ternary_override`` re-projects every grid weight to ternary in the
+    forward pass — deployment-style ternary inference of an n-bit DQT model
+    (§A.2, Table 1 "ternary Inf." rows).
+    """
+    cfg = vc.model
+    b, s = tokens.shape
+    h, nh, hd = cfg.hidden_size, cfg.num_attention_heads, cfg.head_dim
+    x = params["emb"][tokens]  # [B, S, H]
+    cos, sin = rope_tables(s, hd, cfg.rope_theta)
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    def lin(pre, name, inp):
+        w = params[pre + name]
+        if vc.mode == "fp32":
+            return quant.linear_fp32(inp, w)
+        if ternary_override:
+            w3, _ = quant.ternary_project(w)
+            return quant.linear_dqt(inp, w3, vc.act_bits, use_pallas)
+        return quant.quant_linear(
+            inp, w, mode=vc.mode, act_bits=vc.act_bits, use_pallas=use_pallas
+        )
+
+    for l in range(cfg.num_hidden_layers):
+        pre = f"layers.{l}."
+        # --- attention block ---
+        xn = quant.norm(x, params[pre + "attn_norm"], cfg.rms_eps, use_pallas)
+        q = lin(pre, "wq", xn).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        k = lin(pre, "wk", xn).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        v = lin(pre, "wv", xn).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, h)
+        x = x + lin(pre, "wo", ctx)
+
+        # --- MLP block (SwiGLU) ---
+        xn = quant.norm(x, params[pre + "mlp_norm"], cfg.rms_eps, use_pallas)
+        gate = lin(pre, "w_gate", xn)
+        up = lin(pre, "w_up", xn)
+        x = x + lin(pre, "w_down", jax.nn.silu(gate) * up)
+
+    x = quant.norm(x, params["final_norm"], cfg.rms_eps, use_pallas)
+    head = params["emb"] if cfg.tie_embeddings else params["lm_head"]
+    return x @ head.T  # high-precision head (BitNet keeps it unquantized)
+
+
+def loss_fn(
+    params,
+    tokens,  # [B, S+1] int32, PAD_ID-padded
+    vc: VariantConfig,
+    use_pallas: bool = True,
+    ternary_override: bool = False,
+):
+    """Mean next-token cross-entropy over non-pad positions."""
+    from .kernels.ref import softmax_xent_ref
+
+    inputs = tokens[:, :-1]
+    labels = tokens[:, 1:]
+    logits = forward(params, inputs, vc, use_pallas, ternary_override)
+    mask = labels != PAD_ID
+    return softmax_xent_ref(logits, labels, mask)
+
+
+def nll_sums(params, tokens, vc, use_pallas=True, ternary_override=False):
+    """(sum NLL, token count) over non-pad positions — the eval_step payload."""
+    inputs = tokens[:, :-1]
+    labels = tokens[:, 1:]
+    logits = forward(params, inputs, vc, use_pallas, ternary_override)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    mask = (labels != PAD_ID).astype(jnp.float32)
+    return jnp.sum(nll * mask), jnp.sum(mask)

@@ -1,0 +1,291 @@
+"""Optimizers with stochastic-rounding weight updates (paper §3.2, §4.3).
+
+Two optimizers × five weight-handling modes:
+
+  AdamW      (paper main experiments) — m, v per parameter.
+  Adafactor  (paper §4.3 memory-efficient option) — factored second moment
+             for matrices (row/col vectors), no momentum: the optimizer
+             state for an [n,m] matrix is n+m floats instead of 2nm.
+
+For DQT-family variants, the update of every grid weight goes through
+stochastic rounding (Eq. 5) — on the hot path via the fused Pallas
+`adamw_sr_update` kernel, and via the standalone SR kernel for the ablation
+paths (absmax re-quantization, Fig. 7 interventions, Adafactor, scale
+recomputation). Non-grid parameters (embeddings, norms, head) always get
+plain dense updates, matching BitNet's treatment of non-linear layers.
+
+Low-precision environments (§4.3) are applied as storage casts:
+optimizer state is stored in the env format for every mode, and BitNet's
+FP32 master weights are additionally stored in the env format — which is
+exactly the mechanism that degrades BitNet in Fig. 3 (sub-ULP master
+updates get round-to-nearest-absorbed) while DQT's SR stays unbiased.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import lowp, model, quant
+from .configs import VariantConfig
+from .kernels import adamw_sr_update, stochastic_round
+from .kernels import prng
+from .kernels import ref as kref
+
+ADAFACTOR_B2 = 0.99
+ADAFACTOR_EPS = 1e-30
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state layout
+# ---------------------------------------------------------------------------
+
+def trainable_names(vc: VariantConfig) -> list[str]:
+    """Parameters that receive optimizer state (excludes `.s` scales)."""
+    return model.param_names(vc.model)
+
+
+def opt_state_names(vc: VariantConfig) -> list[str]:
+    """Flat opt-state entry order (the manifest/Rust contract)."""
+    names = ["step"]
+    shapes = model.param_shapes(vc.model)
+    for p in trainable_names(vc):
+        if vc.optimizer == "adamw":
+            names.extend([f"{p}.m", f"{p}.v"])
+        else:  # adafactor
+            if len(shapes[p]) == 2:
+                names.extend([f"{p}.vr", f"{p}.vc"])
+            else:
+                names.append(f"{p}.v")
+    return names
+
+
+def init_opt_state(vc: VariantConfig) -> dict[str, jnp.ndarray]:
+    shapes = model.param_shapes(vc.model)
+    st: dict[str, jnp.ndarray] = {"step": jnp.zeros((), jnp.float32)}
+    for p in trainable_names(vc):
+        shape = shapes[p]
+        if vc.optimizer == "adamw":
+            st[f"{p}.m"] = jnp.zeros(shape, jnp.float32)
+            st[f"{p}.v"] = jnp.zeros(shape, jnp.float32)
+        else:
+            if len(shape) == 2:
+                st[f"{p}.vr"] = jnp.zeros((shape[0],), jnp.float32)
+                st[f"{p}.vc"] = jnp.zeros((shape[1],), jnp.float32)
+            else:
+                st[f"{p}.v"] = jnp.zeros(shape, jnp.float32)
+    return st
+
+
+def opt_state_shapes(vc: VariantConfig) -> dict[str, tuple[int, ...]]:
+    shapes = model.param_shapes(vc.model)
+    out: dict[str, tuple[int, ...]] = {"step": ()}
+    for p in trainable_names(vc):
+        shape = shapes[p]
+        if vc.optimizer == "adamw":
+            out[f"{p}.m"] = shape
+            out[f"{p}.v"] = shape
+        else:
+            if len(shape) == 2:
+                out[f"{p}.vr"] = (shape[0],)
+                out[f"{p}.vc"] = (shape[1],)
+            else:
+                out[f"{p}.v"] = shape
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping
+# ---------------------------------------------------------------------------
+
+def clip_global_norm(grads: dict[str, jnp.ndarray], max_norm: float):
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in grads.values()) + 1e-12
+    )
+    scale = jnp.minimum(1.0, max_norm / gnorm)
+    return {k: g * scale for k, g in grads.items()}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Dense update rules (produce the transient W')
+# ---------------------------------------------------------------------------
+
+def _adamw_dense(w, g, m, v, lr, step, vc: VariantConfig):
+    b1, b2, eps, wd = vc.adam_b1, vc.adam_b2, vc.adam_eps, vc.weight_decay
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * jnp.square(g)
+    mhat = m_new / (1.0 - b1 ** step)
+    vhat = v_new / (1.0 - b2 ** step)
+    w_dense = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * w)
+    return w_dense, {"m": m_new, "v": v_new}
+
+
+def _adafactor_dense(w, g, state, lr, vc: VariantConfig):
+    wd = vc.weight_decay
+    g2 = jnp.square(g) + ADAFACTOR_EPS
+    if g.ndim == 2:
+        vr = ADAFACTOR_B2 * state["vr"] + (1 - ADAFACTOR_B2) * jnp.mean(g2, axis=1)
+        vc_ = ADAFACTOR_B2 * state["vc"] + (1 - ADAFACTOR_B2) * jnp.mean(g2, axis=0)
+        denom = jnp.sqrt(
+            jnp.outer(vr, vc_) / jnp.clip(jnp.mean(vr), ADAFACTOR_EPS, None)
+        )
+        u = g / jnp.clip(denom, 1e-12, None)
+        new_state = {"vr": vr, "vc": vc_}
+    else:
+        v = ADAFACTOR_B2 * state["v"] + (1 - ADAFACTOR_B2) * g2
+        u = g / jnp.clip(jnp.sqrt(v), 1e-12, None)
+        new_state = {"v": v}
+    # update clipping (d = 1.0)
+    rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+    u = u / jnp.maximum(1.0, rms_u)
+    w_dense = w - lr * (u + wd * w)
+    return w_dense, new_state
+
+
+# ---------------------------------------------------------------------------
+# Grid projection of W' (SR / absmax / interventions)
+# ---------------------------------------------------------------------------
+
+def _project_to_grid(w_old, w_dense, seed, bits, s, vc: VariantConfig):
+    """Project the transient dense update onto the grid per the variant."""
+    if vc.mode == "dqt_absmax":
+        # Fig. 5 ablation — the paper's "absmax quantization on the updated
+        # weight matrices": a *max*-based scale recomputed each step with
+        # round-to-nearest. Since max|W| ≫ typical |w|, most entries round
+        # to 0 and small updates can never accumulate — the mechanism
+        # behind the flat non-converging curve in Fig. 5.
+        qn, qp = kref.qrange(bits)
+        s_max = qp / (jnp.max(jnp.abs(w_dense)) + kref.EPS)
+        return kref.round_nearest_ref(w_dense, bits, s_max), s_max
+
+    if vc.intervention == "none":
+        return stochastic_round(w_dense, seed, bits, s), s
+
+    # Fig. 7: rank |update| in grid units, intervene on the bottom 20 %
+    qn, qp = kref.qrange(bits)
+    delta = (w_dense - w_old) * s
+    thresh = jnp.percentile(jnp.abs(delta), vc.intervention_frac * 100.0)
+    small = jnp.abs(delta) <= thresh
+    sr = stochastic_round(w_dense, seed, bits, s)
+    if vc.intervention == "force_remain":
+        return jnp.where(small, w_old, sr), s
+    # force_update: move small ones to the *adjacent* grid point in the
+    # update's direction, even though the update wouldn't reach it
+    step_dir = jnp.where(delta >= 0, 1.0, -1.0)
+    forced = jnp.clip(jnp.round(w_old * s) + step_dir, qn, qp) / s
+    return jnp.where(small, forced, sr), s
+
+
+# ---------------------------------------------------------------------------
+# Full update: params × grads × state → new params/state (+ metrics)
+# ---------------------------------------------------------------------------
+
+def apply_updates(
+    params: dict[str, jnp.ndarray],
+    grads: dict[str, jnp.ndarray],
+    opt_state: dict[str, jnp.ndarray],
+    vc: VariantConfig,
+    lr: jnp.ndarray,
+    seed: jnp.ndarray,
+):
+    """One optimizer step. Returns (new_params, new_opt_state, aux).
+
+    aux = {"upd_frac": fraction of grid weights whose quantized value
+    changed (Fig. 6), "gnorm": pre-clip global grad norm}.
+    """
+    step = opt_state["step"] + 1.0
+    grads, gnorm = clip_global_norm(grads, vc.grad_clip)
+    qset = set(model.quantized_param_names(vc.model)) if vc.quantized else set()
+    grid = model.has_grid_weights(vc)
+    bits = model.grid_bits(vc)
+
+    new_params: dict[str, jnp.ndarray] = {}
+    new_state: dict[str, jnp.ndarray] = {"step": step}
+    changed = []
+    total = []
+
+    for idx, p in enumerate(trainable_names(vc)):
+        w = params[p]
+        g = grads[p]
+        tseed = prng.hash_u32(
+            jnp.asarray(idx, jnp.uint32), seed.astype(jnp.uint32)
+        ) + jnp.uint32(vc.sr_seed_salt)
+
+        is_grid = grid and p in qset
+        use_fused = (
+            is_grid
+            and vc.optimizer == "adamw"
+            and vc.mode == "dqt"
+            and vc.intervention == "none"
+            and not vc.recompute_scale
+        )
+
+        if use_fused:
+            # hot path: fused AdamW + SR Pallas kernel; W' never leaves VMEM
+            s = params[p + ".s"]
+            w_new, m_new, v_new = adamw_sr_update(
+                w, g, opt_state[f"{p}.m"], opt_state[f"{p}.v"],
+                seed=tseed, lr=lr, step=step, bits=bits, s=s,
+                b1=vc.adam_b1, b2=vc.adam_b2, eps=vc.adam_eps,
+                weight_decay=vc.weight_decay,
+            )
+            new_params[p] = w_new
+            new_params[p + ".s"] = s
+            new_state[f"{p}.m"] = lowp.env_cast(m_new, vc.env)
+            new_state[f"{p}.v"] = lowp.env_state_cast(v_new, vc.env)
+            changed.append(jnp.sum(w_new != w))
+            total.append(w.size)
+            continue
+
+        # generic path ---------------------------------------------------
+        if vc.optimizer == "adamw":
+            w_dense, st = _adamw_dense(
+                w, g, opt_state[f"{p}.m"], opt_state[f"{p}.v"], lr, step, vc
+            )
+            new_state[f"{p}.m"] = lowp.env_cast(st["m"], vc.env)
+            new_state[f"{p}.v"] = lowp.env_state_cast(st["v"], vc.env)
+        else:
+            if w.ndim == 2:
+                st_in = {"vr": opt_state[f"{p}.vr"], "vc": opt_state[f"{p}.vc"]}
+            else:
+                st_in = {"v": opt_state[f"{p}.v"]}
+            w_dense, st = _adafactor_dense(w, g, st_in, lr, vc)
+            for k, val in st.items():
+                new_state[f"{p}.{k}"] = lowp.env_state_cast(val, vc.env)
+
+        if is_grid:
+            s = params[p + ".s"]
+            if vc.recompute_scale:
+                # abl1: re-derive the grid from the transient dense update
+                s = kref.absmean_scale(w_dense, bits)
+            w_new, s_new = _project_to_grid(w, w_dense, tseed, bits, s, vc)
+            new_params[p] = w_new
+            new_params[p + ".s"] = jnp.asarray(s_new, jnp.float32)
+            changed.append(jnp.sum(w_new != w))
+            total.append(w.size)
+        elif vc.mode == "bitnet158" and p in qset:
+            # BitNet master update, stored in the env's precision — the
+            # Fig. 3 degradation mechanism (RTN-absorbed small updates).
+            w_new = lowp.env_cast(w_dense, vc.env)
+            new_params[p] = w_new
+            # Fig. 6: BitNet update freq = change in the *quantized* weights
+            s_old = kref.absmean_scale(w, 1.58)
+            s_new = kref.absmean_scale(w_new, 1.58)
+            q_old = kref.absmean_quantize_ref(w, 1.58, s_old)
+            q_new = kref.absmean_quantize_ref(w_new, 1.58, s_new)
+            changed.append(jnp.sum(jnp.sign(q_new) != jnp.sign(q_old)))
+            total.append(w.size)
+        else:
+            # dense (non-grid) parameter; fp32 baseline counts all params
+            w_new = lowp.env_cast(w_dense, vc.env) if vc.mode != "fp32" else w_dense
+            new_params[p] = w_new
+            if vc.mode == "fp32":
+                changed.append(jnp.sum(w_new != w))
+                total.append(w.size)
+
+    upd_frac = (
+        sum(changed) / float(sum(total)) if total else jnp.zeros((), jnp.float32)
+    )
+    aux = {"upd_frac": upd_frac.astype(jnp.float32), "gnorm": gnorm}
+    return new_params, new_state, aux

@@ -1,0 +1,97 @@
+"""§Perf harness for L1/L2: block-shape sweep + HLO cost analysis.
+
+Times the jitted t130 DQT train step under different Pallas block shapes
+and compares against the pure-jnp (no-pallas) lowering, and reports XLA
+cost-analysis FLOPs/bytes for the lowered module. CPU wallclock under
+interpret=True is *not* a TPU proxy — the block sweep is about structure
+(HLO op count, slicing overhead) and the VMEM/MXU estimates are analytic.
+
+Usage (from python/):
+  DQT_QLINEAR_BLOCK_M=2048 python -m compile.perf --model t130 --reps 5
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def bench_step(model: str, mode: str, bits: float, use_pallas: bool, reps: int):
+    # (re)import after env vars are set so block constants pick them up
+    import compile.kernels.qlinear as qlinear
+    import compile.kernels.quantize as quantize
+    importlib.reload(qlinear)
+    importlib.reload(quantize)
+    from compile.configs import variant_from_flags
+    from compile.train import make_fns
+
+    vc = variant_from_flags(model, mode, bits=bits)
+    fns = make_fns(vc, use_pallas=use_pallas)
+    n_state = len(fns["param_names"]) + len(fns["opt_names"])
+    state = jax.jit(fns["init"])(jnp.uint32(0))
+    cfg = vc.model
+    tok = jax.random.randint(
+        jax.random.PRNGKey(0), (cfg.batch_size, cfg.max_seq_len + 1), 1,
+        cfg.vocab_size,
+    )
+    step = jax.jit(fns["train_step"], keep_unused=True)
+    # warmup/compile
+    out = step(*state, tok, jnp.uint32(0), jnp.float32(1e-3))
+    jax.block_until_ready(out)
+    times = []
+    for i in range(reps):
+        t0 = time.perf_counter()
+        out = step(*out[:n_state], tok, jnp.uint32(i), jnp.float32(1e-3))
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def cost_analysis(model: str, mode: str, bits: float, use_pallas: bool):
+    from compile.configs import variant_from_flags
+    from compile.train import make_fns
+
+    vc = variant_from_flags(model, mode, bits=bits)
+    fns = make_fns(vc, use_pallas=use_pallas)
+    pm = [jnp.zeros(s.shape, s.dtype) for s in jax.eval_shape(
+        lambda: fns["init"](jnp.uint32(0)))]
+    cfg = vc.model
+    tok = jnp.zeros((cfg.batch_size, cfg.max_seq_len + 1), jnp.int32)
+    compiled = (
+        jax.jit(fns["train_step"], keep_unused=True)
+        .lower(*pm, tok, jnp.uint32(0), jnp.float32(1e-3))
+        .compile()
+    )
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {k: ca.get(k) for k in ("flops", "bytes accessed", "transcendentals")}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="t130")
+    ap.add_argument("--mode", default="dqt")
+    ap.add_argument("--bits", type=float, default=1.58)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--cost", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true")
+    args = ap.parse_args()
+
+    bm = os.environ.get("DQT_QLINEAR_BLOCK_M", "128")
+    br = os.environ.get("DQT_ELEMWISE_BLOCK_ROWS", "256")
+    t = bench_step(args.model, args.mode, args.bits, not args.no_pallas, args.reps)
+    tag = "jnp-ref" if args.no_pallas else f"pallas bm={bm} rows={br}"
+    print(f"{args.model}-{args.mode}-b{args.bits:g} [{tag}]: {t*1e3:.1f} ms/step")
+    if args.cost:
+        print(cost_analysis(args.model, args.mode, args.bits, not args.no_pallas))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Weight-handling modes: fp32 / BitNet-STE / DQT forward+update semantics.
+
+This module is the L2 glue between the model (which just asks for "a linear
+layer under mode M") and the L1 kernels. The three families:
+
+  fp32        y = x @ W.T, plain AdamW — the unquantized baseline.
+  bitnet158   BitNet b1.58: FP32 master W; forward re-quantizes W to ternary
+              via AbsMean (Eq. 2-4) *every step* with an STE; activations
+              int8-absmax with STE. Optimizer updates the master.
+  dqt*        ours: W lives ON the INTn grid (values k/s, s fixed at init).
+              Forward consumes it directly (no per-step re-quantization);
+              the optimizer's dense update is stochastically rounded back
+              onto the grid (Eq. 5) — no master copy exists.
+
+`dqt_ternary_inf` (§A.2) stores the 8-bit grid but *forwards* through a
+ternary AbsMean re-projection with an STE back to the 8-bit grid, enabling
+ternary-weight deployment of an 8-bit-trained DQT model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import qlinear, rmsnorm
+from .kernels import ref as kref
+
+
+def ste(value: jnp.ndarray, quantized: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through estimator: forward `quantized`, grad to `value`."""
+    return value + jax.lax.stop_gradient(quantized - value)
+
+
+def act_quant_ste(x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """BitNet's 8-bit per-token activation quantization with STE."""
+    return ste(x, kref.act_quantize_ref(x, bits))
+
+
+def linear_fp32(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense linear; x: [..., K], w: [N, K]."""
+    return x @ w.T
+
+
+def linear_bitnet(
+    x: jnp.ndarray, w: jnp.ndarray, act_bits: int, use_pallas: bool
+) -> jnp.ndarray:
+    """BitNet b1.58 forward: re-quantize master to ternary each step (STE)."""
+    s = kref.absmean_scale(jax.lax.stop_gradient(w), 1.58)
+    wq = ste(w, kref.absmean_quantize_ref(w, 1.58, s))
+    if use_pallas:
+        return qlinear(x, wq, act_bits)
+    return kref.qlinear_ref(x, wq, act_bits)
+
+
+def linear_dqt(
+    x: jnp.ndarray, wq: jnp.ndarray, act_bits: int, use_pallas: bool
+) -> jnp.ndarray:
+    """DQT forward: the weight is already on the grid — just use it."""
+    if use_pallas:
+        return qlinear(x, wq, act_bits)
+    return kref.qlinear_ref(x, wq, act_bits)
+
+
+def linear_dqt_ternary_inf(
+    x: jnp.ndarray, w8: jnp.ndarray, act_bits: int, use_pallas: bool
+) -> jnp.ndarray:
+    """§A.2: forward through a ternary re-projection of the 8-bit grid
+    weight, STE back to the 8-bit weight for the backward pass."""
+    s3 = kref.absmean_scale(jax.lax.stop_gradient(w8), 1.58)
+    w3 = ste(w8, kref.absmean_quantize_ref(w8, 1.58, s3))
+    if use_pallas:
+        return qlinear(x, w3, act_bits)
+    return kref.qlinear_ref(x, w3, act_bits)
+
+
+def quant_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    mode: str,
+    act_bits: int = 8,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Dispatch a linear layer under weight-handling mode ``mode``."""
+    if mode == "fp32":
+        return linear_fp32(x, w)
+    if mode == "bitnet158":
+        return linear_bitnet(x, w, act_bits, use_pallas)
+    if mode in ("dqt", "dqt_absmax"):
+        return linear_dqt(x, w, act_bits, use_pallas)
+    if mode == "dqt_ternary_inf":
+        return linear_dqt_ternary_inf(x, w, act_bits, use_pallas)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def norm(x: jnp.ndarray, g: jnp.ndarray, eps: float, use_pallas: bool):
+    if use_pallas:
+        return rmsnorm(x, g, eps)
+    return kref.rmsnorm_ref(x, g, eps)
+
+
+def init_grid_weight(w_dense: jnp.ndarray, bits: float):
+    """Project a freshly initialized dense weight onto its INTn grid.
+
+    Returns (w_on_grid, scale). The scale is *fixed* for the rest of
+    training (paper §3.2 skips Eq. 2-4 after initialization).
+    """
+    s = kref.absmean_scale(w_dense, bits)
+    return kref.absmean_quantize_ref(w_dense, bits, s), s
+
+
+def ternary_project(w: jnp.ndarray):
+    """Deployment-time ternary projection of an n-bit grid weight (§A.2)."""
+    s3 = kref.absmean_scale(w, 1.58)
+    return kref.absmean_quantize_ref(w, 1.58, s3), s3

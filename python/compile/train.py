@@ -1,0 +1,120 @@
+"""Step-function builders: the four AOT entry points per variant.
+
+Each returns a *flat-signature* jittable function (lists of arrays in the
+manifest's order) so the Rust runtime can drive it positionally:
+
+  init(seed u32)                        → params…  ++ opt_state…
+  train_step(params…, opt…, tokens, sr_seed, lr)
+                                        → params'… ++ opt'… ++ [loss, upd_frac, gnorm]
+  eval_step(params…, tokens)            → [sum_nll, count]
+  logits_step(params…, tokens)          → [logits]
+
+Params/opt buffers are donatable: Rust keeps them device-resident and feeds
+each step's outputs into the next step's inputs (see rust/src/train/).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model, optim
+from .configs import VariantConfig
+
+
+def flatten(d: dict[str, jnp.ndarray], names: list[str]) -> list[jnp.ndarray]:
+    return [d[n] for n in names]
+
+
+def unflatten(vals, names: list[str]) -> dict[str, jnp.ndarray]:
+    return dict(zip(names, vals))
+
+
+def make_fns(vc: VariantConfig, use_pallas: bool = True):
+    """Build the four entry points for variant ``vc``.
+
+    Returns dict with keys init/train_step/eval_step/logits_step plus the
+    flat name orders (param_names/opt_names) and example args for lowering.
+    """
+    pnames = model.flat_param_names(vc)
+    onames = optim.opt_state_names(vc)
+    n_p, n_o = len(pnames), len(onames)
+    cfg = vc.model
+    tshape = (cfg.batch_size, cfg.max_seq_len + 1)
+    ternary_inf = vc.mode == "dqt_ternary_inf"
+
+    def init(seed: jnp.ndarray):
+        key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+        params = model.init_params(vc, key)
+        opt = optim.init_opt_state(vc)
+        return flatten(params, pnames) + flatten(opt, onames)
+
+    def train_step(*args):
+        params = unflatten(args[:n_p], pnames)
+        opt = unflatten(args[n_p : n_p + n_o], onames)
+        tokens, sr_seed, lr = args[n_p + n_o :]
+
+        def loss_of(p):
+            return model.loss_fn(p, tokens, vc, use_pallas)
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        # `.s` scales are frozen grid metadata, not trainable
+        grads = {k: g for k, g in grads.items() if not k.endswith(".s")}
+        new_params, new_opt, aux = optim.apply_updates(
+            params, grads, opt, vc, lr, sr_seed
+        )
+        return (
+            flatten(new_params, pnames)
+            + flatten(new_opt, onames)
+            + [loss, aux["upd_frac"], aux["gnorm"]]
+        )
+
+    def eval_step(*args):
+        params = unflatten(args[:n_p], pnames)
+        tokens = args[n_p]
+        s, c = model.nll_sums(
+            params, tokens, vc, use_pallas, ternary_override=ternary_inf
+        )
+        return [s, c]
+
+    def logits_step(*args):
+        params = unflatten(args[:n_p], pnames)
+        tokens = args[n_p]
+        return [
+            model.forward(
+                params, tokens, vc, use_pallas, ternary_override=ternary_inf
+            )
+        ]
+
+    # eval variant that forces ternary projection regardless of mode
+    # (Table 1 "ternary Inf." rows for a plain dqt-8bit model)
+    def eval_step_ternary(*args):
+        params = unflatten(args[:n_p], pnames)
+        tokens = args[n_p]
+        s, c = model.nll_sums(params, tokens, vc, use_pallas, ternary_override=True)
+        return [s, c]
+
+    def logits_step_ternary(*args):
+        params = unflatten(args[:n_p], pnames)
+        tokens = args[n_p]
+        return [model.forward(params, tokens, vc, use_pallas, ternary_override=True)]
+
+    example = {
+        "seed": jnp.zeros((), jnp.uint32),
+        "tokens": jnp.zeros(tshape, jnp.int32),
+        "eval_tokens": jnp.zeros(tshape, jnp.int32),
+        "logits_tokens": jnp.zeros((cfg.batch_size, cfg.max_seq_len), jnp.int32),
+        "sr_seed": jnp.zeros((), jnp.uint32),
+        "lr": jnp.zeros((), jnp.float32),
+    }
+    return {
+        "init": init,
+        "train_step": train_step,
+        "eval_step": eval_step,
+        "logits_step": logits_step,
+        "eval_step_ternary": eval_step_ternary,
+        "logits_step_ternary": logits_step_ternary,
+        "param_names": pnames,
+        "opt_names": onames,
+        "example": example,
+    }

@@ -1,0 +1,47 @@
+"""Cross-language interop: the Python (kernel) and Rust (host) PRNG twins
+must produce identical streams so checkpoint-time SR reproduces in-graph SR.
+
+Golden values are pinned here AND in rust/src/quant/sr.rs +
+rust/tests/properties.rs; regenerating: `python -m tests.test_interop`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import prng
+
+# (counter, seed) -> hash_u32 — mirrored in rust/src/quant/sr.rs tests
+GOLDEN_HASH = [
+    (0, 0, 0),
+    (1, 2, 3024231355),
+    (12345, 67890, 2856791855),
+    (4294967295, 1, 3893119930),
+]
+
+
+def test_hash_golden_values():
+    for c, s, want in GOLDEN_HASH:
+        got = int(prng.hash_u32(jnp.uint32(c), jnp.uint32(s)))
+        assert got == want, (c, s, got, want)
+
+
+def test_uniform_golden_values():
+    # uniform01 = top 24 bits / 2^24, exactly
+    for c, s, h in GOLDEN_HASH:
+        want = (h >> 8) / (1 << 24)
+        got = float(prng.uniform01(jnp.uint32(c), jnp.uint32(s)))
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_hash_vectorized_matches_scalar():
+    ctr = prng.counter_grid((4, 8), 100)
+    out = np.asarray(prng.hash_u32(ctr, jnp.uint32(7)))
+    for i in range(4):
+        for j in range(8):
+            scalar = int(prng.hash_u32(jnp.uint32(100 + i * 8 + j), jnp.uint32(7)))
+            assert out[i, j] == scalar
+
+
+if __name__ == "__main__":
+    for c, s, _ in GOLDEN_HASH:
+        print(c, s, int(prng.hash_u32(jnp.uint32(c), jnp.uint32(s))))

@@ -1,0 +1,357 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+The CORE correctness signal of the repo: if these pass, the HLO artifacts
+compute the paper's equations. hypothesis sweeps shapes/dtypes; statistical
+tests validate the SR stream's unbiasedness.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    absmean_quantize,
+    adamw_sr_update,
+    qlinear,
+    rmsnorm,
+    stochastic_round,
+    stochastic_round_hash_ref,
+)
+from compile.kernels import prng
+from compile.kernels import ref
+
+BITS = [1.58, 3.0, 4.0, 8.0]
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+def rand(key, shape, scale=0.05):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# absmean quantization (Eq. 2-4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", BITS)
+def test_absmean_matches_ref(bits):
+    w = rand(0, (64, 48))
+    s = ref.absmean_scale(w, bits)
+    np.testing.assert_allclose(
+        absmean_quantize(w, bits, s), ref.absmean_quantize_ref(w, bits, s), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_absmean_on_grid(bits):
+    w = rand(1, (32, 32), scale=0.2)
+    s = ref.absmean_scale(w, bits)
+    wq = absmean_quantize(w, bits, s)
+    k = np.asarray(wq) * float(s)
+    qn, qp = ref.qrange(bits)
+    assert np.all(np.abs(k - np.round(k)) < 1e-4), "values must be integers/s"
+    assert k.min() >= qn - 1e-4 and k.max() <= qp + 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=dims, cols=dims, bits=st.sampled_from(BITS))
+def test_absmean_matches_ref_hypothesis(rows, cols, bits):
+    w = rand(rows * 1000 + cols, (rows, cols), scale=0.1)
+    s = ref.absmean_scale(w, bits)
+    np.testing.assert_allclose(
+        absmean_quantize(w, bits, s),
+        ref.absmean_quantize_ref(w, bits, s),
+        rtol=1e-6,
+        atol=1e-7,
+    )
+
+
+def test_absmean_1d_and_3d_shapes():
+    for shape in [(48,), (4, 8, 16)]:
+        w = rand(7, shape, scale=0.1)
+        s = ref.absmean_scale(w, 8.0)
+        np.testing.assert_allclose(
+            absmean_quantize(w, 8.0, s), ref.absmean_quantize_ref(w, 8.0, s), rtol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding (Eq. 1 / 5)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", BITS)
+def test_sr_kernel_matches_hash_ref_exactly(bits):
+    x = rand(2, (64, 48))
+    s = ref.absmean_scale(x, bits)
+    for seed in (0, 1, 999):
+        out_k = stochastic_round(x, jnp.uint32(seed), bits, s)
+        out_r = stochastic_round_hash_ref(x, jnp.uint32(seed), bits, s)
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_sr_support_is_floor_or_ceil(bits):
+    x = rand(3, (40, 30), scale=0.3)
+    s = ref.absmean_scale(x, bits)
+    out = np.asarray(stochastic_round(x, jnp.uint32(5), bits, s)) * float(s)
+    y = np.asarray(x) * float(s)
+    qn, qp = ref.qrange(bits)
+    lo = np.clip(np.floor(y), qn, qp)
+    hi = np.clip(np.ceil(y), qn, qp)
+    assert np.all((np.abs(out - lo) < 1e-3) | (np.abs(out - hi) < 1e-3))
+
+
+def test_sr_unbiased_statistically():
+    """E[SR(x)] == x for in-range x: the property that makes DQT train."""
+    s = jnp.float32(1.0)
+    x = jnp.full((100, 100), 0.37)
+    samples = [
+        float(jnp.mean(stochastic_round(x, jnp.uint32(i), 8.0, s)))
+        for i in range(20)
+    ]
+    mean = np.mean(samples)
+    # 200k Bernoulli(0.37) draws → se ≈ 0.48/sqrt(200000) ≈ 0.0011
+    assert abs(mean - 0.37) < 0.005, mean
+
+
+def test_sr_deterministic_per_seed_and_distinct_across_seeds():
+    x = rand(4, (32, 32), scale=0.4)
+    s = jnp.float32(10.0)
+    a = np.asarray(stochastic_round(x, jnp.uint32(7), 8.0, s))
+    b = np.asarray(stochastic_round(x, jnp.uint32(7), 8.0, s))
+    c = np.asarray(stochastic_round(x, jnp.uint32(8), 8.0, s))
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).any()
+
+
+def test_sr_exact_grid_points_stay_fixed():
+    """Values already on the grid must not move (frac == 0)."""
+    s = jnp.float32(4.0)
+    x = jnp.array([[-0.5, 0.0, 0.25, 1.0]])  # *4 => integers -2,0,1,4
+    out = np.asarray(stochastic_round(x, jnp.uint32(3), 8.0, s))
+    np.testing.assert_allclose(out, np.asarray(x), atol=1e-7)
+
+
+def test_sr_clips_out_of_range():
+    s = jnp.float32(1.0)
+    x = jnp.array([[5.0, -5.0]])
+    out = np.asarray(stochastic_round(x, jnp.uint32(0), 1.58, s))
+    np.testing.assert_allclose(out, [[1.0, -1.0]])
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=dims, cols=dims, seed=st.integers(0, 2**32 - 1))
+def test_sr_matches_hash_ref_hypothesis(rows, cols, seed):
+    x = rand(rows + cols, (rows, cols), scale=0.2)
+    s = jnp.float32(7.3)
+    out_k = stochastic_round(x, jnp.uint32(seed), 4.0, s)
+    out_r = stochastic_round_hash_ref(x, jnp.uint32(seed), 4.0, s)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+# ---------------------------------------------------------------------------
+# counter-hash PRNG quality
+# ---------------------------------------------------------------------------
+
+def test_prng_uniform_range_and_moments():
+    u = np.asarray(prng.uniform01(prng.counter_grid((1000, 100), 0), jnp.uint32(3)))
+    assert u.min() >= 0.0 and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.01
+    assert abs(u.var() - 1 / 12) < 0.01
+
+
+def test_prng_seed_sensitivity():
+    c = prng.counter_grid((64, 64), 0)
+    a = np.asarray(prng.hash_u32(c, jnp.uint32(1)))
+    b = np.asarray(prng.hash_u32(c, jnp.uint32(2)))
+    assert (a != b).mean() > 0.99
+
+
+# ---------------------------------------------------------------------------
+# activation quantization
+# ---------------------------------------------------------------------------
+
+def test_act_quantize_per_row_absmax():
+    x = jnp.array([[1.0, -2.0, 0.5], [100.0, 1.0, 0.0]])
+    xq = np.asarray(ref.act_quantize_ref(x, 8))
+    # max element of each row must be preserved exactly
+    np.testing.assert_allclose(xq[0, 1], -2.0, rtol=1e-6)
+    np.testing.assert_allclose(xq[1, 0], 100.0, rtol=1e-6)
+    # all values on a 127-point grid scaled per row
+    scale0 = 127.0 / 2.0
+    k = xq[0] * scale0
+    np.testing.assert_allclose(k, np.round(k), atol=1e-3)
+
+
+def test_act_quantize_error_bound():
+    x = rand(11, (32, 64), scale=1.0)
+    xq = ref.act_quantize_ref(x, 8)
+    amax = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+    assert np.all(np.abs(np.asarray(xq - x)) <= amax / 127.0 * 0.5 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# qlinear (fused act-quant + matmul)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+)
+def test_qlinear_matches_ref_hypothesis(m, k, n):
+    x = rand(m * 7 + k, (m, k), scale=0.5)
+    w = rand(n * 13 + k, (n, k), scale=0.05)
+    s = ref.absmean_scale(w, 1.58)
+    wq = ref.absmean_quantize_ref(w, 1.58, s)
+    np.testing.assert_allclose(
+        qlinear(x, wq, 8), ref.qlinear_ref(x, wq, 8), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_qlinear_batched_leading_dims():
+    x = rand(21, (2, 8, 32), scale=0.5)
+    w = rand(22, (16, 32), scale=0.05)
+    np.testing.assert_allclose(
+        qlinear(x, w, 8), ref.qlinear_ref(x, w, 8), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_qlinear_grad_matches_ste_formula():
+    """Custom VJP: dx = dy @ wq (STE), dwq = dy.T @ xq."""
+    x = rand(31, (8, 16), scale=0.5)
+    w = rand(32, (12, 16), scale=0.05)
+    dy = rand(33, (8, 12), scale=1.0)
+
+    _, vjp = jax.vjp(lambda x_, w_: qlinear(x_, w_, 8), x, w)
+    dx, dw = vjp(dy)
+    np.testing.assert_allclose(dx, dy @ w, rtol=1e-5, atol=1e-6)
+    xq = ref.act_quantize_ref(x, 8)
+    np.testing.assert_allclose(dw, dy.T @ xq, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 64), h=st.integers(1, 96))
+def test_rmsnorm_matches_ref_hypothesis(rows, h):
+    x = rand(rows * 3 + h, (rows, h), scale=1.0)
+    g = 1.0 + rand(rows + h, (h,), scale=0.2)
+    np.testing.assert_allclose(
+        rmsnorm(x, g), ref.rmsnorm_ref(x, g), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_rmsnorm_grad_matches_autodiff_of_ref():
+    x = rand(41, (6, 24), scale=1.0)
+    g = 1.0 + rand(42, (24,), scale=0.2)
+
+    def f_kernel(x_, g_):
+        return jnp.sum(jnp.sin(rmsnorm(x_, g_)))
+
+    def f_ref(x_, g_):
+        return jnp.sum(jnp.sin(ref.rmsnorm_ref(x_, g_)))
+
+    gx_k, gg_k = jax.grad(f_kernel, argnums=(0, 1))(x, g)
+    gx_r, gg_r = jax.grad(f_ref, argnums=(0, 1))(x, g)
+    np.testing.assert_allclose(gx_k, gx_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gg_k, gg_r, rtol=1e-4, atol=1e-5)
+
+
+def test_rmsnorm_3d():
+    x = rand(43, (2, 5, 16))
+    g = jnp.ones((16,))
+    np.testing.assert_allclose(
+        rmsnorm(x, g), ref.rmsnorm_ref(x, g), rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW + SR
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", BITS)
+def test_adamw_sr_moments_match_ref(bits):
+    """m/v outputs are deterministic — must match the reference exactly."""
+    w0 = rand(50, (32, 24), scale=0.05)
+    s = ref.absmean_scale(w0, bits)
+    w = ref.absmean_quantize_ref(w0, bits, s)
+    g = rand(51, (32, 24), scale=0.01)
+    m = rand(52, (32, 24), scale=0.001)
+    v = jnp.abs(rand(53, (32, 24), scale=0.001))
+    wk, mk, vk = adamw_sr_update(
+        w, g, m, v, seed=jnp.uint32(9), lr=jnp.float32(1e-3),
+        step=jnp.float32(3), bits=bits, s=s,
+    )
+    _, mr, vr = ref.adamw_sr_update_ref(
+        w, g, m, v, jax.random.PRNGKey(0), lr=jnp.float32(1e-3),
+        step=jnp.float32(3), bits=bits, s=s,
+    )
+    np.testing.assert_allclose(mk, mr, rtol=1e-5, atol=1e-8)
+    np.testing.assert_allclose(vk, vr, rtol=1e-5, atol=1e-8)
+    # weights stay on grid
+    k = np.asarray(wk) * float(s)
+    assert np.all(np.abs(k - np.round(k)) < 1e-3)
+
+
+def test_adamw_sr_matches_composed_kernels():
+    """Fused kernel == dense AdamW + standalone SR kernel, same seed."""
+    w0 = rand(60, (16, 48), scale=0.05)
+    s = ref.absmean_scale(w0, 1.58)
+    w = ref.absmean_quantize_ref(w0, 1.58, s)
+    g = rand(61, (16, 48), scale=0.01)
+    m = jnp.zeros_like(w)
+    v = jnp.zeros_like(w)
+    lr, step, seed = jnp.float32(1e-3), jnp.float32(1), jnp.uint32(77)
+
+    wk, mk, vk = adamw_sr_update(
+        w, g, m, v, seed=seed, lr=lr, step=step, bits=1.58, s=s
+    )
+    # compose manually
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.01
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    mhat = m2 / (1 - b1**step)
+    vhat = v2 / (1 - b2**step)
+    w_dense = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * w)
+    w_sr = stochastic_round(w_dense, seed, 1.58, s)
+    np.testing.assert_allclose(wk, w_sr, atol=1e-7)
+    np.testing.assert_allclose(mk, m2, rtol=1e-6)
+    np.testing.assert_allclose(vk, v2, rtol=1e-6)
+
+
+def test_adamw_sr_accumulates_small_updates():
+    """The paper's core claim (§5.1): repeated sub-grid updates eventually
+    move a weight under SR, but never under round-to-nearest."""
+    s = jnp.float32(1.0)
+    w = jnp.zeros((64, 64))
+    g = jnp.full_like(w, 1.0)  # constant pull
+    m = jnp.zeros_like(w)
+    v = jnp.zeros_like(w)
+    moved_sr = 0.0
+    for i in range(30):
+        w2, m, v = adamw_sr_update(
+            w, g, m, v, seed=jnp.uint32(i), lr=jnp.float32(0.02),
+            step=jnp.float32(i + 1), bits=1.58, s=s, weight_decay=0.0,
+        )
+        w = w2
+    moved_sr = float(jnp.mean(jnp.abs(w) > 0))
+    assert moved_sr > 0.25, f"SR should have moved many weights, got {moved_sr}"
+
+    # same trajectory with round-to-nearest: lr*update ≈ 0.02 < 0.5 ⇒ frozen
+    w_rn = jnp.zeros((64, 64))
+    m = jnp.zeros_like(w_rn)
+    v = jnp.zeros_like(w_rn)
+    for i in range(30):
+        m = 0.9 * m + 0.1 * g
+        v = 0.95 * v + 0.05 * g * g
+        mhat = m / (1 - 0.9 ** (i + 1))
+        vhat = v / (1 - 0.95 ** (i + 1))
+        w_dense = w_rn - 0.02 * mhat / (jnp.sqrt(vhat) + 1e-8)
+        w_rn = ref.round_nearest_ref(w_dense, 1.58, s)
+    assert float(jnp.mean(jnp.abs(w_rn) > 0)) == 0.0

@@ -1,0 +1,98 @@
+"""Numeric-format tests: bf16/fp8 casts (value-level codecs, paper §4.3).
+
+Golden vectors here are mirrored in rust/src/quant/{bf16,fp8}.rs tests so
+the two implementations stay bit-compatible.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import lowp
+
+
+def test_bf16_roundtrip_values():
+    x = jnp.array([0.0, 1.0, -1.0, 0.5, 3.140625, 65504.0])
+    y = np.asarray(lowp.cast_bf16(x))
+    # bf16-representable values survive exactly
+    np.testing.assert_array_equal(y[:5], np.asarray(x[:5]))
+
+
+def test_bf16_rounds_mantissa():
+    # 1 + 2^-9 is not representable in bf16 (7 mantissa bits) → rounds to 1
+    x = jnp.array([1.0 + 2.0**-9])
+    np.testing.assert_array_equal(np.asarray(lowp.cast_bf16(x)), [1.0])
+
+
+# --- FP8 E4M3 golden vectors (OCP spec) ------------------------------------
+
+E4M3_EXACT = [0.0, 1.0, -1.0, 0.5, 448.0, -448.0, 2.0**-6, 2.0**-9, 1.75, 240.0]
+E4M3_ROUNDED = [
+    (1.0 + 2.0**-4, 1.0),        # below half ULP at binade [1,2): ULP=1/8
+    (449.0, 448.0),              # saturate
+    (1e9, 448.0),
+    (-1e9, -448.0),
+    (0.0626, 0.0625),            # near 2^-4
+]
+
+
+@pytest.mark.parametrize("v", E4M3_EXACT)
+def test_e4m3_exact_values(v):
+    np.testing.assert_array_equal(
+        np.asarray(lowp.cast_fp8_e4m3(jnp.array([v]))), [v]
+    )
+
+
+@pytest.mark.parametrize("x,want", E4M3_ROUNDED)
+def test_e4m3_rounding(x, want):
+    np.testing.assert_allclose(
+        np.asarray(lowp.cast_fp8_e4m3(jnp.array([x]))), [want], rtol=1e-6
+    )
+
+
+def test_e4m3_subnormals():
+    # subnormal grid step is 2^-9
+    step = 2.0**-9
+    xs = jnp.array([step, 2.5 * step, 0.4 * step])
+    y = np.asarray(lowp.cast_fp8_e4m3(xs))
+    np.testing.assert_allclose(y[0], step, rtol=1e-6)
+    assert y[1] in (2 * step, 3 * step)  # round-half-even boundary
+    assert y[2] in (0.0, step)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=-400, max_value=400, allow_nan=False))
+def test_e4m3_idempotent_and_close(v):
+    x = jnp.array([v], jnp.float32)
+    y = lowp.cast_fp8_e4m3(x)
+    y2 = lowp.cast_fp8_e4m3(y)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+    # relative error ≤ 2^-4 for normals (+ absolute floor for subnormals)
+    err = abs(float(y[0]) - v)
+    assert err <= max(abs(v) * 2.0**-3.5, 2.0**-10)
+
+
+def test_e5m2_range():
+    x = jnp.array([57344.0, 60000.0, 2.0**-14, 2.0**-16])
+    y = np.asarray(lowp.cast_fp8_e5m2(x))
+    np.testing.assert_allclose(y[0], 57344.0)
+    np.testing.assert_allclose(y[1], 57344.0)  # saturate
+    np.testing.assert_allclose(y[2], 2.0**-14, rtol=1e-6)
+    np.testing.assert_allclose(y[3], 2.0**-16, rtol=1e-6)
+
+
+def test_env_cast_dispatch():
+    x = jnp.array([1.0 + 2.0**-12])
+    np.testing.assert_array_equal(np.asarray(lowp.env_cast(x, "fp32")), np.asarray(x))
+    assert float(lowp.env_cast(x, "bf16")[0]) == 1.0
+    assert float(lowp.env_cast(x, "fp8")[0]) == 1.0
+    with pytest.raises(ValueError):
+        lowp.env_cast(x, "int4")
+
+
+def test_env_state_cast_fp8_uses_wider_format():
+    # v values can exceed E4M3's 448 — E5M2 must carry them
+    x = jnp.array([1000.0])
+    assert float(lowp.env_state_cast(x, "fp8")[0]) == 1024.0  # e5m2 rounding
+    assert float(lowp.env_cast(x, "fp8")[0]) == 448.0  # e4m3 saturates

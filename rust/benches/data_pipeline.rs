@@ -1,0 +1,29 @@
+//! Data pipeline throughput: corpus generation, BPE training/encoding,
+//! dataset chunking. §Perf target: tokenizer encode ≥ 10 MB/s.
+
+use dqt::data::corpus::{self, CorpusSpec};
+use dqt::data::dataset::Dataset;
+use dqt::data::tokenizer::Tokenizer;
+use dqt::util::bench::Bench;
+
+fn main() {
+    let spec = CorpusSpec::tiny(3);
+    let docs = corpus::generate(&spec);
+    let text_bytes: usize = docs.iter().map(|d| d.len()).sum();
+    let tok = Tokenizer::train(&docs, 512);
+    let stream = tok.encode_docs(&docs);
+
+    let mut b = Bench::new("data_pipeline");
+    b.bench("corpus_generate_tiny", || corpus::generate(&spec));
+    b.bench_bytes("bpe_encode_corpus", text_bytes as u64, || {
+        let mut n = 0usize;
+        for d in &docs {
+            n += tok.encode(d).len();
+        }
+        n
+    });
+    b.bench_elements("dataset_chunk_shuffle", stream.len() as u64, || {
+        Dataset::from_stream(&stream, 128, 0.01, 7)
+    });
+    b.bench("bpe_train_512vocab", || Tokenizer::train(&docs, 512));
+}

@@ -1,0 +1,37 @@
+//! Numeric-format codec throughput: ternary/INTn packing, fp8/bf16 casts,
+//! host stochastic rounding. §Perf target: ternary pack ≥ 1 GB/s (f32 in).
+//!
+//! Runs on the in-tree bench harness (offline build — no criterion).
+
+use dqt::quant::{bf16, fp8, intn, sr, ternary};
+use dqt::util::bench::Bench;
+
+const N: usize = 1 << 20; // 1M weights = 4 MB f32
+
+fn main() {
+    let trits: Vec<f32> = (0..N).map(|i| ((i % 3) as f32) - 1.0).collect();
+    let floats: Vec<f32> = (0..N).map(|i| (i as f32 - N as f32 / 2.0) * 1e-4).collect();
+    let ints: Vec<i32> = (0..N).map(|i| (i % 256) as i32 - 128).collect();
+    let i4: Vec<i32> = ints.iter().map(|&v| v.clamp(-8, 7)).collect();
+    let bytes = (N * 4) as u64;
+
+    let mut b = Bench::new("quant_codecs");
+    b.bench_bytes("ternary_pack_1M", bytes, || ternary::pack(&trits).unwrap());
+    let packed = ternary::pack(&trits).unwrap();
+    b.bench_bytes("ternary_unpack_1M", bytes, || ternary::unpack(&packed, N));
+    b.bench_bytes("int8_pack_1M", bytes, || intn::pack(&ints, 8).unwrap());
+    b.bench_bytes("int4_pack_1M", bytes, || intn::pack(&i4, 4).unwrap());
+    let packed8 = intn::pack(&ints, 8).unwrap();
+    b.bench_bytes("int8_unpack_1M", bytes, || intn::unpack(&packed8, N, 8));
+    b.bench_bytes("bf16_cast_1M", bytes, || {
+        let mut v = floats.clone();
+        bf16::cast_slice(&mut v);
+        v
+    });
+    b.bench_bytes("fp8_e4m3_cast_1M", bytes, || {
+        let mut v = floats.clone();
+        fp8::cast_slice(&mut v, fp8::Format::E4M3);
+        v
+    });
+    b.bench_bytes("host_sr_1M", bytes, || sr::sr_slice(&floats, 7, 8.0, 100.0));
+}

@@ -1,0 +1,44 @@
+//! Runtime-layer overhead: how much of a step is host work (literal
+//! creation, state marshalling) vs XLA execution. §Perf target: non-execute
+//! overhead < 5% of step time for t-size models.
+//!
+//! Requires `make artifacts` (core suite) for the marshalling benches.
+
+use dqt::runtime::{client, Runtime, VariantRuntime};
+use dqt::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("runtime_overhead");
+
+    // literal creation throughput (the per-step host cost)
+    for n in [1usize << 14, 1 << 18, 1 << 22] {
+        let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        b.bench_bytes(&format!("lit_f32_{n}"), (n * 4) as u64, || {
+            client::lit_f32(&data, &[n]).unwrap()
+        });
+    }
+
+    let artifacts = dqt::default_artifacts_root();
+    if !artifacts.join("index.json").is_file() {
+        eprintln!("skipping marshalling benches: artifacts not built");
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt");
+    let Ok(vrt) = VariantRuntime::load(&rt, &artifacts, "test-dqt-b1p58") else {
+        return;
+    };
+    let m = vrt.manifest().clone();
+    let state = vrt.init_state(1).unwrap();
+
+    let total_bytes = ((m.total_param_values() + m.total_opt_values()) * 4) as u64;
+    b.bench_bytes("state_to_literals", total_bytes, || {
+        let mut lits = Vec::with_capacity(m.n_state());
+        for (meta, vals) in m.params.iter().zip(&state.params) {
+            lits.push(client::lit_f32(vals, &meta.shape).unwrap());
+        }
+        for (meta, vals) in m.opt_state.iter().zip(&state.opt) {
+            lits.push(client::lit_f32(vals, &meta.shape).unwrap());
+        }
+        lits
+    });
+}

@@ -1,0 +1,66 @@
+//! Per-mode train-step latency (the §Perf headline) and the Fig.-2-family
+//! cost comparison: fp32 vs bitnet vs dqt-ternary vs dqt-8bit on the same
+//! compiled shapes. Uses the `test` config so the bench is quick; e2e
+//! numbers for t-size models are recorded in EXPERIMENTS.md.
+//!
+//! Requires `make artifacts` (core suite).
+
+use dqt::data::Pipeline;
+use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::train::step_seed;
+use dqt::util::bench::Bench;
+
+fn main() {
+    let artifacts = dqt::default_artifacts_root();
+    if !artifacts.join("index.json").is_file() {
+        eprintln!("skipping step_latency: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt");
+    let mut b = Bench::new("step_latency");
+
+    for variant in [
+        "test-fp32",
+        "test-bitnet158",
+        "test-dqt-b1p58",
+        "test-dqt-b8",
+    ] {
+        let Ok(vrt) = VariantRuntime::load(&rt, &artifacts, variant) else {
+            eprintln!("skipping {variant}: artifact missing");
+            continue;
+        };
+        let m = vrt.manifest();
+        let tokens_per_step = (m.variant.model.batch_size * m.variant.model.max_seq_len) as u64;
+        let pipeline = Pipeline::build(
+            "tiny",
+            1,
+            m.variant.model.vocab_size,
+            m.variant.model.max_seq_len,
+        )
+        .unwrap();
+        let loader = pipeline.loader(m.variant.model.batch_size, 1, 1);
+        let batch = loader.next().unwrap();
+        let state0 = vrt.init_state(42).unwrap();
+
+        let mut state = Some(state0.clone());
+        let mut step = 0u64;
+        b.bench_elements(&format!("train/{variant}"), tokens_per_step, || {
+            let s = state.take().unwrap();
+            let (s2, metrics) = vrt
+                .train_step(s, &batch.tokens, step_seed(42, step), 1e-3)
+                .unwrap();
+            step += 1;
+            state = Some(s2);
+            metrics.loss
+        });
+
+        b.bench_elements(&format!("eval/{variant}"), tokens_per_step, || {
+            vrt.eval_step(&state0, &batch.tokens, false).unwrap()
+        });
+        if vrt.has_ternary_inference() {
+            b.bench_elements(&format!("eval_ternary/{variant}"), tokens_per_step, || {
+                vrt.eval_step(&state0, &batch.tokens, true).unwrap()
+            });
+        }
+    }
+}

@@ -1,0 +1,389 @@
+//! Configuration system: model presets (paper Table 2 + scaled testbed),
+//! variant descriptors (mode × bits × env × optimizer), and run configs.
+//!
+//! `VariantSpec::variant_name()` must produce exactly the directory names
+//! `python/compile/configs.py` writes under `artifacts/` — that string is
+//! the L2↔L3 contract and is covered by an integration test against the
+//! manifest index.
+
+/// LLaMA-structured model configuration (paper Table 2 schema).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub hidden_size: usize,
+    pub intermediate_size: usize,
+    pub num_hidden_layers: usize,
+    pub num_attention_heads: usize,
+    pub max_seq_len: usize,
+    pub batch_size: usize,
+    pub tie_embeddings: bool,
+}
+
+impl ModelConfig {
+    /// Exact parameter count (mirrors `configs.ModelConfig.param_count`).
+    pub fn param_count(&self) -> u64 {
+        let (v, h, i, l) = (
+            self.vocab_size as u64,
+            self.hidden_size as u64,
+            self.intermediate_size as u64,
+            self.num_hidden_layers as u64,
+        );
+        let emb = v * h;
+        let per_layer = 4 * h * h + 3 * h * i + 2 * h;
+        let head = if self.tie_embeddings { 0 } else { v * h };
+        emb + l * per_layer + h + head
+    }
+
+    /// Parameters living on the INTn grid in quantized modes (the 7
+    /// projection matrices per layer).
+    pub fn quantized_param_count(&self) -> u64 {
+        let (h, i, l) = (
+            self.hidden_size as u64,
+            self.intermediate_size as u64,
+            self.num_hidden_layers as u64,
+        );
+        l * (4 * h * h + 3 * h * i)
+    }
+
+    fn preset(
+        name: &str,
+        vocab_size: usize,
+        hidden_size: usize,
+        intermediate_size: usize,
+        num_hidden_layers: usize,
+        num_attention_heads: usize,
+        max_seq_len: usize,
+        batch_size: usize,
+    ) -> Self {
+        ModelConfig {
+            name: name.into(),
+            vocab_size,
+            hidden_size,
+            intermediate_size,
+            num_hidden_layers,
+            num_attention_heads,
+            max_seq_len,
+            batch_size,
+            tie_embeddings: true,
+        }
+    }
+
+    /// Look up a named preset (paper-exact `p*` + scaled testbed `t*`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            // paper Table 2 (exact)
+            "p130m" => Self::preset("p130m", 32000, 768, 2048, 12, 12, 512, 64),
+            "p320m" => Self::preset("p320m", 32000, 1024, 2048, 24, 16, 512, 32),
+            "p1b" => Self::preset("p1b", 32000, 2048, 3072, 24, 32, 512, 16),
+            // scaled testbed (same ratios, CPU-sized) — python configs.py twin
+            "t130" => Self::preset("t130", 512, 96, 256, 6, 6, 128, 16),
+            "t320" => Self::preset("t320", 512, 128, 256, 12, 8, 128, 8),
+            "t1b" => Self::preset("t1b", 512, 256, 384, 12, 8, 128, 4),
+            "test" => Self::preset("test", 64, 32, 64, 2, 2, 16, 2),
+            _ => return None,
+        })
+    }
+
+    pub fn testbed_names() -> [&'static str; 3] {
+        ["t130", "t320", "t1b"]
+    }
+    pub fn paper_names() -> [&'static str; 3] {
+        ["p130m", "p320m", "p1b"]
+    }
+}
+
+/// Weight-handling mode (paper §3/§4/§5 + §A.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mode {
+    Fp32,
+    Bitnet158,
+    Dqt,
+    DqtAbsmax,
+    DqtTernaryInf,
+}
+
+impl Mode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Fp32 => "fp32",
+            Mode::Bitnet158 => "bitnet158",
+            Mode::Dqt => "dqt",
+            Mode::DqtAbsmax => "dqt_absmax",
+            Mode::DqtTernaryInf => "dqt_ternary_inf",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "fp32" => Mode::Fp32,
+            "bitnet158" => Mode::Bitnet158,
+            "dqt" => Mode::Dqt,
+            "dqt_absmax" => Mode::DqtAbsmax,
+            "dqt_ternary_inf" => Mode::DqtTernaryInf,
+            _ => return None,
+        })
+    }
+    pub fn quantized(&self) -> bool {
+        !matches!(self, Mode::Fp32)
+    }
+}
+
+/// Precision environment (paper §4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Env {
+    Fp32,
+    Bf16,
+    Fp8,
+}
+
+impl Env {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Env::Fp32 => "fp32",
+            Env::Bf16 => "bf16",
+            Env::Fp8 => "fp8",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "fp32" => Env::Fp32,
+            "bf16" => Env::Bf16,
+            "fp8" => Env::Fp8,
+            _ => return None,
+        })
+    }
+    /// Bytes per value when *storing* state in this environment.
+    pub fn bytes_per_value(&self) -> f64 {
+        match self {
+            Env::Fp32 => 4.0,
+            Env::Bf16 => 2.0,
+            Env::Fp8 => 1.0,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Optimizer {
+    Adamw,
+    Adafactor,
+}
+
+impl Optimizer {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Optimizer::Adamw => "adamw",
+            Optimizer::Adafactor => "adafactor",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "adamw" => Optimizer::Adamw,
+            "adafactor" => Optimizer::Adafactor,
+            _ => return None,
+        })
+    }
+}
+
+/// Full variant descriptor == one artifact directory (twin of python's
+/// `VariantConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantSpec {
+    pub model: String,
+    pub mode: Mode,
+    pub bits: f64,
+    pub env: Env,
+    pub optimizer: Optimizer,
+    pub intervention: Option<String>,
+    pub recompute_scale: bool,
+}
+
+impl VariantSpec {
+    pub fn new(model: &str, mode: Mode, bits: f64) -> Self {
+        VariantSpec {
+            model: model.into(),
+            mode,
+            bits,
+            env: Env::Fp32,
+            optimizer: Optimizer::Adamw,
+            intervention: None,
+            recompute_scale: false,
+        }
+    }
+    pub fn with_env(mut self, env: Env) -> Self {
+        self.env = env;
+        self
+    }
+    pub fn with_optimizer(mut self, opt: Optimizer) -> Self {
+        self.optimizer = opt;
+        self
+    }
+    pub fn with_intervention(mut self, iv: &str) -> Self {
+        self.intervention = Some(iv.into());
+        self
+    }
+    pub fn with_recompute_scale(mut self) -> Self {
+        self.recompute_scale = true;
+        self
+    }
+
+    pub fn model_config(&self) -> Option<ModelConfig> {
+        ModelConfig::by_name(&self.model)
+    }
+
+    /// The artifact directory name — must match `configs.py` exactly.
+    pub fn variant_name(&self) -> String {
+        let mut parts = vec![self.model.clone(), self.mode.as_str().to_string()];
+        if self.mode.as_str().starts_with("dqt") {
+            let b = if (self.bits - self.bits.round()).abs() < 1e-9 {
+                format!("b{}", self.bits as i64)
+            } else {
+                format!("b{}", self.bits).replace('.', "p")
+            };
+            parts.push(b);
+        }
+        if self.env != Env::Fp32 {
+            parts.push(self.env.as_str().into());
+        }
+        if self.optimizer != Optimizer::Adamw {
+            parts.push(self.optimizer.as_str().into());
+        }
+        if let Some(iv) = &self.intervention {
+            if iv != "none" {
+                parts.push(iv.clone());
+            }
+        }
+        if self.recompute_scale {
+            parts.push("rescale".into());
+        }
+        parts.join("-")
+    }
+}
+
+/// Run-level configuration for a training job.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: u64,
+    pub warmup_steps: u64,
+    pub peak_lr: f64,
+    pub min_lr: f64,
+    pub seed: u64,
+    pub dataset: String,
+    /// evaluate dev loss every N steps (0 = only at the end)
+    pub eval_every: u64,
+    pub log_every: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            warmup_steps: 30,
+            peak_lr: 1e-3,
+            min_lr: 1e-5,
+            seed: 42,
+            dataset: "wiki".into(),
+            eval_every: 0,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> crate::util::json::Value {
+        crate::util::json::Value::obj()
+            .set("steps", self.steps)
+            .set("warmup_steps", self.warmup_steps)
+            .set("peak_lr", self.peak_lr)
+            .set("min_lr", self.min_lr)
+            .set("seed", self.seed)
+            .set("dataset", self.dataset.as_str())
+            .set("eval_every", self.eval_every)
+            .set("log_every", self.log_every)
+    }
+
+    pub fn from_json(v: &crate::util::json::Value) -> Self {
+        let d = TrainConfig::default();
+        let u = |k: &str, dv: u64| v.get(k).and_then(|x| x.as_u64()).unwrap_or(dv);
+        let f = |k: &str, dv: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(dv);
+        TrainConfig {
+            steps: u("steps", d.steps),
+            warmup_steps: u("warmup_steps", d.warmup_steps),
+            peak_lr: f("peak_lr", d.peak_lr),
+            min_lr: f("min_lr", d.min_lr),
+            seed: u("seed", d.seed),
+            dataset: v
+                .get("dataset")
+                .and_then(|x| x.as_str())
+                .map(|s| s.to_string())
+                .unwrap_or(d.dataset),
+            eval_every: u("eval_every", d.eval_every),
+            log_every: u("log_every", d.log_every),
+        }
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Ok(Self::from_json(&crate::util::json::parse(
+            &std::fs::read_to_string(path)?,
+        )?))
+    }
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_python() {
+        // values from `python -m compile.configs`
+        assert_eq!(ModelConfig::by_name("t130").unwrap().param_count(), 713_952);
+        assert_eq!(ModelConfig::by_name("t320").unwrap().param_count(), 2_034_816);
+        assert_eq!(ModelConfig::by_name("t1b").unwrap().param_count(), 6_822_144);
+        assert_eq!(ModelConfig::by_name("test").unwrap().param_count(), 22_688);
+        assert_eq!(
+            ModelConfig::by_name("p130m").unwrap().param_count(),
+            109_529_856
+        );
+        assert_eq!(
+            ModelConfig::by_name("p1b").unwrap().param_count(),
+            921_274_368
+        );
+    }
+
+    #[test]
+    fn variant_names_match_python_convention() {
+        let v = VariantSpec::new("t130", Mode::Dqt, 1.58);
+        assert_eq!(v.variant_name(), "t130-dqt-b1p58");
+        let v = VariantSpec::new("t130", Mode::Dqt, 8.0);
+        assert_eq!(v.variant_name(), "t130-dqt-b8");
+        let v = VariantSpec::new("t130", Mode::Fp32, 1.58);
+        assert_eq!(v.variant_name(), "t130-fp32");
+        let v = VariantSpec::new("t130", Mode::Bitnet158, 1.58);
+        assert_eq!(v.variant_name(), "t130-bitnet158");
+        let v = VariantSpec::new("t1b", Mode::Dqt, 8.0)
+            .with_env(Env::Fp8)
+            .with_optimizer(Optimizer::Adafactor);
+        assert_eq!(v.variant_name(), "t1b-dqt-b8-fp8-adafactor");
+        let v = VariantSpec::new("t130", Mode::Dqt, 1.58).with_intervention("force_remain");
+        assert_eq!(v.variant_name(), "t130-dqt-b1p58-force_remain");
+        let v = VariantSpec::new("t130", Mode::Dqt, 1.58).with_recompute_scale();
+        assert_eq!(v.variant_name(), "t130-dqt-b1p58-rescale");
+        let v = VariantSpec::new("t130", Mode::DqtAbsmax, 1.58);
+        assert_eq!(v.variant_name(), "t130-dqt_absmax-b1p58");
+        let v = VariantSpec::new("t130", Mode::DqtTernaryInf, 8.0);
+        assert_eq!(v.variant_name(), "t130-dqt_ternary_inf-b8");
+    }
+
+    #[test]
+    fn roundtrip_train_config() {
+        let c = TrainConfig::default();
+        let dir = std::env::temp_dir().join("dqt_cfg_test.json");
+        c.save(&dir).unwrap();
+        let c2 = TrainConfig::load(&dir).unwrap();
+        assert_eq!(c.steps, c2.steps);
+        std::fs::remove_file(dir).ok();
+    }
+}

@@ -1,0 +1,257 @@
+//! Experiment definitions: every paper figure/table as a set of jobs.
+//!
+//! One `JobSpec` = one training/eval run of one variant. `experiment_jobs`
+//! is the single source of truth mapping experiment ids (fig2 … table1,
+//! abl1/abl2) to the variants, datasets and schedules that regenerate them;
+//! `python/compile/aot.py::suite_variants` must provide the matching
+//! artifacts (covered by an integration test).
+
+use crate::config::{Env, Mode, Optimizer, TrainConfig, VariantSpec};
+
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub exp: String,
+    pub variant: VariantSpec,
+    pub train: TrainConfig,
+    /// run the zero-shot suite + perplexity after training
+    pub eval_tasks: bool,
+    /// additionally evaluate with deploy-time ternary projection (§A.2)
+    pub ternary_eval: bool,
+}
+
+impl JobSpec {
+    fn new(exp: &str, variant: VariantSpec, steps: u64, dataset: &str) -> Self {
+        let train = TrainConfig {
+            steps,
+            warmup_steps: (steps / 10).max(10),
+            dataset: dataset.into(),
+            ..TrainConfig::default()
+        };
+        JobSpec {
+            exp: exp.into(),
+            variant,
+            train,
+            eval_tasks: false,
+            ternary_eval: false,
+        }
+    }
+
+    pub fn job_name(&self) -> String {
+        format!("{}-{}", self.variant.variant_name(), self.train.dataset)
+    }
+}
+
+/// The four Fig. 2 curve variants for one model size.
+fn fig2_variants(size: &str) -> Vec<VariantSpec> {
+    vec![
+        VariantSpec::new(size, Mode::Fp32, 1.58),
+        VariantSpec::new(size, Mode::Bitnet158, 1.58),
+        VariantSpec::new(size, Mode::Dqt, 1.58),
+        VariantSpec::new(size, Mode::Dqt, 8.0),
+    ]
+}
+
+/// All jobs for an experiment id. `steps` scales every run (0 = default).
+pub fn experiment_jobs(exp: &str, steps: u64) -> Option<Vec<JobSpec>> {
+    let s = |d: u64| if steps == 0 { d } else { steps };
+    let jobs = match exp {
+        // Fig. 2: loss curves, 4 modes × 3 sizes on wiki + t1b on fineweb
+        "fig2" => {
+            let mut v = Vec::new();
+            for size in ["t130", "t320", "t1b"] {
+                for spec in fig2_variants(size) {
+                    v.push(JobSpec::new("fig2", spec, s(300), "wiki"));
+                }
+            }
+            for spec in fig2_variants("t1b") {
+                v.push(JobSpec::new("fig2", spec, s(300), "fineweb"));
+            }
+            v
+        }
+        // Fig. 3: memory vs dev loss under precision envs + adafactor
+        "fig3" => {
+            let mut v = Vec::new();
+            for size in ["t130", "t1b"] {
+                for (mode, bits) in [(Mode::Bitnet158, 1.58), (Mode::Dqt, 8.0)] {
+                    for env in [Env::Fp32, Env::Bf16, Env::Fp8] {
+                        v.push(JobSpec::new(
+                            "fig3",
+                            VariantSpec::new(size, mode, bits).with_env(env),
+                            s(300),
+                            "wiki",
+                        ));
+                    }
+                    for env in [Env::Bf16, Env::Fp8] {
+                        v.push(JobSpec::new(
+                            "fig3",
+                            VariantSpec::new(size, mode, bits)
+                                .with_env(env)
+                                .with_optimizer(Optimizer::Adafactor),
+                            s(300),
+                            "wiki",
+                        ));
+                    }
+                }
+            }
+            v
+        }
+        // Fig. 4: bit-width sweep
+        "fig4" => {
+            let mut v = Vec::new();
+            for size in ["t130", "t1b"] {
+                let data = if size == "t1b" { "fineweb" } else { "wiki" };
+                for bits in [1.58, 3.0, 4.0, 8.0] {
+                    v.push(JobSpec::new(
+                        "fig4",
+                        VariantSpec::new(size, Mode::Dqt, bits),
+                        s(300),
+                        data,
+                    ));
+                }
+            }
+            v
+        }
+        // Fig. 5: SR vs absmax re-quantization (same lr)
+        "fig5" => vec![
+            JobSpec::new("fig5", VariantSpec::new("t130", Mode::Dqt, 1.58), s(300), "wiki"),
+            JobSpec::new(
+                "fig5",
+                VariantSpec::new("t130", Mode::DqtAbsmax, 1.58),
+                s(300),
+                "wiki",
+            ),
+        ],
+        // Fig. 6: weight-update frequency (same lr + batch)
+        "fig6" => vec![
+            JobSpec::new("fig6", VariantSpec::new("t130", Mode::Dqt, 1.58), s(300), "wiki"),
+            JobSpec::new(
+                "fig6",
+                VariantSpec::new("t130", Mode::Bitnet158, 1.58),
+                s(300),
+                "wiki",
+            ),
+            JobSpec::new("fig6", VariantSpec::new("t130", Mode::Dqt, 8.0), s(300), "wiki"),
+        ],
+        // Fig. 7: bottom-20% interventions
+        "fig7" => vec![
+            JobSpec::new("fig7", VariantSpec::new("t130", Mode::Dqt, 1.58), s(300), "wiki"),
+            JobSpec::new(
+                "fig7",
+                VariantSpec::new("t130", Mode::Dqt, 1.58).with_intervention("force_remain"),
+                s(300),
+                "wiki",
+            ),
+            JobSpec::new(
+                "fig7",
+                VariantSpec::new("t130", Mode::Dqt, 1.58).with_intervention("force_update"),
+                s(300),
+                "wiki",
+            ),
+        ],
+        // Fig. 9: DQT-8bit vs DQT-8bit trained for ternary inference
+        "fig9" => vec![
+            JobSpec::new("fig9", VariantSpec::new("t130", Mode::Dqt, 8.0), s(300), "wiki"),
+            JobSpec::new(
+                "fig9",
+                VariantSpec::new("t130", Mode::DqtTernaryInf, 8.0),
+                s(300),
+                "wiki",
+            ),
+        ],
+        // Table 1: eval (ppl + zero-shot) on t1b over both datasets
+        "table1" => {
+            let mut v = Vec::new();
+            for data in ["wiki", "fineweb"] {
+                for (mode, bits) in [
+                    (Mode::Fp32, 1.58),
+                    (Mode::Bitnet158, 1.58),
+                    (Mode::Dqt, 8.0),
+                ] {
+                    let mut j = JobSpec::new(
+                        "table1",
+                        VariantSpec::new("t1b", mode, bits),
+                        s(300),
+                        data,
+                    );
+                    j.eval_tasks = true;
+                    j.ternary_eval = mode == Mode::Dqt; // "ternary Inf." row
+                    v.push(j);
+                }
+            }
+            v
+        }
+        // abl1: fixed vs recomputed grid scale
+        "abl1" => vec![
+            JobSpec::new("abl1", VariantSpec::new("t130", Mode::Dqt, 1.58), s(300), "wiki"),
+            JobSpec::new(
+                "abl1",
+                VariantSpec::new("t130", Mode::Dqt, 1.58).with_recompute_scale(),
+                s(300),
+                "wiki",
+            ),
+        ],
+        // abl2: AdamW+SR vs Adafactor+SR at fp32 env
+        "abl2" => vec![
+            JobSpec::new("abl2", VariantSpec::new("t130", Mode::Dqt, 1.58), s(300), "wiki"),
+            JobSpec::new(
+                "abl2",
+                VariantSpec::new("t130", Mode::Dqt, 1.58).with_optimizer(Optimizer::Adafactor),
+                s(300),
+                "wiki",
+            ),
+        ],
+        _ => return None,
+    };
+    Some(jobs)
+}
+
+pub fn known_experiments() -> &'static [&'static str] {
+    &["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig9", "table1", "abl1", "abl2"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_experiments_defined() {
+        for exp in known_experiments() {
+            let jobs = experiment_jobs(exp, 0).unwrap();
+            assert!(!jobs.is_empty(), "{exp}");
+            for j in &jobs {
+                assert!(j.variant.model_config().is_some(), "{}", j.job_name());
+                assert!(j.train.steps > 0);
+            }
+        }
+        assert!(experiment_jobs("nope", 0).is_none());
+    }
+
+    #[test]
+    fn steps_override() {
+        let jobs = experiment_jobs("fig5", 7).unwrap();
+        assert!(jobs.iter().all(|j| j.train.steps == 7));
+    }
+
+    #[test]
+    fn fig2_has_16_jobs() {
+        assert_eq!(experiment_jobs("fig2", 0).unwrap().len(), 16);
+    }
+
+    #[test]
+    fn table1_marks_ternary_eval() {
+        let jobs = experiment_jobs("table1", 0).unwrap();
+        assert!(jobs.iter().any(|j| j.ternary_eval));
+        assert!(jobs.iter().all(|j| j.eval_tasks));
+    }
+
+    #[test]
+    fn job_names_unique_within_experiment() {
+        for exp in known_experiments() {
+            let jobs = experiment_jobs(exp, 0).unwrap();
+            let mut names: Vec<String> = jobs.iter().map(|j| j.job_name()).collect();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), jobs.len(), "{exp}");
+        }
+    }
+}

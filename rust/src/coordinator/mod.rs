@@ -1,0 +1,250 @@
+//! Experiment orchestrator — the L3 coordination layer.
+//!
+//! A work-stealing job queue feeds N worker threads; each worker owns its
+//! own PJRT client (XLA CPU executables already parallelize internally, so
+//! the default is one worker; sweeps can raise it). Workers share a
+//! pipeline cache keyed by (dataset, vocab, seq) so each corpus is
+//! generated and tokenized once per process. Results land under
+//! `results/<exp>/<job>/` as metrics.json + curve.csv (+ eval.json).
+
+pub mod jobs;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+pub use jobs::{experiment_jobs, known_experiments, JobSpec};
+
+use crate::data::corpus::CorpusSpec;
+use crate::data::Pipeline;
+use crate::eval;
+use crate::memory;
+use crate::runtime::{Runtime, VariantRuntime};
+use crate::train::{checkpoint, Trainer};
+
+/// Pipeline cache shared across jobs (corpus+tokenizer are deterministic).
+#[derive(Default)]
+pub struct PipelineCache {
+    inner: Mutex<HashMap<(String, usize, usize, u64), Arc<Pipeline>>>,
+}
+
+impl PipelineCache {
+    pub fn get(
+        &self,
+        dataset: &str,
+        seed: u64,
+        vocab: usize,
+        seq_len: usize,
+    ) -> Result<Arc<Pipeline>> {
+        let key = (dataset.to_string(), vocab, seq_len, seed);
+        {
+            let map = self.inner.lock().unwrap();
+            if let Some(p) = map.get(&key) {
+                return Ok(p.clone());
+            }
+        }
+        // build outside the lock (expensive), then race-tolerantly insert
+        let built = Arc::new(Pipeline::build(dataset, seed, vocab, seq_len)?);
+        let mut map = self.inner.lock().unwrap();
+        Ok(map.entry(key).or_insert(built).clone())
+    }
+}
+
+/// Result summary of one finished job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub job: String,
+    pub exp: String,
+    pub variant: String,
+    pub dataset: String,
+    pub final_train_loss: Option<f32>,
+    pub final_dev_loss: Option<f32>,
+    pub peak_upd_frac: Option<f32>,
+    pub wall_secs: f64,
+    pub mem_model_mb: f64,
+    pub rss_mb: f64,
+    pub out_dir: PathBuf,
+}
+
+impl JobResult {
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let opt = |v: Option<f32>| v.map(Value::from).unwrap_or(Value::Null);
+        Value::obj()
+            .set("job", self.job.as_str())
+            .set("exp", self.exp.as_str())
+            .set("variant", self.variant.as_str())
+            .set("dataset", self.dataset.as_str())
+            .set("final_train_loss", opt(self.final_train_loss))
+            .set("final_dev_loss", opt(self.final_dev_loss))
+            .set("peak_upd_frac", opt(self.peak_upd_frac))
+            .set("wall_secs", self.wall_secs)
+            .set("mem_model_mb", self.mem_model_mb)
+            .set("rss_mb", self.rss_mb)
+            .set("out_dir", self.out_dir.display().to_string())
+    }
+}
+
+/// Run one job to completion: train → metrics → checkpoint → optional eval.
+pub fn run_job(
+    rt: &Runtime,
+    cache: &PipelineCache,
+    artifacts_root: &Path,
+    results_root: &Path,
+    job: &JobSpec,
+) -> Result<JobResult> {
+    let t0 = Instant::now();
+    let variant_name = job.variant.variant_name();
+    let cfg = job
+        .variant
+        .model_config()
+        .ok_or_else(|| anyhow!("unknown model {:?}", job.variant.model))?;
+    let vrt = VariantRuntime::load(rt, artifacts_root, &variant_name)?;
+    let pipeline = cache.get(
+        &job.train.dataset,
+        job.train.seed,
+        cfg.vocab_size,
+        cfg.max_seq_len,
+    )?;
+
+    let out_dir = results_root.join(&job.exp).join(job.job_name());
+    std::fs::create_dir_all(&out_dir)?;
+
+    let mut trainer = Trainer::new(&vrt, &pipeline, job.train.clone());
+    let vn = variant_name.clone();
+    trainer.progress = Some(Box::new(move |step, loss| {
+        eprintln!("    [{vn}] step {step}: loss {loss:.4}");
+    }));
+    let (state, metrics) = trainer.run()?;
+    metrics.save(&out_dir)?;
+    checkpoint::save(
+        &out_dir.join("model.dqt"),
+        vrt.manifest(),
+        &state,
+        checkpoint::Codec::F32,
+        false,
+    )?;
+
+    // optional Table-1 evaluation
+    if job.eval_tasks {
+        let spec = CorpusSpec::by_name(&job.train.dataset, job.train.seed)
+            .ok_or_else(|| anyhow!("unknown dataset"))?;
+        let mut evals = Vec::new();
+        evals.push(eval::evaluate(&vrt, &state, &pipeline, &spec, 100, false, 7)?);
+        if job.ternary_eval && vrt.has_ternary_inference() {
+            evals.push(eval::evaluate(&vrt, &state, &pipeline, &spec, 100, true, 7)?);
+        }
+        let arr = crate::util::json::Value::Arr(evals.iter().map(|e| e.to_json()).collect());
+        std::fs::write(out_dir.join("eval.json"), arr.to_string_pretty())?;
+    }
+
+    let mem = memory::estimate(&job.variant, true)
+        .map(|m| m.total_mb())
+        .unwrap_or(f64::NAN);
+    Ok(JobResult {
+        job: job.job_name(),
+        exp: job.exp.clone(),
+        variant: variant_name,
+        dataset: job.train.dataset.clone(),
+        final_train_loss: metrics.tail_loss(10),
+        final_dev_loss: metrics.final_dev_loss,
+        peak_upd_frac: metrics.peak_upd_frac(),
+        wall_secs: t0.elapsed().as_secs_f64(),
+        mem_model_mb: mem,
+        rss_mb: memory::process_rss_bytes().unwrap_or(0) as f64 / 1e6,
+        out_dir,
+    })
+}
+
+/// Run an experiment's jobs across `workers` threads; returns results in
+/// job order. Failed jobs are reported, not fatal (the sweep continues).
+pub fn run_experiment(
+    exp: &str,
+    steps: u64,
+    workers: usize,
+    artifacts_root: &Path,
+    results_root: &Path,
+) -> Result<Vec<Result<JobResult>>> {
+    let jobs =
+        experiment_jobs(exp, steps).ok_or_else(|| anyhow!("unknown experiment {exp:?}"))?;
+    run_jobs(&jobs, workers, artifacts_root, results_root)
+}
+
+pub fn run_jobs(
+    jobs: &[JobSpec],
+    workers: usize,
+    artifacts_root: &Path,
+    results_root: &Path,
+) -> Result<Vec<Result<JobResult>>> {
+    let cache = Arc::new(PipelineCache::default());
+    let queue = Arc::new(Mutex::new(
+        jobs.iter().cloned().enumerate().collect::<Vec<_>>(),
+    ));
+    let n = jobs.len();
+    let results: Arc<Mutex<Vec<Option<Result<JobResult>>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+
+    let workers = workers.max(1).min(n.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = queue.clone();
+            let results = results.clone();
+            let cache = cache.clone();
+            let artifacts_root = artifacts_root.to_path_buf();
+            let results_root = results_root.to_path_buf();
+            scope.spawn(move || {
+                // one PJRT client per worker
+                let rt = match Runtime::cpu() {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let mut res = results.lock().unwrap();
+                        for slot in res.iter_mut().filter(|s| s.is_none()) {
+                            *slot = Some(Err(anyhow!("PJRT init failed: {e}")));
+                        }
+                        return;
+                    }
+                };
+                loop {
+                    let item = { queue.lock().unwrap().pop() };
+                    let Some((idx, job)) = item else { break };
+                    eprintln!("  [job {}/{}] {}", idx + 1, n, job.job_name());
+                    let r = run_job(&rt, &cache, &artifacts_root, &results_root, &job);
+                    results.lock().unwrap()[idx] = Some(r);
+                }
+            });
+        }
+    });
+
+    let collected = Arc::try_unwrap(results)
+        .map_err(|_| anyhow!("worker leak"))?
+        .into_inner()
+        .unwrap();
+    Ok(collected
+        .into_iter()
+        .map(|o| o.unwrap_or_else(|| Err(anyhow!("job never ran"))))
+        .collect())
+}
+
+/// Persist a sweep summary (one row per job) for the report renderer.
+pub fn write_summary(
+    results_root: &Path,
+    exp: &str,
+    results: &[Result<JobResult>],
+) -> Result<PathBuf> {
+    use crate::util::json::Value;
+    let rows: Vec<Value> = results
+        .iter()
+        .map(|r| match r {
+            Ok(jr) => jr.to_json(),
+            Err(e) => Value::obj().set("error", e.to_string()),
+        })
+        .collect();
+    let dir = results_root.join(exp);
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("summary.json");
+    std::fs::write(&path, Value::Arr(rows).to_string_pretty())?;
+    Ok(path)
+}

@@ -1,0 +1,283 @@
+//! Synthetic corpus generator — the hermetic stand-in for Wikipedia/FineWeb.
+//!
+//! DQT's experiments need text with *learnable structure* (so loss curves
+//! separate the methods), not any particular natural-language distribution.
+//! The generator produces documents from a two-level process:
+//!
+//!   1. a synthetic lexicon of pronounceable words (CV-syllable strings),
+//!      ranked with a Zipf distribution (like natural vocabularies);
+//!   2. a first-order Markov chain over words: each word has a small set of
+//!      hash-determined preferred successors mixed with global Zipf noise,
+//!      plus topic drift per document (like topical web text).
+//!
+//! A model can therefore reduce loss well below the unigram entropy by
+//! learning bigram structure — giving the same qualitative loss-curve
+//! ordering across quantization modes the paper observes on real corpora.
+//!
+//! Presets: `wiki` (smaller vocab, shorter docs — stands in for the paper's
+//! Wikipedia set) and `fineweb` (larger vocab, longer docs, more tokens).
+//! Everything is deterministic in the seed.
+
+/// xorshift64* PRNG — deterministic, dependency-free.
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+    }
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+/// Corpus preset parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CorpusSpec {
+    pub name: String,
+    pub vocab_words: usize,
+    pub n_docs: usize,
+    pub doc_len_words: (usize, usize), // min..max
+    pub zipf_exponent: f64,
+    /// weight of the Markov successor component vs global Zipf draw
+    pub markov_weight: f64,
+    pub n_successors: usize,
+    pub seed: u64,
+}
+
+impl CorpusSpec {
+    /// Stand-in for the paper's English Wikipedia set (§4.1).
+    pub fn wiki(seed: u64) -> Self {
+        CorpusSpec {
+            name: "wiki-syn".into(),
+            vocab_words: 2000,
+            n_docs: 4000,
+            doc_len_words: (60, 400),
+            zipf_exponent: 1.05,
+            markov_weight: 0.75,
+            n_successors: 3,
+            seed,
+        }
+    }
+    /// Stand-in for the FineWeb 10B-token sample — larger vocab, more text.
+    pub fn fineweb(seed: u64) -> Self {
+        CorpusSpec {
+            name: "fineweb-syn".into(),
+            vocab_words: 6000,
+            n_docs: 12000,
+            doc_len_words: (100, 600),
+            zipf_exponent: 1.02,
+            markov_weight: 0.7,
+            n_successors: 4,
+            seed,
+        }
+    }
+    /// Tiny preset for unit tests.
+    pub fn tiny(seed: u64) -> Self {
+        CorpusSpec {
+            name: "tiny-syn".into(),
+            vocab_words: 200,
+            n_docs: 50,
+            doc_len_words: (20, 60),
+            zipf_exponent: 1.1,
+            markov_weight: 0.8,
+            n_successors: 3,
+            seed,
+        }
+    }
+
+    pub fn by_name(name: &str, seed: u64) -> Option<Self> {
+        match name {
+            "wiki" | "wiki-syn" => Some(Self::wiki(seed)),
+            "fineweb" | "fineweb-syn" => Some(Self::fineweb(seed)),
+            "tiny" | "tiny-syn" => Some(Self::tiny(seed)),
+            _ => None,
+        }
+    }
+}
+
+const ONSETS: &[&str] = &[
+    "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z",
+    "br", "dr", "gr", "kr", "pl", "st", "tr", "sh", "ch", "th",
+];
+const VOWELS: &[&str] = &["a", "e", "i", "o", "u", "ai", "ea", "io", "ou"];
+const CODAS: &[&str] = &["", "", "", "n", "r", "s", "t", "l", "m", "nd", "st"];
+
+/// Build the synthetic lexicon: `vocab_words` distinct pronounceable words.
+pub fn build_lexicon(spec: &CorpusSpec) -> Vec<String> {
+    let mut rng = Rng::new(spec.seed ^ 0xABCD);
+    let mut seen = std::collections::HashSet::new();
+    let mut words = Vec::with_capacity(spec.vocab_words);
+    while words.len() < spec.vocab_words {
+        let syllables = 1 + rng.below(3);
+        let mut w = String::new();
+        for _ in 0..=syllables {
+            w.push_str(ONSETS[rng.below(ONSETS.len())]);
+            w.push_str(VOWELS[rng.below(VOWELS.len())]);
+            w.push_str(CODAS[rng.below(CODAS.len())]);
+        }
+        if seen.insert(w.clone()) {
+            words.push(w);
+        }
+    }
+    words
+}
+
+/// Zipf sampler over ranks 0..n (rank 0 most frequent) via inverse CDF.
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// Deterministic preferred successors of a word (the Markov structure).
+fn successors(word_id: usize, spec: &CorpusSpec) -> Vec<usize> {
+    (0..spec.n_successors)
+        .map(|j| {
+            let h = crate::quant::sr::hash_u32(
+                word_id as u32 * 31 + j as u32,
+                spec.seed as u32,
+            );
+            h as usize % spec.vocab_words
+        })
+        .collect()
+}
+
+/// Generate the full corpus: a vec of documents (plain text).
+pub fn generate(spec: &CorpusSpec) -> Vec<String> {
+    let lexicon = build_lexicon(spec);
+    let zipf = Zipf::new(spec.vocab_words, spec.zipf_exponent);
+    let mut rng = Rng::new(spec.seed);
+    let mut docs = Vec::with_capacity(spec.n_docs);
+    for _ in 0..spec.n_docs {
+        let len = spec.doc_len_words.0
+            + rng.below(spec.doc_len_words.1 - spec.doc_len_words.0 + 1);
+        let mut doc = String::with_capacity(len * 7);
+        let mut cur = zipf.sample(&mut rng);
+        let mut sentence_left = 6 + rng.below(12);
+        for i in 0..len {
+            if i > 0 {
+                doc.push(' ');
+            }
+            doc.push_str(&lexicon[cur]);
+            sentence_left -= 1;
+            if sentence_left == 0 {
+                doc.push('.');
+                sentence_left = 6 + rng.below(12);
+            }
+            // next word: Markov successor or global Zipf
+            cur = if rng.next_f64() < spec.markov_weight {
+                let succ = successors(cur, spec);
+                succ[rng.below(succ.len())]
+            } else {
+                zipf.sample(&mut rng)
+            };
+        }
+        docs.push(doc);
+    }
+    docs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let spec = CorpusSpec::tiny(7);
+        assert_eq!(generate(&spec), generate(&spec));
+        let mut spec2 = spec.clone();
+        spec2.seed = 8;
+        assert_ne!(generate(&spec), generate(&spec2));
+    }
+
+    #[test]
+    fn lexicon_distinct_and_sized() {
+        let spec = CorpusSpec::tiny(1);
+        let lex = build_lexicon(&spec);
+        assert_eq!(lex.len(), spec.vocab_words);
+        let set: std::collections::HashSet<_> = lex.iter().collect();
+        assert_eq!(set.len(), lex.len());
+    }
+
+    #[test]
+    fn doc_lengths_in_range() {
+        let spec = CorpusSpec::tiny(3);
+        for doc in generate(&spec) {
+            let n = doc.split_whitespace().count();
+            assert!(n >= spec.doc_len_words.0 && n <= spec.doc_len_words.1 + 1);
+        }
+    }
+
+    #[test]
+    fn zipf_head_is_heavy() {
+        let z = Zipf::new(100, 1.2);
+        let mut rng = Rng::new(42);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[50] * 5);
+    }
+
+    #[test]
+    fn markov_structure_present() {
+        // successor bigrams must be far more frequent than chance
+        let spec = CorpusSpec::tiny(11);
+        let lex = build_lexicon(&spec);
+        let idx: std::collections::HashMap<&str, usize> =
+            lex.iter().map(|w| w.as_str()).zip(0..).collect();
+        let docs = generate(&spec);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for doc in &docs {
+            let words: Vec<&str> = doc
+                .split_whitespace()
+                .map(|w| w.trim_end_matches('.'))
+                .collect();
+            for pair in words.windows(2) {
+                if let (Some(&a), Some(&b)) = (idx.get(pair[0]), idx.get(pair[1])) {
+                    total += 1;
+                    if successors(a, &spec).contains(&b) {
+                        hits += 1;
+                    }
+                }
+            }
+        }
+        let rate = hits as f64 / total as f64;
+        // chance level ≈ n_successors / vocab = 1.5%; markov_weight = 0.8
+        assert!(rate > 0.5, "bigram hit rate {rate}");
+    }
+}

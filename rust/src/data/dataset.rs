@@ -1,0 +1,131 @@
+//! Dataset assembly: token stream → fixed-length training windows.
+//!
+//! Mirrors the paper's preprocessing (§A.1): documents are tokenized,
+//! concatenated with BOS separators, split into chunks of `seq_len + 1`
+//! tokens (input/label overlap), short tails padded with PAD. 1% of chunks
+//! become the development set (paper: "We split 1% of the data as the
+//! corresponding development set").
+
+use super::corpus::Rng;
+use super::tokenizer::PAD_ID;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// flattened [n_chunks × (seq_len+1)] token matrix
+    pub chunks: Vec<i32>,
+    pub seq_len: usize,
+    pub n_train: usize,
+    pub n_dev: usize,
+}
+
+impl Dataset {
+    /// Chunk a token stream; deterministically shuffle; hold out `dev_frac`.
+    pub fn from_stream(stream: &[i32], seq_len: usize, dev_frac: f64, seed: u64) -> Self {
+        let w = seq_len + 1;
+        let n_chunks = stream.len().div_ceil(w);
+        let mut chunks = vec![PAD_ID; n_chunks * w];
+        for (i, tok) in stream.iter().enumerate() {
+            chunks[i] = *tok;
+        }
+        // shuffle chunk order (Fisher-Yates)
+        let mut order: Vec<usize> = (0..n_chunks).collect();
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        for i in (1..n_chunks).rev() {
+            let j = rng.below(i + 1);
+            order.swap(i, j);
+        }
+        let mut shuffled = vec![PAD_ID; chunks.len()];
+        for (dst, &src) in order.iter().enumerate() {
+            shuffled[dst * w..(dst + 1) * w].copy_from_slice(&chunks[src * w..(src + 1) * w]);
+        }
+        let n_dev = ((n_chunks as f64 * dev_frac).round() as usize).max(1).min(n_chunks / 2);
+        Dataset {
+            chunks: shuffled,
+            seq_len,
+            n_train: n_chunks - n_dev,
+            n_dev,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.seq_len + 1
+    }
+
+    /// Training chunk `i` (first `n_train` chunks).
+    pub fn train_chunk(&self, i: usize) -> &[i32] {
+        let w = self.width();
+        &self.chunks[i * w..(i + 1) * w]
+    }
+
+    /// Dev chunk `i` (the held-out tail).
+    pub fn dev_chunk(&self, i: usize) -> &[i32] {
+        let w = self.width();
+        let base = self.n_train + i;
+        &self.chunks[base * w..(base + 1) * w]
+    }
+
+    /// Total non-pad tokens in the dev split (for perplexity normalization).
+    pub fn dev_token_count(&self) -> usize {
+        (0..self.n_dev)
+            .map(|i| self.dev_chunk(i).iter().filter(|&&t| t != PAD_ID).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(n: usize) -> Vec<i32> {
+        (0..n).map(|i| (i % 500) as i32 + 1).collect()
+    }
+
+    #[test]
+    fn chunking_covers_every_token_once() {
+        let s = stream(1000);
+        let ds = Dataset::from_stream(&s, 32, 0.01, 1);
+        let mut got: Vec<i32> = ds.chunks.iter().copied().filter(|&t| t != PAD_ID).collect();
+        let mut want = s.clone();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pad_only_in_last_chunk_prepad() {
+        let s = stream(100); // 100 tokens, width 33 → 4 chunks, last padded
+        let ds = Dataset::from_stream(&s, 32, 0.25, 2);
+        assert_eq!(ds.n_train + ds.n_dev, 4);
+        let pads = ds.chunks.iter().filter(|&&t| t == PAD_ID).count();
+        assert_eq!(pads, 4 * 33 - 100);
+    }
+
+    #[test]
+    fn deterministic_shuffle() {
+        let s = stream(5000);
+        let a = Dataset::from_stream(&s, 16, 0.01, 7);
+        let b = Dataset::from_stream(&s, 16, 0.01, 7);
+        let c = Dataset::from_stream(&s, 16, 0.01, 8);
+        assert_eq!(a.chunks, b.chunks);
+        assert_ne!(a.chunks, c.chunks);
+    }
+
+    #[test]
+    fn dev_split_one_percent() {
+        let s = stream(33 * 1000);
+        let ds = Dataset::from_stream(&s, 32, 0.01, 3);
+        assert_eq!(ds.n_dev, 10);
+        assert_eq!(ds.n_train, 990);
+    }
+
+    #[test]
+    fn chunk_accessors_disjoint() {
+        let s = stream(33 * 100);
+        let ds = Dataset::from_stream(&s, 32, 0.05, 4);
+        let t0 = ds.train_chunk(0).to_vec();
+        let d0 = ds.dev_chunk(0).to_vec();
+        assert_eq!(t0.len(), 33);
+        assert_eq!(d0.len(), 33);
+        assert_eq!(ds.dev_chunk(ds.n_dev - 1).len(), 33);
+    }
+}

@@ -1,0 +1,63 @@
+//! Data pipeline substrate: synthetic corpus → BPE tokenizer → chunked
+//! dataset → prefetching batch loader (paper §4.1 / §A.1 preprocessing).
+
+pub mod corpus;
+pub mod dataset;
+pub mod loader;
+pub mod tokenizer;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+/// Everything the trainer needs for one dataset preset, built end to end.
+pub struct Pipeline {
+    pub spec: corpus::CorpusSpec,
+    pub tokenizer: tokenizer::Tokenizer,
+    pub dataset: Arc<dataset::Dataset>,
+}
+
+impl Pipeline {
+    /// Generate the corpus, train the tokenizer, chunk the stream.
+    ///
+    /// `vocab_size` must match the model config's vocabulary; `seq_len`
+    /// the compiled sequence length.
+    pub fn build(preset: &str, seed: u64, vocab_size: usize, seq_len: usize) -> Result<Self> {
+        let spec = corpus::CorpusSpec::by_name(preset, seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown corpus preset {preset:?}"))?;
+        let docs = corpus::generate(&spec);
+        // train the tokenizer on a deterministic sample (caps training cost)
+        let sample: Vec<String> = docs.iter().take(500).cloned().collect();
+        let tok = tokenizer::Tokenizer::train(&sample, vocab_size);
+        let stream = tok.encode_docs(&docs);
+        let ds = dataset::Dataset::from_stream(&stream, seq_len, 0.01, seed);
+        Ok(Pipeline {
+            spec,
+            tokenizer: tok,
+            dataset: Arc::new(ds),
+        })
+    }
+
+    pub fn loader(&self, batch_size: usize, n_steps: u64, seed: u64) -> loader::Loader {
+        loader::Loader::new(self.dataset.clone(), batch_size, n_steps, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_builds_tiny() {
+        let p = Pipeline::build("tiny", 1, 300, 32).unwrap();
+        assert!(p.dataset.n_train > 10);
+        assert!(p.dataset.n_dev >= 1);
+        // all tokens within vocab
+        assert!(p.dataset.chunks.iter().all(|&t| (0..300).contains(&t)));
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        assert!(Pipeline::build("nope", 1, 300, 32).is_err());
+    }
+}

@@ -1,0 +1,335 @@
+//! Alphabet-adaptive BPE tokenizer: trainer + encoder/decoder.
+//!
+//! GPT-2-style word-internal BPE, but the base alphabet is derived from the
+//! training corpus instead of all 256 bytes — so the same implementation
+//! serves both the tiny test vocabularies (64 ids) and the full configs
+//! (512+ ids). Vocabulary layout:
+//!
+//!   id 0                      = PAD (matches `model.PAD_ID` in the L2 graph)
+//!   id 1                      = BOS / document separator
+//!   id 2                      = UNK (bytes unseen at training time)
+//!   ids 3 .. 3+|alphabet|     = the corpus alphabet, sorted
+//!   ids after                 = learned merges, in rank order
+//!
+//! The trained tokenizer serializes to JSON so the whole data pipeline is
+//! reproducible from a checkpoint directory.
+
+use std::collections::HashMap;
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const UNK_ID: i32 = 2;
+const BASE: i32 = 3;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// distinct corpus bytes, sorted — ids BASE..BASE+len
+    pub alphabet: Vec<u8>,
+    /// learned merges in rank order: (left id, right id) → BASE+|alphabet|+rank
+    pub merges: Vec<(i32, i32)>,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Train BPE on `docs` until `vocab_size` ids exist (or no pair repeats).
+    pub fn train(docs: &[String], vocab_size: usize) -> Self {
+        // derive the alphabet (space handled as the word-boundary byte)
+        let mut seen = [false; 256];
+        for d in docs {
+            for b in d.bytes() {
+                seen[b as usize] = true;
+            }
+        }
+        let alphabet: Vec<u8> = (0u16..256)
+            .filter(|&b| seen[b as usize])
+            .map(|b| b as u8)
+            .collect();
+        assert!(
+            vocab_size > BASE as usize + alphabet.len(),
+            "vocab {} too small for alphabet {} (+{BASE} specials)",
+            vocab_size,
+            alphabet.len()
+        );
+        let byte_id: HashMap<u8, i32> = alphabet
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (b, BASE + i as i32))
+            .collect();
+
+        // word frequency table; words carry a leading space byte when not
+        // document-initial (GPT-2 convention)
+        let mut word_freq: HashMap<Vec<i32>, u64> = HashMap::new();
+        for doc in docs {
+            for (i, w) in doc.split_whitespace().enumerate() {
+                let mut ids: Vec<i32> = Vec::with_capacity(w.len() + 1);
+                if i > 0 {
+                    if let Some(&sp) = byte_id.get(&b' ') {
+                        ids.push(sp);
+                    }
+                }
+                ids.extend(w.bytes().map(|b| byte_id.get(&b).copied().unwrap_or(UNK_ID)));
+                *word_freq.entry(ids).or_insert(0) += 1;
+            }
+        }
+        let mut words: Vec<(Vec<i32>, u64)> = word_freq.into_iter().collect();
+        words.sort(); // deterministic iteration order
+
+        let mut merges = Vec::new();
+        let mut next_id = BASE + alphabet.len() as i32;
+        while (next_id as usize) < vocab_size {
+            let mut pair_counts: HashMap<(i32, i32), u64> = HashMap::new();
+            for (ids, f) in &words {
+                for p in ids.windows(2) {
+                    *pair_counts.entry((p[0], p[1])).or_insert(0) += f;
+                }
+            }
+            // best pair (deterministic tie-break on the pair itself)
+            let Some((&best, &count)) = pair_counts
+                .iter()
+                .max_by_key(|(pair, count)| (**count, std::cmp::Reverse(**pair)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break;
+            }
+            merges.push(best);
+            for (ids, _) in words.iter_mut() {
+                let mut out = Vec::with_capacity(ids.len());
+                let mut i = 0;
+                while i < ids.len() {
+                    if i + 1 < ids.len() && (ids[i], ids[i + 1]) == best {
+                        out.push(next_id);
+                        i += 2;
+                    } else {
+                        out.push(ids[i]);
+                        i += 1;
+                    }
+                }
+                *ids = out;
+            }
+            next_id += 1;
+        }
+        Tokenizer {
+            alphabet,
+            merges,
+            vocab_size,
+        }
+    }
+
+    fn byte_ids(&self) -> HashMap<u8, i32> {
+        self.alphabet
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (b, BASE + i as i32))
+            .collect()
+    }
+
+    fn merge_ranks(&self) -> HashMap<(i32, i32), usize> {
+        self.merges
+            .iter()
+            .enumerate()
+            .map(|(r, &p)| (p, r))
+            .collect()
+    }
+
+    /// Encode one document (no BOS added; see [`encode_docs`]).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let byte_id = self.byte_ids();
+        let ranks = self.merge_ranks();
+        let merge_base = BASE + self.alphabet.len() as i32;
+        let mut out = Vec::with_capacity(text.len() / 3 + 1);
+        for (i, w) in text.split_whitespace().enumerate() {
+            let mut ids: Vec<i32> = Vec::with_capacity(w.len() + 1);
+            if i > 0 {
+                if let Some(&sp) = byte_id.get(&b' ') {
+                    ids.push(sp);
+                }
+            }
+            ids.extend(w.bytes().map(|b| byte_id.get(&b).copied().unwrap_or(UNK_ID)));
+            // greedy lowest-rank merge loop
+            loop {
+                let mut best: Option<(usize, usize)> = None; // (rank, pos)
+                for (pos, p) in ids.windows(2).enumerate() {
+                    if let Some(&r) = ranks.get(&(p[0], p[1])) {
+                        if best.map_or(true, |(br, _)| r < br) {
+                            best = Some((r, pos));
+                        }
+                    }
+                }
+                let Some((rank, pos)) = best else { break };
+                ids.splice(pos..pos + 2, [merge_base + rank as i32]);
+            }
+            out.extend(ids);
+        }
+        out
+    }
+
+    /// Encode documents into one stream with BOS separators.
+    pub fn encode_docs(&self, docs: &[String]) -> Vec<i32> {
+        let mut out = Vec::new();
+        for d in docs {
+            out.push(BOS_ID);
+            out.extend(self.encode(d));
+        }
+        out
+    }
+
+    /// Decode ids back to text (PAD/BOS dropped, UNK → '?').
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut table: Vec<Vec<u8>> = Vec::with_capacity(self.vocab_size);
+        table.push(Vec::new()); // PAD
+        table.push(Vec::new()); // BOS
+        table.push(vec![b'?']); // UNK
+        for &b in &self.alphabet {
+            table.push(vec![b]);
+        }
+        for &(a, b) in &self.merges {
+            let mut v = table[a as usize].clone();
+            v.extend_from_slice(&table[b as usize]);
+            table.push(v);
+        }
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if (id as usize) < table.len() {
+                bytes.extend_from_slice(&table[id as usize]);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use crate::util::json::Value;
+        let merges = Value::Arr(
+            self.merges
+                .iter()
+                .map(|&(a, b)| Value::Arr(vec![a.into(), b.into()]))
+                .collect(),
+        );
+        let alphabet = Value::Arr(self.alphabet.iter().map(|&b| (b as i32).into()).collect());
+        let v = Value::obj()
+            .set("vocab_size", self.vocab_size)
+            .set("alphabet", alphabet)
+            .set("merges", merges);
+        std::fs::write(path, v.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        use anyhow::anyhow;
+        let v = crate::util::json::parse(&std::fs::read_to_string(path)?)?;
+        let vocab_size = v
+            .req("vocab_size")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("bad vocab_size"))?;
+        let alphabet = v
+            .req("alphabet")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad alphabet"))?
+            .iter()
+            .map(|x| x.as_i64().unwrap_or(0) as u8)
+            .collect();
+        let merges = v
+            .req("merges")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad merges"))?
+            .iter()
+            .map(|pair| {
+                let p = pair.as_arr().ok_or_else(|| anyhow!("bad merge pair"))?;
+                Ok((
+                    p[0].as_i64().ok_or_else(|| anyhow!("bad id"))? as i32,
+                    p[1].as_i64().ok_or_else(|| anyhow!("bad id"))? as i32,
+                ))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Tokenizer {
+            alphabet,
+            merges,
+            vocab_size,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_docs() -> Vec<String> {
+        vec![
+            "the cat sat on the mat. the cat ran".to_string(),
+            "a cat and a dog sat on a log".to_string(),
+            "the dog ran to the cat on the mat".to_string(),
+        ]
+    }
+
+    #[test]
+    fn train_produces_merges_and_alphabet() {
+        let tok = Tokenizer::train(&sample_docs(), 64);
+        assert!(!tok.merges.is_empty());
+        // corpus alphabet: lowercase letters + space + '.'
+        assert!(tok.alphabet.contains(&b' '));
+        assert!(tok.alphabet.contains(&b'.'));
+        assert!(tok.alphabet.len() < 30);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let docs = sample_docs();
+        let tok = Tokenizer::train(&docs, 64);
+        for d in &docs {
+            let ids = tok.encode(d);
+            // single-space normalization is the only permitted loss
+            let norm: String = d.split_whitespace().collect::<Vec<_>>().join(" ");
+            assert_eq!(tok.decode(&ids), norm);
+        }
+    }
+
+    #[test]
+    fn unknown_bytes_become_unk() {
+        let tok = Tokenizer::train(&sample_docs(), 64);
+        let ids = tok.encode("cat zèbre");
+        assert!(ids.contains(&UNK_ID));
+    }
+
+    #[test]
+    fn compression_beats_bytes() {
+        let docs = sample_docs();
+        let tok = Tokenizer::train(&docs, 64);
+        let text = &docs[0];
+        assert!(tok.encode(text).len() < text.len());
+    }
+
+    #[test]
+    fn ids_within_vocab() {
+        let docs = sample_docs();
+        for vocab in [40usize, 64, 200] {
+            let tok = Tokenizer::train(&docs, vocab);
+            for d in &docs {
+                for id in tok.encode(d) {
+                    assert!((0..vocab as i32).contains(&id), "vocab {vocab} id {id}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = Tokenizer::train(&sample_docs(), 64);
+        let b = Tokenizer::train(&sample_docs(), 64);
+        assert_eq!(a.merges, b.merges);
+        assert_eq!(a.alphabet, b.alphabet);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let tok = Tokenizer::train(&sample_docs(), 64);
+        let dir = std::env::temp_dir().join("dqt_tok_test.json");
+        tok.save(&dir).unwrap();
+        let tok2 = Tokenizer::load(&dir).unwrap();
+        assert_eq!(tok.merges, tok2.merges);
+        assert_eq!(tok.alphabet, tok2.alphabet);
+        assert_eq!(tok.decode(&tok.encode("the cat")), "the cat");
+        assert_eq!(tok2.decode(&tok2.encode("the cat")), "the cat");
+        std::fs::remove_file(dir).ok();
+    }
+}

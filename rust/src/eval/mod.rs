@@ -1,0 +1,130 @@
+//! Evaluation harness: held-out perplexity + the zero-shot suite (Table 1).
+
+pub mod tasks;
+
+use anyhow::Result;
+
+use crate::data::corpus::CorpusSpec;
+use crate::data::loader::dev_batches;
+use crate::data::Pipeline;
+use crate::runtime::{State, VariantRuntime};
+
+/// Table-1-shaped evaluation result for one model.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub variant: String,
+    pub ternary_inference: bool,
+    /// WikiText-2 analogue: dev-split perplexity
+    pub perplexity: f64,
+    /// task name → accuracy
+    pub task_acc: Vec<(String, f64)>,
+}
+
+impl EvalResult {
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let acc = Value::Obj(
+            self.task_acc
+                .iter()
+                .map(|(k, v)| (k.clone(), Value::Num(*v)))
+                .collect(),
+        );
+        Value::obj()
+            .set("variant", self.variant.as_str())
+            .set("ternary_inference", self.ternary_inference)
+            .set("perplexity", self.perplexity)
+            .set("task_acc", acc)
+    }
+}
+
+/// Dev-split perplexity (the WikiText-2 column's stand-in).
+pub fn perplexity(
+    vrt: &VariantRuntime,
+    state: &State,
+    pipeline: &Pipeline,
+    ternary: bool,
+) -> Result<f64> {
+    let bs = vrt.manifest().variant.model.batch_size;
+    let mut nll = 0f64;
+    let mut count = 0f64;
+    for b in dev_batches(&pipeline.dataset, bs) {
+        let (s, c) = vrt.eval_step(state, &b.tokens, ternary)?;
+        nll += s as f64;
+        count += c as f64;
+    }
+    Ok((nll / count.max(1.0)).exp())
+}
+
+/// Accuracy on one zero-shot task via length-normalized log-likelihood.
+pub fn task_accuracy(
+    vrt: &VariantRuntime,
+    state: &State,
+    pipeline: &Pipeline,
+    task: &tasks::Task,
+    ternary: bool,
+) -> Result<f64> {
+    let m = vrt.manifest();
+    let bs = m.logits_tokens_shape[0];
+    let seq = m.logits_tokens_shape[1];
+    let vocab = m.variant.model.vocab_size;
+
+    // flatten all (item, choice) rows, batch them through logits_step
+    let mut rows: Vec<tasks::ScoredRow> = Vec::new();
+    let mut owners: Vec<(usize, usize)> = Vec::new(); // (item, choice)
+    for (ii, item) in task.items.iter().enumerate() {
+        for (ci, row) in tasks::rows_for_item(item, &pipeline.tokenizer, seq)
+            .into_iter()
+            .enumerate()
+        {
+            rows.push(row);
+            owners.push((ii, ci));
+        }
+    }
+    let mut scores = vec![vec![f64::NEG_INFINITY; 2]; task.items.len()];
+    for (chunk_rows, chunk_owners) in rows.chunks(bs).zip(owners.chunks(bs)) {
+        let mut tokens = vec![crate::data::tokenizer::PAD_ID; bs * seq];
+        for (r, row) in chunk_rows.iter().enumerate() {
+            tokens[r * seq..(r + 1) * seq].copy_from_slice(&row.tokens);
+        }
+        let logits = vrt.logits(state, &tokens, ternary)?;
+        for (r, (row, &(ii, ci))) in chunk_rows.iter().zip(chunk_owners.iter()).enumerate() {
+            let row_logits = &logits[r * seq * vocab..(r + 1) * seq * vocab];
+            scores[ii][ci] = tasks::span_loglik(row_logits, vocab, &row.tokens, row.span);
+        }
+    }
+    let correct = task
+        .items
+        .iter()
+        .enumerate()
+        .filter(|(ii, item)| {
+            let s = &scores[*ii];
+            let pred = if s[0] >= s[1] { 0 } else { 1 };
+            pred == item.answer
+        })
+        .count();
+    Ok(correct as f64 / task.items.len().max(1) as f64)
+}
+
+/// Full Table-1 row: perplexity + all four zero-shot tasks.
+pub fn evaluate(
+    vrt: &VariantRuntime,
+    state: &State,
+    pipeline: &Pipeline,
+    spec: &CorpusSpec,
+    n_items: usize,
+    ternary: bool,
+    seed: u64,
+) -> Result<EvalResult> {
+    let ppl = perplexity(vrt, state, pipeline, ternary)?;
+    let suite = tasks::generate_suite(spec, n_items, seed);
+    let mut task_acc = Vec::new();
+    for t in &suite {
+        task_acc.push((t.name.clone(), task_accuracy(vrt, state, pipeline, t, ternary)?));
+    }
+    Ok(EvalResult {
+        variant: vrt.manifest().variant.variant_name.clone(),
+        ternary_inference: ternary,
+        perplexity: ppl,
+        task_acc,
+    })
+}

@@ -1,0 +1,271 @@
+//! Synthetic zero-shot benchmark suite (Table 1's task columns).
+//!
+//! Four multiple-choice task families stand in for WinoGrande / ARC-easy /
+//! ARC-challenge / PIQA / SciQ. Each item is `(context, choices, answer)`
+//! where the ground truth comes from the corpus generator's *known* Markov
+//! structure — so task difficulty is controlled and graded:
+//!
+//!   succ_easy   pick the true Markov successor vs a random word (ARC-easy)
+//!   succ_hard   distractor is itself a plausible word (a successor of a
+//!               different word) — requires sharper bigram estimates
+//!               (ARC-challenge)
+//!   cloze       mid-sequence cloze: full-sequence likelihood comparison
+//!               (WinoGrande-style pairwise scoring)
+//!   copy_recall a marker word appears earlier in the context; the correct
+//!               continuation repeats it vs a frequency-matched distractor
+//!               (SciQ-style recall)
+//!
+//! Scoring follows lm_eval: length-normalized sum log-likelihood of the
+//! choice tokens given the context; accuracy = argmax over choices.
+
+use crate::data::corpus::{self, CorpusSpec, Rng};
+use crate::data::tokenizer::Tokenizer;
+
+#[derive(Clone, Debug)]
+pub struct Item {
+    /// shared context text
+    pub context: String,
+    /// candidate continuations (first = correct before shuffling; see `answer`)
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: String,
+    pub items: Vec<Item>,
+}
+
+fn successors(word_id: usize, spec: &CorpusSpec) -> Vec<usize> {
+    (0..spec.n_successors)
+        .map(|j| {
+            let h = crate::quant::sr::hash_u32(word_id as u32 * 31 + j as u32, spec.seed as u32);
+            h as usize % spec.vocab_words
+        })
+        .collect()
+}
+
+fn random_walk(lex: &[String], spec: &CorpusSpec, rng: &mut Rng, len: usize) -> Vec<usize> {
+    let mut cur = rng.below(spec.vocab_words);
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(cur);
+        cur = if rng.next_f64() < spec.markov_weight {
+            let s = successors(cur, spec);
+            s[rng.below(s.len())]
+        } else {
+            rng.below(spec.vocab_words)
+        };
+    }
+    let _ = lex;
+    out
+}
+
+fn words_text(lex: &[String], ids: &[usize]) -> String {
+    ids.iter().map(|&i| lex[i].as_str()).collect::<Vec<_>>().join(" ")
+}
+
+/// Generate the 4-task suite (deterministic in `seed`).
+pub fn generate_suite(spec: &CorpusSpec, n_items: usize, seed: u64) -> Vec<Task> {
+    let lex = corpus::build_lexicon(spec);
+    let mut rng = Rng::new(seed ^ 0x7A5C);
+    let mut succ_easy = Vec::new();
+    let mut succ_hard = Vec::new();
+    let mut cloze = Vec::new();
+    let mut copy_recall = Vec::new();
+
+    while succ_easy.len() < n_items {
+        let walk_len = 8 + rng.below(8);
+        let ctx_ids = random_walk(&lex, spec, &mut rng, walk_len);
+        let last = *ctx_ids.last().unwrap();
+        let succ = successors(last, spec);
+        let correct = succ[rng.below(succ.len())];
+
+        // easy: random distractor (not a successor of `last`)
+        let mut d = rng.below(spec.vocab_words);
+        while succ.contains(&d) || d == correct {
+            d = rng.below(spec.vocab_words);
+        }
+        let (answer, choices) = shuffle2(&lex[correct], &lex[d], &mut rng);
+        succ_easy.push(Item {
+            context: words_text(&lex, &ctx_ids),
+            choices,
+            answer,
+        });
+
+        // hard: distractor is a successor of a different word
+        let other = rng.below(spec.vocab_words);
+        let od = successors(other, spec)[0];
+        if od != correct && !succ.contains(&od) {
+            let (answer, choices) = shuffle2(&lex[correct], &lex[od], &mut rng);
+            succ_hard.push(Item {
+                context: words_text(&lex, &ctx_ids),
+                choices,
+                answer,
+            });
+        }
+
+        // cloze: context …w X w'… — compare likelihood of the two fills
+        let mid = ctx_ids[ctx_ids.len() / 2];
+        let fill_true = successors(mid, spec)[0];
+        let mut fill_false = rng.below(spec.vocab_words);
+        while successors(mid, spec).contains(&fill_false) {
+            fill_false = rng.below(spec.vocab_words);
+        }
+        let prefix = words_text(&lex, &ctx_ids[..ctx_ids.len() / 2 + 1]);
+        let (answer, choices) = shuffle2(&lex[fill_true], &lex[fill_false], &mut rng);
+        cloze.push(Item {
+            context: prefix,
+            choices,
+            answer,
+        });
+
+        // copy/recall: marker word repeated vs novel
+        let marker = ctx_ids[1 + rng.below(2)];
+        let mut novel = rng.below(spec.vocab_words);
+        while ctx_ids.contains(&novel) {
+            novel = rng.below(spec.vocab_words);
+        }
+        let (answer, choices) = shuffle2(&lex[marker], &lex[novel], &mut rng);
+        copy_recall.push(Item {
+            context: words_text(&lex, &ctx_ids),
+            choices,
+            answer,
+        });
+    }
+    succ_hard.truncate(n_items);
+    cloze.truncate(n_items);
+    copy_recall.truncate(n_items);
+
+    vec![
+        Task { name: "succ_easy".into(), items: succ_easy },
+        Task { name: "succ_hard".into(), items: succ_hard },
+        Task { name: "cloze".into(), items: cloze },
+        Task { name: "copy_recall".into(), items: copy_recall },
+    ]
+}
+
+fn shuffle2(correct: &str, wrong: &str, rng: &mut Rng) -> (usize, Vec<String>) {
+    if rng.next_f64() < 0.5 {
+        (0, vec![correct.to_string(), wrong.to_string()])
+    } else {
+        (1, vec![wrong.to_string(), correct.to_string()])
+    }
+}
+
+/// One scoring request row: tokens + the span holding the choice.
+#[derive(Clone, Debug)]
+pub struct ScoredRow {
+    pub tokens: Vec<i32>,
+    /// label positions [start, end): predicted at positions-1 of logits
+    pub span: (usize, usize),
+}
+
+/// Tokenize an item's (context, choice) pairs into fixed-length rows.
+pub fn rows_for_item(item: &Item, tok: &Tokenizer, seq_len: usize) -> Vec<ScoredRow> {
+    item.choices
+        .iter()
+        .map(|choice| {
+            let ctx_ids = tok.encode(&item.context);
+            let full_ids = tok.encode(&format!("{} {}", item.context, choice));
+            let mut tokens = Vec::with_capacity(seq_len + 1);
+            tokens.push(crate::data::tokenizer::BOS_ID);
+            tokens.extend(&full_ids);
+            tokens.truncate(seq_len);
+            let span_start = (1 + ctx_ids.len()).min(tokens.len());
+            let span_end = tokens.len();
+            while tokens.len() < seq_len {
+                tokens.push(crate::data::tokenizer::PAD_ID);
+            }
+            ScoredRow {
+                tokens,
+                span: (span_start, span_end),
+            }
+        })
+        .collect()
+}
+
+/// Length-normalized log-likelihood of the span under row logits
+/// (`logits` is [seq, vocab] for this row's inputs).
+pub fn span_loglik(logits: &[f32], vocab: usize, tokens: &[i32], span: (usize, usize)) -> f64 {
+    let (start, end) = span;
+    if end <= start {
+        return f64::NEG_INFINITY;
+    }
+    let mut total = 0f64;
+    for pos in start..end {
+        // logits at pos-1 predict token at pos
+        let row = &logits[(pos - 1) * vocab..pos * vocab];
+        let target = tokens[pos] as usize;
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logz =
+            max as f64 + row.iter().map(|&v| ((v - max) as f64).exp()).sum::<f64>().ln();
+        total += row[target] as f64 - logz;
+    }
+    total / (end - start) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CorpusSpec {
+        CorpusSpec::tiny(5)
+    }
+
+    #[test]
+    fn suite_generation_deterministic() {
+        let a = generate_suite(&spec(), 20, 1);
+        let b = generate_suite(&spec(), 20, 1);
+        assert_eq!(a.len(), 4);
+        for (ta, tb) in a.iter().zip(b.iter()) {
+            assert_eq!(ta.items.len(), 20);
+            for (ia, ib) in ta.items.iter().zip(tb.items.iter()) {
+                assert_eq!(ia.context, ib.context);
+                assert_eq!(ia.choices, ib.choices);
+                assert_eq!(ia.answer, ib.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn answers_balanced() {
+        let tasks = generate_suite(&spec(), 100, 3);
+        for t in &tasks {
+            let ones = t.items.iter().filter(|i| i.answer == 1).count();
+            assert!((20..=80).contains(&ones), "{}: {ones}", t.name);
+        }
+    }
+
+    #[test]
+    fn rows_have_valid_spans() {
+        let s = spec();
+        let docs = corpus::generate(&s);
+        let tok = Tokenizer::train(&docs[..20.min(docs.len())].to_vec(), 300);
+        let tasks = generate_suite(&s, 10, 2);
+        for t in &tasks {
+            for item in &t.items {
+                for row in rows_for_item(item, &tok, 64) {
+                    assert_eq!(row.tokens.len(), 64);
+                    assert!(row.span.0 >= 1);
+                    assert!(row.span.1 <= 64);
+                    assert!(row.span.0 <= row.span.1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn span_loglik_prefers_peaked_logits() {
+        let vocab = 4;
+        // seq 3, logits at pos 0/1 predict tokens 1/2
+        let tokens = vec![1i32, 2, 3];
+        let mut logits = vec![0f32; 3 * vocab];
+        logits[0 * vocab + 2] = 5.0; // pos0 strongly predicts token 2
+        logits[1 * vocab + 3] = 5.0; // pos1 strongly predicts token 3
+        let ll_good = span_loglik(&logits, vocab, &tokens, (1, 3));
+        let tokens_bad = vec![1i32, 0, 0];
+        let ll_bad = span_loglik(&logits, vocab, &tokens_bad, (1, 3));
+        assert!(ll_good > ll_bad);
+    }
+}

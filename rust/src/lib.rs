@@ -1,0 +1,41 @@
+//! # dqt — Direct Quantized Training, reproduced as a rust+JAX+Pallas stack
+//!
+//! Reproduction of *"Direct Quantized Training of Language Models with
+//! Stochastic Rounding"* (Zhao et al., 2024) as a three-layer system:
+//!
+//! * **L3 (this crate)** — training coordinator: experiment orchestration,
+//!   data pipeline (synthetic corpus → BPE → batches), LR scheduling,
+//!   metrics, format-true checkpointing, memory model, eval harness.
+//! * **L2 (python/compile, build-time only)** — LLaMA-structured model +
+//!   optimizers in JAX, AOT-lowered to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the paper's hot
+//!   spots: AbsMean quantization, stochastic rounding, fused int8-activation
+//!   linear, RMSNorm, fused AdamW+SR.
+//!
+//! Python never runs at training time: the [`runtime`] module loads the HLO
+//! artifacts via PJRT and the [`train`] loop drives them.
+//!
+//! Quickstart: `make artifacts && cargo run --release --example quickstart`.
+
+pub mod config;
+pub mod util;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod memory;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod train;
+
+use std::path::PathBuf;
+
+/// Repository-relative default artifact root (next to Cargo.toml).
+pub fn default_artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Repository-relative default results root.
+pub fn default_results_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
+}

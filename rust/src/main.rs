@@ -1,0 +1,208 @@
+//! `repro` — CLI for the DQT reproduction.
+//!
+//! Subcommands:
+//!   train   train one variant, save metrics + checkpoint
+//!   eval    evaluate a checkpoint (perplexity + zero-shot, ±ternary)
+//!   sweep   run a paper experiment (fig2 … table1, abl1/abl2)
+//!   report  render paper-style tables/figures from results/
+//!   list    show available artifacts and experiments
+//!   memory  print the memory model for a variant
+//!
+//! Argument parsing is the in-tree `util::cli` (offline build, no clap).
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use dqt::config::{Env, Mode, Optimizer, TrainConfig, VariantSpec};
+use dqt::coordinator;
+use dqt::data::corpus::CorpusSpec;
+use dqt::data::Pipeline;
+use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::train::{checkpoint, Trainer};
+use dqt::util::cli::Args;
+use dqt::{eval, memory, report};
+
+const USAGE: &str = "\
+repro — Direct Quantized Training reproduction
+
+USAGE: repro <command> [flags]
+GLOBAL: --artifacts <dir>  --results <dir>
+
+COMMANDS
+  train   --model t130 --mode dqt --bits 1.58 [--env fp32] [--optimizer adamw]
+          [--intervention none] [--recompute-scale] [--steps 300]
+          [--dataset wiki] [--lr 1e-3] [--seed 42] [--out <dir>]
+  eval    --checkpoint <model.dqt> (same variant flags) [--dataset wiki]
+          [--ternary] [--items 100]
+  sweep   --exp fig2|fig3|fig4|fig5|fig6|fig7|fig9|table1|abl1|abl2|all
+          [--steps N] [--workers 1]
+  report  --exp table2|table3|memory|<exp-id with results>
+  list
+  memory  (variant flags)
+";
+
+fn variant_spec(a: &Args) -> Result<VariantSpec> {
+    let model = a.str_or("model", "t130");
+    let mode_s = a.str_or("mode", "dqt");
+    let mode = Mode::parse(&mode_s).ok_or_else(|| anyhow!("bad --mode {mode_s:?}"))?;
+    let bits: f64 = a.parse_or("bits", 1.58)?;
+    let env_s = a.str_or("env", "fp32");
+    let env = Env::parse(&env_s).ok_or_else(|| anyhow!("bad --env {env_s:?}"))?;
+    let opt_s = a.str_or("optimizer", "adamw");
+    let opt =
+        Optimizer::parse(&opt_s).ok_or_else(|| anyhow!("bad --optimizer {opt_s:?}"))?;
+    let mut v = VariantSpec::new(&model, mode, bits)
+        .with_env(env)
+        .with_optimizer(opt);
+    let iv = a.str_or("intervention", "none");
+    if iv != "none" {
+        v = v.with_intervention(&iv);
+    }
+    if a.has("recompute-scale") {
+        v = v.with_recompute_scale();
+    }
+    Ok(v)
+}
+
+fn main() -> Result<()> {
+    let a = Args::from_env()?;
+    let Some(cmd) = a.positional.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let artifacts = a
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(dqt::default_artifacts_root);
+    let results = a
+        .get("results")
+        .map(PathBuf::from)
+        .unwrap_or_else(dqt::default_results_root);
+
+    match cmd.as_str() {
+        "train" => {
+            let spec = variant_spec(&a)?;
+            let name = spec.variant_name();
+            let cfg = spec
+                .model_config()
+                .ok_or_else(|| anyhow!("unknown model {:?}", spec.model))?;
+            let steps: u64 = a.parse_or("steps", 300)?;
+            let dataset = a.str_or("dataset", "wiki");
+            let seed: u64 = a.parse_or("seed", 42)?;
+            let rt = Runtime::cpu()?;
+            eprintln!("platform: {}", rt.platform());
+            let vrt = VariantRuntime::load(&rt, &artifacts, &name)?;
+            let pipeline = Pipeline::build(&dataset, seed, cfg.vocab_size, cfg.max_seq_len)?;
+            let tcfg = TrainConfig {
+                steps,
+                warmup_steps: (steps / 10).max(1),
+                peak_lr: a.parse_or("lr", 1e-3)?,
+                dataset: dataset.clone(),
+                seed,
+                ..TrainConfig::default()
+            };
+            let out_dir = a
+                .get("out")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| results.join("train").join(&name));
+            let mut tr = Trainer::new(&vrt, &pipeline, tcfg);
+            tr.progress = Some(Box::new(|step, loss| {
+                eprintln!("step {step}: loss {loss:.4}");
+            }));
+            let (state, metrics) = tr.run()?;
+            metrics.save(&out_dir)?;
+            checkpoint::save(
+                &out_dir.join("model.dqt"),
+                vrt.manifest(),
+                &state,
+                checkpoint::Codec::F32,
+                true,
+            )?;
+            println!(
+                "trained {name}: final loss {:.4}, dev loss {:.4} → {}",
+                metrics.tail_loss(10).unwrap_or(f32::NAN),
+                metrics.final_dev_loss.unwrap_or(f32::NAN),
+                out_dir.display()
+            );
+        }
+        "eval" => {
+            let spec = variant_spec(&a)?;
+            let name = spec.variant_name();
+            let cfg = spec
+                .model_config()
+                .ok_or_else(|| anyhow!("unknown model {:?}", spec.model))?;
+            let ckpt = PathBuf::from(a.req("checkpoint")?);
+            let dataset = a.str_or("dataset", "wiki");
+            let items: usize = a.parse_or("items", 100)?;
+            let rt = Runtime::cpu()?;
+            let vrt = VariantRuntime::load(&rt, &artifacts, &name)?;
+            let state = checkpoint::load(&ckpt, vrt.manifest())?;
+            let pipeline = Pipeline::build(&dataset, 42, cfg.vocab_size, cfg.max_seq_len)?;
+            let cspec = CorpusSpec::by_name(&dataset, 42)
+                .ok_or_else(|| anyhow!("unknown dataset {dataset:?}"))?;
+            let r = eval::evaluate(&vrt, &state, &pipeline, &cspec, items, false, 7)?;
+            println!("{}", r.to_json().to_string_pretty());
+            if a.has("ternary") {
+                let r3 = eval::evaluate(&vrt, &state, &pipeline, &cspec, items, true, 7)?;
+                println!("{}", r3.to_json().to_string_pretty());
+            }
+        }
+        "sweep" => {
+            let exp = a.req("exp")?;
+            let steps: u64 = a.parse_or("steps", 0)?;
+            let workers: usize = a.parse_or("workers", 1)?;
+            let exps: Vec<&str> = if exp == "all" {
+                coordinator::known_experiments().to_vec()
+            } else {
+                vec![exp.as_str()]
+            };
+            for e in exps {
+                eprintln!("=== experiment {e} ===");
+                let rs = coordinator::run_experiment(e, steps, workers, &artifacts, &results)?;
+                let summary = coordinator::write_summary(&results, e, &rs)?;
+                let ok = rs.iter().filter(|r| r.is_ok()).count();
+                println!("{e}: {ok}/{} jobs ok → {}", rs.len(), summary.display());
+                for r in rs.iter().filter_map(|r| r.as_ref().err()) {
+                    eprintln!("  FAILED: {r}");
+                }
+            }
+        }
+        "report" => {
+            let exp = a.req("exp")?;
+            match exp.as_str() {
+                "table2" => println!("{}", report::table2()),
+                "table3" => println!("{}", report::table3()),
+                "memory" => println!("{}", report::memory_comparison("p1b")?),
+                e => {
+                    let runs = report::load_runs(&results, e)?;
+                    println!("{}", report::summary_table(&runs));
+                    println!("{}", report::ascii_curves(&runs, 90, 22));
+                }
+            }
+        }
+        "list" => {
+            println!("experiments: {}", coordinator::known_experiments().join(", "));
+            match dqt::runtime::artifact::read_index(&artifacts) {
+                Ok(v) => {
+                    println!("artifacts ({}):", v.len());
+                    for name in v {
+                        println!("  {name}");
+                    }
+                }
+                Err(_) => println!("artifacts: none built (run `make artifacts`)"),
+            }
+        }
+        "memory" => {
+            let spec = variant_spec(&a)?;
+            let b = memory::estimate(&spec, true).ok_or_else(|| anyhow!("unknown model"))?;
+            println!("{}", b.to_json().to_string_pretty());
+            println!("total: {:.1} MB", b.total_mb());
+        }
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command {other:?}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,237 @@
+//! Analytic GPU-memory model (paper Table 3, Fig. 3 x-axis, §A.3).
+//!
+//! Reproduces the paper's accounting of training-time memory per
+//! (model, mode, precision env, optimizer):
+//!
+//!   weights   — BitNet keeps an FP32/BF16/FP8 *master* of every quantized
+//!               matrix; DQT stores only the INTn grid (+ f32 scales).
+//!   gradients — one value per trainable parameter in the env's precision.
+//!   optimizer — AdamW: 2 states/param; Adafactor: row+col vectors for
+//!               matrices (the §4.3 memory-efficient option).
+//!   activations — batch × seq × hidden × layers × a fusion coefficient,
+//!               in the env's compute precision (checkpointing-free, as the
+//!               paper trains without gradient accumulation).
+//!   framework — fixed per-GPU overhead (CUDA context, workspace), the
+//!               reason Table 3's small models still show tens of GB.
+//!
+//! The model is calibrated against Table 3's GH200 readings and validated
+//! in `report::table3` (relative savings must match; see EXPERIMENTS.md).
+
+use crate::config::{Env, Mode, ModelConfig, Optimizer, VariantSpec};
+
+/// Activation-memory fusion coefficient: how many live activation tensors
+/// of size [B,S,H] per layer a non-checkpointed fwd+bwd keeps (empirical
+/// for LLaMA-style blocks with flash-style attention fusion).
+const ACT_COEFF: f64 = 14.0;
+/// Attention score memory coefficient (B × heads × S × S), non-flash.
+const SCORE_COEFF: f64 = 2.0;
+/// Fixed per-GPU framework overhead (CUDA context, cuDNN workspace, NCCL
+/// buffers …) in bytes — fitted to Table 3.
+const FRAMEWORK_BYTES: f64 = 28.0e9;
+
+#[derive(Clone, Debug)]
+pub struct MemoryBreakdown {
+    pub weights: f64,
+    pub grads: f64,
+    pub optimizer: f64,
+    pub activations: f64,
+    pub framework: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> f64 {
+        self.weights + self.grads + self.optimizer + self.activations + self.framework
+    }
+    pub fn total_mb(&self) -> f64 {
+        self.total() / 1e6
+    }
+    /// Model-state-only total (excludes activations + framework): the
+    /// portion the paper's §1 memory argument is about.
+    pub fn state_bytes(&self) -> f64 {
+        self.weights + self.grads + self.optimizer
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Value {
+        crate::util::json::Value::obj()
+            .set("weights", self.weights)
+            .set("grads", self.grads)
+            .set("optimizer", self.optimizer)
+            .set("activations", self.activations)
+            .set("framework", self.framework)
+            .set("total", self.total())
+    }
+}
+
+/// Estimate the training-time memory of one variant on one device.
+pub fn estimate(spec: &VariantSpec, include_framework: bool) -> Option<MemoryBreakdown> {
+    let cfg = spec.model_config()?;
+    Some(estimate_cfg(&cfg, spec, include_framework))
+}
+
+pub fn estimate_cfg(
+    cfg: &ModelConfig,
+    spec: &VariantSpec,
+    include_framework: bool,
+) -> MemoryBreakdown {
+    let p_total = cfg.param_count() as f64;
+    let p_quant = if spec.mode.quantized() {
+        cfg.quantized_param_count() as f64
+    } else {
+        0.0
+    };
+    let p_dense = p_total - p_quant;
+    let env_b = spec.env.bytes_per_value();
+
+    // --- weights ---
+    let weights = match spec.mode {
+        // unquantized: all params in env precision
+        Mode::Fp32 => p_total * env_b,
+        // BitNet: master copy of quantized set in env precision + the
+        // transient ternary forward copy (absmean re-quantization buffer)
+        Mode::Bitnet158 => p_dense * env_b + p_quant * (env_b + 2.0 / 8.0),
+        // DQT family: grid weights at their true bit width, no master
+        Mode::Dqt | Mode::DqtAbsmax | Mode::DqtTernaryInf => {
+            let bits = if matches!(spec.mode, Mode::DqtTernaryInf) {
+                8.0
+            } else {
+                spec.bits
+            };
+            p_dense * env_b + p_quant * crate::quant::bits_per_weight(bits) / 8.0
+        }
+    };
+
+    // --- gradients (one per trainable param, env precision) ---
+    let grads = p_total * env_b;
+
+    // --- optimizer state ---
+    let optimizer = match spec.optimizer {
+        Optimizer::Adamw => 2.0 * p_total * env_b,
+        Optimizer::Adafactor => {
+            // factored: per [n,m] matrix n+m values; ≈ 2·P/sqrt(dim) —
+            // approximate with the dominant projection shapes
+            let h = cfg.hidden_size as f64;
+            let factored = 2.0 * p_total / h.sqrt();
+            factored * env_b
+        }
+    };
+
+    // --- activations ---
+    let (b, s, h) = (
+        cfg.batch_size as f64,
+        cfg.max_seq_len as f64,
+        cfg.hidden_size as f64,
+    );
+    let l = cfg.num_hidden_layers as f64;
+    let heads = cfg.num_attention_heads as f64;
+    let act_env_b = match spec.env {
+        Env::Fp32 => 4.0,
+        Env::Bf16 => 2.0,
+        Env::Fp8 => 1.0,
+    };
+    let activations =
+        (ACT_COEFF * b * s * h * l + SCORE_COEFF * b * heads * s * s * l) * act_env_b
+            + b * s * cfg.vocab_size as f64 * 4.0; // logits stay f32
+
+    MemoryBreakdown {
+        weights,
+        grads,
+        optimizer,
+        activations,
+        framework: if include_framework { FRAMEWORK_BYTES } else { 0.0 },
+    }
+}
+
+/// Current process RSS in bytes (our own measured footprint, reported next
+/// to the analytic model in the experiments).
+pub fn process_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Env, Mode, Optimizer, VariantSpec};
+
+    fn spec(mode: Mode, bits: f64, env: Env, opt: Optimizer) -> VariantSpec {
+        VariantSpec::new("p1b", mode, bits)
+            .with_env(env)
+            .with_optimizer(opt)
+    }
+
+    #[test]
+    fn dqt_state_smaller_than_bitnet() {
+        let d = estimate(&spec(Mode::Dqt, 8.0, Env::Fp32, Optimizer::Adamw), false).unwrap();
+        let b = estimate(&spec(Mode::Bitnet158, 1.58, Env::Fp32, Optimizer::Adamw), false)
+            .unwrap();
+        assert!(d.weights < b.weights, "{} !< {}", d.weights, b.weights);
+    }
+
+    #[test]
+    fn ternary_weights_are_16x_smaller_than_fp32() {
+        let d = estimate(&spec(Mode::Dqt, 1.58, Env::Fp32, Optimizer::Adamw), false).unwrap();
+        let f = estimate(&spec(Mode::Fp32, 1.58, Env::Fp32, Optimizer::Adamw), false).unwrap();
+        // quantized set dominates p1b; ratio approaches 16 on that subset
+        let cfg = ModelConfig::by_name("p1b").unwrap();
+        let qfrac = cfg.quantized_param_count() as f64 / cfg.param_count() as f64;
+        assert!(qfrac > 0.9);
+        assert!(d.weights < f.weights * (1.0 - qfrac) + f.weights * qfrac / 14.0);
+    }
+
+    #[test]
+    fn paper_intro_arithmetic() {
+        // "a 1B LLM … 4GB in FP32 … ternary reduces this to 0.2GB"
+        let cfg = ModelConfig::by_name("p1b").unwrap();
+        let fp32_gb = cfg.param_count() as f64 * 4.0 / 1e9;
+        let tern_gb = cfg.param_count() as f64 * 2.0 / 8.0 / 1e9;
+        assert!((3.0..5.0).contains(&fp32_gb));
+        assert!((0.15..0.3).contains(&tern_gb));
+    }
+
+    #[test]
+    fn env_and_optimizer_monotonicity() {
+        // fp32 > bf16 > fp8 total; adamw > adafactor
+        let t = |env, opt| {
+            estimate(&spec(Mode::Dqt, 8.0, env, opt), true)
+                .unwrap()
+                .total()
+        };
+        assert!(t(Env::Fp32, Optimizer::Adamw) > t(Env::Bf16, Optimizer::Adamw));
+        assert!(t(Env::Bf16, Optimizer::Adamw) > t(Env::Fp8, Optimizer::Adamw));
+        assert!(t(Env::Bf16, Optimizer::Adamw) > t(Env::Bf16, Optimizer::Adafactor));
+        assert!(t(Env::Fp8, Optimizer::Adamw) > t(Env::Fp8, Optimizer::Adafactor));
+    }
+
+    #[test]
+    fn table3_shape_check() {
+        // Table 3 (1B): FP32 76.5GB, BF16 58.3, BF16+AF 53.7, FP8 40.9,
+        // FP8+AF 37.7 — our model must reproduce the *ordering* and the
+        // rough ratios (BitNet-style training, AdamW default).
+        let t = |env, opt| {
+            estimate(&spec(Mode::Bitnet158, 1.58, env, opt), true)
+                .unwrap()
+                .total()
+        };
+        let fp32 = t(Env::Fp32, Optimizer::Adamw);
+        let bf16 = t(Env::Bf16, Optimizer::Adamw);
+        let bf16_af = t(Env::Bf16, Optimizer::Adafactor);
+        let fp8 = t(Env::Fp8, Optimizer::Adamw);
+        let fp8_af = t(Env::Fp8, Optimizer::Adafactor);
+        assert!(fp32 > bf16 && bf16 > bf16_af && bf16 > fp8 && fp8 > fp8_af);
+        // paper ratio fp32/fp8 ≈ 1.87; accept a generous band
+        let ratio = fp32 / fp8;
+        assert!((1.3..2.8).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn rss_readable() {
+        let rss = process_rss_bytes().unwrap();
+        assert!(rss > 1_000_000);
+    }
+}

@@ -1,0 +1,87 @@
+//! BF16 storage codec: round-to-nearest-even truncation of f32.
+//!
+//! Bit-exact with `jnp.bfloat16` casts in `python/compile/lowp.py` (golden
+//! vectors shared between the two test suites).
+
+/// Encode an f32 to its BF16 bit pattern (round-to-nearest-even).
+pub fn encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) | 0x0040) as u16; // quiet NaN, keep sign
+    }
+    // round to nearest even on the truncated 16 bits
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+    let _ = round_bit;
+    (rounded >> 16) as u16
+}
+
+/// Decode a BF16 bit pattern to f32 (exact).
+pub fn decode(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Value-level cast: what an f32 becomes when stored as BF16.
+pub fn cast(x: f32) -> f32 {
+    decode(encode(x))
+}
+
+/// Cast a slice in place (storage simulation for the memory experiments).
+pub fn cast_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = cast(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_survive() {
+        // (note: fp16's 65504 is NOT bf16-exact — 11 significant bits)
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, 65536.0, 3.140625] {
+            assert_eq!(cast(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn mantissa_rounding() {
+        // 1 + 2^-9 not representable (7 mantissa bits) → rounds to 1.0
+        assert_eq!(cast(1.0 + 2f32.powi(-9)), 1.0);
+        // 1 + 2^-7 is representable
+        assert_eq!(cast(1.0 + 2f32.powi(-7)), 1.0 + 2f32.powi(-7));
+        // halfway: 1 + 3*2^-9 → nearest even of {1+2^-8, 1+2^-7}... verify idempotence
+        let y = cast(1.0 + 3.0 * 2f32.powi(-9));
+        assert_eq!(cast(y), y);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-8 is exactly halfway between 1.0 and 1 + 2^-7 → ties to even (1.0)
+        assert_eq!(cast(1.0 + 2f32.powi(-8)), 1.0);
+        // 1 + 2^-7 + 2^-8 halfway between 1+2^-7 and 1+2^-6 → ties to even (1+2^-6)
+        assert_eq!(
+            cast(1.0 + 2f32.powi(-7) + 2f32.powi(-8)),
+            1.0 + 2f32.powi(-6)
+        );
+    }
+
+    #[test]
+    fn negatives_and_inf() {
+        assert_eq!(cast(-2.5), -2.5);
+        assert_eq!(cast(f32::INFINITY), f32::INFINITY);
+        assert_eq!(cast(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(cast(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn idempotent() {
+        for i in 0..1000 {
+            let v = (i as f32 - 500.0) * 0.00137;
+            let y = cast(v);
+            assert_eq!(cast(y), y);
+        }
+    }
+}

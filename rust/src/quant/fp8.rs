@@ -1,0 +1,216 @@
+//! OCP FP8 codecs (E4M3 and E5M2) — encode/decode + value-level casts.
+//!
+//! E4M3: 1 sign, 4 exponent (bias 7), 3 mantissa. Max normal 448, min
+//! normal 2⁻⁶, subnormal step 2⁻⁹. Following the OCP/MS-AMP convention the
+//! cast *saturates* instead of producing inf. E5M2: 1/5/2, bias 15, max
+//! 57344. Value-level behaviour is mirrored by `python/compile/lowp.py`.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    E4M3,
+    E5M2,
+}
+
+impl Format {
+    fn mant_bits(self) -> i32 {
+        match self {
+            Format::E4M3 => 3,
+            Format::E5M2 => 2,
+        }
+    }
+    fn bias(self) -> i32 {
+        match self {
+            Format::E4M3 => 7,
+            Format::E5M2 => 15,
+        }
+    }
+    pub fn max_value(self) -> f32 {
+        match self {
+            Format::E4M3 => 448.0,
+            Format::E5M2 => 57344.0,
+        }
+    }
+    pub fn min_normal(self) -> f32 {
+        match self {
+            Format::E4M3 => 2f32.powi(-6),
+            Format::E5M2 => 2f32.powi(-14),
+        }
+    }
+    fn sub_step(self) -> f32 {
+        self.min_normal() * 2f32.powi(-self.mant_bits())
+    }
+}
+
+/// Encode an f32 into an 8-bit code (saturating, round-to-nearest-even).
+pub fn encode(x: f32, fmt: Format) -> u8 {
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let ax = x.abs();
+    if ax != ax {
+        return sign | 0x7F; // NaN sentinel
+    }
+    if ax == 0.0 {
+        return sign;
+    }
+    let m = fmt.mant_bits();
+    let bias = fmt.bias();
+    if ax < fmt.min_normal() {
+        // subnormal: code = round(ax / sub_step)
+        let k = round_half_even(ax / fmt.sub_step());
+        if k == 0 {
+            return sign;
+        }
+        if k < (1 << m) {
+            return sign | k as u8;
+        }
+        // rounded up into the first normal binade
+        return sign | (1 << m) as u8;
+    }
+    let ax = ax.min(fmt.max_value());
+    let e = ax.log2().floor() as i32;
+    let ulp = 2f32.powi(e - m);
+    let mant = round_half_even(ax / ulp); // in [2^m, 2^(m+1)]
+    let (e, mant) = if mant >= (2 << m) {
+        (e + 1, 1 << m)
+    } else {
+        (e, mant)
+    };
+    let biased = e + bias;
+    let max_biased = (1 << (match fmt {
+        Format::E4M3 => 4,
+        Format::E5M2 => 5,
+    })) - 1;
+    if biased >= max_biased + 1 {
+        // overflow after rounding → saturate to max code
+        return sign | max_code(fmt);
+    }
+    sign | ((biased as u8) << m) | ((mant - (1 << m)) as u8)
+}
+
+fn max_code(fmt: Format) -> u8 {
+    match fmt {
+        Format::E4M3 => 0x7E, // 448 = exp 15, mant 110 (E4M3 reserves 0x7F for NaN)
+        Format::E5M2 => 0x7B, // 57344 = exp 30, mant 11
+    }
+}
+
+fn round_half_even(x: f32) -> i32 {
+    let f = x.floor();
+    let d = x - f;
+    let fi = f as i32;
+    if d > 0.5 {
+        fi + 1
+    } else if d < 0.5 {
+        fi
+    } else if fi % 2 == 0 {
+        fi
+    } else {
+        fi + 1
+    }
+}
+
+/// Decode an 8-bit code back to f32 (exact).
+pub fn decode(code: u8, fmt: Format) -> f32 {
+    let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let m = fmt.mant_bits();
+    let bias = fmt.bias();
+    let ebits = match fmt {
+        Format::E4M3 => 4,
+        Format::E5M2 => 5,
+    };
+    let e_field = ((code & 0x7F) >> m) as i32;
+    let m_field = (code & ((1 << m) - 1)) as i32;
+    if fmt == Format::E4M3 && (code & 0x7F) == 0x7F {
+        return f32::NAN;
+    }
+    if fmt == Format::E5M2 && e_field == (1 << ebits) - 1 {
+        return if m_field == 0 { sign * f32::INFINITY } else { f32::NAN };
+    }
+    if e_field == 0 {
+        return sign * m_field as f32 * fmt.sub_step();
+    }
+    sign * (1.0 + m_field as f32 / (1 << m) as f32) * 2f32.powi(e_field - bias)
+}
+
+/// Value-level cast: what an f32 becomes when stored in `fmt`.
+pub fn cast(x: f32, fmt: Format) -> f32 {
+    decode(encode(x, fmt), fmt)
+}
+
+/// Cast a slice in place.
+pub fn cast_slice(xs: &mut [f32], fmt: Format) {
+    for x in xs.iter_mut() {
+        *x = cast(*x, fmt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_exact_values() {
+        for v in [
+            0.0f32, 1.0, -1.0, 0.5, 448.0, -448.0, 2f32.powi(-6), 2f32.powi(-9),
+            1.75, 240.0,
+        ] {
+            assert_eq!(cast(v, Format::E4M3), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn e4m3_rounding_and_saturation() {
+        assert_eq!(cast(1.0 + 2f32.powi(-4), Format::E4M3), 1.0);
+        assert_eq!(cast(449.0, Format::E4M3), 448.0);
+        assert_eq!(cast(1e9, Format::E4M3), 448.0);
+        assert_eq!(cast(-1e9, Format::E4M3), -448.0);
+        assert!((cast(0.0626, Format::E4M3) - 0.0625).abs() < 1e-7);
+    }
+
+    #[test]
+    fn e4m3_subnormals() {
+        let step = 2f32.powi(-9);
+        assert_eq!(cast(step, Format::E4M3), step);
+        assert_eq!(cast(0.4 * step, Format::E4M3), 0.0);
+        let y = cast(2.5 * step, Format::E4M3);
+        assert!(y == 2.0 * step || y == 3.0 * step); // half-even boundary
+    }
+
+    #[test]
+    fn e5m2_range() {
+        assert_eq!(cast(57344.0, Format::E5M2), 57344.0);
+        assert_eq!(cast(60000.0, Format::E5M2), 57344.0);
+        assert_eq!(cast(2f32.powi(-14), Format::E5M2), 2f32.powi(-14));
+        assert_eq!(cast(2f32.powi(-16), Format::E5M2), 2f32.powi(-16));
+        assert_eq!(cast(1000.0, Format::E5M2), 1024.0);
+    }
+
+    #[test]
+    fn roundtrip_all_codes() {
+        // every finite code must decode→encode to itself
+        for fmt in [Format::E4M3, Format::E5M2] {
+            for code in 0..=255u8 {
+                let v = decode(code, fmt);
+                if v.is_finite() {
+                    let back = encode(v, fmt);
+                    // -0.0 and +0.0 may alias; accept both zero codes
+                    if v == 0.0 {
+                        assert_eq!(back & 0x7F, 0);
+                    } else {
+                        assert_eq!(back, code, "fmt={fmt:?} code={code:#x} v={v}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent_cast() {
+        for i in -200..200 {
+            let v = i as f32 * 1.37;
+            for fmt in [Format::E4M3, Format::E5M2] {
+                let y = cast(v, fmt);
+                assert_eq!(cast(y, fmt), y);
+            }
+        }
+    }
+}

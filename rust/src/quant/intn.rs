@@ -1,0 +1,110 @@
+//! INTn grid storage (n = 2..=8): bit-packed signed integers.
+//!
+//! Stores the integer grid indices `k = w*s` of a DQT weight matrix.
+//! Codes are two's-complement in `n` bits, packed LSB-first into a `u8`
+//! stream (crossing byte boundaries, no padding except the final byte), so
+//! an INT3 matrix really costs 3 bits/weight — matching the paper's memory
+//! arithmetic in §1 (1B params × INT8 = 1 GB, ternary = 0.25 GB packed).
+
+/// Pack signed integers into `bits`-wide two's-complement codes.
+pub fn pack(values: &[i32], bits: u32) -> Result<Vec<u8>, String> {
+    assert!((2..=8).contains(&bits), "bits must be in 2..=8");
+    let lo = -(1i32 << (bits - 1));
+    let hi = (1i32 << (bits - 1)) - 1;
+    let total_bits = values.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    for (i, &v) in values.iter().enumerate() {
+        if v < lo || v > hi {
+            return Err(format!("value {v} at {i} out of INT{bits} range [{lo},{hi}]"));
+        }
+        let code = (v & ((1i32 << bits) - 1)) as u32;
+        let bit0 = i * bits as usize;
+        for b in 0..bits as usize {
+            if code & (1 << b) != 0 {
+                out[(bit0 + b) / 8] |= 1 << ((bit0 + b) % 8);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Unpack `n` signed integers from `bits`-wide codes.
+pub fn unpack(packed: &[u8], n: usize, bits: u32) -> Vec<i32> {
+    assert!((2..=8).contains(&bits));
+    (0..n)
+        .map(|i| {
+            let bit0 = i * bits as usize;
+            let mut code = 0u32;
+            for b in 0..bits as usize {
+                if packed[(bit0 + b) / 8] & (1 << ((bit0 + b) % 8)) != 0 {
+                    code |= 1 << b;
+                }
+            }
+            // sign-extend
+            let sign = 1u32 << (bits - 1);
+            if code & sign != 0 {
+                (code as i32) - (1i32 << bits)
+            } else {
+                code as i32
+            }
+        })
+        .collect()
+}
+
+/// Packed size in bytes of `n` INTn values.
+pub fn packed_bytes(n: usize, bits: u32) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+/// Convenience: pack the grid indices of fake-quantized f32 values `w`
+/// (values k/s) given their scale.
+pub fn pack_grid(w: &[f32], s: f32, bits: u32) -> Result<Vec<u8>, String> {
+    let k: Vec<i32> = w.iter().map(|&x| (x * s).round() as i32).collect();
+    pack(&k, bits)
+}
+
+/// Inverse of [`pack_grid`].
+pub fn unpack_grid(packed: &[u8], n: usize, s: f32, bits: u32) -> Vec<f32> {
+    unpack(packed, n, bits).iter().map(|&k| k as f32 / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for bits in 2..=8u32 {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            let vals: Vec<i32> = (0..300).map(|i| lo + (i % (hi - lo + 1))).collect();
+            let p = pack(&vals, bits).unwrap();
+            assert_eq!(p.len(), packed_bytes(vals.len(), bits));
+            assert_eq!(unpack(&p, vals.len(), bits), vals, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn range_checked() {
+        assert!(pack(&[7], 4).is_ok());
+        assert!(pack(&[8], 4).is_err());
+        assert!(pack(&[-8], 4).is_ok());
+        assert!(pack(&[-9], 4).is_err());
+    }
+
+    #[test]
+    fn grid_roundtrip() {
+        let s = 37.5f32;
+        let w: Vec<f32> = (-128..128).map(|k| k as f32 / s).collect();
+        let p = pack_grid(&w, s, 8).unwrap();
+        let back = unpack_grid(&p, w.len(), s, 8);
+        for (a, b) in w.iter().zip(back.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn int8_is_quarter_of_fp32() {
+        assert_eq!(packed_bytes(1000, 8), 1000);
+    }
+}

@@ -1,0 +1,98 @@
+//! Numeric-format substrate: the storage codecs behind the paper's claims.
+//!
+//! The training graph (L2) computes on fake-quantized f32 values — exactly
+//! as the paper does on GPUs (§A.1: "low-precision simulation"). This module
+//! provides the *true* packed representations those values stand for, used
+//! by checkpointing (`train::checkpoint`), deployment (ternary inference
+//! from a 2-bit-packed file) and the memory model (Table 3 / Fig. 3):
+//!
+//! * [`ternary`] — 2-bit packing of {-1, 0, +1} weights (16 weights / u32)
+//! * [`intn`]    — INTn grids (n = 2..=8), nibble/byte packing
+//! * [`fp8`]     — OCP FP8 E4M3/E5M2 encode/decode, bit-exact with
+//!                 `python/compile/lowp.py`
+//! * [`bf16`]    — BF16 round-to-nearest-even storage
+//! * [`sr`]      — stochastic rounding on the host (checkpoint conversion +
+//!                 the counter-hash PRNG shared with the Pallas kernel)
+
+pub mod bf16;
+pub mod fp8;
+pub mod intn;
+pub mod sr;
+pub mod ternary;
+
+/// Integer grid range `[q_min, q_max]` for an n-bit format; `bits == 1.58`
+/// selects the paper's ternary format {-1, 0, 1} (Eq. Qn/Qp in §3.2).
+pub fn qrange(bits: f64) -> (f64, f64) {
+    if (bits - 1.58).abs() < 1e-9 {
+        (-1.0, 1.0)
+    } else {
+        let n = bits as i32;
+        (-(2f64.powi(n - 1)), 2f64.powi(n - 1) - 1.0)
+    }
+}
+
+/// AbsMean scale `s = Qp / mean(|w|)` (paper Eq. 3).
+pub fn absmean_scale(w: &[f32], bits: f64) -> f32 {
+    let (_, qp) = qrange(bits);
+    let mean: f64 = w.iter().map(|x| x.abs() as f64).sum::<f64>() / w.len().max(1) as f64;
+    (qp / (mean + 1e-8)) as f32
+}
+
+/// AbsMean quantization (paper Eq. 4): `clip(round(w*s), Qn, Qp) / s`.
+pub fn absmean_quantize(w: &[f32], bits: f64, s: f32) -> Vec<f32> {
+    let (qn, qp) = qrange(bits);
+    w.iter()
+        .map(|&x| ((x * s).round() as f64).clamp(qn, qp) as f32 / s)
+        .collect()
+}
+
+/// Bytes per weight of each storage format, for the memory model.
+pub fn bits_per_weight(bits: f64) -> f64 {
+    if (bits - 1.58).abs() < 1e-9 {
+        2.0 // practical 2-bit ternary packing (1.58 is the information bound)
+    } else {
+        bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qrange_ternary_and_int() {
+        assert_eq!(qrange(1.58), (-1.0, 1.0));
+        assert_eq!(qrange(8.0), (-128.0, 127.0));
+        assert_eq!(qrange(3.0), (-4.0, 3.0));
+        assert_eq!(qrange(4.0), (-8.0, 7.0));
+        assert_eq!(qrange(2.0), (-2.0, 1.0));
+    }
+
+    #[test]
+    fn absmean_matches_paper_equations() {
+        let w = [0.1f32, -0.2, 0.3, -0.4];
+        let s = absmean_scale(&w, 1.58);
+        // mean|w| = 0.25, Qp = 1 → s ≈ 4
+        assert!((s - 4.0).abs() < 1e-3, "{s}");
+        let q = absmean_quantize(&w, 1.58, s);
+        // 0.1*4=0.4→0; -0.2*4=-0.8→-1; 0.3*4=1.2→1; -0.4*4=-1.6→-2 clip -1
+        let expect = [0.0, -1.0 / s, 1.0 / s, -1.0 / s];
+        for (a, b) in q.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-6, "{q:?}");
+        }
+    }
+
+    #[test]
+    fn quantized_values_on_grid() {
+        let w: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.013).collect();
+        for bits in [1.58, 3.0, 4.0, 8.0] {
+            let s = absmean_scale(&w, bits);
+            let (qn, qp) = qrange(bits);
+            for v in absmean_quantize(&w, bits, s) {
+                let k = (v * s) as f64;
+                assert!((k - k.round()).abs() < 1e-3);
+                assert!(k >= qn - 1e-3 && k <= qp + 1e-3);
+            }
+        }
+    }
+}

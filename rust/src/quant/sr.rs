@@ -1,0 +1,105 @@
+//! Host-side stochastic rounding (paper Eq. 1) + the counter-hash PRNG.
+//!
+//! The PRNG is the same 3-round xorshift-multiply mix as the Pallas kernel
+//! (`python/compile/kernels/prng.py`), so given the same `(seed, counter)`
+//! the host and the kernel draw identical uniforms — checkpoint conversions
+//! done in Rust are bit-reproducible against the training graph.
+
+const M1: u32 = 0x85EB_CA6B;
+const M2: u32 = 0xC2B2_AE35;
+const GOLDEN: u32 = 0x9E37_79B9;
+
+/// Mix a (counter, seed) pair into uniform u32 bits — twin of `prng.hash_u32`.
+#[inline]
+pub fn hash_u32(counter: u32, seed: u32) -> u32 {
+    let mut x = counter.wrapping_mul(GOLDEN).wrapping_add(seed);
+    x = (x ^ (x >> 16)).wrapping_mul(M1);
+    x = (x ^ (x >> 13)).wrapping_mul(M2);
+    x ^ (x >> 16)
+}
+
+/// Uniform f32 in [0, 1) from (counter, seed); top 24 bits → exact mantissa.
+#[inline]
+pub fn uniform01(counter: u32, seed: u32) -> f32 {
+    (hash_u32(counter, seed) >> 8) as f32 * (1.0 / (1 << 24) as f32)
+}
+
+/// Stochastically round one value onto the integer grid `[qn, qp]` scaled
+/// by `s`: `SR(x*s)/s` with P(ceil) = frac(x*s).
+#[inline]
+pub fn sr_scalar(x: f32, counter: u32, seed: u32, qn: f32, qp: f32, s: f32) -> f32 {
+    let y = x * s;
+    let lo = y.floor();
+    let frac = y - lo;
+    let u = uniform01(counter, seed);
+    let r = if u < frac { lo + 1.0 } else { lo };
+    r.clamp(qn, qp) / s
+}
+
+/// SR an entire slice (counter = element index), matching the kernel's
+/// row-major counter layout for a full (un-tiled) tensor.
+pub fn sr_slice(xs: &[f32], seed: u32, bits: f64, s: f32) -> Vec<f32> {
+    let (qn, qp) = super::qrange(bits);
+    xs.iter()
+        .enumerate()
+        .map(|(i, &x)| sr_scalar(x, i as u32, seed, qn as f32, qp as f32, s))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_matches_python_twin() {
+        // golden values from python/compile/kernels/prng.py — regenerate
+        // with `python -m tests.test_interop` (pinned on both sides)
+        assert_eq!(hash_u32(0, 0), 0);
+        assert_eq!(hash_u32(1, 2), 3024231355);
+        assert_eq!(hash_u32(12345, 67890), 2856791855);
+        assert_eq!(hash_u32(4294967295, 1), 3893119930);
+        // determinism + seed sensitivity
+        assert_eq!(hash_u32(123, 456), hash_u32(123, 456));
+        assert_ne!(hash_u32(123, 456), hash_u32(123, 457));
+    }
+
+    #[test]
+    fn uniform_in_range_and_unbiased() {
+        let n = 100_000u32;
+        let mean: f64 = (0..n).map(|i| uniform01(i, 7) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "{mean}");
+        for i in 0..1000 {
+            let u = uniform01(i, 3);
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn sr_support_and_unbiasedness() {
+        let s = 1.0f32;
+        let x = 0.37f32;
+        let mut mean = 0.0f64;
+        let n = 200_000;
+        for i in 0..n {
+            let r = sr_scalar(x, i, 11, -128.0, 127.0, s);
+            assert!(r == 0.0 || r == 1.0);
+            mean += r as f64;
+        }
+        mean /= n as f64;
+        assert!((mean - 0.37).abs() < 0.005, "{mean}");
+    }
+
+    #[test]
+    fn sr_exact_grid_points_fixed() {
+        for k in -5..=5 {
+            let x = k as f32 / 4.0;
+            assert_eq!(sr_scalar(x, 9, 1, -128.0, 127.0, 4.0), x);
+        }
+    }
+
+    #[test]
+    fn sr_clips() {
+        assert_eq!(sr_scalar(10.0, 0, 0, -1.0, 1.0, 1.0), 1.0);
+        assert_eq!(sr_scalar(-10.0, 0, 0, -1.0, 1.0, 1.0), -1.0);
+    }
+}

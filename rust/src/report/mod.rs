@@ -1,0 +1,271 @@
+//! Report renderer: paper-style tables and ASCII loss curves from
+//! `results/` — the `repro report` subcommand.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Env, Mode, ModelConfig, Optimizer, VariantSpec};
+use crate::memory;
+use crate::train::RunMetrics;
+
+/// Render Table 2 (model configurations) — paper-exact + testbed presets.
+pub fn table2() -> String {
+    let mut out = String::new();
+    out.push_str("Table 2: model configurations\n");
+    out.push_str(
+        "| name  | params | hidden | inter | layers | heads | batch | seq |\n\
+         |-------|--------|--------|-------|--------|-------|-------|-----|\n",
+    );
+    for name in ModelConfig::paper_names()
+        .iter()
+        .chain(ModelConfig::testbed_names().iter())
+    {
+        let c = ModelConfig::by_name(name).unwrap();
+        out.push_str(&format!(
+            "| {:<5} | {:>6} | {:>6} | {:>5} | {:>6} | {:>5} | {:>5} | {:>3} |\n",
+            c.name,
+            human(c.param_count() as f64),
+            c.hidden_size,
+            c.intermediate_size,
+            c.num_hidden_layers,
+            c.num_attention_heads,
+            c.batch_size,
+            c.max_seq_len
+        ));
+    }
+    out
+}
+
+/// Render Table 3 (training memory, MB) from the analytic model for the
+/// paper-exact configs — the reproduction of §A.3.
+pub fn table3() -> String {
+    let mut out = String::new();
+    out.push_str("Table 3: modeled training memory (MB/GPU, paper-exact configs, BitNet-style)\n");
+    out.push_str(
+        "| size  | FP32   | BF16   | BF16+AF | FP8    | FP8+AF |\n\
+         |-------|--------|--------|---------|--------|--------|\n",
+    );
+    for (label, name) in [("130M", "p130m"), ("1B", "p1b")] {
+        let m = |env, opt| {
+            let spec = VariantSpec::new(name, Mode::Bitnet158, 1.58)
+                .with_env(env)
+                .with_optimizer(opt);
+            memory::estimate(&spec, true).unwrap().total_mb()
+        };
+        out.push_str(&format!(
+            "| {:<5} | {:>6.0} | {:>6.0} | {:>7.0} | {:>6.0} | {:>6.0} |\n",
+            label,
+            m(Env::Fp32, Optimizer::Adamw),
+            m(Env::Bf16, Optimizer::Adamw),
+            m(Env::Bf16, Optimizer::Adafactor),
+            m(Env::Fp8, Optimizer::Adamw),
+            m(Env::Fp8, Optimizer::Adafactor),
+        ));
+    }
+    out.push_str(
+        "paper (GH200, measured): 130M: 69327/54675/53827/39276/38315; \
+         1B: 76533/58345/53723/40945/37669\n",
+    );
+    out
+}
+
+/// DQT-vs-BitNet state memory comparison (the §1 motivation table).
+pub fn memory_comparison(model: &str) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Model-state memory (no activations/framework), {model}:\n"
+    ));
+    out.push_str("| variant        | weights  | grads    | optim    | total    |\n");
+    for (label, spec) in [
+        ("fp32", VariantSpec::new(model, Mode::Fp32, 1.58)),
+        ("bitnet b1.58", VariantSpec::new(model, Mode::Bitnet158, 1.58)),
+        ("dqt ternary", VariantSpec::new(model, Mode::Dqt, 1.58)),
+        ("dqt 8bit", VariantSpec::new(model, Mode::Dqt, 8.0)),
+    ] {
+        let b = memory::estimate(&spec, false).ok_or_else(|| anyhow!("bad model"))?;
+        out.push_str(&format!(
+            "| {:<14} | {:>8} | {:>8} | {:>8} | {:>8} |\n",
+            label,
+            human(b.weights),
+            human(b.grads),
+            human(b.optimizer),
+            human(b.state_bytes()),
+        ));
+    }
+    Ok(out)
+}
+
+fn human(bytes: f64) -> String {
+    if bytes >= 1e9 {
+        format!("{:.2}G", bytes / 1e9)
+    } else if bytes >= 1e6 {
+        format!("{:.1}M", bytes / 1e6)
+    } else if bytes >= 1e3 {
+        format!("{:.1}K", bytes / 1e3)
+    } else {
+        format!("{bytes:.0}")
+    }
+}
+
+/// Load every job's metrics under `results/<exp>/`.
+pub fn load_runs(results_root: &Path, exp: &str) -> Result<Vec<RunMetrics>> {
+    let dir = results_root.join(exp);
+    let mut runs = Vec::new();
+    for entry in std::fs::read_dir(&dir)
+        .map_err(|e| anyhow!("no results for {exp:?} at {}: {e} — run `repro sweep --exp {exp}`", dir.display()))?
+    {
+        let p = entry?.path();
+        if p.join("metrics.json").is_file() {
+            runs.push(RunMetrics::load(&p)?);
+        }
+    }
+    if runs.is_empty() {
+        return Err(anyhow!("no completed runs under {}", dir.display()));
+    }
+    runs.sort_by(|a, b| a.variant.cmp(&b.variant).then(a.dataset.cmp(&b.dataset)));
+    Ok(runs)
+}
+
+/// ASCII multi-curve plot of smoothed training losses (Fig. 2/4/5/7-style).
+pub fn ascii_curves(runs: &[RunMetrics], width: usize, height: usize) -> String {
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for r in runs {
+        let pts: Vec<(f64, f64)> = r
+            .records
+            .iter()
+            .map(|rec| (rec.step as f64, smooth(r, rec.step) as f64))
+            .collect();
+        if !pts.is_empty() {
+            series.push((format!("{} ({})", r.variant, r.dataset), pts));
+        }
+    }
+    if series.is_empty() {
+        return "(no data)".into();
+    }
+    let xmax = series
+        .iter()
+        .flat_map(|(_, p)| p.iter().map(|q| q.0))
+        .fold(1.0f64, f64::max);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (_, p) in &series {
+        for &(_, y) in p {
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !(ymax > ymin) {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks = b"o+x*#@%&";
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts {
+            let col = ((x / xmax) * (width - 1) as f64).round() as usize;
+            let row = (((ymax - y) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:7.3} |")
+        } else if i == height - 1 {
+            format!("{ymin:7.3} |")
+        } else {
+            "        |".to_string()
+        };
+        out.push_str(&label);
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("        +{}\n", "-".repeat(width)));
+    out.push_str(&format!("         0 .. {xmax:.0} steps\n"));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()] as char, name));
+    }
+    out
+}
+
+fn smooth(r: &RunMetrics, step: u64) -> f32 {
+    // trailing window mean, window 10
+    let recs = &r.records;
+    let idx = recs.iter().position(|x| x.step == step).unwrap_or(0);
+    let lo = idx.saturating_sub(9);
+    let w = &recs[lo..=idx];
+    w.iter().map(|x| x.loss).sum::<f32>() / w.len() as f32
+}
+
+/// Final-loss summary table for an experiment's runs.
+pub fn summary_table(runs: &[RunMetrics]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| run                                      | final train | dev loss | peak upd%% | ms/step |\n",
+    );
+    for r in runs {
+        out.push_str(&format!(
+            "| {:<40} | {:>11.4} | {:>8} | {:>9} | {:>7.1} |\n",
+            format!("{} ({})", r.variant, r.dataset),
+            r.tail_loss(10).unwrap_or(f32::NAN),
+            r.final_dev_loss
+                .map(|v| format!("{v:.4}"))
+                .unwrap_or_else(|| "-".into()),
+            r.peak_upd_frac()
+                .map(|v| format!("{:.3}%", v * 100.0))
+                .unwrap_or_else(|| "-".into()),
+            r.mean_step_ms().unwrap_or(f32::NAN),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::StepRecord;
+
+    #[test]
+    fn table2_contains_all_presets() {
+        let t = table2();
+        for n in ["p130m", "p320m", "p1b", "t130", "t320", "t1b"] {
+            assert!(t.contains(n), "{n} missing:\n{t}");
+        }
+    }
+
+    #[test]
+    fn table3_monotone_rows() {
+        let t = table3();
+        assert!(t.contains("130M") && t.contains("1B"));
+    }
+
+    #[test]
+    fn memory_comparison_renders() {
+        let t = memory_comparison("p1b").unwrap();
+        assert!(t.contains("dqt ternary"));
+    }
+
+    #[test]
+    fn ascii_curves_renders() {
+        let mut r = RunMetrics::new("v1", "wiki");
+        for i in 0..50 {
+            r.push(StepRecord {
+                step: i,
+                loss: 5.0 - (i as f32) * 0.05,
+                lr: 1e-3,
+                upd_frac: 0.0,
+                gnorm: 1.0,
+                step_ms: 1.0,
+            });
+        }
+        let plot = ascii_curves(&[r], 40, 10);
+        assert!(plot.contains('o'));
+        assert!(plot.contains("steps"));
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human(1.5e9), "1.50G");
+        assert_eq!(human(2.5e6), "2.5M");
+        assert_eq!(human(999.0), "999");
+    }
+}

@@ -1,0 +1,287 @@
+//! Artifact manifests: the serialized L2↔L3 contract.
+//!
+//! `python/compile/aot.py` writes one directory per variant containing HLO
+//! text for each entry point plus `manifest.json` describing every buffer
+//! (name/shape/dtype/role) in flat positional order. The Rust side never
+//! hardcodes a parameter layout — it is driven entirely by the manifest.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse, Value};
+
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// "grid" (on the INTn grid, + has a `.s` companion), "scale", "dense"
+    pub role: Option<String>,
+}
+
+impl ParamMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+    pub fn is_grid(&self) -> bool {
+        self.role.as_deref() == Some("grid")
+    }
+    pub fn is_scale(&self) -> bool {
+        self.role.as_deref() == Some("scale")
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OptMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl OptMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainStepOutputs {
+    pub n_params: usize,
+    pub n_opt: usize,
+    pub metrics: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct VariantModelMeta {
+    pub name: String,
+    pub vocab_size: usize,
+    pub hidden_size: usize,
+    pub num_hidden_layers: usize,
+    pub max_seq_len: usize,
+    pub batch_size: usize,
+    pub param_count: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub model: VariantModelMeta,
+    pub mode: String,
+    pub bits: f64,
+    pub env: String,
+    pub optimizer: String,
+    pub intervention: String,
+    pub variant_name: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub variant: VariantMeta,
+    pub params: Vec<ParamMeta>,
+    pub opt_state: Vec<OptMeta>,
+    pub tokens_shape: Vec<usize>,
+    pub logits_tokens_shape: Vec<usize>,
+    pub pad_id: i32,
+    pub train_step_outputs: TrainStepOutputs,
+    pub entries: Vec<String>,
+}
+
+fn shape_of(v: &Value) -> Result<Vec<usize>> {
+    Ok(v.as_arr()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|x| x.as_usize().unwrap_or(0))
+        .collect())
+}
+
+fn str_of(v: &Value, key: &str) -> Result<String> {
+    Ok(v.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("{key} is not a string"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn from_json(v: &Value) -> Result<Manifest> {
+        let variant = v.req("variant")?;
+        let model = variant.req("model")?;
+        let usz = |obj: &Value, key: &str| -> Result<usize> {
+            obj.req(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("{key} is not a number"))
+        };
+        let model_meta = VariantModelMeta {
+            name: str_of(model, "name")?,
+            vocab_size: usz(model, "vocab_size")?,
+            hidden_size: usz(model, "hidden_size")?,
+            num_hidden_layers: usz(model, "num_hidden_layers")?,
+            max_seq_len: usz(model, "max_seq_len")?,
+            batch_size: usz(model, "batch_size")?,
+            param_count: model.req("param_count")?.as_u64().unwrap_or(0),
+        };
+        let variant_meta = VariantMeta {
+            model: model_meta,
+            mode: str_of(variant, "mode")?,
+            bits: variant.req("bits")?.as_f64().unwrap_or(1.58),
+            env: str_of(variant, "env")?,
+            optimizer: str_of(variant, "optimizer")?,
+            intervention: str_of(variant, "intervention")?,
+            variant_name: str_of(variant, "variant_name")?,
+        };
+        let params = v
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params not array"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamMeta {
+                    name: str_of(p, "name")?,
+                    shape: shape_of(p.req("shape")?)?,
+                    dtype: str_of(p, "dtype")?,
+                    role: p.get("role").and_then(|r| r.as_str()).map(String::from),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opt_state = v
+            .req("opt_state")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("opt_state not array"))?
+            .iter()
+            .map(|o| {
+                Ok(OptMeta {
+                    name: str_of(o, "name")?,
+                    shape: shape_of(o.req("shape")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let tso = v.req("train_step_outputs")?;
+        let train_step_outputs = TrainStepOutputs {
+            n_params: tso.req("n_params")?.as_usize().unwrap_or(0),
+            n_opt: tso.req("n_opt")?.as_usize().unwrap_or(0),
+            metrics: tso
+                .req("metrics")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|m| m.as_str().map(String::from))
+                .collect(),
+        };
+        Ok(Manifest {
+            variant: variant_meta,
+            params,
+            opt_state,
+            tokens_shape: shape_of(v.req("tokens_shape")?)?,
+            logits_tokens_shape: shape_of(v.req("logits_tokens_shape")?)?,
+            pad_id: v.req("pad_id")?.as_i64().unwrap_or(0) as i32,
+            train_step_outputs,
+            entries: v
+                .req("entries")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|e| e.as_str().map(String::from))
+                .collect(),
+        })
+    }
+
+    pub fn total_param_values(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+    pub fn total_opt_values(&self) -> usize {
+        self.opt_state.iter().map(|o| o.numel()).sum()
+    }
+    pub fn n_state(&self) -> usize {
+        self.params.len() + self.opt_state.len()
+    }
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+}
+
+/// One variant's artifact directory on disk.
+#[derive(Clone, Debug)]
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactDir {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        let v = parse(&text).with_context(|| format!("parsing {}", mpath.display()))?;
+        let manifest =
+            Manifest::from_json(&v).with_context(|| format!("decoding {}", mpath.display()))?;
+        Ok(ArtifactDir { dir, manifest })
+    }
+
+    /// Locate `artifacts/<variant>` under the artifacts root.
+    pub fn locate(artifacts_root: impl AsRef<Path>, variant_name: &str) -> Result<Self> {
+        let dir = artifacts_root.as_ref().join(variant_name);
+        if !dir.join("manifest.json").is_file() {
+            return Err(anyhow!(
+                "artifact {variant_name:?} not built — run `make artifacts` \
+                 (or `python -m compile.aot` with the matching flags)"
+            ));
+        }
+        Self::open(dir)
+    }
+
+    pub fn hlo_path(&self, entry: &str) -> PathBuf {
+        self.dir.join(format!("{entry}.hlo.txt"))
+    }
+
+    pub fn has_entry(&self, entry: &str) -> bool {
+        self.manifest.entries.iter().any(|e| e == entry)
+    }
+}
+
+/// Parse `artifacts/index.json` (variant name → summary).
+pub fn read_index(artifacts_root: impl AsRef<Path>) -> Result<Vec<String>> {
+    let p = artifacts_root.as_ref().join("index.json");
+    let idx = parse(&std::fs::read_to_string(&p)?)?;
+    Ok(idx
+        .as_obj()
+        .map(|o| o.iter().map(|(k, _)| k.clone()).collect())
+        .unwrap_or_default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn open_core_manifest() {
+        let root = artifacts_root();
+        if !root.join("index.json").is_file() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let a = ArtifactDir::locate(&root, "test-dqt-b1p58").unwrap();
+        let m = &a.manifest;
+        assert_eq!(m.variant.mode, "dqt");
+        assert_eq!(m.variant.model.name, "test");
+        assert!(m.params.iter().any(|p| p.is_grid()));
+        assert!(m.params.iter().any(|p| p.is_scale()));
+        assert_eq!(m.train_step_outputs.metrics, ["loss", "upd_frac", "gnorm"]);
+        assert!(a.hlo_path("train_step").is_file());
+        // grid params are immediately followed by their scale
+        for (i, p) in m.params.iter().enumerate() {
+            if p.is_grid() {
+                assert!(m.params[i + 1].is_scale(), "{}", p.name);
+                assert_eq!(m.params[i + 1].name, format!("{}.s", p.name));
+            }
+        }
+    }
+
+    #[test]
+    fn locate_missing_is_helpful() {
+        let err = ArtifactDir::locate(artifacts_root(), "nope-variant").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

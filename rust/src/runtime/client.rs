@@ -1,0 +1,149 @@
+//! PJRT runtime: load HLO text, compile once, execute from the hot loop.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All entry points were lowered with
+//! `return_tuple=True`, so each execution returns one tuple literal that we
+//! decompose positionally per the manifest.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+/// Shared PJRT client (compile + execute). One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text entry point and compile it.
+    pub fn load(&self, hlo_path: impl AsRef<Path>) -> Result<Executable> {
+        let path = hlo_path.as_ref();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            compile_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// A compiled entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub compile_secs: f64,
+}
+
+impl Executable {
+    /// Execute with host literals; return the flattened tuple outputs.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let device0 = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no device outputs", self.name))?;
+        let mut literals = Vec::new();
+        for buf in device0 {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{}: fetching output: {e}", self.name))?;
+            // return_tuple=True ⇒ outputs arrive as (possibly) one tuple
+            match lit.shape() {
+                Ok(xla::Shape::Tuple(_)) => {
+                    let mut l = lit;
+                    literals.extend(
+                        l.decompose_tuple()
+                            .map_err(|e| anyhow!("{}: decompose: {e}", self.name))?,
+                    );
+                }
+                _ => literals.push(lit),
+            }
+        }
+        Ok(literals)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != numel {
+        return Err(anyhow!("shape {shape:?} wants {numel} values, got {}", data.len()));
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("creating f32 literal: {e}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != numel {
+        return Err(anyhow!("shape {shape:?} wants {numel} values, got {}", data.len()));
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow!("creating i32 literal: {e}"))
+}
+
+/// Scalar u32 literal.
+pub fn lit_u32_scalar(v: u32) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U32,
+        &[],
+        &v.to_le_bytes(),
+    )
+    .map_err(|e| anyhow!("creating u32 scalar: {e}"))
+}
+
+/// Scalar f32 literal.
+pub fn lit_f32_scalar(v: f32) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[],
+        &v.to_le_bytes(),
+    )
+    .map_err(|e| anyhow!("creating f32 scalar: {e}"))
+}
+
+/// Read an f32 literal back to a host vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal→vec<f32>: {e}"))
+}
+
+/// Read a scalar f32 literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("literal→f32 scalar: {e}"))
+}

@@ -1,0 +1,209 @@
+//! Run metrics: per-step records, summaries, CSV/JSON persistence.
+//!
+//! Every experiment (figures 2-10) is rendered from these records — the
+//! coordinator writes one `metrics.json` + `curve.csv` per job under
+//! `results/<exp>/<variant>/`.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::{parse, Value};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub lr: f32,
+    /// fraction of quantized weights whose value changed this step (Fig. 6)
+    pub upd_frac: f32,
+    pub gnorm: f32,
+    pub step_ms: f32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub variant: String,
+    pub dataset: String,
+    pub records: Vec<StepRecord>,
+    /// (step, dev loss) pairs from periodic evaluation
+    pub dev_losses: Vec<(u64, f32)>,
+    pub final_dev_loss: Option<f32>,
+    pub wall_secs: f64,
+}
+
+impl RunMetrics {
+    pub fn new(variant: &str, dataset: &str) -> Self {
+        RunMetrics {
+            variant: variant.into(),
+            dataset: dataset.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    /// Mean training loss over the last `n` records (smoothed tail loss).
+    pub fn tail_loss(&self, n: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// Peak weight-update fraction across the run (Fig. 6 reporting).
+    pub fn peak_upd_frac(&self) -> Option<f32> {
+        self.records
+            .iter()
+            .map(|r| r.upd_frac)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f32| a.max(v))))
+    }
+
+    pub fn mean_step_ms(&self) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        Some(self.records.iter().map(|r| r.step_ms).sum::<f32>() / self.records.len() as f32)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let records = Value::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Value::obj()
+                        .set("step", r.step)
+                        .set("loss", r.loss)
+                        .set("lr", r.lr)
+                        .set("upd_frac", r.upd_frac)
+                        .set("gnorm", r.gnorm)
+                        .set("step_ms", r.step_ms)
+                })
+                .collect(),
+        );
+        let dev = Value::Arr(
+            self.dev_losses
+                .iter()
+                .map(|&(s, l)| Value::Arr(vec![s.into(), l.into()]))
+                .collect(),
+        );
+        Value::obj()
+            .set("variant", self.variant.as_str())
+            .set("dataset", self.dataset.as_str())
+            .set("records", records)
+            .set("dev_losses", dev)
+            .set(
+                "final_dev_loss",
+                self.final_dev_loss.map(Value::from).unwrap_or(Value::Null),
+            )
+            .set("wall_secs", self.wall_secs)
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let records = v
+            .req("records")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|r| StepRecord {
+                step: r.get("step").and_then(|x| x.as_u64()).unwrap_or(0),
+                loss: r.get("loss").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+                lr: r.get("lr").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+                upd_frac: r.get("upd_frac").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+                gnorm: r.get("gnorm").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+                step_ms: r.get("step_ms").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+            })
+            .collect();
+        let dev_losses = v
+            .req("dev_losses")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|p| {
+                let a = p.as_arr()?;
+                Some((a[0].as_u64()?, a[1].as_f64()? as f32))
+            })
+            .collect();
+        Ok(RunMetrics {
+            variant: v.req("variant")?.as_str().unwrap_or("").to_string(),
+            dataset: v.req("dataset")?.as_str().unwrap_or("").to_string(),
+            records,
+            dev_losses,
+            final_dev_loss: v
+                .get("final_dev_loss")
+                .and_then(|x| x.as_f64())
+                .map(|f| f as f32),
+            wall_secs: v.get("wall_secs").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        })
+    }
+
+    pub fn save(&self, dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("metrics.json"), self.to_json().to_string_pretty())?;
+        let mut csv = std::fs::File::create(dir.join("curve.csv"))?;
+        writeln!(csv, "step,loss,lr,upd_frac,gnorm,step_ms")?;
+        for r in &self.records {
+            writeln!(
+                csv,
+                "{},{},{},{},{},{}",
+                r.step, r.loss, r.lr, r.upd_frac, r.gnorm, r.step_ms
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        Self::from_json(&parse(&std::fs::read_to_string(dir.join("metrics.json"))?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, loss: f32, upd: f32) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            lr: 1e-3,
+            upd_frac: upd,
+            gnorm: 1.0,
+            step_ms: 5.0,
+        }
+    }
+
+    #[test]
+    fn tail_loss_and_peak() {
+        let mut m = RunMetrics::new("v", "d");
+        for i in 0..10 {
+            m.push(rec(i, 10.0 - i as f32, i as f32 * 0.01));
+        }
+        assert!((m.tail_loss(2).unwrap() - 1.5).abs() < 1e-6);
+        assert!((m.peak_upd_frac().unwrap() - 0.09).abs() < 1e-6);
+        assert_eq!(m.mean_step_ms(), Some(5.0));
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = RunMetrics::new("v", "d");
+        assert_eq!(m.tail_loss(5), None);
+        assert_eq!(m.peak_upd_frac(), None);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut m = RunMetrics::new("var1", "wiki");
+        m.push(rec(0, 5.0, 0.01));
+        m.dev_losses.push((0, 5.1));
+        m.final_dev_loss = Some(4.9);
+        let dir = std::env::temp_dir().join("dqt_metrics_test");
+        m.save(&dir).unwrap();
+        let m2 = RunMetrics::load(&dir).unwrap();
+        assert_eq!(m.records, m2.records);
+        assert_eq!(m2.final_dev_loss, Some(4.9));
+        assert!(dir.join("curve.csv").is_file());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! Training subsystem: LR schedule, loop driver, metrics, checkpoints.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod scheduler;
+pub mod trainer;
+
+pub use metrics::{RunMetrics, StepRecord};
+pub use scheduler::CosineSchedule;
+pub use trainer::{step_seed, train_and_save, Trainer};

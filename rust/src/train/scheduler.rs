@@ -1,0 +1,76 @@
+//! Learning-rate schedule: linear warmup + cosine decay (paper §4.1:
+//! "cosine scheduler applied and a 2000 step warm-up").
+//!
+//! The LR is an *input* to the compiled train step, so the schedule lives
+//! entirely on the Rust side and can be changed without re-lowering.
+
+#[derive(Clone, Copy, Debug)]
+pub struct CosineSchedule {
+    pub peak_lr: f64,
+    pub min_lr: f64,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+}
+
+impl CosineSchedule {
+    pub fn new(peak_lr: f64, min_lr: f64, warmup_steps: u64, total_steps: u64) -> Self {
+        assert!(total_steps > 0);
+        CosineSchedule {
+            peak_lr,
+            min_lr,
+            warmup_steps: warmup_steps.min(total_steps),
+            total_steps,
+        }
+    }
+
+    /// LR for 0-based step `t` (the value used *during* step t).
+    pub fn lr(&self, t: u64) -> f64 {
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            // linear ramp ending at peak on the last warmup step
+            return self.peak_lr * (t + 1) as f64 / self.warmup_steps as f64;
+        }
+        let span = (self.total_steps - self.warmup_steps).max(1) as f64;
+        let progress = ((t - self.warmup_steps) as f64 / span).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+        self.min_lr + (self.peak_lr - self.min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_to_peak() {
+        let s = CosineSchedule::new(1e-3, 1e-5, 10, 100);
+        assert!((s.lr(0) - 1e-4).abs() < 1e-12);
+        assert!((s.lr(9) - 1e-3).abs() < 1e-12);
+        for t in 1..10 {
+            assert!(s.lr(t) > s.lr(t - 1));
+        }
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = CosineSchedule::new(1e-3, 1e-5, 10, 100);
+        assert!((s.lr(10) - 1e-3).abs() < 1e-5);
+        for t in 11..100 {
+            assert!(s.lr(t) <= s.lr(t - 1) + 1e-15);
+        }
+        assert!((s.lr(99) - 1e-5).abs() < 2e-6, "{}", s.lr(99));
+        // past the end stays at min
+        assert!((s.lr(500) - 1e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn halfway_point_is_midpoint() {
+        let s = CosineSchedule::new(2e-3, 0.0, 0, 100);
+        assert!((s.lr(50) - 1e-3).abs() < 1e-4);
+    }
+
+    #[test]
+    fn zero_warmup_starts_at_peak() {
+        let s = CosineSchedule::new(1e-3, 0.0, 0, 10);
+        assert!((s.lr(0) - 1e-3).abs() < 1e-9);
+    }
+}

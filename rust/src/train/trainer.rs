@@ -1,0 +1,128 @@
+//! The training-loop driver: data pipeline → compiled train step → metrics.
+//!
+//! This is the L3 hot loop. Per step: receive a prefetched batch, compute
+//! the scheduled LR, derive the SR seed, execute the AOT train step, record
+//! metrics. Periodically (and at the end) it sweeps the dev split for the
+//! dev loss the paper's Fig. 3 reports.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::{loader, Pipeline};
+use crate::quant::sr::hash_u32;
+use crate::runtime::{State, VariantRuntime};
+
+use super::metrics::{RunMetrics, StepRecord};
+use super::scheduler::CosineSchedule;
+
+/// Derive the per-step SR seed from (run seed, step): a single u32 the
+/// graph further hashes per tensor.
+pub fn step_seed(run_seed: u64, step: u64) -> u32 {
+    hash_u32(step as u32, (run_seed as u32) ^ ((run_seed >> 32) as u32))
+}
+
+pub struct Trainer<'a> {
+    pub vrt: &'a VariantRuntime,
+    pub pipeline: &'a Pipeline,
+    pub cfg: TrainConfig,
+    /// optional live progress callback (step, loss)
+    pub progress: Option<Box<dyn FnMut(u64, f32) + 'a>>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(vrt: &'a VariantRuntime, pipeline: &'a Pipeline, cfg: TrainConfig) -> Self {
+        Trainer {
+            vrt,
+            pipeline,
+            cfg,
+            progress: None,
+        }
+    }
+
+    /// Mean dev loss under the compiled eval step.
+    pub fn dev_loss(&self, state: &State, ternary: bool) -> Result<f32> {
+        let m = self.vrt.manifest();
+        let batches = loader::dev_batches(&self.pipeline.dataset, m.variant.model.batch_size);
+        let mut nll = 0f64;
+        let mut count = 0f64;
+        for b in &batches {
+            let (s, c) = self.vrt.eval_step(state, &b.tokens, ternary)?;
+            nll += s as f64;
+            count += c as f64;
+        }
+        Ok(if count > 0.0 { (nll / count) as f32 } else { f32::NAN })
+    }
+
+    /// Run the configured number of steps from a fresh init.
+    pub fn run(&mut self) -> Result<(State, RunMetrics)> {
+        let state = self.vrt.init_state(self.cfg.seed as u32)?;
+        self.run_from(state)
+    }
+
+    /// Run from an existing state (checkpoint resume).
+    pub fn run_from(&mut self, mut state: State) -> Result<(State, RunMetrics)> {
+        let m = self.vrt.manifest();
+        let cfg = self.cfg.clone();
+        let sched = CosineSchedule::new(cfg.peak_lr, cfg.min_lr, cfg.warmup_steps, cfg.steps);
+        let start_step = state.step() as u64;
+        let loader = self.pipeline.loader(
+            m.variant.model.batch_size,
+            cfg.steps.saturating_sub(start_step),
+            cfg.seed,
+        );
+        let mut metrics = RunMetrics::new(&m.variant.variant_name, &cfg.dataset);
+        let wall = Instant::now();
+        while let Some(batch) = loader.next() {
+            let step = start_step + batch.step;
+            let lr = sched.lr(step) as f32;
+            let seed = step_seed(cfg.seed, step);
+            let t0 = Instant::now();
+            let (new_state, sm) = self.vrt.train_step(state, &batch.tokens, seed, lr)?;
+            state = new_state;
+            let rec = StepRecord {
+                step,
+                loss: sm.loss,
+                lr,
+                upd_frac: sm.upd_frac,
+                gnorm: sm.gnorm,
+                step_ms: t0.elapsed().as_secs_f32() * 1e3,
+            };
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                if let Some(cb) = self.progress.as_mut() {
+                    cb(step, sm.loss);
+                }
+            }
+            metrics.push(rec);
+            if cfg.eval_every > 0 && step > 0 && step % cfg.eval_every == 0 {
+                let dl = self.dev_loss(&state, false)?;
+                metrics.dev_losses.push((step, dl));
+            }
+        }
+        metrics.final_dev_loss = Some(self.dev_loss(&state, false)?);
+        metrics.wall_secs = wall.elapsed().as_secs_f64();
+        Ok((state, metrics))
+    }
+}
+
+/// Convenience: train a variant end to end and persist metrics + checkpoint.
+pub fn train_and_save(
+    vrt: &VariantRuntime,
+    pipeline: &Pipeline,
+    cfg: TrainConfig,
+    out_dir: &Path,
+) -> Result<(State, RunMetrics)> {
+    let mut tr = Trainer::new(vrt, pipeline, cfg);
+    let (state, metrics) = tr.run()?;
+    metrics.save(out_dir)?;
+    super::checkpoint::save(
+        &out_dir.join("model.dqt"),
+        vrt.manifest(),
+        &state,
+        super::checkpoint::Codec::F32,
+        true,
+    )?;
+    Ok((state, metrics))
+}

@@ -1,0 +1,213 @@
+//! Mini benchmark harness (in-tree criterion substitute).
+//!
+//! Warmup + timed iterations with mean / p50 / p95 / throughput reporting,
+//! plus a JSON record per benchmark appended under `results/bench/` so the
+//! perf pass can diff before/after (EXPERIMENTS.md §Perf).
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    group: String,
+    /// minimum measuring time per benchmark
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    records: Vec<Record>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub group: String,
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub bytes: Option<u64>,
+    pub elements: Option<u64>,
+}
+
+impl Record {
+    fn report(&self) {
+        let mut line = format!(
+            "{}/{:<36} {:>12} mean  {:>12} p50  {:>12} p95",
+            self.group,
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns)
+        );
+        if let Some(b) = self.bytes {
+            line.push_str(&format!(
+                "  {:>10.2} GB/s",
+                b as f64 / self.mean_ns * 1e9 / 1e9
+            ));
+        }
+        if let Some(e) = self.elements {
+            line.push_str(&format!(
+                "  {:>12.0} elem/s",
+                e as f64 / self.mean_ns * 1e9
+            ));
+        }
+        println!("{line}  ({} iters)", self.iters);
+    }
+
+    fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj()
+            .set("group", self.group.as_str())
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_ns", self.mean_ns)
+            .set("p50_ns", self.p50_ns)
+            .set("p95_ns", self.p95_ns)
+            .set("bytes", self.bytes.map(Value::from).unwrap_or(Value::Null))
+            .set(
+                "elements",
+                self.elements.map(Value::from).unwrap_or(Value::Null),
+            )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // honor DQT_BENCH_FAST=1 for CI-speed runs
+        let fast = std::env::var("DQT_BENCH_FAST").is_ok();
+        Bench {
+            group: group.to_string(),
+            measure_time: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            warmup_time: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(500)
+            },
+            records: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE iteration per call.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &mut Self {
+        self.bench_inner(name, None, None, &mut || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Benchmark with a bytes-throughput annotation.
+    pub fn bench_bytes<T>(&mut self, name: &str, bytes: u64, mut f: impl FnMut() -> T) -> &mut Self {
+        self.bench_inner(name, Some(bytes), None, &mut || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Benchmark with an elements-throughput annotation.
+    pub fn bench_elements<T>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &mut Self {
+        self.bench_inner(name, None, Some(elements), &mut || {
+            std::hint::black_box(f());
+        })
+    }
+
+    fn bench_inner(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        elements: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &mut Self {
+        // warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup_time || warm_iters < 1 {
+            f();
+            warm_iters += 1;
+        }
+        // measure
+        let mut samples: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure_time || samples.len() < 5 {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        let rec = Record {
+            group: self.group.clone(),
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean_ns: mean,
+            p50_ns: p(0.5),
+            p95_ns: p(0.95),
+            bytes,
+            elements,
+        };
+        rec.report();
+        self.records.push(rec);
+        self
+    }
+
+    /// Write all records as JSON under `results/bench/<group>.json`.
+    pub fn save(&self) {
+        use crate::util::json::Value;
+        let dir = crate::default_results_root().join("bench");
+        if std::fs::create_dir_all(&dir).is_err() {
+            return;
+        }
+        let arr = Value::Arr(self.records.iter().map(|r| r.to_json()).collect());
+        let _ = std::fs::write(dir.join(format!("{}.json", self.group)), arr.to_string_pretty());
+    }
+}
+
+impl Drop for Bench {
+    fn drop(&mut self) {
+        self.save();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new("selftest");
+        b.measure_time = Duration::from_millis(20);
+        b.warmup_time = Duration::from_millis(5);
+        b.bench("noop", || 1 + 1);
+        assert_eq!(b.records.len(), 1);
+        assert!(b.records[0].iters >= 5);
+        assert!(b.records[0].mean_ns > 0.0);
+        b.records.clear(); // avoid writing results in unit tests
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12e3).ends_with("µs"));
+        assert!(fmt_ns(12e6).ends_with("ms"));
+        assert!(fmt_ns(12e9).ends_with('s'));
+    }
+}

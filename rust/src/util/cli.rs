@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (in-tree clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! typed getters with defaults and a rendered usage/help string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `--x=1`, `--x 1` and bare `--x`
+    /// all work; a bare flag stores an empty string.
+    pub fn parse(raw: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.flags
+                        .entry(name.to_string())
+                        .or_default()
+                        .push(raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.entry(name.to_string()).or_default().push(String::new());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&raw)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None | Some("") => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    /// Reject unknown flags (typo guard).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_styles() {
+        let a = Args::parse(&s(&["train", "--steps", "300", "--bits=1.58", "--verbose"])).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("steps"), Some("300"));
+        assert_eq!(a.get("bits"), Some("1.58"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.parse_or("steps", 0u64).unwrap(), 300);
+        assert_eq!(a.parse_or("missing", 7u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = Args::parse(&s(&["--steps", "abc"])).unwrap();
+        assert!(a.parse_or("steps", 0u64).is_err());
+        assert!(a.req("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_guard() {
+        let a = Args::parse(&s(&["--goood", "1"])).unwrap();
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["goood"]).is_ok());
+    }
+
+    #[test]
+    fn repeated_flags_keep_last() {
+        let a = Args::parse(&s(&["--x", "1", "--x", "2"])).unwrap();
+        assert_eq!(a.get("x"), Some("2"));
+        assert_eq!(a.flags["x"].len(), 2);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // `--lr -0.5` — the value starts with '-' but not '--'
+        let a = Args::parse(&s(&["--lr", "-0.5"])).unwrap();
+        assert_eq!(a.parse_or("lr", 0.0f64).unwrap(), -0.5);
+    }
+}

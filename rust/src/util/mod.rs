@@ -1,0 +1,8 @@
+//! In-tree substrates for an offline build: JSON codec, CLI parser,
+//! benchmark harness, property-testing harness (serde/clap/criterion/
+//! proptest are not vendored in this environment — see DESIGN.md).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,102 @@
+//! Mini property-testing harness (in-tree proptest substitute).
+//!
+//! `check(cases, gen, prop)` runs `prop` on `cases` generated inputs from a
+//! seeded RNG; on failure it retries with the recorded case seed in the
+//! panic message so failures are reproducible. Generators are plain
+//! closures over [`crate::data::corpus::Rng`].
+
+use crate::data::corpus::Rng;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with the failing
+/// case's seed and a debug dump of the input.
+pub fn check<T: std::fmt::Debug>(
+    cases: u32,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let base = std::env::var("DQT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD97u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed on case {case} (DQT_PROP_SEED={base}): input = {input:#?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::data::corpus::Rng;
+
+    pub fn f32_in(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * rng.next_f64() as f32
+    }
+
+    pub fn vec_f32(rng: &mut Rng, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = 1 + rng.below(max_len.max(1));
+        (0..n).map(|_| f32_in(rng, lo, hi)).collect()
+    }
+
+    pub fn vec_i32(rng: &mut Rng, max_len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        let n = 1 + rng.below(max_len.max(1));
+        (0..n)
+            .map(|_| lo + rng.below((hi - lo + 1) as usize) as i32)
+            .collect()
+    }
+
+    pub fn ascii_string(rng: &mut Rng, max_len: usize) -> String {
+        let n = rng.below(max_len.max(1));
+        (0..n)
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_valid_property() {
+        check(
+            50,
+            |rng| gen::vec_i32(rng, 20, -5, 5),
+            |v| v.iter().all(|&x| (-5..=5).contains(&x)),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failures() {
+        check(50, |rng| rng.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut a = Vec::new();
+        check(
+            5,
+            |rng| gen::vec_f32(rng, 4, 0.0, 1.0),
+            |v| {
+                a.push(v.clone());
+                true
+            },
+        );
+        let mut b = Vec::new();
+        check(
+            5,
+            |rng| gen::vec_f32(rng, 4, 0.0, 1.0),
+            |v| {
+                b.push(v.clone());
+                true
+            },
+        );
+        assert_eq!(a, b);
+    }
+}

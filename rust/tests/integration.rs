@@ -1,0 +1,310 @@
+//! Integration tests over real AOT artifacts (require `make artifacts`).
+//!
+//! These exercise the full L3→PJRT→HLO path: init, train steps, loss
+//! decrease, grid invariants, determinism, checkpoint round-trips,
+//! ternary inference and the eval harness — everything an experiment run
+//! depends on, at `test`-config scale so the suite stays fast.
+
+use std::path::PathBuf;
+
+use dqt::data::corpus::CorpusSpec;
+use dqt::data::Pipeline;
+use dqt::quant;
+use dqt::runtime::{Runtime, State, VariantRuntime};
+use dqt::train::{checkpoint, step_seed, CosineSchedule, Trainer};
+use dqt::config::TrainConfig;
+
+fn artifacts_root() -> PathBuf {
+    dqt::default_artifacts_root()
+}
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("test-dqt-b1p58/manifest.json").is_file()
+}
+
+// PjRtClient wraps an Rc (not Send/Sync), so each test thread gets its own
+// client via thread_local.
+thread_local! {
+    static RT: std::rc::Rc<Runtime> =
+        std::rc::Rc::new(Runtime::cpu().expect("pjrt cpu client"));
+}
+
+fn with_runtime<T>(f: impl FnOnce(&Runtime) -> T) -> T {
+    RT.with(|rt| f(rt))
+}
+
+fn pipeline_for(vrt: &VariantRuntime) -> Pipeline {
+    let m = vrt.manifest();
+    Pipeline::build(
+        "tiny",
+        1,
+        m.variant.model.vocab_size,
+        m.variant.model.max_seq_len,
+    )
+    .unwrap()
+}
+
+fn train_n(vrt: &VariantRuntime, n: u64, seed: u64) -> (State, Vec<f32>) {
+    let pipeline = pipeline_for(vrt);
+    let m = vrt.manifest();
+    let loader = pipeline.loader(m.variant.model.batch_size, n, seed);
+    let sched = CosineSchedule::new(1e-3, 1e-5, 2, n);
+    let mut state = vrt.init_state(seed as u32).unwrap();
+    let mut losses = Vec::new();
+    while let Some(b) = loader.next() {
+        let lr = sched.lr(b.step) as f32;
+        let (s2, met) = vrt
+            .train_step(state, &b.tokens, step_seed(seed, b.step), lr)
+            .unwrap();
+        state = s2;
+        losses.push(met.loss);
+    }
+    (state, losses)
+}
+
+#[test]
+fn init_state_matches_manifest_shapes() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let vrt = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b1p58")).unwrap();
+    let m = vrt.manifest();
+    let state = vrt.init_state(42).unwrap();
+    assert_eq!(state.params.len(), m.params.len());
+    assert_eq!(state.opt.len(), m.opt_state.len());
+    for (meta, vals) in m.params.iter().zip(&state.params) {
+        assert_eq!(vals.len(), meta.numel(), "{}", meta.name);
+    }
+    assert_eq!(state.step(), 0.0);
+    // grid invariant at init
+    for (i, meta) in m.params.iter().enumerate() {
+        if meta.is_grid() {
+            let s = state.params[i + 1][0];
+            for &v in &state.params[i] {
+                let k = v * s;
+                assert!((k - k.round()).abs() < 1e-3, "{} off grid", meta.name);
+                assert!((-1.0 - 1e-3..=1.0 + 1e-3).contains(&k));
+            }
+        }
+    }
+}
+
+#[test]
+fn ternary_training_decreases_loss_and_stays_on_grid() {
+    if !have_artifacts() {
+        return;
+    }
+    let vrt = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b1p58")).unwrap();
+    let (state, losses) = train_n(&vrt, 25, 42);
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "loss did not decrease: {head} -> {tail}");
+    let m = vrt.manifest();
+    for (i, meta) in m.params.iter().enumerate() {
+        if meta.is_grid() {
+            let s = state.params[i + 1][0];
+            for &v in &state.params[i] {
+                let k = v * s;
+                assert!((k - k.round()).abs() < 1e-3);
+            }
+        }
+    }
+    assert_eq!(state.step(), 25.0);
+}
+
+#[test]
+fn training_is_deterministic_and_seed_sensitive() {
+    if !have_artifacts() {
+        return;
+    }
+    let vrt = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b1p58")).unwrap();
+    let (s1, l1) = train_n(&vrt, 6, 7);
+    let (s2, l2) = train_n(&vrt, 6, 7);
+    let (_, l3) = train_n(&vrt, 6, 8);
+    assert_eq!(l1, l2);
+    assert_ne!(l1, l3);
+    for (a, b) in s1.params.iter().zip(s2.params.iter()) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn all_core_modes_train() {
+    if !have_artifacts() {
+        return;
+    }
+    for variant in ["test-fp32", "test-bitnet158", "test-dqt-b8"] {
+        let vrt = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), variant)).unwrap();
+        let (_, losses) = train_n(&vrt, 16, 42);
+        assert!(losses.iter().all(|l| l.is_finite()), "{variant}");
+        // compare head/tail window means — single batches are noisy at
+        // test-config scale
+        let head: f32 = losses[..4].iter().sum::<f32>() / 4.0;
+        let tail: f32 = losses[losses.len() - 4..].iter().sum::<f32>() / 4.0;
+        assert!(tail < head, "{variant}: {head} -> {tail}");
+    }
+}
+
+#[test]
+fn trainer_with_dev_eval_and_metrics() {
+    if !have_artifacts() {
+        return;
+    }
+    let vrt = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b1p58")).unwrap();
+    let pipeline = pipeline_for(&vrt);
+    let cfg = TrainConfig {
+        steps: 12,
+        warmup_steps: 2,
+        peak_lr: 1e-3,
+        dataset: "tiny".into(),
+        eval_every: 5,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    let (state, metrics) = Trainer::new(&vrt, &pipeline, cfg).run().unwrap();
+    assert_eq!(metrics.records.len(), 12);
+    assert!(!metrics.dev_losses.is_empty());
+    assert!(metrics.final_dev_loss.unwrap().is_finite());
+    assert!(metrics.peak_upd_frac().unwrap() > 0.0);
+    assert_eq!(state.step(), 12.0);
+}
+
+#[test]
+fn checkpoint_roundtrip_and_resume() {
+    if !have_artifacts() {
+        return;
+    }
+    let vrt = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b1p58")).unwrap();
+    let m = vrt.manifest();
+    let (state, _) = train_n(&vrt, 8, 42);
+    let dir = std::env::temp_dir().join("dqt_it_ckpt");
+    let path = dir.join("model.dqt");
+    checkpoint::save(&path, m, &state, checkpoint::Codec::F32, true).unwrap();
+    let loaded = checkpoint::load(&path, m).unwrap();
+    // ternary grid packing is lossless
+    for (i, (a, b)) in state.params.iter().zip(loaded.params.iter()).enumerate() {
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-6, "param {i} ({})", m.params[i].name);
+        }
+    }
+    assert_eq!(loaded.step(), 8.0);
+    // resumed training continues identically to a state held in memory
+    let pipeline = pipeline_for(&vrt);
+    let batch = pipeline.loader(m.variant.model.batch_size, 1, 99).next().unwrap();
+    let (_, met_mem) = vrt
+        .train_step(state, &batch.tokens, step_seed(99, 0), 1e-3)
+        .unwrap();
+    let (_, met_load) = vrt
+        .train_step(loaded, &batch.tokens, step_seed(99, 0), 1e-3)
+        .unwrap();
+    assert_eq!(met_mem.loss, met_load.loss);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn packed_checkpoint_sizes_reflect_bit_widths() {
+    if !have_artifacts() {
+        return;
+    }
+    let tern = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b1p58")).unwrap();
+    let int8 = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b8")).unwrap();
+    let t_bytes = checkpoint::packed_param_bytes(tern.manifest());
+    let i_bytes = checkpoint::packed_param_bytes(int8.manifest());
+    let f_bytes = tern.manifest().total_param_values() * 4;
+    assert!(t_bytes < i_bytes, "{t_bytes} !< {i_bytes}");
+    assert!(i_bytes < f_bytes);
+    // the quantized share of the test model is ~63%; packing it at 2 bits
+    // must save well over a third overall
+    assert!((t_bytes as f64) < f_bytes as f64 * 0.7);
+}
+
+#[test]
+fn eval_and_ternary_inference_paths() {
+    if !have_artifacts() {
+        return;
+    }
+    let vrt = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b8")).unwrap();
+    assert!(vrt.has_ternary_inference());
+    let (state, _) = train_n(&vrt, 10, 42);
+    let pipeline = pipeline_for(&vrt);
+    let ppl8 = dqt::eval::perplexity(&vrt, &state, &pipeline, false).unwrap();
+    let ppl3 = dqt::eval::perplexity(&vrt, &state, &pipeline, true).unwrap();
+    assert!(ppl8.is_finite() && ppl8 > 1.0);
+    assert!(ppl3.is_finite() && ppl3 > 1.0);
+    assert_ne!(ppl8, ppl3); // ternary projection must change the model
+}
+
+#[test]
+fn zero_shot_suite_runs_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let vrt = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b1p58")).unwrap();
+    let (state, _) = train_n(&vrt, 10, 42);
+    let pipeline = pipeline_for(&vrt);
+    let spec = CorpusSpec::tiny(1);
+    let r = dqt::eval::evaluate(&vrt, &state, &pipeline, &spec, 12, false, 3).unwrap();
+    assert_eq!(r.task_acc.len(), 4);
+    for (name, acc) in &r.task_acc {
+        assert!((0.0..=1.0).contains(acc), "{name}: {acc}");
+    }
+}
+
+#[test]
+fn fig5_mechanism_absmax_zeros_absorbing() {
+    if !have_artifacts() {
+        return;
+    }
+    // dqt_absmax (paper Fig. 5 ablation): max-scale RTN re-quantization —
+    // a zero trit can never flip back (needs a half-max single-step
+    // update), so the zero set only grows: no accumulation path.
+    let vrt =
+        with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt_absmax-b1p58"));
+    let Ok(vrt) = vrt else {
+        eprintln!("skipping: absmax artifact not built");
+        return;
+    };
+    let pipeline = pipeline_for(&vrt);
+    let m = vrt.manifest();
+    let loader = pipeline.loader(m.variant.model.batch_size, 5, 42);
+    let mut state = vrt.init_state(42).unwrap();
+    let grid0 = m.params.iter().position(|p| p.is_grid()).unwrap();
+    let mut zero_mask: Vec<bool> = state.params[grid0].iter().map(|&v| v == 0.0).collect();
+    let w0_emb = state.params[0].clone();
+    while let Some(b) = loader.next() {
+        let (s2, _) = vrt
+            .train_step(state, &b.tokens, step_seed(42, b.step), 1e-3)
+            .unwrap();
+        state = s2;
+        for (i, &v) in state.params[grid0].iter().enumerate() {
+            if zero_mask[i] {
+                assert_eq!(v, 0.0, "zero trit revived under RTN at {i}");
+            }
+            zero_mask[i] = v == 0.0;
+        }
+    }
+    assert_ne!(state.params[0], w0_emb); // embedding still trains
+}
+
+#[test]
+fn host_and_graph_quantization_agree() {
+    if !have_artifacts() {
+        return;
+    }
+    // absmean quantization in rust quant:: must reproduce the grid of the
+    // in-graph init for the same dense values — validated indirectly: the
+    // init grid re-quantizes to itself under the rust codec.
+    let vrt = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b1p58")).unwrap();
+    let state = vrt.init_state(3).unwrap();
+    let m = vrt.manifest();
+    for (i, meta) in m.params.iter().enumerate() {
+        if meta.is_grid() {
+            let s = state.params[i + 1][0];
+            let again = quant::absmean_quantize(&state.params[i], 1.58, s);
+            for (a, b) in state.params[i].iter().zip(again.iter()) {
+                assert!((a - b).abs() < 1e-5, "{}", meta.name);
+            }
+        }
+    }
+}
