@@ -60,7 +60,7 @@ fn main() -> Result<()> {
             log_every: 0,
             ..TrainConfig::default()
         };
-        let (_, metrics) = Trainer::new(&vrt, &pipeline, cfg).run()?;
+        let (mut state, metrics) = Trainer::new(&vrt, &pipeline, cfg).run()?;
         // memory axis uses the paper-size twin (p1b) of this variant,
         // matching Fig. 3's GH200 percentages
         let paper_spec = VariantSpec {
@@ -76,6 +76,17 @@ fn main() -> Result<()> {
             mem,
             metrics.final_dev_loss.unwrap_or(f32::NAN)
         );
+        // measured host accounting: pack the grids and compare the state's
+        // resident bytes (RSS-backed, not just the analytic model)
+        let dense_bytes = state.host_param_bytes();
+        if state.pack_grids(m).is_ok() {
+            println!(
+                "    host params: {:.2} MB dense → {:.2} MB packed-grid (RSS {:.1} MB)",
+                dense_bytes as f64 / 1e6,
+                state.host_param_bytes() as f64 / 1e6,
+                memory::process_rss_bytes().unwrap_or(0) as f64 / 1e6
+            );
+        }
     }
     println!(
         "\nExpected shape (paper Fig. 3): BitNet dev loss worsens sharply in\n\

@@ -76,8 +76,8 @@ fn main() -> Result<()> {
 
     // weights really are ternary: inspect the first grid matrix
     let grid_idx = m.params.iter().position(|p| p.is_grid()).unwrap();
-    let w = &state.params[grid_idx];
-    let s = state.params[grid_idx + 1][0];
+    let w = state.params[grid_idx].values();
+    let s = state.params[grid_idx + 1].scalar();
     let mut counts = [0usize; 3];
     for &v in w.iter() {
         let k = (v * s).round() as i32;

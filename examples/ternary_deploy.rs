@@ -50,11 +50,11 @@ fn main() -> Result<()> {
         if !meta.is_grid() {
             continue;
         }
-        let w = &state.params[i];
+        let w = state.params[i].values();
         fp32_bytes += w.len() * 4;
         // AbsMean re-projection of the 8-bit grid weight to ternary (§A.2)
-        let s3 = dqt::quant::absmean_scale(w, 1.58);
-        let w3 = dqt::quant::absmean_quantize(w, 1.58, s3);
+        let s3 = dqt::quant::absmean_scale(&w, 1.58);
+        let w3 = dqt::quant::absmean_quantize(&w, 1.58, s3);
         let trits: Vec<f32> = w3.iter().map(|&v| (v * s3).round()).collect();
         let packed = ternary::pack(&trits).map_err(|e| anyhow::anyhow!(e))?;
         packed_bytes += packed.len() * 4;
@@ -94,14 +94,30 @@ fn main() -> Result<()> {
 
     // --- full checkpoint with packing for the record ---
     std::fs::create_dir_all(&out)?;
-    let bytes = checkpoint::save(
-        &out.join("model-int8.dqt"),
-        &m,
-        &state,
-        checkpoint::Codec::F32,
-        false,
-    )?;
-    println!("\nwrote {} ({:.2} MB)", out.join("model-int8.dqt").display(), bytes as f64 / 1e6);
+    let ckpt_path = out.join("model-int8.dqt");
+    let bytes = checkpoint::save(&ckpt_path, &m, &state, checkpoint::Codec::F32, false)?;
+    println!("\nwrote {} ({:.2} MB)", ckpt_path.display(), bytes as f64 / 1e6);
+
+    // --- packed-grid host state: the wire bytes stay the resident bytes ---
+    let packed_state = checkpoint::load_packed(&ckpt_path, &m)?;
+    let dense_grid: usize = m
+        .params
+        .iter()
+        .filter(|p| p.is_grid())
+        .map(|p| p.numel() * 4)
+        .sum();
+    println!(
+        "packed-grid state: grid params resident at {} bytes (dense f32 would be {}; {:.1}x), \
+         process RSS {:.1} MB",
+        packed_state.grid_param_bytes(&m),
+        dense_grid,
+        dense_grid as f64 / packed_state.grid_param_bytes(&m).max(1) as f64,
+        dqt::memory::process_rss_bytes().unwrap_or(0) as f64 / 1e6
+    );
+    // packed state evaluates identically through the PJRT boundary decode
+    let ppl_packed = eval::perplexity(&vrt, &packed_state, &pipeline, false)?;
+    println!("perplexity from packed-grid state: {ppl_packed:.3} (int8 path {:.3})", r8.perplexity);
+
     println!("ternary inference stays close to int8 — deployment flexibility (§A.2).");
     Ok(())
 }

@@ -122,6 +122,12 @@ fn main() -> Result<()> {
     let reload = checkpoint::load(&p_int8, &m)?;
     assert_eq!(reload.params.len(), state.params.len());
     println!("reload OK — lossless on the grid");
+    let packed = checkpoint::load_packed(&p_int8, &m)?;
+    println!(
+        "packed-grid reload: grid params resident at {} bytes (dense {})",
+        packed.grid_param_bytes(&m),
+        reload.grid_param_bytes(&m)
+    );
     println!("\nE2E complete.");
     Ok(())
 }

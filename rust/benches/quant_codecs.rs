@@ -1,9 +1,11 @@
 //! Numeric-format codec throughput: ternary/INTn packing, fp8/bf16 casts,
-//! host stochastic rounding. §Perf target: ternary pack ≥ 1 GB/s (f32 in).
+//! host stochastic rounding, and the registry-level `PackedTensor` round
+//! trip. §Perf target: ternary pack ≥ 1 GB/s (f32 in); the LUT unpack and
+//! streaming INTn pack are tracked against `BENCH_quant_codecs.json`.
 //!
 //! Runs on the in-tree bench harness (offline build — no criterion).
 
-use dqt::quant::{bf16, fp8, intn, sr, ternary};
+use dqt::quant::{bf16, fp8, intn, sr, ternary, Format, PackedTensor};
 use dqt::util::bench::Bench;
 
 const N: usize = 1 << 20; // 1M weights = 4 MB f32
@@ -23,6 +25,8 @@ fn main() {
     b.bench_bytes("int4_pack_1M", bytes, || intn::pack(&i4, 4).unwrap());
     let packed8 = intn::pack(&ints, 8).unwrap();
     b.bench_bytes("int8_unpack_1M", bytes, || intn::unpack(&packed8, N, 8));
+    let packed4 = intn::pack(&i4, 4).unwrap();
+    b.bench_bytes("int4_unpack_1M", bytes, || intn::unpack(&packed4, N, 4));
     b.bench_bytes("bf16_cast_1M", bytes, || {
         let mut v = floats.clone();
         bf16::cast_slice(&mut v);
@@ -34,4 +38,13 @@ fn main() {
         v
     });
     b.bench_bytes("host_sr_1M", bytes, || sr::sr_slice(&floats, 7, 8.0, 100.0));
+
+    // registry-level path: what checkpoint::save / State::pack_grids run
+    b.bench_bytes("packed_tensor_ternary_pack_1M", bytes, || {
+        PackedTensor::pack(&trits, vec![N], Format::Ternary2bit, Some(1.0)).unwrap()
+    });
+    let pt = PackedTensor::pack(&trits, vec![N], Format::Ternary2bit, Some(1.0)).unwrap();
+    b.bench_bytes("packed_tensor_ternary_unpack_1M", bytes, || {
+        pt.unpack().unwrap()
+    });
 }

@@ -1,6 +1,8 @@
 //! Runtime-layer overhead: how much of a step is host work (literal
 //! creation, state marshalling) vs XLA execution. §Perf target: non-execute
-//! overhead < 5% of step time for t-size models.
+//! overhead < 5% of step time for t-size models. Also measures the
+//! packed-grid boundary decode (`Param::values` on a packed state) so the
+//! cost of holding grid params at 2 bits/weight stays visible.
 //!
 //! Requires `make artifacts` (core suite) for the marshalling benches.
 
@@ -33,11 +35,29 @@ fn main() {
     let total_bytes = ((m.total_param_values() + m.total_opt_values()) * 4) as u64;
     b.bench_bytes("state_to_literals", total_bytes, || {
         let mut lits = Vec::with_capacity(m.n_state());
-        for (meta, vals) in m.params.iter().zip(&state.params) {
-            lits.push(client::lit_f32(vals, &meta.shape).unwrap());
+        for (meta, p) in m.params.iter().zip(&state.params) {
+            lits.push(client::lit_f32(&p.values(), &meta.shape).unwrap());
         }
         for (meta, vals) in m.opt_state.iter().zip(&state.opt) {
             lits.push(client::lit_f32(vals, &meta.shape).unwrap());
+        }
+        lits
+    });
+
+    // packed-grid mode: same marshalling, but grid params decode from
+    // their 2-bit resident form at the boundary
+    let mut packed_state = state.clone();
+    packed_state.pack_grids(&m).expect("pack grids");
+    eprintln!(
+        "param host bytes: dense {} → packed {}",
+        state.host_param_bytes(),
+        packed_state.host_param_bytes()
+    );
+    let param_bytes = (m.total_param_values() * 4) as u64;
+    b.bench_bytes("packed_state_to_literals", param_bytes, || {
+        let mut lits = Vec::with_capacity(m.params.len());
+        for (meta, p) in m.params.iter().zip(&packed_state.params) {
+            lits.push(client::lit_f32(&p.values(), &meta.shape).unwrap());
         }
         lits
     });

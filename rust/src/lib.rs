@@ -6,6 +6,12 @@
 //! * **L3 (this crate)** — training coordinator: experiment orchestration,
 //!   data pipeline (synthetic corpus → BPE → batches), LR scheduling,
 //!   metrics, format-true checkpointing, memory model, eval harness.
+//!   Storage formats are unified behind the codec registry in
+//!   [`quant::codec`]: [`quant::codec::Format`] + [`quant::codec::Codec`]
+//!   own all per-format dispatch (wire tags, packed sizes, encode/decode),
+//!   and [`quant::codec::PackedTensor`] is the canonical packed tensor that
+//!   checkpoints serialize and `runtime::State`'s packed-grid mode keeps
+//!   resident (`.dqt` wire format: `docs/CHECKPOINT_FORMAT.md`).
 //! * **L2 (python/compile, build-time only)** — LLaMA-structured model +
 //!   optimizers in JAX, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the paper's hot

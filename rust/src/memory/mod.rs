@@ -4,7 +4,9 @@
 //! (model, mode, precision env, optimizer):
 //!
 //!   weights   — BitNet keeps an FP32/BF16/FP8 *master* of every quantized
-//!               matrix; DQT stores only the INTn grid (+ f32 scales).
+//!               matrix; DQT stores only the INTn grid (+ f32 scales), at
+//!               the per-format cost published by the codec registry
+//!               (`quant::codec::Format::bits_per_weight`).
 //!   gradients — one value per trainable parameter in the env's precision.
 //!   optimizer — AdamW: 2 states/param; Adafactor: row+col vectors for
 //!               matrices (the §4.3 memory-efficient option).
@@ -89,14 +91,16 @@ pub fn estimate_cfg(
         // BitNet: master copy of quantized set in env precision + the
         // transient ternary forward copy (absmean re-quantization buffer)
         Mode::Bitnet158 => p_dense * env_b + p_quant * (env_b + 2.0 / 8.0),
-        // DQT family: grid weights at their true bit width, no master
+        // DQT family: grid weights at their true bit width, no master —
+        // the per-format cost comes from the codec registry
         Mode::Dqt | Mode::DqtAbsmax | Mode::DqtTernaryInf => {
             let bits = if matches!(spec.mode, Mode::DqtTernaryInf) {
                 8.0
             } else {
                 spec.bits
             };
-            p_dense * env_b + p_quant * crate::quant::bits_per_weight(bits) / 8.0
+            let bpw = crate::quant::Format::from_bits(bits).bits_per_weight();
+            p_dense * env_b + p_quant * bpw / 8.0
         }
     };
 

@@ -1,0 +1,549 @@
+//! Unified codec registry: one place that knows every storage format.
+//!
+//! Before this module existed, the per-format knowledge (wire tag, packed
+//! size, encode/decode loops, the `bits == 1.58` ternary sentinel) was
+//! scattered across five free-function modules plus a private enum in
+//! `train::checkpoint` with triplicated match-dispatch. Everything now
+//! routes through two types:
+//!
+//! * [`Format`] — the closed set of storage formats (`F32`, `Bf16`,
+//!   `Fp8E4m3`, `Ternary2bit`, `IntN`). [`Format::from_bits`] is the *only*
+//!   place that interprets the paper's fractional bit-width sentinel
+//!   (`1.58` ⇒ ternary); [`Format::from_tag`] is the only wire-tag parser.
+//! * [`Codec`] — the behavior behind a format: `encode`/`decode` between
+//!   f32 values and packed bytes, `packed_bytes` for the memory model, and
+//!   the wire `tag`. One implementation per format, reachable via
+//!   [`Format::codec`].
+//!
+//! [`PackedTensor`] bundles `format + shape + scale + bytes` into the
+//! canonical host representation of a grid weight: `train::checkpoint`
+//! writes its payload, `runtime::State`'s packed-grid mode keeps it
+//! resident (realizing the 16× ternary reduction of paper §1 in host RSS,
+//! not just on disk), and the memory model reads sizes from it.
+//!
+//! Grid codecs (`Ternary2bit`, `IntN`) store integer grid indices
+//! `k = w·s` and need the AbsMean scale `s` to map back to f32 values;
+//! dense codecs (`F32`, `Bf16`, `Fp8E4m3`) are scale-free.
+
+use super::{bf16, fp8, intn, ternary};
+
+/// The paper's ternary bit-width sentinel (log2(3) ≈ 1.58 information
+/// bound; stored at a practical 2 bits/weight).
+pub const TERNARY_BITS: f64 = 1.58;
+
+/// A storage format. `Copy`, order-free, and the key of the codec registry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// Raw little-endian f32 (4 bytes/value).
+    F32,
+    /// BF16 round-to-nearest-even (2 bytes/value).
+    Bf16,
+    /// OCP FP8 E4M3, saturating (1 byte/value).
+    Fp8E4m3,
+    /// 2-bit packed ternary grid {-1, 0, +1} (16 values per u32 word).
+    Ternary2bit,
+    /// Bit-packed signed INTn grid, n ∈ 2..=8.
+    IntN(u32),
+}
+
+impl Format {
+    /// The single constructor that interprets a grid bit-width. `1.58`
+    /// (within 1e-9) selects the ternary format; anything else truncates
+    /// to an integer width (unvalidated, like the seed code — widths
+    /// outside `2..=8` fail loudly at [`Format::codec`] lookup, while
+    /// [`Format::grid_range`] and [`Format::bits_per_weight`] stay
+    /// arithmetic for any width).
+    ///
+    /// Every former call site of the `(bits - 1.58).abs() < 1e-9` sentinel
+    /// (`quant::qrange`, `checkpoint::Codec::for_entry`,
+    /// `quant::bits_per_weight`) now routes through here.
+    pub fn from_bits(bits: f64) -> Format {
+        if (bits - TERNARY_BITS).abs() < 1e-9 {
+            Format::Ternary2bit
+        } else {
+            Format::IntN(bits as u32)
+        }
+    }
+
+    /// Format for one manifest entry: grid params follow the variant's
+    /// bit width, everything else uses the caller's dense format.
+    pub fn for_entry(is_grid: bool, bits: f64, dense: Format) -> Format {
+        if is_grid {
+            Format::from_bits(bits)
+        } else {
+            dense
+        }
+    }
+
+    /// Grid formats store integer indices and need an AbsMean scale.
+    pub fn is_grid_format(self) -> bool {
+        matches!(self, Format::Ternary2bit | Format::IntN(_))
+    }
+
+    /// Integer grid range `[q_min, q_max]` (paper Eq. Qn/Qp, §3.2).
+    /// Continuous formats have no grid and return the full real line.
+    pub fn grid_range(self) -> (f64, f64) {
+        match self {
+            Format::Ternary2bit => (-1.0, 1.0),
+            Format::IntN(n) => {
+                let half = 2f64.powi(n as i32 - 1);
+                (-half, half - 1.0)
+            }
+            _ => (f64::NEG_INFINITY, f64::INFINITY),
+        }
+    }
+
+    /// The codec behind this format (the registry lookup). Panics for
+    /// INTn widths outside `2..=8` — the same loud failure the packers
+    /// themselves assert.
+    pub fn codec(self) -> &'static dyn Codec {
+        match self {
+            Format::F32 => &F32_CODEC,
+            Format::Bf16 => &BF16_CODEC,
+            Format::Fp8E4m3 => &FP8_E4M3_CODEC,
+            Format::Ternary2bit => &TERNARY_CODEC,
+            Format::IntN(b) => {
+                assert!((2..=8).contains(&b), "unsupported INT{b} codec");
+                &INTN_CODECS[(b - 2) as usize]
+            }
+        }
+    }
+
+    /// Wire tag (the `codec` field of a `.dqt` header entry).
+    pub fn tag(self) -> String {
+        self.codec().tag()
+    }
+
+    /// Inverse of [`Format::tag`] — the only wire-tag parser.
+    pub fn from_tag(s: &str) -> Result<Format, String> {
+        Ok(match s {
+            "f32" => Format::F32,
+            "bf16" => Format::Bf16,
+            "fp8_e4m3" => Format::Fp8E4m3,
+            "ternary_2bit" => Format::Ternary2bit,
+            _ => {
+                let b: u32 = s
+                    .strip_prefix("int")
+                    .and_then(|x| x.parse().ok())
+                    .filter(|b| (2..=8).contains(b))
+                    .ok_or_else(|| format!("unknown codec {s:?}"))?;
+                Format::IntN(b)
+            }
+        })
+    }
+
+    /// Packed size in bytes of `n` values.
+    pub fn packed_bytes(self, n: usize) -> usize {
+        self.codec().packed_bytes(n)
+    }
+
+    /// Storage cost in bits per weight (the memory model's unit). For
+    /// INTn this is plain arithmetic (`n`), valid even for widths the
+    /// packers don't support — the seed memory model behaved the same.
+    pub fn bits_per_weight(self) -> f64 {
+        match self {
+            Format::IntN(b) => b as f64,
+            _ => self.codec().bits_per_weight(),
+        }
+    }
+
+    /// Encode f32 values to packed bytes (`scale` required for grid
+    /// formats).
+    pub fn encode(self, vals: &[f32], scale: Option<f32>) -> Result<Vec<u8>, String> {
+        self.codec().encode(vals, scale)
+    }
+
+    /// Decode `n` values from packed bytes (`scale` required for grid
+    /// formats). Rejects byte slices whose length does not match
+    /// `packed_bytes(n)`.
+    pub fn decode(self, bytes: &[u8], n: usize, scale: Option<f32>) -> Result<Vec<f32>, String> {
+        self.codec().decode(bytes, n, scale)
+    }
+}
+
+/// Behavior of one storage format. Implementations are registered as
+/// statics and reached through [`Format::codec`]; consumers should not
+/// dispatch on [`Format`] variants themselves.
+pub trait Codec: Sync {
+    /// Wire tag written into checkpoint headers.
+    fn tag(&self) -> String;
+    /// Storage cost in bits per weight.
+    fn bits_per_weight(&self) -> f64;
+    /// Packed size in bytes of `n` values.
+    fn packed_bytes(&self, n: usize) -> usize;
+    /// f32 values → packed bytes.
+    fn encode(&self, vals: &[f32], scale: Option<f32>) -> Result<Vec<u8>, String>;
+    /// packed bytes → f32 values.
+    fn decode(&self, bytes: &[u8], n: usize, scale: Option<f32>) -> Result<Vec<f32>, String>;
+}
+
+fn check_len(tag: &str, got: usize, want: usize) -> Result<(), String> {
+    if got != want {
+        return Err(format!("{tag} payload is {got} bytes, expected {want}"));
+    }
+    Ok(())
+}
+
+fn grid_scale(tag: &str, scale: Option<f32>) -> Result<f32, String> {
+    scale.ok_or_else(|| format!("{tag} codec needs scale"))
+}
+
+struct F32Codec;
+
+impl Codec for F32Codec {
+    fn tag(&self) -> String {
+        "f32".into()
+    }
+    fn bits_per_weight(&self) -> f64 {
+        32.0
+    }
+    fn packed_bytes(&self, n: usize) -> usize {
+        n * 4
+    }
+    fn encode(&self, vals: &[f32], _scale: Option<f32>) -> Result<Vec<u8>, String> {
+        Ok(vals.iter().flat_map(|v| v.to_le_bytes()).collect())
+    }
+    fn decode(&self, bytes: &[u8], n: usize, _scale: Option<f32>) -> Result<Vec<f32>, String> {
+        check_len("f32", bytes.len(), self.packed_bytes(n))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+struct Bf16Codec;
+
+impl Codec for Bf16Codec {
+    fn tag(&self) -> String {
+        "bf16".into()
+    }
+    fn bits_per_weight(&self) -> f64 {
+        16.0
+    }
+    fn packed_bytes(&self, n: usize) -> usize {
+        n * 2
+    }
+    fn encode(&self, vals: &[f32], _scale: Option<f32>) -> Result<Vec<u8>, String> {
+        Ok(vals
+            .iter()
+            .flat_map(|&v| bf16::encode(v).to_le_bytes())
+            .collect())
+    }
+    fn decode(&self, bytes: &[u8], n: usize, _scale: Option<f32>) -> Result<Vec<f32>, String> {
+        check_len("bf16", bytes.len(), self.packed_bytes(n))?;
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| bf16::decode(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+struct Fp8E4m3Codec;
+
+impl Codec for Fp8E4m3Codec {
+    fn tag(&self) -> String {
+        "fp8_e4m3".into()
+    }
+    fn bits_per_weight(&self) -> f64 {
+        8.0
+    }
+    fn packed_bytes(&self, n: usize) -> usize {
+        n
+    }
+    fn encode(&self, vals: &[f32], _scale: Option<f32>) -> Result<Vec<u8>, String> {
+        Ok(vals
+            .iter()
+            .map(|&v| fp8::encode(v, fp8::Format::E4M3))
+            .collect())
+    }
+    fn decode(&self, bytes: &[u8], n: usize, _scale: Option<f32>) -> Result<Vec<f32>, String> {
+        check_len("fp8_e4m3", bytes.len(), self.packed_bytes(n))?;
+        Ok(bytes
+            .iter()
+            .map(|&b| fp8::decode(b, fp8::Format::E4M3))
+            .collect())
+    }
+}
+
+struct TernaryCodec;
+
+impl Codec for TernaryCodec {
+    fn tag(&self) -> String {
+        "ternary_2bit".into()
+    }
+    fn bits_per_weight(&self) -> f64 {
+        2.0 // practical 2-bit packing (1.58 is the information bound)
+    }
+    fn packed_bytes(&self, n: usize) -> usize {
+        ternary::packed_bytes(n)
+    }
+    fn encode(&self, vals: &[f32], scale: Option<f32>) -> Result<Vec<u8>, String> {
+        let s = grid_scale("ternary", scale)?;
+        let k: Vec<f32> = vals.iter().map(|&v| (v * s).round()).collect();
+        Ok(ternary::pack(&k)?
+            .iter()
+            .flat_map(|w| w.to_le_bytes())
+            .collect())
+    }
+    fn decode(&self, bytes: &[u8], n: usize, scale: Option<f32>) -> Result<Vec<f32>, String> {
+        let s = grid_scale("ternary", scale)?;
+        check_len("ternary_2bit", bytes.len(), self.packed_bytes(n))?;
+        let words: Vec<u32> = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(ternary::unpack(&words, n).iter().map(|&k| k / s).collect())
+    }
+}
+
+struct IntNCodec {
+    bits: u32,
+}
+
+impl Codec for IntNCodec {
+    fn tag(&self) -> String {
+        format!("int{}", self.bits)
+    }
+    fn bits_per_weight(&self) -> f64 {
+        self.bits as f64
+    }
+    fn packed_bytes(&self, n: usize) -> usize {
+        intn::packed_bytes(n, self.bits)
+    }
+    fn encode(&self, vals: &[f32], scale: Option<f32>) -> Result<Vec<u8>, String> {
+        let s = grid_scale("intn", scale)?;
+        intn::pack_grid(vals, s, self.bits)
+    }
+    fn decode(&self, bytes: &[u8], n: usize, scale: Option<f32>) -> Result<Vec<f32>, String> {
+        let s = grid_scale("intn", scale)?;
+        check_len("intn", bytes.len(), self.packed_bytes(n))?;
+        Ok(intn::unpack_grid(bytes, n, s, self.bits))
+    }
+}
+
+static F32_CODEC: F32Codec = F32Codec;
+static BF16_CODEC: Bf16Codec = Bf16Codec;
+static FP8_E4M3_CODEC: Fp8E4m3Codec = Fp8E4m3Codec;
+static TERNARY_CODEC: TernaryCodec = TernaryCodec;
+static INTN_CODECS: [IntNCodec; 7] = [
+    IntNCodec { bits: 2 },
+    IntNCodec { bits: 3 },
+    IntNCodec { bits: 4 },
+    IntNCodec { bits: 5 },
+    IntNCodec { bits: 6 },
+    IntNCodec { bits: 7 },
+    IntNCodec { bits: 8 },
+];
+
+/// A tensor held in its packed storage format — the canonical host
+/// representation of a grid weight (and of any checkpoint payload entry).
+///
+/// Invariant: `bytes.len() == format.packed_bytes(numel())`, established
+/// by [`PackedTensor::pack`] / [`PackedTensor::from_bytes`] and relied on
+/// by [`PackedTensor::unpack`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    pub format: Format,
+    pub shape: Vec<usize>,
+    /// AbsMean scale for grid formats; `None` for dense formats.
+    pub scale: Option<f32>,
+    pub bytes: Vec<u8>,
+}
+
+impl PackedTensor {
+    /// Pack f32 values into `format`. `vals.len()` must match the shape's
+    /// element count and grid formats require a scale.
+    pub fn pack(
+        vals: &[f32],
+        shape: Vec<usize>,
+        format: Format,
+        scale: Option<f32>,
+    ) -> Result<PackedTensor, String> {
+        let numel = shape.iter().product::<usize>().max(1);
+        if vals.len() != numel {
+            return Err(format!(
+                "shape {shape:?} wants {numel} values, got {}",
+                vals.len()
+            ));
+        }
+        let bytes = format.encode(vals, scale)?;
+        Ok(PackedTensor {
+            format,
+            shape,
+            scale,
+            bytes,
+        })
+    }
+
+    /// Adopt already-packed bytes (e.g. a checkpoint payload slice),
+    /// validating the size invariant.
+    pub fn from_bytes(
+        bytes: Vec<u8>,
+        shape: Vec<usize>,
+        format: Format,
+        scale: Option<f32>,
+    ) -> Result<PackedTensor, String> {
+        let numel = shape.iter().product::<usize>().max(1);
+        check_len(&format.tag(), bytes.len(), format.packed_bytes(numel))?;
+        if format.is_grid_format() && scale.is_none() {
+            return Err(format!("{} codec needs scale", format.tag()));
+        }
+        Ok(PackedTensor {
+            format,
+            shape,
+            scale,
+            bytes,
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// Resident size in bytes — what this tensor actually costs the host.
+    pub fn packed_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Decode back to f32 values.
+    pub fn unpack(&self) -> Result<Vec<f32>, String> {
+        self.format.decode(&self.bytes, self.numel(), self.scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_bits_is_the_only_sentinel() {
+        assert_eq!(Format::from_bits(1.58), Format::Ternary2bit);
+        assert_eq!(Format::from_bits(1.58 + 1e-12), Format::Ternary2bit);
+        assert_eq!(Format::from_bits(8.0), Format::IntN(8));
+        assert_eq!(Format::from_bits(3.0), Format::IntN(3));
+        assert_eq!(Format::from_bits(2.0), Format::IntN(2));
+    }
+
+    #[test]
+    fn for_entry_routing() {
+        assert_eq!(
+            Format::for_entry(true, 1.58, Format::F32),
+            Format::Ternary2bit
+        );
+        assert_eq!(Format::for_entry(true, 4.0, Format::F32), Format::IntN(4));
+        assert_eq!(Format::for_entry(false, 1.58, Format::Bf16), Format::Bf16);
+    }
+
+    #[test]
+    fn tags_roundtrip() {
+        let all = [
+            Format::F32,
+            Format::Bf16,
+            Format::Fp8E4m3,
+            Format::Ternary2bit,
+            Format::IntN(2),
+            Format::IntN(5),
+            Format::IntN(8),
+        ];
+        for f in all {
+            assert_eq!(Format::from_tag(&f.tag()).unwrap(), f);
+        }
+        assert!(Format::from_tag("int9").is_err());
+        assert!(Format::from_tag("int1").is_err());
+        assert!(Format::from_tag("nope").is_err());
+    }
+
+    #[test]
+    fn packed_sizes_match_seed_codec() {
+        assert_eq!(Format::F32.packed_bytes(100), 400);
+        assert_eq!(Format::Bf16.packed_bytes(100), 200);
+        assert_eq!(Format::Fp8E4m3.packed_bytes(100), 100);
+        assert_eq!(Format::Ternary2bit.packed_bytes(100), 28);
+        assert_eq!(Format::IntN(3).packed_bytes(100), 38);
+        assert_eq!(Format::IntN(8).packed_bytes(100), 100);
+    }
+
+    #[test]
+    fn bits_per_weight_from_registry() {
+        assert_eq!(Format::F32.bits_per_weight(), 32.0);
+        assert_eq!(Format::Bf16.bits_per_weight(), 16.0);
+        assert_eq!(Format::Fp8E4m3.bits_per_weight(), 8.0);
+        assert_eq!(Format::Ternary2bit.bits_per_weight(), 2.0);
+        assert_eq!(Format::IntN(3).bits_per_weight(), 3.0);
+    }
+
+    #[test]
+    fn grid_range_matches_paper() {
+        assert_eq!(Format::Ternary2bit.grid_range(), (-1.0, 1.0));
+        assert_eq!(Format::IntN(8).grid_range(), (-128.0, 127.0));
+        assert_eq!(Format::IntN(2).grid_range(), (-2.0, 1.0));
+    }
+
+    #[test]
+    fn out_of_range_widths_stay_arithmetic() {
+        // seed semantics: range/size math works for any width; only the
+        // packer lookup rejects unsupported widths
+        assert_eq!(Format::from_bits(16.0), Format::IntN(16));
+        assert_eq!(Format::IntN(16).grid_range(), (-32768.0, 32767.0));
+        assert_eq!(Format::IntN(16).bits_per_weight(), 16.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported INT16")]
+    fn unsupported_width_codec_lookup_panics() {
+        let _ = Format::IntN(16).codec();
+    }
+
+    #[test]
+    fn packed_tensor_roundtrip_all_formats() {
+        let s = 25.0f32;
+        let grid: Vec<f32> = (0..37).map(|i| ((i % 3) as f32 - 1.0) / s).collect();
+        let dense: Vec<f32> = (0..37).map(|i| (i as f32 - 18.0) * 0.25).collect();
+        for (fmt, vals, scale) in [
+            (Format::F32, &dense, None),
+            (Format::Ternary2bit, &grid, Some(s)),
+            (Format::IntN(4), &grid, Some(s)),
+        ] {
+            let pt = PackedTensor::pack(vals, vec![37], fmt, scale).unwrap();
+            assert_eq!(pt.packed_bytes(), fmt.packed_bytes(37));
+            let back = pt.unpack().unwrap();
+            for (a, b) in vals.iter().zip(back.iter()) {
+                assert!((a - b).abs() < 1e-6, "{fmt:?}");
+            }
+        }
+        // lossy dense formats: idempotent rather than exact
+        for fmt in [Format::Bf16, Format::Fp8E4m3] {
+            let pt = PackedTensor::pack(&dense, vec![37], fmt, None).unwrap();
+            let once = pt.unpack().unwrap();
+            let pt2 = PackedTensor::pack(&once, vec![37], fmt, None).unwrap();
+            assert_eq!(pt.unpack().unwrap(), pt2.unpack().unwrap());
+        }
+    }
+
+    #[test]
+    fn packed_tensor_rejects_mismatches() {
+        assert!(PackedTensor::pack(&[1.0; 5], vec![4], Format::F32, None).is_err());
+        assert!(PackedTensor::pack(&[0.0; 4], vec![4], Format::Ternary2bit, None).is_err());
+        assert!(PackedTensor::from_bytes(vec![0u8; 3], vec![4], Format::F32, None).is_err());
+        assert!(
+            PackedTensor::from_bytes(vec![0u8; 4], vec![4], Format::Ternary2bit, None).is_err()
+        );
+    }
+
+    #[test]
+    fn scalar_shape_numel_is_one() {
+        let pt = PackedTensor::pack(&[1.5], vec![], Format::F32, None).unwrap();
+        assert_eq!(pt.numel(), 1);
+        assert_eq!(pt.unpack().unwrap(), vec![1.5]);
+    }
+
+    #[test]
+    fn decode_validates_length() {
+        assert!(Format::F32.decode(&[0u8; 7], 2, None).is_err());
+        assert!(Format::Ternary2bit
+            .decode(&[0u8; 3], 4, Some(1.0))
+            .is_err());
+        assert!(Format::IntN(4).decode(&[0u8; 1], 4, Some(1.0)).is_err());
+    }
+}

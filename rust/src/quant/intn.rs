@@ -5,25 +5,37 @@
 //! stream (crossing byte boundaries, no padding except the final byte), so
 //! an INT3 matrix really costs 3 bits/weight — matching the paper's memory
 //! arithmetic in §1 (1B params × INT8 = 1 GB, ternary = 0.25 GB packed).
+//!
+//! Both directions stream through a word-sized bit accumulator instead of
+//! testing individual bits, so packing an INT4 matrix moves 8 codes per
+//! byte-flush rather than running a 4-iteration inner loop per code.
 
 /// Pack signed integers into `bits`-wide two's-complement codes.
 pub fn pack(values: &[i32], bits: u32) -> Result<Vec<u8>, String> {
     assert!((2..=8).contains(&bits), "bits must be in 2..=8");
     let lo = -(1i32 << (bits - 1));
     let hi = (1i32 << (bits - 1)) - 1;
+    let mask = (1i32 << bits) - 1;
     let total_bits = values.len() * bits as usize;
-    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut out = Vec::with_capacity(total_bits.div_ceil(8));
+    // bit accumulator: codes enter at `nbits`, full bytes drain from the
+    // bottom — identical layout to the historical per-bit loop
+    let mut acc = 0u32;
+    let mut nbits = 0u32;
     for (i, &v) in values.iter().enumerate() {
         if v < lo || v > hi {
             return Err(format!("value {v} at {i} out of INT{bits} range [{lo},{hi}]"));
         }
-        let code = (v & ((1i32 << bits) - 1)) as u32;
-        let bit0 = i * bits as usize;
-        for b in 0..bits as usize {
-            if code & (1 << b) != 0 {
-                out[(bit0 + b) / 8] |= 1 << ((bit0 + b) % 8);
-            }
+        acc |= ((v & mask) as u32) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nbits -= 8;
         }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xFF) as u8);
     }
     Ok(out)
 }
@@ -31,24 +43,28 @@ pub fn pack(values: &[i32], bits: u32) -> Result<Vec<u8>, String> {
 /// Unpack `n` signed integers from `bits`-wide codes.
 pub fn unpack(packed: &[u8], n: usize, bits: u32) -> Vec<i32> {
     assert!((2..=8).contains(&bits));
-    (0..n)
-        .map(|i| {
-            let bit0 = i * bits as usize;
-            let mut code = 0u32;
-            for b in 0..bits as usize {
-                if packed[(bit0 + b) / 8] & (1 << ((bit0 + b) % 8)) != 0 {
-                    code |= 1 << b;
-                }
-            }
-            // sign-extend
-            let sign = 1u32 << (bits - 1);
-            if code & sign != 0 {
-                (code as i32) - (1i32 << bits)
-            } else {
-                code as i32
-            }
-        })
-        .collect()
+    let mask = (1u32 << bits) - 1;
+    let sign = 1u32 << (bits - 1);
+    let wrap = 1i32 << bits;
+    let mut out = Vec::with_capacity(n);
+    let mut acc = 0u32;
+    let mut nbits = 0u32;
+    let mut next = packed.iter();
+    for _ in 0..n {
+        while nbits < bits {
+            acc |= (*next.next().expect("packed stream too short") as u32) << nbits;
+            nbits += 8;
+        }
+        let code = acc & mask;
+        acc >>= bits;
+        nbits -= bits;
+        out.push(if code & sign != 0 {
+            code as i32 - wrap
+        } else {
+            code as i32
+        });
+    }
+    out
 }
 
 /// Packed size in bytes of `n` INTn values.
@@ -81,6 +97,38 @@ mod tests {
             let p = pack(&vals, bits).unwrap();
             assert_eq!(p.len(), packed_bytes(vals.len(), bits));
             assert_eq!(unpack(&p, vals.len(), bits), vals, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn streaming_pack_matches_per_bit_reference() {
+        // reference: the seed's bit-at-a-time packer
+        fn pack_ref(values: &[i32], bits: u32) -> Vec<u8> {
+            let total_bits = values.len() * bits as usize;
+            let mut out = vec![0u8; total_bits.div_ceil(8)];
+            for (i, &v) in values.iter().enumerate() {
+                let code = (v & ((1i32 << bits) - 1)) as u32;
+                let bit0 = i * bits as usize;
+                for b in 0..bits as usize {
+                    if code & (1 << b) != 0 {
+                        out[(bit0 + b) / 8] |= 1 << ((bit0 + b) % 8);
+                    }
+                }
+            }
+            out
+        }
+        for bits in 2..=8u32 {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            for n in [1usize, 2, 3, 7, 8, 9, 63, 64, 65, 257] {
+                let vals: Vec<i32> =
+                    (0..n).map(|i| lo + (i as i32 * 7 % (hi - lo + 1))).collect();
+                assert_eq!(
+                    pack(&vals, bits).unwrap(),
+                    pack_ref(&vals, bits),
+                    "bits={bits} n={n}"
+                );
+            }
         }
     }
 

@@ -4,31 +4,40 @@
 //! as the paper does on GPUs (§A.1: "low-precision simulation"). This module
 //! provides the *true* packed representations those values stand for, used
 //! by checkpointing (`train::checkpoint`), deployment (ternary inference
-//! from a 2-bit-packed file) and the memory model (Table 3 / Fig. 3):
+//! from a 2-bit-packed file), the packed-grid host state
+//! (`runtime::State`) and the memory model (Table 3 / Fig. 3):
 //!
-//! * [`ternary`] — 2-bit packing of {-1, 0, +1} weights (16 weights / u32)
-//! * [`intn`]    — INTn grids (n = 2..=8), nibble/byte packing
+//! * [`codec`]   — the unified codec registry: [`codec::Format`] names every
+//!                 storage format, [`codec::Codec`] implements it, and
+//!                 [`codec::PackedTensor`] is the canonical packed tensor
+//!                 value type shared by checkpointing, the runtime state and
+//!                 the memory model. All format dispatch lives here — the
+//!                 modules below are the per-format kernels it calls into.
+//! * [`ternary`] — 2-bit packing of {-1, 0, +1} weights (16 weights / u32),
+//!                 LUT-accelerated unpack
+//! * [`intn`]    — INTn grids (n = 2..=8), streaming bit-packing
 //! * [`fp8`]     — OCP FP8 E4M3/E5M2 encode/decode, bit-exact with
 //!                 `python/compile/lowp.py`
 //! * [`bf16`]    — BF16 round-to-nearest-even storage
 //! * [`sr`]      — stochastic rounding on the host (checkpoint conversion +
 //!                 the counter-hash PRNG shared with the Pallas kernel)
+//!
+//! The paper's `bits == 1.58` ternary sentinel is interpreted in exactly
+//! one place: [`codec::Format::from_bits`].
 
 pub mod bf16;
+pub mod codec;
 pub mod fp8;
 pub mod intn;
 pub mod sr;
 pub mod ternary;
 
+pub use codec::{Codec, Format, PackedTensor};
+
 /// Integer grid range `[q_min, q_max]` for an n-bit format; `bits == 1.58`
 /// selects the paper's ternary format {-1, 0, 1} (Eq. Qn/Qp in §3.2).
 pub fn qrange(bits: f64) -> (f64, f64) {
-    if (bits - 1.58).abs() < 1e-9 {
-        (-1.0, 1.0)
-    } else {
-        let n = bits as i32;
-        (-(2f64.powi(n - 1)), 2f64.powi(n - 1) - 1.0)
-    }
+    Format::from_bits(bits).grid_range()
 }
 
 /// AbsMean scale `s = Qp / mean(|w|)` (paper Eq. 3).
@@ -46,13 +55,10 @@ pub fn absmean_quantize(w: &[f32], bits: f64, s: f32) -> Vec<f32> {
         .collect()
 }
 
-/// Bytes per weight of each storage format, for the memory model.
+/// Bits per weight of each storage format, for the memory model (reads the
+/// codec registry; `1.58` maps to the practical 2-bit ternary packing).
 pub fn bits_per_weight(bits: f64) -> f64 {
-    if (bits - 1.58).abs() < 1e-9 {
-        2.0 // practical 2-bit ternary packing (1.58 is the information bound)
-    } else {
-        bits
-    }
+    Format::from_bits(bits).bits_per_weight()
 }
 
 #[cfg(test)]
@@ -66,6 +72,13 @@ mod tests {
         assert_eq!(qrange(3.0), (-4.0, 3.0));
         assert_eq!(qrange(4.0), (-8.0, 7.0));
         assert_eq!(qrange(2.0), (-2.0, 1.0));
+    }
+
+    #[test]
+    fn bits_per_weight_matches_registry() {
+        assert_eq!(bits_per_weight(1.58), 2.0);
+        assert_eq!(bits_per_weight(8.0), 8.0);
+        assert_eq!(bits_per_weight(3.0), 3.0);
     }
 
     #[test]

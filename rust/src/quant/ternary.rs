@@ -1,41 +1,90 @@
 //! 2-bit packing of ternary {-1, 0, +1} weights — the deployment format.
 //!
-//! Encoding per trit: `0b00` = 0, `0b01` = +1, `0b10` = -1 (`0b11` unused).
-//! 16 trits per `u32`, little-endian within the word. A 1B-parameter ternary
-//! model packs to 0.25 GB vs 4 GB in FP32 — the 16× reduction the paper's
-//! introduction cites.
+//! Encoding per trit: `0b00` = 0, `0b01` = +1, `0b10` = -1 (`0b11` unused,
+//! decoded as 0). 16 trits per `u32`, little-endian within the word. A
+//! 1B-parameter ternary model packs to 0.25 GB vs 4 GB in FP32 — the 16×
+//! reduction the paper's introduction cites.
+//!
+//! The hot paths are vectorized: `pack` accumulates a whole word before
+//! storing (no per-trit index arithmetic), and `unpack` expands four trits
+//! at a time through a 256-entry byte→`[f32; 4]` lookup table.
+
+use std::sync::OnceLock;
+
+/// Decoded value of each 2-bit code (`0b11` falls back to 0, matching the
+/// historical per-trit decoder).
+const CODE_VALUES: [f32; 4] = [0.0, 1.0, -1.0, 0.0];
+
+/// byte → the four trit values it encodes (LSB-first pairs).
+fn byte_lut() -> &'static [[f32; 4]; 256] {
+    static LUT: OnceLock<[[f32; 4]; 256]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [[0.0f32; 4]; 256];
+        for (b, row) in t.iter_mut().enumerate() {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = CODE_VALUES[(b >> (2 * j)) & 0b11];
+            }
+        }
+        t
+    })
+}
 
 /// Pack ternary values (given as f32 in {-1.0, 0.0, +1.0}) into 2-bit codes.
 ///
 /// Values are snapped with `round()`; anything outside {-1,0,1} after
 /// rounding is an error (the caller must pass grid values).
 pub fn pack(values: &[f32]) -> Result<Vec<u32>, String> {
-    let mut out = vec![0u32; values.len().div_ceil(16)];
+    let mut out = Vec::with_capacity(values.len().div_ceil(16));
+    let mut word = 0u32;
+    let mut shift = 0u32;
     for (i, &v) in values.iter().enumerate() {
-        let k = v.round() as i32;
-        let code: u32 = match k {
+        let code: u32 = match v.round() as i32 {
             0 => 0b00,
             1 => 0b01,
             -1 => 0b10,
             _ => return Err(format!("value {v} at {i} is not ternary")),
         };
-        out[i / 16] |= code << ((i % 16) * 2);
+        word |= code << shift;
+        shift += 2;
+        if shift == 32 {
+            out.push(word);
+            word = 0;
+            shift = 0;
+        }
+    }
+    if shift > 0 {
+        out.push(word);
     }
     Ok(out)
 }
 
-/// Unpack `n` ternary values from 2-bit codes.
+/// Unpack `n` ternary values from 2-bit codes (LUT-based, 4 trits/step).
+/// Panics if `packed` holds fewer than `n` trits (like the seed's
+/// index-out-of-bounds, but with a message).
 pub fn unpack(packed: &[u32], n: usize) -> Vec<f32> {
-    (0..n)
-        .map(|i| {
-            let code = (packed[i / 16] >> ((i % 16) * 2)) & 0b11;
-            match code {
-                0b01 => 1.0,
-                0b10 => -1.0,
-                _ => 0.0,
+    assert!(
+        packed.len() * 16 >= n,
+        "packed ternary stream holds {} trits, {n} requested",
+        packed.len() * 16
+    );
+    let lut = byte_lut();
+    let mut out = Vec::with_capacity(n);
+    for &word in packed {
+        if out.len() >= n {
+            break;
+        }
+        for b in word.to_le_bytes() {
+            let vals = &lut[b as usize];
+            let remaining = n - out.len();
+            if remaining >= 4 {
+                out.extend_from_slice(vals);
+            } else {
+                out.extend_from_slice(&vals[..remaining]);
+                break;
             }
-        })
-        .collect()
+        }
+    }
+    out
 }
 
 /// Packed size in bytes for `n` ternary weights.
@@ -56,11 +105,35 @@ mod tests {
 
     #[test]
     fn roundtrip_unaligned_lengths() {
-        for n in [1usize, 15, 16, 17, 31, 32, 33, 1000] {
+        for n in [1usize, 3, 4, 5, 15, 16, 17, 31, 32, 33, 1000] {
             let v: Vec<f32> = (0..n).map(|i| ((i % 3) as f32) - 1.0).collect();
             let p = pack(&v).unwrap();
             assert_eq!(unpack(&p, n), v, "n={n}");
             assert_eq!(p.len() * 4, packed_bytes(n));
+        }
+    }
+
+    #[test]
+    fn lut_matches_per_trit_reference() {
+        // reference decoder: the seed's per-trit shift/mask loop
+        fn unpack_ref(packed: &[u32], n: usize) -> Vec<f32> {
+            (0..n)
+                .map(|i| {
+                    let code = (packed[i / 16] >> ((i % 16) * 2)) & 0b11;
+                    match code {
+                        0b01 => 1.0,
+                        0b10 => -1.0,
+                        _ => 0.0,
+                    }
+                })
+                .collect()
+        }
+        // cover every byte pattern, including the unused 0b11 code
+        let words: Vec<u32> = (0..256u32)
+            .map(|b| b | (b << 8) | (b << 16) | (b << 24))
+            .collect();
+        for n in [1usize, 7, 64, 256 * 16] {
+            assert_eq!(unpack(&words, n), unpack_ref(&words, n), "n={n}");
         }
     }
 

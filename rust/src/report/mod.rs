@@ -70,13 +70,20 @@ pub fn table3() -> String {
     out
 }
 
-/// DQT-vs-BitNet state memory comparison (the §1 motivation table).
+/// DQT-vs-BitNet state memory comparison (the §1 motivation table). The
+/// deployed-checkpoint column reads packed sizes from the codec registry
+/// (`quant::codec::Format`) instead of re-deriving bit widths.
 pub fn memory_comparison(model: &str) -> Result<String> {
+    let cfg = ModelConfig::by_name(model).ok_or_else(|| anyhow!("bad model"))?;
+    let p_total = cfg.param_count() as usize;
+    let p_quant = cfg.quantized_param_count() as usize;
     let mut out = String::new();
     out.push_str(&format!(
         "Model-state memory (no activations/framework), {model}:\n"
     ));
-    out.push_str("| variant        | weights  | grads    | optim    | total    |\n");
+    out.push_str(
+        "| variant        | weights  | grads    | optim    | total    | deploy   |\n",
+    );
     for (label, spec) in [
         ("fp32", VariantSpec::new(model, Mode::Fp32, 1.58)),
         ("bitnet b1.58", VariantSpec::new(model, Mode::Bitnet158, 1.58)),
@@ -84,13 +91,22 @@ pub fn memory_comparison(model: &str) -> Result<String> {
         ("dqt 8bit", VariantSpec::new(model, Mode::Dqt, 8.0)),
     ] {
         let b = memory::estimate(&spec, false).ok_or_else(|| anyhow!("bad model"))?;
+        // packed checkpoint on disk / packed-grid state on the host:
+        // quantized set in its true format, the rest in f32
+        let deploy = if spec.mode.quantized() {
+            let fmt = crate::quant::Format::from_bits(spec.bits);
+            (fmt.packed_bytes(p_quant) + (p_total - p_quant) * 4) as f64
+        } else {
+            (p_total * 4) as f64
+        };
         out.push_str(&format!(
-            "| {:<14} | {:>8} | {:>8} | {:>8} | {:>8} |\n",
+            "| {:<14} | {:>8} | {:>8} | {:>8} | {:>8} | {:>8} |\n",
             label,
             human(b.weights),
             human(b.grads),
             human(b.optimizer),
             human(b.state_bytes()),
+            human(deploy),
         ));
     }
     Ok(out)

@@ -1,35 +1,162 @@
 //! Runtime layer: PJRT execution of AOT artifacts (the only place that
 //! touches XLA). `VariantRuntime` owns the compiled entry points of one
 //! variant and the typed state (params + optimizer) flowing between steps.
+//!
+//! Host state supports two storage modes per parameter ([`Param`]):
+//! `Dense` (a plain `Vec<f32>`, what the train loop shuttles) and `Packed`
+//! (a [`PackedTensor`] in the grid's true bit width). Packed grid params
+//! are decoded to f32 literals only at the PJRT boundary, so a resident
+//! ternary model really costs ~2 bits/weight on the host — the paper's §1
+//! memory claim, realized in RSS instead of only on disk.
 
 pub mod artifact;
 pub mod client;
 
+use std::borrow::Cow;
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
+
+use crate::quant::codec::{Format, PackedTensor};
 
 pub use artifact::{ArtifactDir, Manifest};
 pub use client::{
     lit_f32, lit_f32_scalar, lit_i32, lit_u32_scalar, scalar_f32, to_vec_f32, Executable, Runtime,
 };
 
+/// One host-resident parameter: dense f32 values or a packed grid tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Param {
+    Dense(Vec<f32>),
+    Packed(PackedTensor),
+}
+
+impl Param {
+    pub fn numel(&self) -> usize {
+        match self {
+            Param::Dense(v) => v.len(),
+            Param::Packed(p) => p.numel(),
+        }
+    }
+
+    pub fn is_packed(&self) -> bool {
+        matches!(self, Param::Packed(_))
+    }
+
+    /// The f32 values: borrowed for dense params, decoded on the fly for
+    /// packed ones (the PJRT-boundary decode).
+    pub fn values(&self) -> Cow<'_, [f32]> {
+        match self {
+            Param::Dense(v) => Cow::Borrowed(v.as_slice()),
+            Param::Packed(p) => {
+                Cow::Owned(p.unpack().expect("PackedTensor invariant: bytes match format"))
+            }
+        }
+    }
+
+    /// Owned copy of the f32 values.
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.values().into_owned()
+    }
+
+    /// First element (scalar params: `.s` scales, counters).
+    pub fn scalar(&self) -> f32 {
+        self.values().first().copied().unwrap_or(0.0)
+    }
+
+    /// Heap bytes this param keeps resident on the host: 4·n dense,
+    /// `packed_bytes` when packed. The accounting unit of the packed-grid
+    /// mode.
+    pub fn host_bytes(&self) -> usize {
+        match self {
+            Param::Dense(v) => v.len() * 4,
+            Param::Packed(p) => p.packed_bytes(),
+        }
+    }
+}
+
+impl From<Vec<f32>> for Param {
+    fn from(v: Vec<f32>) -> Param {
+        Param::Dense(v)
+    }
+}
+
 /// Host-side copy of the model state in the manifest's flat order.
 #[derive(Clone, Debug)]
 pub struct State {
-    /// one vec per params entry (matrices, norms, `.s` scales)
-    pub params: Vec<Vec<f32>>,
-    /// one vec per opt_state entry (step, m/v or vr/vc)
+    /// one entry per params entry (matrices, norms, `.s` scales)
+    pub params: Vec<Param>,
+    /// one vec per opt_state entry (step, m/v or vr/vc); always dense
     pub opt: Vec<Vec<f32>>,
 }
 
 impl State {
-    pub fn param_by_name(&self, manifest: &Manifest, name: &str) -> Option<&[f32]> {
-        manifest.param_index(name).map(|i| self.params[i].as_slice())
+    /// Wrap dense vectors (the PJRT output shape) into a state.
+    pub fn from_dense(params: Vec<Vec<f32>>, opt: Vec<Vec<f32>>) -> State {
+        State {
+            params: params.into_iter().map(Param::Dense).collect(),
+            opt,
+        }
     }
+
+    pub fn param_by_name(&self, manifest: &Manifest, name: &str) -> Option<Cow<'_, [f32]>> {
+        manifest.param_index(name).map(|i| self.params[i].values())
+    }
+
     pub fn step(&self) -> f32 {
         // opt_state[0] is always the scalar step counter
         self.opt.first().and_then(|v| v.first()).copied().unwrap_or(0.0)
+    }
+
+    /// Switch to packed-grid mode: every grid param is re-encoded as a
+    /// [`PackedTensor`] in the variant's true bit width (its scale read
+    /// from the `{name}.s` companion param), freeing the dense copy. Dense
+    /// (non-grid) params are untouched. Idempotent.
+    pub fn pack_grids(&mut self, manifest: &Manifest) -> Result<()> {
+        let fmt = Format::from_bits(manifest.variant.bits);
+        for (i, meta) in manifest.params.iter().enumerate() {
+            if !meta.is_grid() || self.params[i].is_packed() {
+                continue;
+            }
+            let scale_name = format!("{}.s", meta.name);
+            let j = manifest.param_index(&scale_name).ok_or_else(|| {
+                anyhow!("grid param {:?} has no companion scale {scale_name:?}", meta.name)
+            })?;
+            let s = self.params[j].scalar();
+            let vals = self.params[i].to_vec();
+            let pt = PackedTensor::pack(&vals, meta.shape.clone(), fmt, Some(s))
+                .map_err(|e| anyhow!("packing {:?}: {e}", meta.name))?;
+            self.params[i] = Param::Packed(pt);
+        }
+        Ok(())
+    }
+
+    /// Decode every packed param back to dense f32 (inverse of
+    /// [`State::pack_grids`]).
+    pub fn unpack_grids(&mut self) {
+        for p in &mut self.params {
+            if p.is_packed() {
+                let dense = p.to_vec();
+                *p = Param::Dense(dense);
+            }
+        }
+    }
+
+    /// Host-resident bytes of all params (the packed-grid accounting API).
+    pub fn host_param_bytes(&self) -> usize {
+        self.params.iter().map(Param::host_bytes).sum()
+    }
+
+    /// Host-resident bytes of the grid params only — compare against
+    /// `numel × 4` to see the packed-mode reduction.
+    pub fn grid_param_bytes(&self, manifest: &Manifest) -> usize {
+        manifest
+            .params
+            .iter()
+            .zip(&self.params)
+            .filter(|(meta, _)| meta.is_grid())
+            .map(|(_, p)| p.host_bytes())
+            .sum()
     }
 }
 
@@ -100,7 +227,7 @@ impl VariantRuntime {
             .take(n_o)
             .map(|l| to_vec_f32(&l))
             .collect::<Result<_>>()?;
-        Ok((State { params, opt }, it.collect()))
+        Ok((State::from_dense(params, opt), it.collect()))
     }
 
     /// Run the in-graph initializer (LLaMA init + grid projection).
@@ -116,8 +243,8 @@ impl VariantRuntime {
     fn state_literals(&self, state: &State) -> Result<Vec<xla::Literal>> {
         let m = self.manifest();
         let mut lits = Vec::with_capacity(m.n_state());
-        for (meta, vals) in m.params.iter().zip(&state.params) {
-            lits.push(lit_f32(vals, &meta.shape)?);
+        for (meta, p) in m.params.iter().zip(&state.params) {
+            lits.push(lit_f32(&p.values(), &meta.shape)?);
         }
         for (meta, vals) in m.opt_state.iter().zip(&state.opt) {
             lits.push(lit_f32(vals, &meta.shape)?);
@@ -130,7 +257,7 @@ impl VariantRuntime {
         m.params
             .iter()
             .zip(&state.params)
-            .map(|(meta, vals)| lit_f32(vals, &meta.shape))
+            .map(|(meta, p)| lit_f32(&p.values(), &meta.shape))
             .collect()
     }
 

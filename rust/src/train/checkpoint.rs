@@ -7,7 +7,12 @@
 //! arithmetic the paper cites (1B ternary ≈ 0.25 GB vs 4 GB FP32).
 //!
 //! Layout (little-endian): a JSON header (manifest echo + per-entry codec +
-//! byte offsets), `\n`, then the raw payload blob.
+//! byte offsets), `\n`, then the raw payload blob. The full wire format is
+//! specified in `docs/CHECKPOINT_FORMAT.md` and pinned by the golden-file
+//! test in `rust/tests/integration.rs`.
+//!
+//! All per-format behavior (tags, sizes, encode/decode) comes from the
+//! codec registry in [`crate::quant::codec`]; this module only does layout.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -15,73 +20,18 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 use crate::util::json::{parse, Value};
 
-use crate::quant::{self, intn, ternary};
-use crate::runtime::{Manifest, State};
+use crate::quant::codec::{Format, PackedTensor};
+use crate::runtime::{Manifest, Param, State};
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Codec {
-    F32,
-    Bf16,
-    Fp8E4m3,
-    Ternary2bit,
-    IntN(u32),
-}
-
-impl Codec {
-    /// Codec for one manifest entry under a grid bit-width.
-    fn for_entry(is_grid: bool, bits: f64, dense: Codec) -> Codec {
-        if !is_grid {
-            return dense;
-        }
-        if (bits - 1.58).abs() < 1e-9 {
-            Codec::Ternary2bit
-        } else {
-            Codec::IntN(bits as u32)
-        }
-    }
-
-    fn tag(&self) -> String {
-        match self {
-            Codec::F32 => "f32".into(),
-            Codec::Bf16 => "bf16".into(),
-            Codec::Fp8E4m3 => "fp8_e4m3".into(),
-            Codec::Ternary2bit => "ternary_2bit".into(),
-            Codec::IntN(b) => format!("int{b}"),
-        }
-    }
-
-    fn from_tag(s: &str) -> Result<Codec> {
-        Ok(match s {
-            "f32" => Codec::F32,
-            "bf16" => Codec::Bf16,
-            "fp8_e4m3" => Codec::Fp8E4m3,
-            "ternary_2bit" => Codec::Ternary2bit,
-            _ => {
-                let b: u32 = s
-                    .strip_prefix("int")
-                    .and_then(|x| x.parse().ok())
-                    .ok_or_else(|| anyhow!("unknown codec {s:?}"))?;
-                Codec::IntN(b)
-            }
-        })
-    }
-
-    pub fn bytes_for(&self, n: usize) -> usize {
-        match self {
-            Codec::F32 => n * 4,
-            Codec::Bf16 => n * 2,
-            Codec::Fp8E4m3 => n,
-            Codec::Ternary2bit => ternary::packed_bytes(n),
-            Codec::IntN(b) => intn::packed_bytes(n, *b),
-        }
-    }
-}
+/// Historical name for the storage format selector — the private enum this
+/// alias replaced lived here before the registry existed.
+pub use crate::quant::codec::Format as Codec;
 
 #[derive(Clone, Debug)]
 struct EntryHeader {
     name: String,
     shape: Vec<usize>,
-    codec: Codec,
+    codec: Format,
     offset: usize,
     bytes: usize,
     /// grid scale (for grid codecs) — needed to decode back to f32 values
@@ -122,7 +72,8 @@ impl EntryHeader {
                 .iter()
                 .filter_map(|x| x.as_usize())
                 .collect(),
-            codec: Codec::from_tag(v.req("codec")?.as_str().unwrap_or(""))?,
+            codec: Format::from_tag(v.req("codec")?.as_str().unwrap_or(""))
+                .map_err(|e| anyhow!(e))?,
             offset: v.req("offset")?.as_usize().unwrap_or(0),
             bytes: v.req("bytes")?.as_usize().unwrap_or(0),
             scale: v.get("scale").and_then(|x| x.as_f64()).map(|f| f as f32),
@@ -171,89 +122,49 @@ impl Header {
     }
 }
 
-fn encode_entry(vals: &[f32], codec: Codec, scale: Option<f32>) -> Result<Vec<u8>> {
-    Ok(match codec {
-        Codec::F32 => vals.iter().flat_map(|v| v.to_le_bytes()).collect(),
-        Codec::Bf16 => vals
-            .iter()
-            .flat_map(|&v| quant::bf16::encode(v).to_le_bytes())
-            .collect(),
-        Codec::Fp8E4m3 => vals
-            .iter()
-            .map(|&v| quant::fp8::encode(v, quant::fp8::Format::E4M3))
-            .collect(),
-        Codec::Ternary2bit => {
-            let s = scale.ok_or_else(|| anyhow!("ternary codec needs scale"))?;
-            let k: Vec<f32> = vals.iter().map(|&v| (v * s).round()).collect();
-            ternary::pack(&k)
-                .map_err(|e| anyhow!(e))?
-                .iter()
-                .flat_map(|w| w.to_le_bytes())
-                .collect()
-        }
-        Codec::IntN(bits) => {
-            let s = scale.ok_or_else(|| anyhow!("intn codec needs scale"))?;
-            intn::pack_grid(vals, s, bits).map_err(|e| anyhow!(e))?
-        }
-    })
-}
-
-fn decode_entry(bytes: &[u8], n: usize, codec: Codec, scale: Option<f32>) -> Result<Vec<f32>> {
-    Ok(match codec {
-        Codec::F32 => bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect(),
-        Codec::Bf16 => bytes
-            .chunks_exact(2)
-            .map(|c| quant::bf16::decode(u16::from_le_bytes(c.try_into().unwrap())))
-            .collect(),
-        Codec::Fp8E4m3 => bytes
-            .iter()
-            .map(|&b| quant::fp8::decode(b, quant::fp8::Format::E4M3))
-            .collect(),
-        Codec::Ternary2bit => {
-            let s = scale.ok_or_else(|| anyhow!("ternary codec needs scale"))?;
-            let words: Vec<u32> = bytes
-                .chunks_exact(4)
-                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            ternary::unpack(&words, n).iter().map(|&k| k / s).collect()
-        }
-        Codec::IntN(bits) => {
-            let s = scale.ok_or_else(|| anyhow!("intn codec needs scale"))?;
-            intn::unpack_grid(bytes, n, s, bits)
-        }
-    })
+/// Resolve the grid scale of a grid param by its companion's *name*
+/// (`{name}.s`), not by position.
+fn companion_scale(manifest: &Manifest, state: &State, name: &str) -> Result<f32> {
+    let scale_name = format!("{name}.s");
+    let j = manifest
+        .param_index(&scale_name)
+        .ok_or_else(|| anyhow!("grid param {name:?} has no companion scale {scale_name:?}"))?;
+    Ok(state.params[j].scalar())
 }
 
 /// Serialize a full training state (params + optimizer) with format-true
 /// packing. `dense_codec` controls non-grid params/opt state (use Bf16/Fp8
-/// to mirror a low-precision training env's storage).
+/// to mirror a low-precision training env's storage). Params already held
+/// packed in the right format are written without a decode/re-encode trip.
 pub fn save(
     path: &Path,
     manifest: &Manifest,
     state: &State,
-    dense_codec: Codec,
+    dense_codec: Format,
     include_opt: bool,
 ) -> Result<u64> {
     let bits = manifest.variant.bits;
     let mut payload: Vec<u8> = Vec::new();
     let mut params = Vec::new();
     for (i, meta) in manifest.params.iter().enumerate() {
-        let vals = &state.params[i];
         let codec = if meta.is_scale() {
-            Codec::F32
+            Format::F32
         } else {
-            Codec::for_entry(meta.is_grid(), bits, dense_codec)
+            Format::for_entry(meta.is_grid(), bits, dense_codec)
         };
-        // grid entries read their scale from the companion `.s` param
         let scale = if meta.is_grid() {
-            Some(state.params[i + 1][0])
+            Some(companion_scale(manifest, state, &meta.name)?)
         } else {
             None
         };
-        let enc = encode_entry(vals, codec, scale)?;
+        let enc = match &state.params[i] {
+            // packed-grid mode fast path: the resident bytes ARE the wire
+            // bytes when format and scale line up
+            Param::Packed(pt) if pt.format == codec && pt.scale == scale => pt.bytes.clone(),
+            p => codec
+                .encode(&p.values(), scale)
+                .map_err(|e| anyhow!("encoding {:?}: {e}", meta.name))?,
+        };
         params.push(EntryHeader {
             name: meta.name.clone(),
             shape: meta.shape.clone(),
@@ -267,7 +178,9 @@ pub fn save(
     let mut opt = Vec::new();
     if include_opt {
         for (i, meta) in manifest.opt_state.iter().enumerate() {
-            let enc = encode_entry(&state.opt[i], dense_codec, None)?;
+            let enc = dense_codec
+                .encode(&state.opt[i], None)
+                .map_err(|e| anyhow!("encoding opt {:?}: {e}", meta.name))?;
             opt.push(EntryHeader {
                 name: meta.name.clone(),
                 shape: meta.shape.clone(),
@@ -298,9 +211,10 @@ pub fn save(
     Ok((payload.len() + header_text.len() + 1) as u64)
 }
 
-/// Load a checkpoint back into a `State`. The optimizer section may be
-/// absent (deployment checkpoints): zeros are substituted so eval works.
-pub fn load(path: &Path, manifest: &Manifest) -> Result<State> {
+/// Parse and validate the header + payload split of a raw `.dqt` file.
+/// Returns the whole file plus the payload's start offset (no payload
+/// copy — large checkpoints are held in memory exactly once).
+fn read_checked(path: &Path, manifest: &Manifest) -> Result<(Header, Vec<u8>, usize)> {
     let mut raw = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut raw)?;
     let nl = raw
@@ -318,20 +232,89 @@ pub fn load(path: &Path, manifest: &Manifest) -> Result<State> {
             manifest.variant.variant_name
         ));
     }
-    let payload = &raw[nl + 1..];
+    let payload_len = raw.len() - (nl + 1);
+    if header.params.len() != manifest.params.len() {
+        return Err(anyhow!(
+            "corrupt checkpoint: header has {} params, manifest has {}",
+            header.params.len(),
+            manifest.params.len()
+        ));
+    }
+    if header.payload_bytes != payload_len {
+        return Err(anyhow!(
+            "corrupt checkpoint: header claims {} payload bytes, file has {payload_len}",
+            header.payload_bytes
+        ));
+    }
+    Ok((header, raw, nl + 1))
+}
+
+/// Bounds-checked payload slice for one entry (truncated or lying headers
+/// return `Err` instead of panicking on out-of-bounds).
+fn entry_slice<'a>(payload: &'a [u8], eh: &EntryHeader, n: usize) -> Result<&'a [u8]> {
+    let end = eh
+        .offset
+        .checked_add(eh.bytes)
+        .ok_or_else(|| anyhow!("corrupt checkpoint: entry {:?} offset overflow", eh.name))?;
+    if end > payload.len() {
+        return Err(anyhow!(
+            "corrupt checkpoint: entry {:?} spans {}..{end} beyond payload ({} bytes)",
+            eh.name,
+            eh.offset,
+            payload.len()
+        ));
+    }
+    let want = eh.codec.packed_bytes(n);
+    if eh.bytes != want {
+        return Err(anyhow!(
+            "corrupt checkpoint: entry {:?} has {} bytes, {} expects {want}",
+            eh.name,
+            eh.bytes,
+            eh.codec.tag()
+        ));
+    }
+    Ok(&payload[eh.offset..end])
+}
+
+fn load_impl(path: &Path, manifest: &Manifest, packed: bool) -> Result<State> {
+    let (header, raw, payload_start) = read_checked(path, manifest)?;
+    let payload = &raw[payload_start..];
     let mut params = Vec::with_capacity(manifest.params.len());
     for (meta, eh) in manifest.params.iter().zip(&header.params) {
         let n = meta.numel();
-        let bytes = &payload[eh.offset..eh.offset + eh.bytes];
-        params.push(decode_entry(bytes, n, eh.codec, eh.scale)?);
+        let bytes = entry_slice(payload, eh, n)?;
+        if packed && eh.codec.is_grid_format() {
+            // packed-grid load: adopt the wire bytes as the resident form
+            let pt = PackedTensor::from_bytes(
+                bytes.to_vec(),
+                meta.shape.clone(),
+                eh.codec,
+                eh.scale,
+            )
+            .map_err(|e| anyhow!("entry {:?}: {e}", eh.name))?;
+            params.push(Param::Packed(pt));
+        } else {
+            let vals = eh
+                .codec
+                .decode(bytes, n, eh.scale)
+                .map_err(|e| anyhow!("entry {:?}: {e}", eh.name))?;
+            params.push(Param::Dense(vals));
+        }
     }
     let mut opt: Vec<Vec<f32>> = Vec::with_capacity(manifest.opt_state.len());
     if header.opt.len() == manifest.opt_state.len() {
         for (meta, eh) in manifest.opt_state.iter().zip(&header.opt) {
-            let bytes = &payload[eh.offset..eh.offset + eh.bytes];
-            opt.push(decode_entry(bytes, meta.numel(), eh.codec, eh.scale)?);
+            let n = meta.numel();
+            let bytes = entry_slice(payload, eh, n)?;
+            opt.push(
+                eh.codec
+                    .decode(bytes, n, eh.scale)
+                    .map_err(|e| anyhow!("opt entry {:?}: {e}", eh.name))?,
+            );
         }
     } else {
+        // optimizer section absent (deployment checkpoints): zeros so eval
+        // works, with the step counter restored from the header
         for meta in &manifest.opt_state {
             opt.push(vec![0.0; meta.numel()]);
         }
@@ -342,6 +325,19 @@ pub fn load(path: &Path, manifest: &Manifest) -> Result<State> {
     Ok(State { params, opt })
 }
 
+/// Load a checkpoint back into a dense `State`. The optimizer section may
+/// be absent (deployment checkpoints): zeros are substituted so eval works.
+pub fn load(path: &Path, manifest: &Manifest) -> Result<State> {
+    load_impl(path, manifest, false)
+}
+
+/// Load a checkpoint keeping grid params in their packed wire form — the
+/// host stays at ~`bits_per_weight/8` bytes per grid weight and decoding
+/// happens lazily at the PJRT boundary.
+pub fn load_packed(path: &Path, manifest: &Manifest) -> Result<State> {
+    load_impl(path, manifest, true)
+}
+
 /// Checkpoint size report (for the memory/deployment tables).
 pub fn packed_param_bytes(manifest: &Manifest) -> usize {
     let bits = manifest.variant.bits;
@@ -350,11 +346,11 @@ pub fn packed_param_bytes(manifest: &Manifest) -> usize {
         .iter()
         .map(|m| {
             let codec = if m.is_scale() {
-                Codec::F32
+                Format::F32
             } else {
-                Codec::for_entry(m.is_grid(), bits, Codec::F32)
+                Format::for_entry(m.is_grid(), bits, Format::F32)
             };
-            codec.bytes_for(m.numel())
+            codec.packed_bytes(m.numel())
         })
         .sum()
 }
@@ -365,37 +361,37 @@ mod tests {
 
     #[test]
     fn codec_sizes() {
-        assert_eq!(Codec::F32.bytes_for(100), 400);
-        assert_eq!(Codec::Bf16.bytes_for(100), 200);
-        assert_eq!(Codec::Fp8E4m3.bytes_for(100), 100);
-        assert_eq!(Codec::Ternary2bit.bytes_for(100), 28);
-        assert_eq!(Codec::IntN(3).bytes_for(100), 38);
-        assert_eq!(Codec::IntN(8).bytes_for(100), 100);
+        assert_eq!(Codec::F32.packed_bytes(100), 400);
+        assert_eq!(Codec::Bf16.packed_bytes(100), 200);
+        assert_eq!(Codec::Fp8E4m3.packed_bytes(100), 100);
+        assert_eq!(Codec::Ternary2bit.packed_bytes(100), 28);
+        assert_eq!(Codec::IntN(3).packed_bytes(100), 38);
+        assert_eq!(Codec::IntN(8).packed_bytes(100), 100);
     }
 
     #[test]
     fn entry_roundtrip_all_codecs() {
         let vals: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.01).collect();
         // f32 exact
-        let enc = encode_entry(&vals, Codec::F32, None).unwrap();
-        assert_eq!(decode_entry(&enc, 64, Codec::F32, None).unwrap(), vals);
+        let enc = Codec::F32.encode(&vals, None).unwrap();
+        assert_eq!(Codec::F32.decode(&enc, 64, None).unwrap(), vals);
         // bf16 lossy but idempotent
-        let enc = encode_entry(&vals, Codec::Bf16, None).unwrap();
-        let dec = decode_entry(&enc, 64, Codec::Bf16, None).unwrap();
-        let enc2 = encode_entry(&dec, Codec::Bf16, None).unwrap();
+        let enc = Codec::Bf16.encode(&vals, None).unwrap();
+        let dec = Codec::Bf16.decode(&enc, 64, None).unwrap();
+        let enc2 = Codec::Bf16.encode(&dec, None).unwrap();
         assert_eq!(enc, enc2);
         // ternary grid exact
         let s = 25.0f32;
         let grid: Vec<f32> = (0..64).map(|i| ((i % 3) as f32 - 1.0) / s).collect();
-        let enc = encode_entry(&grid, Codec::Ternary2bit, Some(s)).unwrap();
-        let dec = decode_entry(&enc, 64, Codec::Ternary2bit, Some(s)).unwrap();
+        let enc = Codec::Ternary2bit.encode(&grid, Some(s)).unwrap();
+        let dec = Codec::Ternary2bit.decode(&enc, 64, Some(s)).unwrap();
         for (a, b) in grid.iter().zip(dec.iter()) {
             assert!((a - b).abs() < 1e-6);
         }
         // int4 grid exact
         let grid4: Vec<f32> = (0..64).map(|i| ((i % 16) as f32 - 8.0) / s).collect();
-        let enc = encode_entry(&grid4, Codec::IntN(4), Some(s)).unwrap();
-        let dec = decode_entry(&enc, 64, Codec::IntN(4), Some(s)).unwrap();
+        let enc = Codec::IntN(4).encode(&grid4, Some(s)).unwrap();
+        let dec = Codec::IntN(4).decode(&enc, 64, Some(s)).unwrap();
         for (a, b) in grid4.iter().zip(dec.iter()) {
             assert!((a - b).abs() < 1e-6);
         }

@@ -121,7 +121,7 @@ pub fn train_and_save(
         &out_dir.join("model.dqt"),
         vrt.manifest(),
         &state,
-        super::checkpoint::Codec::F32,
+        crate::quant::Format::F32,
         true,
     )?;
     Ok((state, metrics))

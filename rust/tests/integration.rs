@@ -1,16 +1,17 @@
-//! Integration tests over real AOT artifacts (require `make artifacts`).
-//!
-//! These exercise the full L3→PJRT→HLO path: init, train steps, loss
-//! decrease, grid invariants, determinism, checkpoint round-trips,
-//! ternary inference and the eval harness — everything an experiment run
-//! depends on, at `test`-config scale so the suite stays fast.
+//! Integration tests over real AOT artifacts (require `make artifacts`) —
+//! the full L3→PJRT→HLO path: init, train steps, loss decrease, grid
+//! invariants, determinism, checkpoint round-trips, ternary inference and
+//! the eval harness — plus artifact-free checkpoint/wire-format tests
+//! (golden file, corruption handling, packed-grid accounting) that run on
+//! a synthetic manifest and exercise the codec registry end to end.
 
 use std::path::PathBuf;
 
 use dqt::data::corpus::CorpusSpec;
 use dqt::data::Pipeline;
-use dqt::quant;
-use dqt::runtime::{Runtime, State, VariantRuntime};
+use dqt::quant::{self, ternary};
+use dqt::runtime::artifact::{OptMeta, ParamMeta, TrainStepOutputs, VariantMeta, VariantModelMeta};
+use dqt::runtime::{Manifest, Runtime, State, VariantRuntime};
 use dqt::train::{checkpoint, step_seed, CosineSchedule, Trainer};
 use dqt::config::TrainConfig;
 
@@ -73,15 +74,15 @@ fn init_state_matches_manifest_shapes() {
     let state = vrt.init_state(42).unwrap();
     assert_eq!(state.params.len(), m.params.len());
     assert_eq!(state.opt.len(), m.opt_state.len());
-    for (meta, vals) in m.params.iter().zip(&state.params) {
-        assert_eq!(vals.len(), meta.numel(), "{}", meta.name);
+    for (meta, p) in m.params.iter().zip(&state.params) {
+        assert_eq!(p.numel(), meta.numel(), "{}", meta.name);
     }
     assert_eq!(state.step(), 0.0);
     // grid invariant at init
     for (i, meta) in m.params.iter().enumerate() {
         if meta.is_grid() {
-            let s = state.params[i + 1][0];
-            for &v in &state.params[i] {
+            let s = state.params[i + 1].scalar();
+            for &v in state.params[i].values().iter() {
                 let k = v * s;
                 assert!((k - k.round()).abs() < 1e-3, "{} off grid", meta.name);
                 assert!((-1.0 - 1e-3..=1.0 + 1e-3).contains(&k));
@@ -103,8 +104,8 @@ fn ternary_training_decreases_loss_and_stays_on_grid() {
     let m = vrt.manifest();
     for (i, meta) in m.params.iter().enumerate() {
         if meta.is_grid() {
-            let s = state.params[i + 1][0];
-            for &v in &state.params[i] {
+            let s = state.params[i + 1].scalar();
+            for &v in state.params[i].values().iter() {
                 let k = v * s;
                 assert!((k - k.round()).abs() < 1e-3);
             }
@@ -184,11 +185,24 @@ fn checkpoint_roundtrip_and_resume() {
     let loaded = checkpoint::load(&path, m).unwrap();
     // ternary grid packing is lossless
     for (i, (a, b)) in state.params.iter().zip(loaded.params.iter()).enumerate() {
+        let (a, b) = (a.values(), b.values());
         for (x, y) in a.iter().zip(b.iter()) {
             assert!((x - y).abs() < 1e-6, "param {i} ({})", m.params[i].name);
         }
     }
     assert_eq!(loaded.step(), 8.0);
+    // packed-grid load: same values, resident at the wire bit width
+    let packed = checkpoint::load_packed(&path, m).unwrap();
+    for (i, meta) in m.params.iter().enumerate() {
+        if meta.is_grid() {
+            assert!(packed.params[i].is_packed(), "{}", meta.name);
+            assert_eq!(
+                packed.params[i].host_bytes(),
+                ternary::packed_bytes(meta.numel())
+            );
+        }
+    }
+    assert!(packed.grid_param_bytes(m) < packed.host_param_bytes());
     // resumed training continues identically to a state held in memory
     let pipeline = pipeline_for(&vrt);
     let batch = pipeline.loader(m.variant.model.batch_size, 1, 99).next().unwrap();
@@ -236,6 +250,30 @@ fn eval_and_ternary_inference_paths() {
 }
 
 #[test]
+fn packed_state_evaluates_identically() {
+    if !have_artifacts() {
+        return;
+    }
+    // the PJRT-boundary decode must be invisible to the graphs: a
+    // packed-grid state produces the same perplexity as its dense twin
+    let vrt = with_runtime(|rt| VariantRuntime::load(rt, artifacts_root(), "test-dqt-b1p58")).unwrap();
+    let m = vrt.manifest().clone();
+    let (state, _) = train_n(&vrt, 8, 42);
+    let pipeline = pipeline_for(&vrt);
+    let ppl_dense = dqt::eval::perplexity(&vrt, &state, &pipeline, false).unwrap();
+    let mut packed = state.clone();
+    packed.pack_grids(&m).unwrap();
+    assert!(packed.host_param_bytes() < state.host_param_bytes());
+    let ppl_packed = dqt::eval::perplexity(&vrt, &packed, &pipeline, false).unwrap();
+    // the grid round-trip is exact in f32, so the two paths agree to
+    // floating-point noise at most
+    assert!(
+        ((ppl_dense - ppl_packed) / ppl_dense).abs() < 1e-5,
+        "{ppl_dense} vs {ppl_packed}"
+    );
+}
+
+#[test]
 fn zero_shot_suite_runs_end_to_end() {
     if !have_artifacts() {
         return;
@@ -270,21 +308,22 @@ fn fig5_mechanism_absmax_zeros_absorbing() {
     let loader = pipeline.loader(m.variant.model.batch_size, 5, 42);
     let mut state = vrt.init_state(42).unwrap();
     let grid0 = m.params.iter().position(|p| p.is_grid()).unwrap();
-    let mut zero_mask: Vec<bool> = state.params[grid0].iter().map(|&v| v == 0.0).collect();
-    let w0_emb = state.params[0].clone();
+    let mut zero_mask: Vec<bool> =
+        state.params[grid0].values().iter().map(|&v| v == 0.0).collect();
+    let w0_emb = state.params[0].to_vec();
     while let Some(b) = loader.next() {
         let (s2, _) = vrt
             .train_step(state, &b.tokens, step_seed(42, b.step), 1e-3)
             .unwrap();
         state = s2;
-        for (i, &v) in state.params[grid0].iter().enumerate() {
+        for (i, &v) in state.params[grid0].values().iter().enumerate() {
             if zero_mask[i] {
                 assert_eq!(v, 0.0, "zero trit revived under RTN at {i}");
             }
             zero_mask[i] = v == 0.0;
         }
     }
-    assert_ne!(state.params[0], w0_emb); // embedding still trains
+    assert_ne!(state.params[0].to_vec(), w0_emb); // embedding still trains
 }
 
 #[test]
@@ -300,11 +339,218 @@ fn host_and_graph_quantization_agree() {
     let m = vrt.manifest();
     for (i, meta) in m.params.iter().enumerate() {
         if meta.is_grid() {
-            let s = state.params[i + 1][0];
-            let again = quant::absmean_quantize(&state.params[i], 1.58, s);
-            for (a, b) in state.params[i].iter().zip(again.iter()) {
+            let s = state.params[i + 1].scalar();
+            let vals = state.params[i].values();
+            let again = quant::absmean_quantize(&vals, 1.58, s);
+            for (a, b) in vals.iter().zip(again.iter()) {
                 assert!((a - b).abs() < 1e-5, "{}", meta.name);
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-free checkpoint & codec-registry tests (synthetic manifest)
+// ---------------------------------------------------------------------------
+
+fn pmeta(name: &str, shape: Vec<usize>, role: &str) -> ParamMeta {
+    ParamMeta {
+        name: name.into(),
+        shape,
+        dtype: "f32".into(),
+        role: Some(role.to_string()),
+    }
+}
+
+/// A tiny hand-built ternary manifest matching the committed golden file.
+fn golden_manifest() -> Manifest {
+    Manifest {
+        variant: VariantMeta {
+            model: VariantModelMeta {
+                name: "golden".into(),
+                vocab_size: 8,
+                hidden_size: 3,
+                num_hidden_layers: 1,
+                max_seq_len: 4,
+                batch_size: 1,
+                param_count: 19,
+            },
+            mode: "dqt".into(),
+            bits: 1.58,
+            env: "fp32".into(),
+            optimizer: "adamw".into(),
+            intervention: "none".into(),
+            variant_name: "golden".into(),
+        },
+        params: vec![
+            pmeta("emb", vec![2, 3], "dense"),
+            pmeta("w0", vec![2, 4], "grid"),
+            pmeta("w0.s", vec![], "scale"),
+            pmeta("norm", vec![4], "dense"),
+        ],
+        opt_state: vec![
+            OptMeta { name: "step".into(), shape: vec![] },
+            OptMeta { name: "m".into(), shape: vec![6] },
+        ],
+        tokens_shape: vec![1, 4],
+        logits_tokens_shape: vec![1, 4],
+        pad_id: 0,
+        train_step_outputs: TrainStepOutputs {
+            n_params: 4,
+            n_opt: 2,
+            metrics: vec!["loss".into(), "upd_frac".into(), "gnorm".into()],
+        },
+        entries: vec![],
+    }
+}
+
+/// The exact state serialized into the golden file (all values chosen to
+/// be bit-exact in every involved format).
+fn golden_state() -> State {
+    State::from_dense(
+        vec![
+            vec![0.5, -0.25, 1.0, -1.0, 2.0, 0.125],
+            vec![0.25, -0.25, 0.0, 0.25, 0.0, -0.25, 0.25, 0.0],
+            vec![4.0],
+            vec![1.0, 1.0, 1.0, 1.0],
+        ],
+        vec![vec![3.0], vec![0.0625, -0.0625, 0.5, -0.5, 0.0, 1.0]],
+    )
+}
+
+const GOLDEN: &[u8] = include_bytes!("golden/golden-ternary.dqt");
+
+#[test]
+fn golden_dqt_wire_format_is_stable() {
+    // a checkpoint written by the seed implementation (the committed golden
+    // file) must be byte-identical to what the codec registry writes today
+    let m = golden_manifest();
+    let state = golden_state();
+    let dir = std::env::temp_dir().join("dqt_golden_ckpt");
+    let path = dir.join("golden.dqt");
+    checkpoint::save(&path, &m, &state, checkpoint::Codec::F32, true).unwrap();
+    let written = std::fs::read(&path).unwrap();
+    assert_eq!(
+        written, GOLDEN,
+        "`.dqt` wire format drifted from the seed encoding"
+    );
+    // and the golden bytes load back to the exact state
+    let loaded = checkpoint::load(&path, &m).unwrap();
+    for (a, b) in state.params.iter().zip(loaded.params.iter()) {
+        assert_eq!(a.to_vec(), b.to_vec());
+    }
+    assert_eq!(loaded.opt, state.opt);
+    assert_eq!(loaded.step(), 3.0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn load_packed_keeps_wire_bytes_resident() {
+    let m = golden_manifest();
+    let dir = std::env::temp_dir().join("dqt_golden_packed");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("golden.dqt");
+    std::fs::write(&path, GOLDEN).unwrap();
+    let st = checkpoint::load_packed(&path, &m).unwrap();
+    assert!(st.params[1].is_packed());
+    // 8 trits → one packed u32 word
+    assert_eq!(st.params[1].host_bytes(), 4);
+    assert_eq!(st.params[1].to_vec(), golden_state().params[1].to_vec());
+    // dense entries stay dense
+    assert!(!st.params[0].is_packed());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn corrupt_checkpoints_error_instead_of_panicking() {
+    let m = golden_manifest();
+    let dir = std::env::temp_dir().join("dqt_corrupt_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let write = |name: &str, bytes: &[u8]| {
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    };
+    // truncated payload (header claims more bytes than the file holds)
+    let p = write("trunc.dqt", &GOLDEN[..GOLDEN.len() - 10]);
+    assert!(checkpoint::load(&p, &m).is_err());
+    // truncated mid-header
+    let p = write("header.dqt", &GOLDEN[..40]);
+    assert!(checkpoint::load(&p, &m).is_err());
+    // garbage header
+    let p = write("garbage.dqt", b"not json at all\nxxxxxxxx");
+    assert!(checkpoint::load(&p, &m).is_err());
+    // no delimiter
+    let p = write("nodelim.dqt", &[0u8, 1, 2, 3]);
+    assert!(checkpoint::load(&p, &m).is_err());
+    // header/manifest param-count mismatch
+    let p = write("ok.dqt", GOLDEN);
+    let mut m2 = golden_manifest();
+    m2.params.pop();
+    assert!(checkpoint::load(&p, &m2).is_err());
+    // wrong variant
+    let mut m3 = golden_manifest();
+    m3.variant.variant_name = "other".into();
+    assert!(checkpoint::load(&p, &m3).is_err());
+    // the intact file still loads (the guards are not over-eager)
+    assert!(checkpoint::load(&p, &m).is_ok());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn packed_grid_state_accounting_is_16x_under_f32() {
+    // acceptance: host-resident bytes of a ternary variant's grid params
+    // == ternary::packed_bytes(n), i.e. 16x under dense f32
+    let n = 64 * 64;
+    let mut m = golden_manifest();
+    m.params = vec![pmeta("w0", vec![64, 64], "grid"), pmeta("w0.s", vec![], "scale")];
+    let s = 4.0f32;
+    let grid: Vec<f32> = (0..n).map(|i| (((i % 3) as f32) - 1.0) / s).collect();
+    let mut state = State::from_dense(vec![grid.clone(), vec![s]], vec![vec![0.0]]);
+    assert_eq!(state.grid_param_bytes(&m), n * 4);
+    state.pack_grids(&m).unwrap();
+    assert_eq!(state.grid_param_bytes(&m), ternary::packed_bytes(n));
+    assert_eq!(state.grid_param_bytes(&m) * 16, n * 4);
+    // the boundary decode reproduces the dense values exactly
+    let back = state.params[0].values();
+    for (a, b) in grid.iter().zip(back.iter()) {
+        assert_eq!(a, b);
+    }
+    // saving from packed mode (zero re-encode fast path) is byte-identical
+    // to saving the dense twin
+    let dir = std::env::temp_dir().join("dqt_packed_acct");
+    let p1 = dir.join("packed.dqt");
+    checkpoint::save(&p1, &m, &state, checkpoint::Codec::F32, false).unwrap();
+    let mut dense_state = state.clone();
+    dense_state.unpack_grids();
+    let p2 = dir.join("dense.dqt");
+    checkpoint::save(&p2, &m, &dense_state, checkpoint::Codec::F32, false).unwrap();
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn save_resolves_scales_by_companion_name_not_position() {
+    // a manifest where the `.s` companion is NOT at `i + 1` — the seed's
+    // positional assumption would have read the wrong entry
+    let mut m = golden_manifest();
+    m.params = vec![
+        pmeta("w0", vec![2, 4], "grid"),
+        pmeta("norm", vec![4], "dense"),
+        pmeta("w0.s", vec![], "scale"),
+    ];
+    let s = 4.0f32;
+    let grid: Vec<f32> = (0..8).map(|i| (((i % 3) as f32) - 1.0) / s).collect();
+    let state = State::from_dense(
+        vec![grid.clone(), vec![1.0, 1.0, 1.0, 1.0], vec![s]],
+        vec![vec![0.0], vec![0.0; 6]],
+    );
+    let dir = std::env::temp_dir().join("dqt_companion_scale");
+    let path = dir.join("model.dqt");
+    checkpoint::save(&path, &m, &state, checkpoint::Codec::F32, false).unwrap();
+    let loaded = checkpoint::load(&path, &m).unwrap();
+    for (a, b) in grid.iter().zip(loaded.params[0].values().iter()) {
+        assert!((a - b).abs() < 1e-6);
+    }
+    std::fs::remove_dir_all(dir).ok();
 }

@@ -6,7 +6,7 @@
 use dqt::data::corpus::Rng;
 use dqt::data::dataset::Dataset;
 use dqt::data::tokenizer::Tokenizer;
-use dqt::quant::{self, bf16, fp8, intn, sr, ternary};
+use dqt::quant::{self, bf16, fp8, intn, sr, ternary, Format, PackedTensor};
 use dqt::util::json;
 use dqt::util::prop::{check, gen};
 
@@ -39,6 +39,76 @@ fn prop_intn_pack_roundtrip_all_widths() {
             (bits, v)
         },
         |(bits, v)| intn::unpack(&intn::pack(v, *bits).unwrap(), v.len(), *bits) == *v,
+    );
+}
+
+#[test]
+fn prop_packed_tensor_grid_roundtrip_all_formats() {
+    // every grid format × unaligned lengths: pack → unpack is exact and the
+    // packed size matches the registry's arithmetic
+    check(
+        300,
+        |rng| {
+            let n = 1 + rng.below(200);
+            let bits = [1.58f64, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0][rng.below(8)];
+            let fmt = Format::from_bits(bits);
+            let (qn, qp) = fmt.grid_range();
+            let s = 1.0 + 50.0 * rng.next_f64() as f32;
+            let vals: Vec<f32> = (0..n)
+                .map(|_| (qn + rng.below((qp - qn) as usize + 1) as f64) as f32 / s)
+                .collect();
+            (fmt, s, vals)
+        },
+        |(fmt, s, vals)| {
+            let pt = PackedTensor::pack(vals, vec![vals.len()], *fmt, Some(*s)).unwrap();
+            pt.packed_bytes() == fmt.packed_bytes(vals.len())
+                && pt
+                    .unpack()
+                    .unwrap()
+                    .iter()
+                    .zip(vals.iter())
+                    .all(|(a, b)| (a - b).abs() < 1e-6)
+        },
+    );
+}
+
+#[test]
+fn prop_packed_tensor_dense_idempotent() {
+    // dense formats: f32 is exact; bf16/fp8 are lossy but stable under a
+    // second pack → unpack trip
+    check(
+        200,
+        |rng| {
+            let vals = gen::vec_f32(rng, 150, -300.0, 300.0);
+            let fmt = [Format::F32, Format::Bf16, Format::Fp8E4m3][rng.below(3)];
+            (fmt, vals)
+        },
+        |(fmt, vals)| {
+            let pt = PackedTensor::pack(vals, vec![vals.len()], *fmt, None).unwrap();
+            let once = pt.unpack().unwrap();
+            if *fmt == Format::F32 && once != *vals {
+                return false;
+            }
+            let pt2 = PackedTensor::pack(&once, vec![once.len()], *fmt, None).unwrap();
+            pt2.bytes == pt.bytes && pt2.unpack().unwrap() == once
+        },
+    );
+}
+
+#[test]
+fn prop_format_tag_roundtrip() {
+    check(
+        100,
+        |rng| {
+            [
+                Format::F32,
+                Format::Bf16,
+                Format::Fp8E4m3,
+                Format::Ternary2bit,
+                Format::IntN(2 + rng.below(7) as u32),
+            ][rng.below(5)]
+        },
+        |fmt| Format::from_tag(&fmt.tag()) == Ok(*fmt),
     );
 }
 

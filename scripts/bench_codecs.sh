@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Run the quant_codecs bench and append a labeled record to
+# BENCH_quant_codecs.json (results also land under rust/results/bench/).
+#
+# Usage: scripts/bench_codecs.sh [label]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+label="${1:-$(git rev-parse --short HEAD 2>/dev/null || echo unlabeled)}"
+
+(cd rust && cargo bench --bench quant_codecs)
+
+python3 - "$label" <<'PY'
+import json, sys, pathlib
+
+root = pathlib.Path(".")
+label = sys.argv[1]
+records = json.loads((root / "rust/results/bench/quant_codecs.json").read_text())
+baseline_path = root / "BENCH_quant_codecs.json"
+baseline = json.loads(baseline_path.read_text())
+run = {
+    "label": label,
+    "results": {
+        r["name"]: {
+            "mean_ns": r["mean_ns"],
+            "gb_per_s": (r["bytes"] / r["mean_ns"]) if r.get("bytes") else None,
+        }
+        for r in records
+    },
+}
+baseline["runs"] = [r for r in baseline.get("runs", []) if r.get("label") != label]
+baseline["runs"].append(run)
+baseline_path.write_text(json.dumps(baseline, indent=2) + "\n")
+print(f"recorded run '{label}' with {len(run['results'])} benchmarks")
+PY

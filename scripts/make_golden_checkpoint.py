@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Regenerate rust/tests/golden/golden-ternary.dqt.
+
+Reference implementation of the `.dqt` wire format as written by the seed
+`train::checkpoint` code (see docs/CHECKPOINT_FORMAT.md), kept independent
+of the Rust codec registry so the golden-file test pins the format against
+an implementation that cannot drift with the crate.
+
+The serialized state matches `golden_state()` in rust/tests/integration.rs;
+every value is chosen to be bit-exact in f32 so the file is deterministic.
+"""
+
+import struct
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "rust" / "tests" / "golden" / "golden-ternary.dqt"
+
+
+def jnum(x):
+    """Format a number the way the in-tree Rust JSON writer does: integral
+    f64 values print as integers."""
+    if float(x) == int(x) and abs(x) < 9.0e15:
+        return str(int(x))
+    return repr(float(x))
+
+
+def jstr(s):
+    return '"' + s.replace("\\", "\\\\").replace('"', '\\"') + '"'
+
+
+def jentry(name, shape, codec, offset, nbytes, scale):
+    scale_s = "null" if scale is None else jnum(scale)
+    return (
+        "{"
+        + f'"name":{jstr(name)},"shape":[{",".join(str(d) for d in shape)}],'
+        + f'"codec":{jstr(codec)},"offset":{offset},"bytes":{nbytes},"scale":{scale_s}'
+        + "}"
+    )
+
+
+def f32s(vals):
+    return struct.pack(f"<{len(vals)}f", *vals)
+
+
+def ternary_pack(ks):
+    """Seed ternary codec: 2-bit codes (00=0, 01=+1, 10=-1), 16 trits per
+    little-endian u32."""
+    words = [0] * ((len(ks) + 15) // 16)
+    for i, k in enumerate(ks):
+        code = {0: 0b00, 1: 0b01, -1: 0b10}[k]
+        words[i // 16] |= code << ((i % 16) * 2)
+    return b"".join(struct.pack("<I", w) for w in words)
+
+
+def main():
+    # --- the golden state (mirrors golden_state() in integration.rs) ---
+    emb = [0.5, -0.25, 1.0, -1.0, 2.0, 0.125]
+    w0_scale = 4.0
+    w0_k = [1, -1, 0, 1, 0, -1, 1, 0]          # grid indices
+    w0 = [k / w0_scale for k in w0_k]          # resident f32 values (k/s)
+    norm = [1.0, 1.0, 1.0, 1.0]
+    opt_step = [3.0]
+    opt_m = [0.0625, -0.0625, 0.5, -0.5, 0.0, 1.0]
+
+    payload = b""
+    entries = []
+
+    def push(name, shape, codec, blob, scale=None):
+        nonlocal payload
+        entries.append(jentry(name, shape, codec, len(payload), len(blob), scale))
+        payload += blob
+
+    params_start = len(entries)
+    push("emb", [2, 3], "f32", f32s(emb))
+    push("w0", [2, 4], "ternary_2bit", ternary_pack(w0_k), scale=w0_scale)
+    push("w0.s", [], "f32", f32s([w0_scale]))
+    push("norm", [4], "f32", f32s(norm))
+    params = entries[params_start:]
+
+    opt_start = len(entries)
+    push("step", [], "f32", f32s(opt_step))
+    push("m", [6], "f32", f32s(opt_m))
+    opt = entries[opt_start:]
+
+    header = (
+        "{"
+        + f'"magic":"DQT1","variant":"golden","step":{jnum(opt_step[0])},'
+        + f'"params":[{",".join(params)}],'
+        + f'"opt":[{",".join(opt)}],'
+        + f'"payload_bytes":{len(payload)}'
+        + "}"
+    )
+
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_bytes(header.encode() + b"\n" + payload)
+    print(f"wrote {OUT} ({len(header) + 1 + len(payload)} bytes)")
+    print(header)
+
+
+if __name__ == "__main__":
+    main()
