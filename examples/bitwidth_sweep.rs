@@ -4,11 +4,11 @@
 //! Run: `cargo run --release --example bitwidth_sweep -- [steps] [model]`
 //! Requires `make artifacts-experiments` (or the fig4 t130 artifacts).
 
-use dqt::config::TrainConfig;
-use dqt::data::Pipeline;
-use dqt::runtime::{Runtime, VariantRuntime};
-use dqt::train::Trainer;
 use anyhow::Result;
+use dqt::config::{BackendKind, Mode, TrainConfig, VariantSpec};
+use dqt::data::Pipeline;
+use dqt::runtime::VariantRuntime;
+use dqt::train::Trainer;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -16,11 +16,11 @@ fn main() -> Result<()> {
     let model = args.get(2).cloned().unwrap_or_else(|| "t130".to_string());
 
     let artifacts = dqt::default_artifacts_root();
-    let rt = Runtime::cpu()?;
     let mut rows = Vec::new();
-    for (bits, tag) in [(1.58, "b1p58"), (3.0, "b3"), (4.0, "b4"), (8.0, "b8")] {
-        let variant = format!("{model}-dqt-{tag}");
-        let vrt = match VariantRuntime::load(&rt, &artifacts, &variant) {
+    for bits in [1.58, 3.0, 4.0, 8.0] {
+        let spec = VariantSpec::new(&model, Mode::Dqt, bits);
+        let variant = spec.variant_name();
+        let vrt = match VariantRuntime::open(BackendKind::Auto, None, &artifacts, &spec) {
             Ok(v) => v,
             Err(e) => {
                 eprintln!("skipping {variant}: {e}");

@@ -6,12 +6,12 @@
 //! Run: `cargo run --release --example memory_robustness -- [steps] [model]`
 //! Requires the fig3 artifact suite for the chosen model.
 
-use dqt::config::{Env, Mode, Optimizer, TrainConfig, VariantSpec};
+use anyhow::Result;
+use dqt::config::{BackendKind, Env, Mode, Optimizer, TrainConfig, VariantSpec};
 use dqt::data::Pipeline;
 use dqt::memory;
-use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::runtime::VariantRuntime;
 use dqt::train::Trainer;
-use anyhow::Result;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -19,7 +19,6 @@ fn main() -> Result<()> {
     let model = args.get(2).cloned().unwrap_or_else(|| "t130".to_string());
 
     let artifacts = dqt::default_artifacts_root();
-    let rt = Runtime::cpu()?;
 
     let mut specs: Vec<VariantSpec> = Vec::new();
     for (mode, bits) in [(Mode::Bitnet158, 1.58), (Mode::Dqt, 8.0)] {
@@ -38,7 +37,7 @@ fn main() -> Result<()> {
     println!("| variant                          | mem model (MB, paper-size) | dev loss |");
     for spec in specs {
         let name = spec.variant_name();
-        let vrt = match VariantRuntime::load(&rt, &artifacts, &name) {
+        let vrt = match VariantRuntime::open(BackendKind::Auto, None, &artifacts, &spec) {
             Ok(v) => v,
             Err(e) => {
                 eprintln!("skipping {name}: {e}");

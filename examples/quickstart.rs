@@ -1,18 +1,22 @@
-//! Quickstart: the paper's mechanics end to end, in under a minute.
+//! Quickstart: the paper's mechanics end to end, in under a minute,
+//! with zero external dependencies — no artifacts, no PJRT, no Python.
 //!
 //! 1. Prints the Fig. 1/Fig. 8-style worked numeric example: AbsMean
 //!    quantization of a small matrix, one stochastically rounded update.
-//! 2. Loads the `test-dqt-b1p58` artifact, trains a few steps on the tiny
-//!    synthetic corpus and shows the loss dropping with ternary weights.
+//! 2. Builds the native CPU backend for the ternary `test` variant,
+//!    trains a few steps on the tiny synthetic corpus and shows the loss
+//!    dropping with the weights pinned to the ternary grid.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
+//! (add `-- pjrt` to drive compiled artifacts instead; needs
+//! `make artifacts` + linked PJRT)
 
-use dqt::config::TrainConfig;
+use anyhow::Result;
+use dqt::config::{BackendKind, Mode, TrainConfig, VariantSpec};
 use dqt::data::Pipeline;
 use dqt::quant::{absmean_quantize, absmean_scale, sr};
-use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::runtime::VariantRuntime;
 use dqt::train::Trainer;
-use anyhow::Result;
 
 fn worked_example() {
     println!("=== Fig. 8-style worked example (ternary, Eq. 1-5) ===\n");
@@ -43,9 +47,14 @@ fn main() -> Result<()> {
     worked_example();
 
     println!("=== ternary DQT training (test config, 30 steps) ===\n");
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let vrt = VariantRuntime::load(&rt, dqt::default_artifacts_root(), "test-dqt-b1p58")?;
+    let backend = if std::env::args().any(|a| a == "pjrt") {
+        BackendKind::Pjrt
+    } else {
+        BackendKind::Native
+    };
+    let spec = VariantSpec::new("test", Mode::Dqt, 1.58);
+    let vrt = VariantRuntime::open(backend, None, dqt::default_artifacts_root(), &spec)?;
+    println!("backend: {}", vrt.backend_name());
     let m = vrt.manifest();
     println!(
         "model {}: {} params, {} grid matrices",
@@ -76,8 +85,8 @@ fn main() -> Result<()> {
 
     // weights really are ternary: inspect the first grid matrix
     let grid_idx = m.params.iter().position(|p| p.is_grid()).unwrap();
-    let w = state.params[grid_idx].values();
-    let s = state.params[grid_idx + 1].scalar();
+    let w = state.params[grid_idx].values()?;
+    let s = state.params[grid_idx + 1].scalar()?;
     let mut counts = [0usize; 3];
     for &v in w.iter() {
         let k = (v * s).round() as i32;

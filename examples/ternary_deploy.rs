@@ -4,14 +4,14 @@
 //!
 //! Run: `cargo run --release --example ternary_deploy -- [steps]`
 
+use anyhow::Result;
+use dqt::config::{BackendKind, Mode, TrainConfig, VariantSpec};
 use dqt::data::corpus::CorpusSpec;
 use dqt::data::Pipeline;
 use dqt::eval;
 use dqt::quant::{sr, ternary};
-use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::runtime::VariantRuntime;
 use dqt::train::{checkpoint, Trainer};
-use dqt::config::TrainConfig;
-use anyhow::Result;
 
 fn main() -> Result<()> {
     let steps: u64 = std::env::args()
@@ -20,9 +20,10 @@ fn main() -> Result<()> {
         .unwrap_or(100);
     let artifacts = dqt::default_artifacts_root();
     let out = dqt::default_results_root().join("ternary_deploy");
-    let rt = Runtime::cpu()?;
-    let vrt = VariantRuntime::load(&rt, &artifacts, "t130-dqt-b8")?;
+    let spec = VariantSpec::new("t130", Mode::Dqt, 8.0);
+    let vrt = VariantRuntime::open(BackendKind::Auto, None, &artifacts, &spec)?;
     let m = vrt.manifest().clone();
+    println!("backend: {}", vrt.backend_name());
 
     let pipeline = Pipeline::build(
         "wiki",
@@ -50,7 +51,7 @@ fn main() -> Result<()> {
         if !meta.is_grid() {
             continue;
         }
-        let w = state.params[i].values();
+        let w = state.params[i].values()?;
         fp32_bytes += w.len() * 4;
         // AbsMean re-projection of the 8-bit grid weight to ternary (§A.2)
         let s3 = dqt::quant::absmean_scale(&w, 1.58);
@@ -78,7 +79,8 @@ fn main() -> Result<()> {
     let cspec = CorpusSpec::by_name("wiki", 42).unwrap();
     let r8 = eval::evaluate(&vrt, &state, &pipeline, &cspec, 60, false, 7)?;
     let r3 = eval::evaluate(&vrt, &state, &pipeline, &cspec, 60, true, 7)?;
-    println!("\n| inference | perplexity | {} |", r8.task_acc.iter().map(|(t, _)| t.clone()).collect::<Vec<_>>().join(" | "));
+    let task_names: Vec<String> = r8.task_acc.iter().map(|(t, _)| t.clone()).collect();
+    println!("\n| inference | perplexity | {} |", task_names.join(" | "));
     for r in [&r8, &r3] {
         println!(
             "| {:<9} | {:>10.3} | {} |",

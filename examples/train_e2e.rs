@@ -9,13 +9,13 @@
 
 use std::time::Instant;
 
-use dqt::config::TrainConfig;
+use anyhow::Result;
+use dqt::config::{BackendKind, Mode, TrainConfig, VariantSpec};
 use dqt::data::corpus::CorpusSpec;
 use dqt::data::Pipeline;
 use dqt::eval;
-use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::runtime::VariantRuntime;
 use dqt::train::{checkpoint, Trainer};
-use anyhow::Result;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -25,14 +25,14 @@ fn main() -> Result<()> {
 
     let artifacts = dqt::default_artifacts_root();
     let results = dqt::default_results_root().join("e2e");
-    let rt = Runtime::cpu()?;
-    println!("platform: {}", rt.platform());
 
     let t_load = Instant::now();
-    let vrt = VariantRuntime::load(&rt, &artifacts, &variant)?;
+    let spec = VariantSpec::new(&model, Mode::Dqt, 8.0);
+    let vrt = VariantRuntime::open(BackendKind::Auto, None, &artifacts, &spec)?;
     let m = vrt.manifest().clone();
     println!(
-        "loaded {variant}: {} params, compile {:.1}s",
+        "loaded {variant} on the {} backend: {} params, setup {:.1}s",
+        vrt.backend_name(),
         m.variant.model.param_count,
         t_load.elapsed().as_secs_f32()
     );

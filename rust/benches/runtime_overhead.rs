@@ -1,12 +1,15 @@
 //! Runtime-layer overhead: how much of a step is host work (literal
-//! creation, state marshalling) vs XLA execution. §Perf target: non-execute
-//! overhead < 5% of step time for t-size models. Also measures the
-//! packed-grid boundary decode (`Param::values` on a packed state) so the
-//! cost of holding grid params at 2 bits/weight stays visible.
+//! creation, state marshalling) vs backend execution. §Perf target:
+//! non-execute overhead < 5% of step time for t-size models. Also measures
+//! the packed-grid boundary decode (`Param::values` on a packed state) so
+//! the cost of holding grid params at 2 bits/weight stays visible.
 //!
-//! Requires `make artifacts` (core suite) for the marshalling benches.
+//! The state comes from the native backend (no artifacts needed); the
+//! literal marshalling itself exercises the same `lit_f32` path the PJRT
+//! boundary uses.
 
-use dqt::runtime::{client, Runtime, VariantRuntime};
+use dqt::config::{Mode, VariantSpec};
+use dqt::runtime::{client, Backend, NativeBackend};
 use dqt::util::bench::Bench;
 
 fn main() {
@@ -20,23 +23,16 @@ fn main() {
         });
     }
 
-    let artifacts = dqt::default_artifacts_root();
-    if !artifacts.join("index.json").is_file() {
-        eprintln!("skipping marshalling benches: artifacts not built");
-        return;
-    }
-    let rt = Runtime::cpu().expect("pjrt");
-    let Ok(vrt) = VariantRuntime::load(&rt, &artifacts, "test-dqt-b1p58") else {
-        return;
-    };
-    let m = vrt.manifest().clone();
-    let state = vrt.init_state(1).unwrap();
+    let backend = NativeBackend::new(&VariantSpec::new("test", Mode::Dqt, 1.58))
+        .expect("native backend");
+    let m = backend.manifest().clone();
+    let state = backend.init_state(1).unwrap();
 
     let total_bytes = ((m.total_param_values() + m.total_opt_values()) * 4) as u64;
     b.bench_bytes("state_to_literals", total_bytes, || {
         let mut lits = Vec::with_capacity(m.n_state());
         for (meta, p) in m.params.iter().zip(&state.params) {
-            lits.push(client::lit_f32(&p.values(), &meta.shape).unwrap());
+            lits.push(client::lit_f32(&p.values().unwrap(), &meta.shape).unwrap());
         }
         for (meta, vals) in m.opt_state.iter().zip(&state.opt) {
             lits.push(client::lit_f32(vals, &meta.shape).unwrap());
@@ -57,7 +53,7 @@ fn main() {
     b.bench_bytes("packed_state_to_literals", param_bytes, || {
         let mut lits = Vec::with_capacity(m.params.len());
         for (meta, p) in m.params.iter().zip(&packed_state.params) {
-            lits.push(client::lit_f32(&p.values(), &meta.shape).unwrap());
+            lits.push(client::lit_f32(&p.values().unwrap(), &meta.shape).unwrap());
         }
         lits
     });

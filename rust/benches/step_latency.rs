@@ -1,33 +1,36 @@
 //! Per-mode train-step latency (the §Perf headline) and the Fig.-2-family
 //! cost comparison: fp32 vs bitnet vs dqt-ternary vs dqt-8bit on the same
-//! compiled shapes. Uses the `test` config so the bench is quick; e2e
-//! numbers for t-size models are recorded in EXPERIMENTS.md.
+//! shapes. Uses the `test` config so the bench is quick; e2e numbers for
+//! t-size models are recorded in EXPERIMENTS.md.
 //!
-//! Requires `make artifacts` (core suite).
+//! Runs on whichever backend `BackendKind::Auto` resolves to — the native
+//! CPU backend needs no artifacts, so this bench produces real numbers on
+//! any machine (PJRT + `make artifacts` switches it to compiled graphs).
 
+use dqt::config::{BackendKind, Mode, VariantSpec};
 use dqt::data::Pipeline;
-use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::runtime::VariantRuntime;
 use dqt::train::step_seed;
 use dqt::util::bench::Bench;
 
 fn main() {
     let artifacts = dqt::default_artifacts_root();
-    if !artifacts.join("index.json").is_file() {
-        eprintln!("skipping step_latency: artifacts not built (run `make artifacts`)");
-        return;
-    }
-    let rt = Runtime::cpu().expect("pjrt");
     let mut b = Bench::new("step_latency");
 
-    for variant in [
-        "test-fp32",
-        "test-bitnet158",
-        "test-dqt-b1p58",
-        "test-dqt-b8",
-    ] {
-        let Ok(vrt) = VariantRuntime::load(&rt, &artifacts, variant) else {
-            eprintln!("skipping {variant}: artifact missing");
-            continue;
+    let specs = [
+        VariantSpec::new("test", Mode::Fp32, 1.58),
+        VariantSpec::new("test", Mode::Bitnet158, 1.58),
+        VariantSpec::new("test", Mode::Dqt, 1.58),
+        VariantSpec::new("test", Mode::Dqt, 8.0),
+    ];
+    for spec in &specs {
+        let variant = spec.variant_name();
+        let vrt = match VariantRuntime::open(BackendKind::Auto, None, &artifacts, spec) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("skipping {variant}: {e}");
+                continue;
+            }
         };
         let m = vrt.manifest();
         let tokens_per_step = (m.variant.model.batch_size * m.variant.model.max_seq_len) as u64;

@@ -184,6 +184,49 @@ impl Optimizer {
     }
 }
 
+/// Execution backend selector (`--backend native|pjrt|auto`).
+///
+/// `Native` is the pure-Rust CPU reference backend (`runtime::native`) —
+/// no artifacts, no PJRT, runs anywhere. `Pjrt` executes compiled AOT
+/// artifacts through XLA. `Auto` picks PJRT when a real runtime is linked
+/// and falls back to native otherwise (the zero-dependency default).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    #[default]
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "auto" => BackendKind::Auto,
+            "native" => BackendKind::Native,
+            "pjrt" => BackendKind::Pjrt,
+            _ => return None,
+        })
+    }
+
+    /// Resolve `Auto` given whether a real PJRT runtime is linked
+    /// (`runtime::pjrt_available()`); explicit choices pass through.
+    pub fn resolve(self, pjrt_linked: bool) -> BackendKind {
+        match self {
+            BackendKind::Auto if pjrt_linked => BackendKind::Pjrt,
+            BackendKind::Auto => BackendKind::Native,
+            explicit => explicit,
+        }
+    }
+}
+
 /// Full variant descriptor == one artifact directory (twin of python's
 /// `VariantConfig`).
 #[derive(Clone, Debug, PartialEq)]
@@ -375,6 +418,22 @@ mod tests {
         assert_eq!(v.variant_name(), "t130-dqt_absmax-b1p58");
         let v = VariantSpec::new("t130", Mode::DqtTernaryInf, 8.0);
         assert_eq!(v.variant_name(), "t130-dqt_ternary_inf-b8");
+    }
+
+    #[test]
+    fn backend_kind_parse_and_resolve() {
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("auto"), Some(BackendKind::Auto));
+        assert_eq!(BackendKind::parse("gpu"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+        assert_eq!(BackendKind::Auto.resolve(true), BackendKind::Pjrt);
+        assert_eq!(BackendKind::Auto.resolve(false), BackendKind::Native);
+        assert_eq!(BackendKind::Native.resolve(true), BackendKind::Native);
+        assert_eq!(BackendKind::Pjrt.resolve(false), BackendKind::Pjrt);
+        for k in [BackendKind::Auto, BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(k.as_str()), Some(k));
+        }
     }
 
     #[test]

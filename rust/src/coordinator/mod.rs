@@ -18,11 +18,12 @@ use anyhow::{anyhow, Result};
 
 pub use jobs::{experiment_jobs, known_experiments, JobSpec};
 
+use crate::config::BackendKind;
 use crate::data::corpus::CorpusSpec;
 use crate::data::Pipeline;
 use crate::eval;
 use crate::memory;
-use crate::runtime::{Runtime, VariantRuntime};
+use crate::runtime::{pjrt_available, Runtime, VariantRuntime};
 use crate::train::{checkpoint, Trainer};
 
 /// Pipeline cache shared across jobs (corpus+tokenizer are deterministic).
@@ -89,8 +90,11 @@ impl JobResult {
 }
 
 /// Run one job to completion: train → metrics → checkpoint → optional eval.
+/// `backend` must already be resolved (no `Auto`); the PJRT path requires
+/// `rt`, the native path ignores it.
 pub fn run_job(
-    rt: &Runtime,
+    backend: BackendKind,
+    rt: Option<&Runtime>,
     cache: &PipelineCache,
     artifacts_root: &Path,
     results_root: &Path,
@@ -102,7 +106,13 @@ pub fn run_job(
         .variant
         .model_config()
         .ok_or_else(|| anyhow!("unknown model {:?}", job.variant.model))?;
-    let vrt = VariantRuntime::load(rt, artifacts_root, &variant_name)?;
+    let vrt = match backend {
+        BackendKind::Native => VariantRuntime::native(&job.variant)?,
+        _ => {
+            let rt = rt.ok_or_else(|| anyhow!("PJRT backend needs a runtime"))?;
+            VariantRuntime::load(rt, artifacts_root, &variant_name)?
+        }
+    };
     let pipeline = cache.get(
         &job.train.dataset,
         job.train.seed,
@@ -165,20 +175,23 @@ pub fn run_experiment(
     exp: &str,
     steps: u64,
     workers: usize,
+    backend: BackendKind,
     artifacts_root: &Path,
     results_root: &Path,
 ) -> Result<Vec<Result<JobResult>>> {
     let jobs =
         experiment_jobs(exp, steps).ok_or_else(|| anyhow!("unknown experiment {exp:?}"))?;
-    run_jobs(&jobs, workers, artifacts_root, results_root)
+    run_jobs(&jobs, workers, backend, artifacts_root, results_root)
 }
 
 pub fn run_jobs(
     jobs: &[JobSpec],
     workers: usize,
+    backend: BackendKind,
     artifacts_root: &Path,
     results_root: &Path,
 ) -> Result<Vec<Result<JobResult>>> {
+    let backend = backend.resolve(pjrt_available());
     let cache = Arc::new(PipelineCache::default());
     let queue = Arc::new(Mutex::new(
         jobs.iter().cloned().enumerate().collect::<Vec<_>>(),
@@ -196,22 +209,33 @@ pub fn run_jobs(
             let artifacts_root = artifacts_root.to_path_buf();
             let results_root = results_root.to_path_buf();
             scope.spawn(move || {
-                // one PJRT client per worker
-                let rt = match Runtime::cpu() {
-                    Ok(rt) => rt,
-                    Err(e) => {
-                        let mut res = results.lock().unwrap();
-                        for slot in res.iter_mut().filter(|s| s.is_none()) {
-                            *slot = Some(Err(anyhow!("PJRT init failed: {e}")));
+                // one PJRT client per worker; the native backend needs none
+                let rt = if backend == BackendKind::Native {
+                    None
+                } else {
+                    match Runtime::cpu() {
+                        Ok(rt) => Some(rt),
+                        Err(e) => {
+                            let mut res = results.lock().unwrap();
+                            for slot in res.iter_mut().filter(|s| s.is_none()) {
+                                *slot = Some(Err(anyhow!("PJRT init failed: {e}")));
+                            }
+                            return;
                         }
-                        return;
                     }
                 };
                 loop {
                     let item = { queue.lock().unwrap().pop() };
                     let Some((idx, job)) = item else { break };
                     eprintln!("  [job {}/{}] {}", idx + 1, n, job.job_name());
-                    let r = run_job(&rt, &cache, &artifacts_root, &results_root, &job);
+                    let r = run_job(
+                        backend,
+                        rt.as_ref(),
+                        &cache,
+                        &artifacts_root,
+                        &results_root,
+                        &job,
+                    );
                     results.lock().unwrap()[idx] = Some(r);
                 }
             });

@@ -5,7 +5,12 @@
 //!
 //! * **L3 (this crate)** — training coordinator: experiment orchestration,
 //!   data pipeline (synthetic corpus → BPE → batches), LR scheduling,
-//!   metrics, format-true checkpointing, memory model, eval harness.
+//!   metrics, format-true checkpointing, memory model, eval harness, and
+//!   the [`runtime::Backend`] abstraction with two implementations: the
+//!   pure-Rust CPU reference backend ([`runtime::native`], trains with
+//!   zero external dependencies) and the PJRT artifact path
+//!   ([`runtime::pjrt`]). Selection via `--backend auto|native|pjrt`
+//!   ([`config::BackendKind`]; see `docs/BACKENDS.md`).
 //!   Storage formats are unified behind the codec registry in
 //!   [`quant::codec`]: [`quant::codec::Format`] + [`quant::codec::Codec`]
 //!   own all per-format dispatch (wire tags, packed sizes, encode/decode),
@@ -18,10 +23,11 @@
 //!   spots: AbsMean quantization, stochastic rounding, fused int8-activation
 //!   linear, RMSNorm, fused AdamW+SR.
 //!
-//! Python never runs at training time: the [`runtime`] module loads the HLO
-//! artifacts via PJRT and the [`train`] loop drives them.
+//! Python never runs at training time: the [`runtime`] module executes the
+//! variant through the selected backend and the [`train`] loop drives it.
 //!
-//! Quickstart: `make artifacts && cargo run --release --example quickstart`.
+//! Quickstart (no artifacts, no PJRT, no Python):
+//! `cargo run --release --example quickstart`.
 
 pub mod config;
 pub mod util;

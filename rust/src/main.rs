@@ -14,11 +14,11 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use dqt::config::{Env, Mode, Optimizer, TrainConfig, VariantSpec};
+use dqt::config::{BackendKind, Env, Mode, Optimizer, TrainConfig, VariantSpec};
 use dqt::coordinator;
 use dqt::data::corpus::CorpusSpec;
 use dqt::data::Pipeline;
-use dqt::runtime::{Runtime, VariantRuntime};
+use dqt::runtime::VariantRuntime;
 use dqt::train::{checkpoint, Trainer};
 use dqt::util::cli::Args;
 use dqt::{eval, memory, report};
@@ -28,6 +28,8 @@ repro — Direct Quantized Training reproduction
 
 USAGE: repro <command> [flags]
 GLOBAL: --artifacts <dir>  --results <dir>
+        --backend auto|native|pjrt   (auto = pjrt when linked, else the
+                                      pure-Rust native CPU backend)
 
 COMMANDS
   train   --model t130 --mode dqt --bits 1.58 [--env fp32] [--optimizer adamw]
@@ -41,6 +43,11 @@ COMMANDS
   list
   memory  (variant flags)
 ";
+
+fn backend_kind(a: &Args) -> Result<BackendKind> {
+    let s = a.str_or("backend", "auto");
+    BackendKind::parse(&s).ok_or_else(|| anyhow!("bad --backend {s:?} (auto|native|pjrt)"))
+}
 
 fn variant_spec(a: &Args) -> Result<VariantSpec> {
     let model = a.str_or("model", "t130");
@@ -90,9 +97,8 @@ fn main() -> Result<()> {
             let steps: u64 = a.parse_or("steps", 300)?;
             let dataset = a.str_or("dataset", "wiki");
             let seed: u64 = a.parse_or("seed", 42)?;
-            let rt = Runtime::cpu()?;
-            eprintln!("platform: {}", rt.platform());
-            let vrt = VariantRuntime::load(&rt, &artifacts, &name)?;
+            let vrt = VariantRuntime::open(backend_kind(&a)?, None, &artifacts, &spec)?;
+            eprintln!("backend: {}", vrt.backend_name());
             let pipeline = Pipeline::build(&dataset, seed, cfg.vocab_size, cfg.max_seq_len)?;
             let tcfg = TrainConfig {
                 steps,
@@ -128,15 +134,14 @@ fn main() -> Result<()> {
         }
         "eval" => {
             let spec = variant_spec(&a)?;
-            let name = spec.variant_name();
             let cfg = spec
                 .model_config()
                 .ok_or_else(|| anyhow!("unknown model {:?}", spec.model))?;
             let ckpt = PathBuf::from(a.req("checkpoint")?);
             let dataset = a.str_or("dataset", "wiki");
             let items: usize = a.parse_or("items", 100)?;
-            let rt = Runtime::cpu()?;
-            let vrt = VariantRuntime::load(&rt, &artifacts, &name)?;
+            let vrt = VariantRuntime::open(backend_kind(&a)?, None, &artifacts, &spec)?;
+            eprintln!("backend: {}", vrt.backend_name());
             let state = checkpoint::load(&ckpt, vrt.manifest())?;
             let pipeline = Pipeline::build(&dataset, 42, cfg.vocab_size, cfg.max_seq_len)?;
             let cspec = CorpusSpec::by_name(&dataset, 42)
@@ -152,6 +157,7 @@ fn main() -> Result<()> {
             let exp = a.req("exp")?;
             let steps: u64 = a.parse_or("steps", 0)?;
             let workers: usize = a.parse_or("workers", 1)?;
+            let backend = backend_kind(&a)?;
             let exps: Vec<&str> = if exp == "all" {
                 coordinator::known_experiments().to_vec()
             } else {
@@ -159,7 +165,8 @@ fn main() -> Result<()> {
             };
             for e in exps {
                 eprintln!("=== experiment {e} ===");
-                let rs = coordinator::run_experiment(e, steps, workers, &artifacts, &results)?;
+                let rs =
+                    coordinator::run_experiment(e, steps, workers, backend, &artifacts, &results)?;
                 let summary = coordinator::write_summary(&results, e, &rs)?;
                 let ok = rs.iter().filter(|r| r.is_ok()).count();
                 println!("{e}: {ok}/{} jobs ok → {}", rs.len(), summary.display());

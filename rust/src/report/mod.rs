@@ -129,7 +129,12 @@ pub fn load_runs(results_root: &Path, exp: &str) -> Result<Vec<RunMetrics>> {
     let dir = results_root.join(exp);
     let mut runs = Vec::new();
     for entry in std::fs::read_dir(&dir)
-        .map_err(|e| anyhow!("no results for {exp:?} at {}: {e} — run `repro sweep --exp {exp}`", dir.display()))?
+        .map_err(|e| {
+            anyhow!(
+                "no results for {exp:?} at {}: {e} — run `repro sweep --exp {exp}`",
+                dir.display()
+            )
+        })?
     {
         let p = entry?.path();
         if p.join("metrics.json").is_file() {

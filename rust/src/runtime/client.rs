@@ -11,6 +11,20 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+/// Whether a real PJRT runtime is linked into this binary. The in-tree
+/// `vendor/xla-stub` reports platform `"stub"` (and cannot compile), so
+/// backend auto-selection falls back to the native CPU backend there.
+/// Probed once per process — client construction is heavyweight on real
+/// PJRT.
+pub fn pjrt_available() -> bool {
+    static AVAILABLE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVAILABLE.get_or_init(|| {
+        xla::PjRtClient::cpu()
+            .map(|c| !c.platform_name().starts_with("stub"))
+            .unwrap_or(false)
+    })
+}
+
 /// Shared PJRT client (compile + execute). One per process.
 pub struct Runtime {
     client: xla::PjRtClient,

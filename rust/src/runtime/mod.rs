@@ -1,28 +1,39 @@
-//! Runtime layer: PJRT execution of AOT artifacts (the only place that
-//! touches XLA). `VariantRuntime` owns the compiled entry points of one
-//! variant and the typed state (params + optimizer) flowing between steps.
+//! Runtime layer: backend-dispatched execution of one variant's entry
+//! points. [`VariantRuntime`] owns a [`Backend`] — either the PJRT path
+//! (compiled AOT artifacts, [`pjrt`]) or the pure-Rust CPU reference
+//! backend ([`native`]) — plus the typed state (params + optimizer)
+//! flowing between steps. `Trainer`, `checkpoint`, `eval`, the
+//! coordinator and the examples all drive the same four entry points
+//! (`init_state`, `train_step`, `eval_step`, `logits`) and never see
+//! which backend executes them.
 //!
 //! Host state supports two storage modes per parameter ([`Param`]):
 //! `Dense` (a plain `Vec<f32>`, what the train loop shuttles) and `Packed`
 //! (a [`PackedTensor`] in the grid's true bit width). Packed grid params
-//! are decoded to f32 literals only at the PJRT boundary, so a resident
+//! are decoded to f32 only at the backend boundary, so a resident
 //! ternary model really costs ~2 bits/weight on the host — the paper's §1
 //! memory claim, realized in RSS instead of only on disk.
 
 pub mod artifact;
 pub mod client;
+pub mod native;
+pub mod pjrt;
 
 use std::borrow::Cow;
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::config::{BackendKind, VariantSpec};
 use crate::quant::codec::{Format, PackedTensor};
 
 pub use artifact::{ArtifactDir, Manifest};
 pub use client::{
-    lit_f32, lit_f32_scalar, lit_i32, lit_u32_scalar, scalar_f32, to_vec_f32, Executable, Runtime,
+    lit_f32, lit_f32_scalar, lit_i32, lit_u32_scalar, pjrt_available, scalar_f32, to_vec_f32,
+    Executable, Runtime,
 };
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
 
 /// One host-resident parameter: dense f32 values or a packed grid tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -44,24 +55,26 @@ impl Param {
     }
 
     /// The f32 values: borrowed for dense params, decoded on the fly for
-    /// packed ones (the PJRT-boundary decode).
-    pub fn values(&self) -> Cow<'_, [f32]> {
+    /// packed ones (the backend-boundary decode). A corrupt packed tensor
+    /// (e.g. from a damaged checkpoint) reports as an error instead of
+    /// aborting mid-train.
+    pub fn values(&self) -> Result<Cow<'_, [f32]>> {
         match self {
-            Param::Dense(v) => Cow::Borrowed(v.as_slice()),
-            Param::Packed(p) => {
-                Cow::Owned(p.unpack().expect("PackedTensor invariant: bytes match format"))
-            }
+            Param::Dense(v) => Ok(Cow::Borrowed(v.as_slice())),
+            Param::Packed(p) => Ok(Cow::Owned(
+                p.unpack().map_err(|e| anyhow!("decoding packed param: {e}"))?,
+            )),
         }
     }
 
     /// Owned copy of the f32 values.
-    pub fn to_vec(&self) -> Vec<f32> {
-        self.values().into_owned()
+    pub fn to_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.values()?.into_owned())
     }
 
     /// First element (scalar params: `.s` scales, counters).
-    pub fn scalar(&self) -> f32 {
-        self.values().first().copied().unwrap_or(0.0)
+    pub fn scalar(&self) -> Result<f32> {
+        Ok(self.values()?.first().copied().unwrap_or(0.0))
     }
 
     /// Heap bytes this param keeps resident on the host: 4·n dense,
@@ -91,7 +104,7 @@ pub struct State {
 }
 
 impl State {
-    /// Wrap dense vectors (the PJRT output shape) into a state.
+    /// Wrap dense vectors (the backend output shape) into a state.
     pub fn from_dense(params: Vec<Vec<f32>>, opt: Vec<Vec<f32>>) -> State {
         State {
             params: params.into_iter().map(Param::Dense).collect(),
@@ -99,8 +112,11 @@ impl State {
         }
     }
 
-    pub fn param_by_name(&self, manifest: &Manifest, name: &str) -> Option<Cow<'_, [f32]>> {
-        manifest.param_index(name).map(|i| self.params[i].values())
+    pub fn param_by_name(&self, manifest: &Manifest, name: &str) -> Result<Option<Cow<'_, [f32]>>> {
+        match manifest.param_index(name) {
+            Some(i) => Ok(Some(self.params[i].values()?)),
+            None => Ok(None),
+        }
     }
 
     pub fn step(&self) -> f32 {
@@ -122,8 +138,8 @@ impl State {
             let j = manifest.param_index(&scale_name).ok_or_else(|| {
                 anyhow!("grid param {:?} has no companion scale {scale_name:?}", meta.name)
             })?;
-            let s = self.params[j].scalar();
-            let vals = self.params[i].to_vec();
+            let s = self.params[j].scalar()?;
+            let vals = self.params[i].to_vec()?;
             let pt = PackedTensor::pack(&vals, meta.shape.clone(), fmt, Some(s))
                 .map_err(|e| anyhow!("packing {:?}: {e}", meta.name))?;
             self.params[i] = Param::Packed(pt);
@@ -133,13 +149,14 @@ impl State {
 
     /// Decode every packed param back to dense f32 (inverse of
     /// [`State::pack_grids`]).
-    pub fn unpack_grids(&mut self) {
+    pub fn unpack_grids(&mut self) -> Result<()> {
         for p in &mut self.params {
             if p.is_packed() {
-                let dense = p.to_vec();
+                let dense = p.to_vec()?;
                 *p = Param::Dense(dense);
             }
         }
+        Ok(())
     }
 
     /// Host-resident bytes of all params (the packed-grid accounting API).
@@ -168,102 +185,102 @@ pub struct StepMetrics {
     pub gnorm: f32,
 }
 
-/// Compiled entry points of a variant + the manifest that drives buffer
-/// layout. Python never runs here: everything comes from `artifacts/`.
+/// One executable variant: the four entry points plus the manifest that
+/// drives buffer layout. Implemented by [`PjrtBackend`] (compiled AOT
+/// artifacts) and [`NativeBackend`] (pure-Rust CPU reference).
+pub trait Backend {
+    /// Short backend identifier (`"native"` / `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    fn manifest(&self) -> &Manifest;
+
+    /// Run the initializer (LLaMA init + grid projection).
+    fn init_state(&self, seed: u32) -> Result<State>;
+
+    /// One training step: consumes `state`, returns the updated state and
+    /// the step metrics. `sr_seed` feeds the SR stream; `lr` the
+    /// scheduler's current learning rate.
+    fn train_step(
+        &self,
+        state: State,
+        tokens: &[i32],
+        sr_seed: u32,
+        lr: f32,
+    ) -> Result<(State, StepMetrics)>;
+
+    /// Sum-NLL + token count over one batch (dev loss / perplexity).
+    fn eval_step(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<(f32, f32)>;
+
+    /// Full logits for a `[batch, seq]` token matrix (zero-shot scoring).
+    fn logits(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<Vec<f32>>;
+
+    /// Whether deploy-time ternary projection (§A.2) is available.
+    fn has_ternary_inference(&self) -> bool;
+}
+
+/// A variant bound to an execution backend. The train loop, checkpointing,
+/// eval harness and coordinator all drive this type and work unchanged on
+/// either backend.
 pub struct VariantRuntime {
-    pub artifact: ArtifactDir,
-    init: Executable,
-    train_step: Executable,
-    eval_step: Executable,
-    logits_step: Executable,
-    eval_step_ternary: Option<Executable>,
-    logits_step_ternary: Option<Executable>,
+    backend: Box<dyn Backend>,
 }
 
 impl VariantRuntime {
-    /// Load + compile every entry point of `variant_name`.
+    /// Load + compile every PJRT entry point of `variant_name` (the
+    /// artifact path; requires `make artifacts` and linked PJRT).
     pub fn load(
         rt: &Runtime,
         artifacts_root: impl AsRef<Path>,
         variant_name: &str,
     ) -> Result<Self> {
-        let artifact = ArtifactDir::locate(artifacts_root, variant_name)?;
-        let load = |entry: &str| rt.load(artifact.hlo_path(entry));
-        let maybe = |entry: &str| -> Result<Option<Executable>> {
-            if artifact.has_entry(entry) {
-                Ok(Some(rt.load(artifact.hlo_path(entry))?))
-            } else {
-                Ok(None)
-            }
-        };
         Ok(VariantRuntime {
-            init: load("init")?,
-            train_step: load("train_step")?,
-            eval_step: load("eval_step")?,
-            logits_step: load("logits_step")?,
-            eval_step_ternary: maybe("eval_step_ternary")?,
-            logits_step_ternary: maybe("logits_step_ternary")?,
-            artifact,
+            backend: Box::new(PjrtBackend::load(rt, artifacts_root, variant_name)?),
         })
     }
 
+    /// Build the pure-Rust CPU reference backend for `spec` — no
+    /// artifacts, no PJRT, no Python anywhere.
+    pub fn native(spec: &VariantSpec) -> Result<Self> {
+        Ok(VariantRuntime {
+            backend: Box::new(NativeBackend::new(spec)?),
+        })
+    }
+
+    /// Open `spec` on the selected backend. [`BackendKind::Auto`] resolves
+    /// to PJRT when a real runtime is linked and to the native backend
+    /// otherwise (the zero-dependency default). `rt` is reused for the
+    /// PJRT path when provided; a fresh client is created if not.
+    pub fn open(
+        kind: BackendKind,
+        rt: Option<&Runtime>,
+        artifacts_root: impl AsRef<Path>,
+        spec: &VariantSpec,
+    ) -> Result<Self> {
+        match kind.resolve(pjrt_available()) {
+            BackendKind::Native => Self::native(spec),
+            _ => {
+                let name = spec.variant_name();
+                match rt {
+                    Some(rt) => Self::load(rt, artifacts_root, &name),
+                    None => Self::load(&Runtime::cpu()?, artifacts_root, &name),
+                }
+            }
+        }
+    }
+
+    /// Which backend executes this variant (`"native"` / `"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
     pub fn manifest(&self) -> &Manifest {
-        &self.artifact.manifest
+        self.backend.manifest()
     }
 
-    fn split_state(&self, outs: Vec<xla::Literal>) -> Result<(State, Vec<xla::Literal>)> {
-        let m = self.manifest();
-        let n_p = m.params.len();
-        let n_o = m.opt_state.len();
-        if outs.len() < n_p + n_o {
-            return Err(anyhow!("expected ≥{} outputs, got {}", n_p + n_o, outs.len()));
-        }
-        let mut it = outs.into_iter();
-        let params: Vec<Vec<f32>> = (&mut it)
-            .take(n_p)
-            .map(|l| to_vec_f32(&l))
-            .collect::<Result<_>>()?;
-        let opt: Vec<Vec<f32>> = (&mut it)
-            .take(n_o)
-            .map(|l| to_vec_f32(&l))
-            .collect::<Result<_>>()?;
-        Ok((State::from_dense(params, opt), it.collect()))
-    }
-
-    /// Run the in-graph initializer (LLaMA init + grid projection).
     pub fn init_state(&self, seed: u32) -> Result<State> {
-        let outs = self.init.run(&[lit_u32_scalar(seed)?])?;
-        let (state, rest) = self.split_state(outs)?;
-        if !rest.is_empty() {
-            return Err(anyhow!("init returned {} extra outputs", rest.len()));
-        }
-        Ok(state)
+        self.backend.init_state(seed)
     }
 
-    fn state_literals(&self, state: &State) -> Result<Vec<xla::Literal>> {
-        let m = self.manifest();
-        let mut lits = Vec::with_capacity(m.n_state());
-        for (meta, p) in m.params.iter().zip(&state.params) {
-            lits.push(lit_f32(&p.values(), &meta.shape)?);
-        }
-        for (meta, vals) in m.opt_state.iter().zip(&state.opt) {
-            lits.push(lit_f32(vals, &meta.shape)?);
-        }
-        Ok(lits)
-    }
-
-    fn param_literals(&self, state: &State) -> Result<Vec<xla::Literal>> {
-        let m = self.manifest();
-        m.params
-            .iter()
-            .zip(&state.params)
-            .map(|(meta, p)| lit_f32(&p.values(), &meta.shape))
-            .collect()
-    }
-
-    /// One training step: consumes `state`, returns the updated state and
-    /// the step metrics. `sr_seed` feeds the in-graph SR stream; `lr` the
-    /// scheduler's current learning rate.
     pub fn train_step(
         &self,
         state: State,
@@ -271,69 +288,18 @@ impl VariantRuntime {
         sr_seed: u32,
         lr: f32,
     ) -> Result<(State, StepMetrics)> {
-        let m = self.manifest();
-        let mut args = self.state_literals(&state)?;
-        args.push(lit_i32(tokens, &m.tokens_shape)?);
-        args.push(lit_u32_scalar(sr_seed)?);
-        args.push(lit_f32_scalar(lr)?);
-        let outs = self.train_step.run(&args)?;
-        let (new_state, metrics) = self.split_state(outs)?;
-        if metrics.len() != m.train_step_outputs.metrics.len() {
-            return Err(anyhow!(
-                "expected {} metrics, got {}",
-                m.train_step_outputs.metrics.len(),
-                metrics.len()
-            ));
-        }
-        Ok((
-            new_state,
-            StepMetrics {
-                loss: scalar_f32(&metrics[0])?,
-                upd_frac: scalar_f32(&metrics[1])?,
-                gnorm: scalar_f32(&metrics[2])?,
-            },
-        ))
+        self.backend.train_step(state, tokens, sr_seed, lr)
     }
 
-    /// Sum-NLL + token count over one batch (dev loss / perplexity).
     pub fn eval_step(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<(f32, f32)> {
-        let m = self.manifest();
-        let exe = if ternary {
-            self.eval_step_ternary
-                .as_ref()
-                .ok_or_else(|| anyhow!("variant has no ternary-inference entry"))?
-        } else {
-            &self.eval_step
-        };
-        let mut args = self.param_literals(state)?;
-        args.push(lit_i32(tokens, &m.tokens_shape)?);
-        let outs = exe.run(&args)?;
-        if outs.len() != 2 {
-            return Err(anyhow!("eval_step: expected 2 outputs, got {}", outs.len()));
-        }
-        Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
+        self.backend.eval_step(state, tokens, ternary)
     }
 
-    /// Full logits for a `[batch, seq]` token matrix (zero-shot scoring).
     pub fn logits(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<Vec<f32>> {
-        let m = self.manifest();
-        let exe = if ternary {
-            self.logits_step_ternary
-                .as_ref()
-                .ok_or_else(|| anyhow!("variant has no ternary-inference entry"))?
-        } else {
-            &self.logits_step
-        };
-        let mut args = self.param_literals(state)?;
-        args.push(lit_i32(tokens, &m.logits_tokens_shape)?);
-        let outs = exe.run(&args)?;
-        if outs.len() != 1 {
-            return Err(anyhow!("logits_step: expected 1 output, got {}", outs.len()));
-        }
-        to_vec_f32(&outs[0])
+        self.backend.logits(state, tokens, ternary)
     }
 
     pub fn has_ternary_inference(&self) -> bool {
-        self.eval_step_ternary.is_some()
+        self.backend.has_ternary_inference()
     }
 }

@@ -1,0 +1,309 @@
+//! Dense math primitives for the native backend: matmuls against
+//! row-major `[out, in]` weights, RMSNorm forward/backward, per-row
+//! absmax activation fake-quantization and numerically stable softmax
+//! helpers. Everything is plain f32 loops over contiguous rows — the
+//! reference layer the Pallas kernels are benchmarked against, not a
+//! performance kernel itself.
+
+/// `y[M,N] = x[M,K] @ w[N,K]ᵀ` — the forward linear (`w` row-major
+/// `[out, in]`, matching the python `x @ w.T`).
+pub fn matmul_nt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    let mut y = vec![0f32; m * n];
+    for r in 0..m {
+        let xr = &x[r * k..(r + 1) * k];
+        let yr = &mut y[r * n..(r + 1) * n];
+        for (c, yc) in yr.iter_mut().enumerate() {
+            let wr = &w[c * k..(c + 1) * k];
+            let mut acc = 0f32;
+            for (a, b) in xr.iter().zip(wr.iter()) {
+                acc += a * b;
+            }
+            *yc = acc;
+        }
+    }
+    y
+}
+
+/// `dx[M,K] += dy[M,N] @ w[N,K]` — input gradient of the linear.
+pub fn add_matmul_nn(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize, dx: &mut [f32]) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(dx.len(), m * k);
+    for r in 0..m {
+        let dyr = &dy[r * n..(r + 1) * n];
+        let dxr = &mut dx[r * k..(r + 1) * k];
+        for (c, &d) in dyr.iter().enumerate() {
+            if d == 0.0 {
+                continue;
+            }
+            let wr = &w[c * k..(c + 1) * k];
+            for (o, &wv) in dxr.iter_mut().zip(wr.iter()) {
+                *o += d * wv;
+            }
+        }
+    }
+}
+
+/// `dw[N,K] += dy[M,N]ᵀ @ x[M,K]` — weight gradient of the linear.
+pub fn add_matmul_tn(dy: &[f32], x: &[f32], m: usize, n: usize, k: usize, dw: &mut [f32]) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dw.len(), n * k);
+    for r in 0..m {
+        let dyr = &dy[r * n..(r + 1) * n];
+        let xr = &x[r * k..(r + 1) * k];
+        for (c, &d) in dyr.iter().enumerate() {
+            if d == 0.0 {
+                continue;
+            }
+            let dwr = &mut dw[c * k..(c + 1) * k];
+            for (o, &xv) in dwr.iter_mut().zip(xr.iter()) {
+                *o += d * xv;
+            }
+        }
+    }
+}
+
+/// RMSNorm over rows of width `h`: `y = x · rsqrt(mean(x²)+eps) · g`.
+/// Returns `(y, inv_rms)` with one inverse-rms per row (the backward
+/// cache).
+pub fn rmsnorm(x: &[f32], g: &[f32], eps: f32, h: usize) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len() % h, 0);
+    let rows = x.len() / h;
+    let mut y = vec![0f32; x.len()];
+    let mut inv = vec![0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * h..(r + 1) * h];
+        let mut ms = 0f64;
+        for &v in xr {
+            ms += (v as f64) * (v as f64);
+        }
+        let ir = 1.0 / ((ms / h as f64) as f32 + eps).sqrt();
+        inv[r] = ir;
+        let yr = &mut y[r * h..(r + 1) * h];
+        for ((o, &v), &gv) in yr.iter_mut().zip(xr.iter()).zip(g.iter()) {
+            *o = v * ir * gv;
+        }
+    }
+    (y, inv)
+}
+
+/// RMSNorm backward: accumulates `dx += ∂L/∂x` and `dg += ∂L/∂g` from the
+/// output gradient `dy`, the forward input `x` and the cached `inv_rms`.
+pub fn rmsnorm_bwd(
+    dy: &[f32],
+    x: &[f32],
+    g: &[f32],
+    inv: &[f32],
+    h: usize,
+    dx: &mut [f32],
+    dg: &mut [f32],
+) {
+    let rows = x.len() / h;
+    for r in 0..rows {
+        let xr = &x[r * h..(r + 1) * h];
+        let dyr = &dy[r * h..(r + 1) * h];
+        let ir = inv[r];
+        // Σ_i dy_i · g_i · x_i (the shared mean-square term)
+        let mut dot = 0f64;
+        for i in 0..h {
+            dot += (dyr[i] * g[i] * xr[i]) as f64;
+        }
+        let coeff = ir * ir * ir / h as f32 * dot as f32;
+        let dxr = &mut dx[r * h..(r + 1) * h];
+        for i in 0..h {
+            dxr[i] += dyr[i] * g[i] * ir - xr[i] * coeff;
+            dg[i] += dyr[i] * xr[i] * ir;
+        }
+    }
+}
+
+/// Per-row absmax fake-quantization of activations to INTn (BitNet's
+/// 8-bit setting; python `act_quantize_ref`). The backward pass is a
+/// straight-through estimator, so no cache is needed.
+pub fn act_quant(x: &[f32], h: usize, bits: u32) -> Vec<f32> {
+    let qp = ((1i64 << (bits - 1)) - 1) as f32;
+    let rows = x.len() / h;
+    let mut y = vec![0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * h..(r + 1) * h];
+        let mut amax = 0f32;
+        for &v in xr {
+            amax = amax.max(v.abs());
+        }
+        let scale = qp / amax.max(1e-8);
+        let yr = &mut y[r * h..(r + 1) * h];
+        for (o, &v) in yr.iter_mut().zip(xr.iter()) {
+            *o = (v * scale).round().clamp(-qp - 1.0, qp) / scale;
+        }
+    }
+    y
+}
+
+/// In-place softmax over `row[..len]` (the causal prefix), numerically
+/// stable via max subtraction. Entries past `len` are zeroed.
+pub fn softmax_prefix(row: &mut [f32], len: usize) {
+    let mut mx = f32::NEG_INFINITY;
+    for &v in &row[..len] {
+        mx = mx.max(v);
+    }
+    let mut sum = 0f32;
+    for v in &mut row[..len] {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    for v in &mut row[..len] {
+        *v /= sum;
+    }
+    for v in &mut row[len..] {
+        *v = 0.0;
+    }
+}
+
+/// `log Σ exp(row)`, numerically stable.
+pub fn logsumexp(row: &[f32]) -> f32 {
+    let mut mx = f32::NEG_INFINITY;
+    for &v in row {
+        mx = mx.max(v);
+    }
+    let mut sum = 0f32;
+    for &v in row {
+        sum += (v - mx).exp();
+    }
+    mx + sum.ln()
+}
+
+/// SiLU `x·σ(x)` and its derivative `σ(x)(1 + x(1-σ(x)))`.
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+pub fn silu_grad(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_nt_small() {
+        // x = [[1,2],[3,4]], w = [[1,0],[0,1],[1,1]] (3 outputs)
+        let y = matmul_nt(&[1.0, 2.0, 3.0, 4.0], &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0], 2, 2, 3);
+        assert_eq!(y, vec![1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
+    }
+
+    #[test]
+    fn linear_backward_matches_numeric_gradient() {
+        let (m, k, n) = (2usize, 3usize, 2usize);
+        let x: Vec<f32> = (0..m * k).map(|i| (i as f32 - 2.5) * 0.3).collect();
+        let w: Vec<f32> = (0..n * k).map(|i| (i as f32 - 2.0) * 0.17).collect();
+        // L = Σ y²/2 ⇒ dy = y
+        let y = matmul_nt(&x, &w, m, k, n);
+        let mut dx = vec![0f32; m * k];
+        let mut dw = vec![0f32; n * k];
+        add_matmul_nn(&y, &w, m, n, k, &mut dx);
+        add_matmul_tn(&y, &x, m, n, k, &mut dw);
+        let loss = |x: &[f32], w: &[f32]| -> f32 {
+            matmul_nt(x, w, m, k, n).iter().map(|v| v * v / 2.0).sum()
+        };
+        let eps = 1e-3;
+        for i in 0..m * k {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (loss(&xp, &w) - loss(&xm, &w)) / (2.0 * eps);
+            assert!((num - dx[i]).abs() < 1e-2, "dx[{i}]: {num} vs {}", dx[i]);
+        }
+        for i in 0..n * k {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let num = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps);
+            assert!((num - dw[i]).abs() < 1e-2, "dw[{i}]: {num} vs {}", dw[i]);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_forward_and_backward() {
+        let h = 4;
+        let x: Vec<f32> = vec![0.5, -1.0, 2.0, 0.25, 1.0, 1.0, 1.0, 1.0];
+        let g: Vec<f32> = vec![1.0, 0.5, 2.0, 1.0];
+        let eps = 1e-5;
+        let (y, inv) = rmsnorm(&x, &g, eps, h);
+        // second row: mean(x²)=1 ⇒ y = g
+        for (a, b) in y[h..].iter().zip(g.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        // numeric gradient of L = Σ y²/2
+        let mut dx = vec![0f32; x.len()];
+        let mut dg = vec![0f32; h];
+        rmsnorm_bwd(&y, &x, &g, &inv, h, &mut dx, &mut dg);
+        let loss = |x: &[f32], g: &[f32]| -> f32 {
+            rmsnorm(x, g, eps, h).0.iter().map(|v| v * v / 2.0).sum()
+        };
+        let e = 1e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += e;
+            let mut xm = x.clone();
+            xm[i] -= e;
+            let num = (loss(&xp, &g) - loss(&xm, &g)) / (2.0 * e);
+            assert!((num - dx[i]).abs() < 2e-2, "dx[{i}]: {num} vs {}", dx[i]);
+        }
+        for i in 0..h {
+            let mut gp = g.clone();
+            gp[i] += e;
+            let mut gm = g.clone();
+            gm[i] -= e;
+            let num = (loss(&x, &gp) - loss(&x, &gm)) / (2.0 * e);
+            assert!((num - dg[i]).abs() < 2e-2, "dg[{i}]: {num} vs {}", dg[i]);
+        }
+    }
+
+    #[test]
+    fn act_quant_rows_on_grid() {
+        let x = vec![0.1f32, -0.5, 1.0, 0.3, 0.0, 0.0, 0.0, 0.0];
+        let q = act_quant(&x, 4, 8);
+        // max row 0 is 1.0 → scale 127; every value lands on k/127
+        for (a, b) in q[..4].iter().zip(x[..4].iter()) {
+            let k = a * 127.0;
+            assert!((k - k.round()).abs() < 1e-4);
+            assert!((a - b).abs() <= 0.5 / 127.0 + 1e-6);
+        }
+        // all-zero row stays zero (clamped scale, no NaN)
+        assert_eq!(&q[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn softmax_and_logsumexp_stable() {
+        let mut row = vec![1000.0f32, 1001.0, 999.0, 55.0];
+        softmax_prefix(&mut row, 3);
+        let sum: f32 = row[..3].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert_eq!(row[3], 0.0);
+        assert!(row[1] > row[0] && row[0] > row[2]);
+        let z = logsumexp(&[1000.0, 1001.0, 999.0]);
+        assert!(z.is_finite() && (z - 1001.4076).abs() < 1e-3);
+    }
+
+    #[test]
+    fn silu_matches_definition() {
+        for x in [-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let s = 1.0 / (1.0 + (-x).exp());
+            assert!((silu(x) - x * s).abs() < 1e-6);
+            let e = 1e-3;
+            let num = (silu(x + e) - silu(x - e)) / (2.0 * e);
+            assert!((silu_grad(x) - num).abs() < 1e-3);
+        }
+    }
+}

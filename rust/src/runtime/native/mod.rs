@@ -1,0 +1,410 @@
+//! Pure-Rust CPU reference backend: the paper's whole training loop —
+//! LLaMA forward/backward, cross-entropy, AdamW/Adafactor, and the §3
+//! stochastic-rounding update applied straight to the quantized grids
+//! (no FP32 master weights) — executable on any machine with nothing but
+//! this crate. No artifacts, no PJRT, no Python.
+//!
+//! The layout ([`spec`]) synthesizes the same manifest the AOT pipeline
+//! writes, so checkpoints, eval, the coordinator and the memory model
+//! work identically on both backends; [`model`] is the forward/backward
+//! twin of `python/compile/model.py`; [`optim`] mirrors
+//! `optim.py::apply_updates` including the SR seed stream, so the native
+//! backend is a *semantic* reference for the compiled graphs, not just an
+//! approximation.
+
+mod math;
+mod model;
+mod optim;
+mod spec;
+
+use std::borrow::Cow;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ModelConfig, VariantSpec};
+use crate::quant::sr::{hash_u32, uniform01};
+use crate::quant::{absmean_quantize, absmean_scale};
+
+use super::{Backend, Manifest, State, StepMetrics};
+
+/// The native CPU backend for one variant.
+pub struct NativeBackend {
+    hyper: spec::Hyper,
+    cfg: ModelConfig,
+    layout: spec::Layout,
+}
+
+impl NativeBackend {
+    /// Build the backend for `spec` (errors on unknown models or
+    /// unsupported bit widths — no filesystem access involved).
+    pub fn new(vspec: &VariantSpec) -> Result<Self> {
+        let (hyper, cfg, layout) = spec::build(vspec)?;
+        Ok(NativeBackend { hyper, cfg, layout })
+    }
+
+    fn net(&self) -> model::Net<'_> {
+        model::Net {
+            hyper: &self.hyper,
+            cfg: &self.cfg,
+            layout: &self.layout,
+        }
+    }
+
+    /// Reject states whose param layout does not match the manifest
+    /// before any indexing happens.
+    fn check_state(&self, state: &State) -> Result<()> {
+        if state.params.len() != self.layout.manifest.params.len() {
+            return Err(anyhow!(
+                "state has {} params, manifest wants {}",
+                state.params.len(),
+                self.layout.manifest.params.len()
+            ));
+        }
+        Ok(())
+    }
+
+    fn dense_view<'s>(&self, state: &'s State) -> Result<Vec<Cow<'s, [f32]>>> {
+        self.check_state(state)?;
+        state.params.iter().map(|p| p.values()).collect()
+    }
+
+    fn check_ternary(&self, ternary: bool) -> Result<()> {
+        if ternary && !self.has_ternary_inference() {
+            return Err(anyhow!("variant has no ternary-inference entry"));
+        }
+        Ok(())
+    }
+
+    /// Split a `[b, s+1]` token matrix into (inputs, labels) rows.
+    fn split_rows(&self, tokens: &[i32]) -> Result<(Vec<i32>, Vec<i32>, usize, usize)> {
+        let shape = &self.layout.manifest.tokens_shape;
+        let (b, w) = (shape[0], shape[1]);
+        if tokens.len() != b * w {
+            return Err(anyhow!("expected {}x{} tokens, got {}", b, w, tokens.len()));
+        }
+        let s = w - 1;
+        let mut inputs = Vec::with_capacity(b * s);
+        let mut labels = Vec::with_capacity(b * s);
+        for bi in 0..b {
+            let row = &tokens[bi * w..(bi + 1) * w];
+            inputs.extend_from_slice(&row[..s]);
+            labels.extend_from_slice(&row[1..]);
+        }
+        Ok((inputs, labels, b, s))
+    }
+}
+
+/// Deterministic standard normal via Box–Muller on the counter-hash PRNG
+/// (the same stream family the SR kernels draw from).
+fn normal(counter: u32, seed: u32) -> f32 {
+    let u1 = uniform01(counter, seed);
+    let u2 = uniform01(counter.wrapping_add(1), seed);
+    (-2.0 * (1.0 - u1).ln()).sqrt() * (std::f32::consts::TAU * u2).cos()
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.layout.manifest
+    }
+
+    /// LLaMA-style init (normal·0.02, norms at one); DQT modes project
+    /// every linear onto its grid and store the fixed AbsMean scale as the
+    /// `.s` companion (paper §3.2 skips Eq. 2-4 after initialization).
+    fn init_state(&self, seed: u32) -> Result<State> {
+        let metas = &self.layout.manifest.params;
+        let mut params: Vec<Vec<f32>> = Vec::with_capacity(metas.len());
+        let mut pi = 0;
+        while pi < metas.len() {
+            let meta = &metas[pi];
+            let n = meta.numel();
+            if meta.name.ends_with("norm") {
+                params.push(vec![1.0; n]);
+                pi += 1;
+                continue;
+            }
+            let pseed = hash_u32(pi as u32, seed);
+            let mut w = vec![0f32; n];
+            for (i, o) in w.iter_mut().enumerate() {
+                *o = normal(2 * i as u32, pseed) * self.hyper.init_std;
+            }
+            if meta.is_grid() {
+                let s = absmean_scale(&w, self.hyper.grid_bits);
+                params.push(absmean_quantize(&w, self.hyper.grid_bits, s));
+                params.push(vec![s]);
+                pi += 2;
+            } else {
+                params.push(w);
+                pi += 1;
+            }
+        }
+        let opt = self
+            .layout
+            .manifest
+            .opt_state
+            .iter()
+            .map(|o| vec![0.0; o.numel()])
+            .collect();
+        Ok(State::from_dense(params, opt))
+    }
+
+    fn train_step(
+        &self,
+        state: State,
+        tokens: &[i32],
+        sr_seed: u32,
+        lr: f32,
+    ) -> Result<(State, StepMetrics)> {
+        let (inputs, labels, b, s) = self.split_rows(tokens)?;
+        self.check_state(&state)?;
+        let mut params: Vec<Vec<f32>> = state
+            .params
+            .iter()
+            .map(|p| p.to_vec())
+            .collect::<Result<_>>()?;
+        let mut opt = state.opt;
+        if opt.len() != self.layout.manifest.opt_state.len() || opt.is_empty() {
+            return Err(anyhow!("optimizer state does not match the manifest"));
+        }
+        let (loss, grads) = {
+            let view: Vec<Cow<'_, [f32]>> =
+                params.iter().map(|v| Cow::Borrowed(v.as_slice())).collect();
+            self.net().loss_and_grads(&view, &inputs, &labels, b, s)?
+        };
+        let (upd_frac, gnorm) = optim::apply_updates(
+            &self.hyper,
+            &self.layout,
+            &mut params,
+            grads,
+            &mut opt,
+            lr,
+            sr_seed,
+        );
+        Ok((
+            State::from_dense(params, opt),
+            StepMetrics {
+                loss,
+                upd_frac,
+                gnorm,
+            },
+        ))
+    }
+
+    fn eval_step(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<(f32, f32)> {
+        self.check_ternary(ternary)?;
+        let (inputs, labels, b, s) = self.split_rows(tokens)?;
+        let view = self.dense_view(state)?;
+        self.net().nll_sums(&view, &inputs, &labels, b, s, ternary)
+    }
+
+    fn logits(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<Vec<f32>> {
+        self.check_ternary(ternary)?;
+        let shape = &self.layout.manifest.logits_tokens_shape;
+        let (b, s) = (shape[0], shape[1]);
+        if tokens.len() != b * s {
+            return Err(anyhow!("expected {}x{} tokens, got {}", b, s, tokens.len()));
+        }
+        let view = self.dense_view(state)?;
+        Ok(self.net().forward(&view, tokens, b, s, ternary)?.logits)
+    }
+
+    fn has_ternary_inference(&self) -> bool {
+        self.hyper.mode.quantized()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::quant::qrange;
+
+    fn backend(mode: Mode, bits: f64) -> NativeBackend {
+        NativeBackend::new(&VariantSpec::new("test", mode, bits)).unwrap()
+    }
+
+    fn tiny_tokens(backend: &NativeBackend, seed: u32) -> Vec<i32> {
+        let shape = &backend.layout.manifest.tokens_shape;
+        let v = backend.cfg.vocab_size as u32;
+        (0..shape[0] * shape[1])
+            .map(|i| (hash_u32(i as u32, seed) % v) as i32)
+            .collect()
+    }
+
+    #[test]
+    fn init_shapes_match_manifest_and_grids_are_on_grid() {
+        for (mode, bits) in [(Mode::Fp32, 1.58), (Mode::Dqt, 1.58), (Mode::Dqt, 4.0)] {
+            let be = backend(mode, bits);
+            let st = be.init_state(42).unwrap();
+            assert_eq!(st.params.len(), be.layout.manifest.params.len());
+            assert_eq!(st.opt.len(), be.layout.manifest.opt_state.len());
+            for (meta, p) in be.layout.manifest.params.iter().zip(&st.params) {
+                assert_eq!(p.numel(), meta.numel(), "{}", meta.name);
+            }
+            assert_eq!(st.step(), 0.0);
+            let (qn, qp) = qrange(be.hyper.grid_bits);
+            for (i, meta) in be.layout.manifest.params.iter().enumerate() {
+                if meta.is_grid() {
+                    let s = st.params[i + 1].scalar().unwrap();
+                    assert!(s > 0.0);
+                    for &v in st.params[i].values().unwrap().iter() {
+                        let k = (v * s) as f64;
+                        assert!((k - k.round()).abs() < 1e-3, "{} off grid", meta.name);
+                        assert!(k >= qn - 1e-3 && k <= qp + 1e-3);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let be = backend(Mode::Dqt, 1.58);
+        let a = be.init_state(7).unwrap();
+        let b = be.init_state(7).unwrap();
+        let c = be.init_state(8).unwrap();
+        for (x, y) in a.params.iter().zip(b.params.iter()) {
+            assert_eq!(x, y);
+        }
+        assert!(a.params.iter().zip(c.params.iter()).any(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn train_step_runs_and_counts_updates() {
+        let be = backend(Mode::Dqt, 1.58);
+        let st = be.init_state(1).unwrap();
+        let tokens = tiny_tokens(&be, 3);
+        let (st2, m1) = be.train_step(st, &tokens, 11, 1e-2).unwrap();
+        assert!(m1.loss.is_finite() && m1.loss > 0.0);
+        assert!(m1.gnorm > 0.0);
+        assert_eq!(st2.step(), 1.0);
+        // weights stay on the ternary grid after the SR update
+        for (i, meta) in be.layout.manifest.params.iter().enumerate() {
+            if meta.is_grid() {
+                let s = st2.params[i + 1].scalar().unwrap();
+                for &v in st2.params[i].values().unwrap().iter() {
+                    let k = v * s;
+                    assert!((k - k.round()).abs() < 1e-3);
+                }
+            }
+        }
+        let (_, m2) = be.train_step(st2, &tokens, 12, 1e-2).unwrap();
+        assert!(m2.loss.is_finite());
+    }
+
+    #[test]
+    fn train_step_is_deterministic() {
+        let be = backend(Mode::Dqt, 1.58);
+        let tokens = tiny_tokens(&be, 9);
+        let run = || {
+            let st = be.init_state(5).unwrap();
+            let (st2, m) = be.train_step(st, &tokens, 77, 1e-3).unwrap();
+            (st2, m)
+        };
+        let (a, ma) = run();
+        let (b, mb) = run();
+        assert_eq!(ma.loss, mb.loss);
+        assert_eq!(ma.upd_frac, mb.upd_frac);
+        for (x, y) in a.params.iter().zip(b.params.iter()) {
+            assert_eq!(x, y);
+        }
+        // a different SR seed flips different trits
+        let st = be.init_state(5).unwrap();
+        let (c, _) = be.train_step(st, &tokens, 78, 1e-3).unwrap();
+        assert!(a.params.iter().zip(c.params.iter()).any(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn eval_and_logits_shapes() {
+        let be = backend(Mode::Dqt, 8.0);
+        let st = be.init_state(2).unwrap();
+        let tokens = tiny_tokens(&be, 4);
+        let (nll, count) = be.eval_step(&st, &tokens, false).unwrap();
+        assert!(nll.is_finite() && nll > 0.0);
+        assert!(count > 0.0);
+        // ternary inference changes the model (§A.2 projection)
+        let (nll3, count3) = be.eval_step(&st, &tokens, true).unwrap();
+        assert_eq!(count, count3);
+        assert_ne!(nll, nll3);
+        let shape = &be.layout.manifest.logits_tokens_shape;
+        let lt: Vec<i32> = (0..shape[0] * shape[1])
+            .map(|i| (i % be.cfg.vocab_size) as i32)
+            .collect();
+        let logits = be.logits(&st, &lt, false).unwrap();
+        assert_eq!(logits.len(), shape[0] * shape[1] * be.cfg.vocab_size);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fp32_has_no_ternary_entry() {
+        let be = backend(Mode::Fp32, 1.58);
+        let st = be.init_state(1).unwrap();
+        let tokens = tiny_tokens(&be, 1);
+        assert!(!be.has_ternary_inference());
+        assert!(be.eval_step(&st, &tokens, true).is_err());
+    }
+
+    #[test]
+    fn bad_tokens_error_cleanly() {
+        let be = backend(Mode::Dqt, 1.58);
+        let st = be.init_state(1).unwrap();
+        let mut tokens = tiny_tokens(&be, 1);
+        assert!(be
+            .train_step(st.clone(), &tokens[..tokens.len() - 1], 0, 1e-3)
+            .is_err());
+        tokens[3] = be.cfg.vocab_size as i32 + 5;
+        assert!(be.train_step(st, &tokens, 0, 1e-3).is_err());
+    }
+
+    /// End-to-end gradient check of the full backward pass (embedding →
+    /// RoPE attention → SwiGLU → tied head → masked CE) against numeric
+    /// differences. Only valid in fp32 mode, where the loss is smooth —
+    /// every quantized path is a step function under STE by design.
+    #[test]
+    fn fp32_gradients_match_numeric_differences() {
+        let be = backend(Mode::Fp32, 1.58);
+        let st = be.init_state(3).unwrap();
+        let tokens = tiny_tokens(&be, 6);
+        let (inputs, labels, b, s) = be.split_rows(&tokens).unwrap();
+        let mut params: Vec<Vec<f32>> = st.params.iter().map(|p| p.to_vec().unwrap()).collect();
+        let loss_of = |params: &[Vec<f32>]| -> f32 {
+            let view: Vec<std::borrow::Cow<'_, [f32]>> =
+                params.iter().map(|v| Cow::Borrowed(v.as_slice())).collect();
+            be.net()
+                .loss_and_grads(&view, &inputs, &labels, b, s)
+                .unwrap()
+                .0
+        };
+        let (_, grads) = {
+            let view: Vec<Cow<'_, [f32]>> =
+                params.iter().map(|v| Cow::Borrowed(v.as_slice())).collect();
+            be.net().loss_and_grads(&view, &inputs, &labels, b, s).unwrap()
+        };
+        // probe a few entries of every trainable tensor
+        let eps = 3e-3;
+        for (pi, meta) in be.layout.manifest.params.iter().enumerate() {
+            let Some(g) = grads[pi].as_ref() else { continue };
+            let n = meta.numel();
+            for probe in 0..3 {
+                let i = (hash_u32(probe, pi as u32) as usize) % n;
+                let orig = params[pi][i];
+                params[pi][i] = orig + eps;
+                let up = loss_of(&params);
+                params[pi][i] = orig - eps;
+                let down = loss_of(&params);
+                params[pi][i] = orig;
+                let num = (up - down) / (2.0 * eps);
+                let tol = 2e-2f32.max(0.2 * num.abs());
+                assert!(
+                    (num - g[i]).abs() < tol,
+                    "{}[{i}]: numeric {num} vs analytic {}",
+                    meta.name,
+                    g[i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,589 @@
+//! The native LLaMA-structured model: embedding → N × [RMSNorm → causal
+//! MHA with RoPE → residual → RMSNorm → SwiGLU MLP → residual] → final
+//! RMSNorm → tied LM head, with a hand-written backward pass.
+//!
+//! Mirrors `python/compile/model.py` + `quant.py` semantics exactly:
+//! the seven per-layer projections run under the variant's weight-handling
+//! mode (fp32 / BitNet-STE / DQT grid / §A.2 ternary-inference), their
+//! inputs are absmax-fake-quantized activations (STE backward), and the
+//! embedding/norms/tied head stay high-precision. The backward pass
+//! treats every straight-through estimator as identity, so gradients for
+//! grid weights land on the grid values themselves — what the SR update
+//! rule (paper §3) consumes.
+
+use std::borrow::Cow;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Mode, ModelConfig};
+use crate::data::tokenizer::PAD_ID;
+use crate::quant::{absmean_quantize, absmean_scale};
+
+use super::math::{
+    act_quant, add_matmul_nn, add_matmul_tn, logsumexp, matmul_nt, rmsnorm, rmsnorm_bwd, silu,
+    silu_grad, softmax_prefix,
+};
+use super::spec::{Hyper, Layout, Lin};
+
+pub(super) type Params<'a> = [Cow<'a, [f32]>];
+
+/// Per-param gradient buffers in manifest order (`None` for `.s` scales).
+pub(super) type Grads = Vec<Option<Vec<f32>>>;
+
+/// The model context: hyperparameters + parameter index map.
+pub(super) struct Net<'a> {
+    pub hyper: &'a Hyper,
+    pub cfg: &'a ModelConfig,
+    pub layout: &'a Layout,
+}
+
+/// Per-layer forward caches consumed by the backward pass. (The STE
+/// treatment means post-quantization activations `xq*` are the matmul
+/// inputs the weight gradients see; the pre-quantization values only
+/// matter where a nonlinearity needs them.)
+struct LayerCache {
+    x_in: Vec<f32>,
+    inv1: Vec<f32>,
+    xq: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// attention probabilities `[B, A, S, S]` (zeros above the diagonal)
+    att: Vec<f32>,
+    ctx_q: Vec<f32>,
+    h_mid: Vec<f32>,
+    inv2: Vec<f32>,
+    xq2: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    down_in_q: Vec<f32>,
+}
+
+/// Forward result: logits plus every cache the backward pass needs.
+pub(super) struct Forward {
+    /// `[B·S, V]` row-major
+    pub logits: Vec<f32>,
+    tokens: Vec<usize>,
+    layers: Vec<LayerCache>,
+    x_final_in: Vec<f32>,
+    xf: Vec<f32>,
+    invf: Vec<f32>,
+}
+
+impl<'a> Net<'a> {
+    /// Effective weight of one projection under the variant's mode:
+    /// fp32/DQT use the stored values directly; BitNet re-quantizes its
+    /// master to ternary every forward; `dqt_ternary_inf` (and the
+    /// deploy-time `ternary` override) project the grid to ternary via
+    /// AbsMean. All projections are STE — gradients flow to the stored
+    /// weight.
+    fn effective_weight<'w>(&self, w: &'w [f32], ternary: bool) -> Cow<'w, [f32]> {
+        let project = match self.hyper.mode {
+            Mode::Fp32 => false,
+            Mode::Bitnet158 | Mode::DqtTernaryInf => true,
+            Mode::Dqt | Mode::DqtAbsmax => ternary,
+        };
+        if project {
+            let s3 = absmean_scale(w, 1.58);
+            Cow::Owned(absmean_quantize(w, 1.58, s3))
+        } else {
+            Cow::Borrowed(w)
+        }
+    }
+
+    /// Activation fake-quantization in quantized modes, identity in fp32.
+    fn maybe_quant(&self, x: &[f32], width: usize) -> Vec<f32> {
+        if self.hyper.mode == Mode::Fp32 {
+            x.to_vec()
+        } else {
+            act_quant(x, width, self.hyper.act_bits)
+        }
+    }
+
+    /// One projection forward over an already-quantized input (shared by
+    /// wq/wk/wv and w_gate/w_up so the act-quant runs once per group).
+    #[allow(clippy::too_many_arguments)]
+    fn lin_fwd(
+        &self,
+        params: &Params,
+        lin: Lin,
+        input_q: &[f32],
+        m: usize,
+        k_in: usize,
+        n_out: usize,
+        ternary: bool,
+    ) -> Vec<f32> {
+        let wf = self.effective_weight(&params[lin.w], ternary);
+        matmul_nt(input_q, &wf, m, k_in, n_out)
+    }
+
+    /// One projection backward: accumulates the weight gradient (STE: on
+    /// the stored param) and `dx += dy @ W_eff`.
+    #[allow(clippy::too_many_arguments)]
+    fn lin_bwd(
+        &self,
+        params: &Params,
+        lin: Lin,
+        input_q: &[f32],
+        dy: &[f32],
+        m: usize,
+        k_in: usize,
+        n_out: usize,
+        grads: &mut [Option<Vec<f32>>],
+        dx: &mut [f32],
+    ) {
+        let wf = self.effective_weight(&params[lin.w], false);
+        if let Some(dw) = grads[lin.w].as_mut() {
+            add_matmul_tn(dy, input_q, m, n_out, k_in, dw);
+        }
+        add_matmul_nn(dy, &wf, m, n_out, k_in, dx);
+    }
+
+    fn rope_tables(&self, s: usize) -> (Vec<f32>, Vec<f32>) {
+        let d = self.cfg.hidden_size / self.cfg.num_attention_heads;
+        let half = d / 2;
+        let mut cos = vec![0f32; s * half];
+        let mut sin = vec![0f32; s * half];
+        for t in 0..s {
+            for j in 0..half {
+                let inv = 1.0 / self.hyper.rope_theta.powf(2.0 * j as f32 / d as f32);
+                let ang = t as f32 * inv;
+                cos[t * half + j] = ang.cos();
+                sin[t * half + j] = ang.sin();
+            }
+        }
+        (cos, sin)
+    }
+
+    /// Full forward over a `[b, s]` token matrix; caches everything the
+    /// backward pass needs. `ternary` forces §A.2 deploy-time ternary
+    /// projection of the grid weights.
+    pub fn forward(
+        &self,
+        params: &Params,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        ternary: bool,
+    ) -> Result<Forward> {
+        let (h, i_, v) = (
+            self.cfg.hidden_size,
+            self.cfg.intermediate_size,
+            self.cfg.vocab_size,
+        );
+        let nh = self.cfg.num_attention_heads;
+        let d = h / nh;
+        let m = b * s;
+        if tokens.len() != m {
+            return Err(anyhow!("expected {m} tokens, got {}", tokens.len()));
+        }
+        let ids: Vec<usize> = tokens
+            .iter()
+            .map(|&t| {
+                if (0..v as i32).contains(&t) {
+                    Ok(t as usize)
+                } else {
+                    Err(anyhow!("token id {t} outside vocab 0..{v}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        // embedding lookup
+        let emb = &params[self.layout.emb];
+        let mut x = vec![0f32; m * h];
+        for (r, &id) in ids.iter().enumerate() {
+            x[r * h..(r + 1) * h].copy_from_slice(&emb[id * h..(id + 1) * h]);
+        }
+
+        let (cos, sin) = self.rope_tables(s);
+        let half = d / 2;
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        let mut layers = Vec::with_capacity(self.cfg.num_hidden_layers);
+
+        for li in self.layout.layers.iter() {
+            let x_in = x;
+            // --- attention block ---
+            let (xn, inv1) = rmsnorm(&x_in, &params[li.attn_norm], self.hyper.rms_eps, h);
+            let xq = self.maybe_quant(&xn, h);
+            let mut q = self.lin_fwd(params, li.wq, &xq, m, h, h, ternary);
+            let mut k = self.lin_fwd(params, li.wk, &xq, m, h, h, ternary);
+            let v_proj = self.lin_fwd(params, li.wv, &xq, m, h, h, ternary);
+            for buf in [&mut q, &mut k] {
+                apply_rope(buf, &cos, &sin, b, s, nh, half);
+            }
+            let mut att = vec![0f32; b * nh * s * s];
+            let mut ctx = vec![0f32; m * h];
+            for bi in 0..b {
+                for a in 0..nh {
+                    let base = a * d;
+                    for i in 0..s {
+                        let qi = &q[(bi * s + i) * h + base..][..d];
+                        let row = &mut att[((bi * nh + a) * s + i) * s..][..s];
+                        for (j, rj) in row.iter_mut().enumerate().take(i + 1) {
+                            let kj = &k[(bi * s + j) * h + base..][..d];
+                            let mut acc = 0f32;
+                            for (qa, kb) in qi.iter().zip(kj.iter()) {
+                                acc += qa * kb;
+                            }
+                            *rj = acc * inv_sqrt_d;
+                        }
+                        softmax_prefix(row, i + 1);
+                        let ci = (bi * s + i) * h + base;
+                        for (j, &p) in row.iter().enumerate().take(i + 1) {
+                            let vj = &v_proj[(bi * s + j) * h + base..][..d];
+                            for (o, &vv) in ctx[ci..ci + d].iter_mut().zip(vj.iter()) {
+                                *o += p * vv;
+                            }
+                        }
+                    }
+                }
+            }
+            let ctx_q = self.maybe_quant(&ctx, h);
+            let attn_out = self.lin_fwd(params, li.wo, &ctx_q, m, h, h, ternary);
+            let mut h_mid = x_in.clone();
+            for (o, &a) in h_mid.iter_mut().zip(attn_out.iter()) {
+                *o += a;
+            }
+
+            // --- MLP block (SwiGLU) ---
+            let (xn2, inv2) = rmsnorm(&h_mid, &params[li.mlp_norm], self.hyper.rms_eps, h);
+            let xq2 = self.maybe_quant(&xn2, h);
+            let gate = self.lin_fwd(params, li.w_gate, &xq2, m, h, i_, ternary);
+            let up = self.lin_fwd(params, li.w_up, &xq2, m, h, i_, ternary);
+            let mut down_in = vec![0f32; m * i_];
+            for ((o, &g), &u) in down_in.iter_mut().zip(gate.iter()).zip(up.iter()) {
+                *o = silu(g) * u;
+            }
+            let down_in_q = self.maybe_quant(&down_in, i_);
+            let down_out = self.lin_fwd(params, li.w_down, &down_in_q, m, i_, h, ternary);
+            let mut x_out = h_mid.clone();
+            for (o, &dv) in x_out.iter_mut().zip(down_out.iter()) {
+                *o += dv;
+            }
+
+            layers.push(LayerCache {
+                x_in,
+                inv1,
+                xq,
+                q,
+                k,
+                v: v_proj,
+                att,
+                ctx_q,
+                h_mid,
+                inv2,
+                xq2,
+                gate,
+                up,
+                down_in_q,
+            });
+            x = x_out;
+        }
+
+        let x_final_in = x;
+        let (xf, invf) =
+            rmsnorm(&x_final_in, &params[self.layout.final_norm], self.hyper.rms_eps, h);
+        // tied LM head — high precision, never quantized
+        let logits = matmul_nt(&xf, emb, m, h, v);
+        Ok(Forward {
+            logits,
+            tokens: ids,
+            layers,
+            x_final_in,
+            xf,
+            invf,
+        })
+    }
+
+    /// `(sum NLL, token count)` over non-pad label positions.
+    pub fn nll_sums(
+        &self,
+        params: &Params,
+        inputs: &[i32],
+        labels: &[i32],
+        b: usize,
+        s: usize,
+        ternary: bool,
+    ) -> Result<(f32, f32)> {
+        let v = self.cfg.vocab_size;
+        let fwd = self.forward(params, inputs, b, s, ternary)?;
+        let mut nll = 0f64;
+        let mut count = 0f64;
+        for (r, &label) in labels.iter().enumerate() {
+            if label == PAD_ID {
+                continue;
+            }
+            if !(0..v as i32).contains(&label) {
+                return Err(anyhow!("label id {label} outside vocab 0..{v}"));
+            }
+            let row = &fwd.logits[r * v..(r + 1) * v];
+            nll += (logsumexp(row) - row[label as usize]) as f64;
+            count += 1.0;
+        }
+        Ok((nll as f32, count as f32))
+    }
+
+    /// Mean masked cross-entropy + gradients for every trainable param
+    /// (aligned to the manifest's param order; `None` for `.s` scales).
+    pub fn loss_and_grads(
+        &self,
+        params: &Params,
+        inputs: &[i32],
+        labels: &[i32],
+        b: usize,
+        s: usize,
+    ) -> Result<(f32, Grads)> {
+        let (h, i_, v) = (
+            self.cfg.hidden_size,
+            self.cfg.intermediate_size,
+            self.cfg.vocab_size,
+        );
+        let nh = self.cfg.num_attention_heads;
+        let d = h / nh;
+        let half = d / 2;
+        let m = b * s;
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        let fwd = self.forward(params, inputs, b, s, false)?;
+
+        let mut grads: Grads = self
+            .layout
+            .manifest
+            .params
+            .iter()
+            .map(|p| {
+                if p.is_scale() {
+                    None
+                } else {
+                    Some(vec![0f32; p.numel()])
+                }
+            })
+            .collect();
+
+        // --- cross-entropy: loss + dlogits ---
+        let n_mask = labels.iter().filter(|&&l| l != PAD_ID).count();
+        let denom = (n_mask as f32).max(1.0);
+        let mut loss = 0f64;
+        let mut dlogits = vec![0f32; m * v];
+        for (r, &label) in labels.iter().enumerate() {
+            if label == PAD_ID {
+                continue;
+            }
+            if !(0..v as i32).contains(&label) {
+                return Err(anyhow!("label id {label} outside vocab 0..{v}"));
+            }
+            let row = &fwd.logits[r * v..(r + 1) * v];
+            let logz = logsumexp(row);
+            loss += ((logz - row[label as usize]) / denom) as f64;
+            let drow = &mut dlogits[r * v..(r + 1) * v];
+            for (o, &lv) in drow.iter_mut().zip(row.iter()) {
+                *o = (lv - logz).exp() / denom;
+            }
+            drow[label as usize] -= 1.0 / denom;
+        }
+
+        // --- tied head backward ---
+        let emb = &params[self.layout.emb];
+        let mut dxf = vec![0f32; m * h];
+        add_matmul_nn(&dlogits, emb, m, v, h, &mut dxf);
+        if let Some(demb) = grads[self.layout.emb].as_mut() {
+            add_matmul_tn(&dlogits, &fwd.xf, m, v, h, demb);
+        }
+        drop(dlogits);
+
+        // --- final RMSNorm backward ---
+        let mut dx = vec![0f32; m * h];
+        {
+            let mut dg = grads[self.layout.final_norm].take().unwrap();
+            rmsnorm_bwd(
+                &dxf,
+                &fwd.x_final_in,
+                &params[self.layout.final_norm],
+                &fwd.invf,
+                h,
+                &mut dx,
+                &mut dg,
+            );
+            grads[self.layout.final_norm] = Some(dg);
+        }
+
+        // --- layers, reversed ---
+        let (cos, sin) = self.rope_tables(s);
+        for (li, cache) in self.layout.layers.iter().zip(fwd.layers.iter()).rev() {
+            // x_out = h_mid + w_down(down_in_q)
+            let mut dh = dx.clone(); // residual branch
+            let mut d_down_in = vec![0f32; m * i_];
+            self.lin_bwd(
+                params, li.w_down, &cache.down_in_q, &dx, m, i_, h, &mut grads, &mut d_down_in,
+            );
+            // down_in = silu(gate) · up
+            let mut dgate = vec![0f32; m * i_];
+            let mut dup = vec![0f32; m * i_];
+            for r in 0..m * i_ {
+                let g = cache.gate[r];
+                dgate[r] = d_down_in[r] * cache.up[r] * silu_grad(g);
+                dup[r] = d_down_in[r] * silu(g);
+            }
+            drop(d_down_in);
+            let mut dxn2 = vec![0f32; m * h];
+            self.lin_bwd(params, li.w_up, &cache.xq2, &dup, m, h, i_, &mut grads, &mut dxn2);
+            self.lin_bwd(params, li.w_gate, &cache.xq2, &dgate, m, h, i_, &mut grads, &mut dxn2);
+            {
+                let mut dg = grads[li.mlp_norm].take().unwrap();
+                rmsnorm_bwd(
+                    &dxn2,
+                    &cache.h_mid,
+                    &params[li.mlp_norm],
+                    &cache.inv2,
+                    h,
+                    &mut dh,
+                    &mut dg,
+                );
+                grads[li.mlp_norm] = Some(dg);
+            }
+
+            // h_mid = x_in + wo(ctx_q)
+            let mut dx_in = dh.clone(); // residual branch
+            let mut dctx = vec![0f32; m * h];
+            self.lin_bwd(params, li.wo, &cache.ctx_q, &dh, m, h, h, &mut grads, &mut dctx);
+
+            // attention backward (per batch × head)
+            let mut dq = vec![0f32; m * h];
+            let mut dk = vec![0f32; m * h];
+            let mut dv = vec![0f32; m * h];
+            for bi in 0..b {
+                for a in 0..nh {
+                    let base = a * d;
+                    for i in 0..s {
+                        let arow = &cache.att[((bi * nh + a) * s + i) * s..][..s];
+                        let dci = &dctx[(bi * s + i) * h + base..][..d];
+                        // datt + dv
+                        let mut datt = vec![0f32; i + 1];
+                        for (j, dj) in datt.iter_mut().enumerate() {
+                            let vj = &cache.v[(bi * s + j) * h + base..][..d];
+                            let mut acc = 0f32;
+                            for (ca, vb) in dci.iter().zip(vj.iter()) {
+                                acc += ca * vb;
+                            }
+                            *dj = acc;
+                            let p = arow[j];
+                            if p != 0.0 {
+                                let dvj = &mut dv[(bi * s + j) * h + base..][..d];
+                                for (o, &ca) in dvj.iter_mut().zip(dci.iter()) {
+                                    *o += p * ca;
+                                }
+                            }
+                        }
+                        // softmax backward
+                        let mut tsum = 0f32;
+                        for (j, &dj) in datt.iter().enumerate() {
+                            tsum += dj * arow[j];
+                        }
+                        let qi = &cache.q[(bi * s + i) * h + base..][..d];
+                        let dqi = &mut dq[(bi * s + i) * h + base..][..d];
+                        for (j, &dj) in datt.iter().enumerate() {
+                            let dz = arow[j] * (dj - tsum) * inv_sqrt_d;
+                            if dz == 0.0 {
+                                continue;
+                            }
+                            let kj = &cache.k[(bi * s + j) * h + base..][..d];
+                            for (o, &kv) in dqi.iter_mut().zip(kj.iter()) {
+                                *o += dz * kv;
+                            }
+                            let dkj = &mut dk[(bi * s + j) * h + base..][..d];
+                            for (o, &qv) in dkj.iter_mut().zip(qi.iter()) {
+                                *o += dz * qv;
+                            }
+                        }
+                    }
+                }
+            }
+            drop(dctx);
+            // RoPE is an orthogonal rotation — backward is the inverse spin
+            for buf in [&mut dq, &mut dk] {
+                unapply_rope(buf, &cos, &sin, b, s, nh, half);
+            }
+            let mut dxn = vec![0f32; m * h];
+            self.lin_bwd(params, li.wq, &cache.xq, &dq, m, h, h, &mut grads, &mut dxn);
+            self.lin_bwd(params, li.wk, &cache.xq, &dk, m, h, h, &mut grads, &mut dxn);
+            self.lin_bwd(params, li.wv, &cache.xq, &dv, m, h, h, &mut grads, &mut dxn);
+            {
+                let mut dg = grads[li.attn_norm].take().unwrap();
+                rmsnorm_bwd(
+                    &dxn,
+                    &cache.x_in,
+                    &params[li.attn_norm],
+                    &cache.inv1,
+                    h,
+                    &mut dx_in,
+                    &mut dg,
+                );
+                grads[li.attn_norm] = Some(dg);
+            }
+            dx = dx_in;
+        }
+
+        // --- embedding lookup backward ---
+        if let Some(demb) = grads[self.layout.emb].as_mut() {
+            for (r, &id) in fwd.tokens.iter().enumerate() {
+                let row = &dx[r * h..(r + 1) * h];
+                let er = &mut demb[id * h..(id + 1) * h];
+                for (o, &g) in er.iter_mut().zip(row.iter()) {
+                    *o += g;
+                }
+            }
+        }
+
+        Ok((loss as f32, grads))
+    }
+}
+
+/// Rotate adjacent pairs of each head's dims by the position angle
+/// (`[M,H]` layout, heads = contiguous `2·half` column blocks).
+fn apply_rope(x: &mut [f32], cos: &[f32], sin: &[f32], b: usize, s: usize, nh: usize, half: usize) {
+    let d = 2 * half;
+    let h = nh * d;
+    for bi in 0..b {
+        for i in 0..s {
+            let row = (bi * s + i) * h;
+            for a in 0..nh {
+                let base = row + a * d;
+                for j in 0..half {
+                    let (c, sn) = (cos[i * half + j], sin[i * half + j]);
+                    let x0 = x[base + 2 * j];
+                    let x1 = x[base + 2 * j + 1];
+                    x[base + 2 * j] = x0 * c - x1 * sn;
+                    x[base + 2 * j + 1] = x0 * sn + x1 * c;
+                }
+            }
+        }
+    }
+}
+
+/// Inverse rotation (RoPE backward).
+fn unapply_rope(
+    x: &mut [f32],
+    cos: &[f32],
+    sin: &[f32],
+    b: usize,
+    s: usize,
+    nh: usize,
+    half: usize,
+) {
+    let d = 2 * half;
+    let h = nh * d;
+    for bi in 0..b {
+        for i in 0..s {
+            let row = (bi * s + i) * h;
+            for a in 0..nh {
+                let base = row + a * d;
+                for j in 0..half {
+                    let (c, sn) = (cos[i * half + j], sin[i * half + j]);
+                    let y0 = x[base + 2 * j];
+                    let y1 = x[base + 2 * j + 1];
+                    x[base + 2 * j] = y0 * c + y1 * sn;
+                    x[base + 2 * j + 1] = -y0 * sn + y1 * c;
+                }
+            }
+        }
+    }
+}

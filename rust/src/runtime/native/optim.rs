@@ -1,0 +1,349 @@
+//! Native optimizer step: AdamW / Adafactor dense updates, the paper's
+//! §3 stochastic-rounding projection of grid weights (no FP32 master
+//! anywhere), the Fig. 5 absmax ablation, Fig. 7 interventions, abl1
+//! scale recomputation and the §4.3 low-precision storage environments.
+//! Twin of `python/compile/optim.py::apply_updates` — including the
+//! per-tensor SR seed stream `hash_u32(trainable_index, sr_seed)`.
+
+use crate::config::{Env, Mode};
+use crate::quant::sr::{hash_u32, sr_scalar};
+use crate::quant::{absmean_scale, bf16, fp8, qrange};
+
+use super::model::Grads;
+use super::spec::{Hyper, Intervention, Layout, OptSlots};
+
+const ADAFACTOR_B2: f32 = 0.99;
+const ADAFACTOR_EPS: f32 = 1e-30;
+
+/// Storage cast of environment `env` (weights, Adam first moment).
+fn env_cast(x: &mut [f32], env: Env) {
+    match env {
+        Env::Fp32 => {}
+        Env::Bf16 => bf16::cast_slice(x),
+        Env::Fp8 => fp8::cast_slice(x, fp8::Format::E4M3),
+    }
+}
+
+/// Cast for optimizer *second-moment* state: E4M3's 448 max overflows
+/// Adam's v, so the fp8 env stores it as E5M2 (range over precision) —
+/// the MS-AMP O2 split the python twin applies.
+fn env_state_cast(x: &mut [f32], env: Env) {
+    match env {
+        Env::Fp32 => {}
+        Env::Bf16 => bf16::cast_slice(x),
+        Env::Fp8 => fp8::cast_slice(x, fp8::Format::E5M2),
+    }
+}
+
+/// `jnp.sign` semantics (`signum(0) == 0`, unlike `f32::signum`).
+fn sgn(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Linear-interpolation percentile (twin of `jnp.percentile`); sorts in
+/// place.
+fn percentile(vals: &mut [f32], q: f64) -> f32 {
+    if vals.is_empty() {
+        return 0.0;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (q / 100.0) * (vals.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = (rank - lo as f64) as f32;
+    vals[lo] + (vals[hi] - vals[lo]) * frac
+}
+
+fn two_mut(v: &mut [Vec<f32>], i: usize, j: usize) -> (&mut Vec<f32>, &mut Vec<f32>) {
+    assert!(i < j, "slots must be distinct and ordered");
+    let (a, b) = v.split_at_mut(j);
+    (&mut a[i], &mut b[0])
+}
+
+/// One optimizer step over every trainable parameter, in place.
+/// Returns `(upd_frac, gnorm)` — the fraction of quantized weights whose
+/// value changed (Fig. 6) and the pre-clip global gradient norm.
+pub(super) fn apply_updates(
+    hyper: &Hyper,
+    layout: &Layout,
+    params: &mut [Vec<f32>],
+    mut grads: Grads,
+    opt: &mut [Vec<f32>],
+    lr: f32,
+    sr_seed: u32,
+) -> (f32, f32) {
+    let step = opt[0][0] + 1.0;
+    opt[0][0] = step;
+
+    // global-norm clip (gnorm reported pre-clip)
+    let mut sq = 0f64;
+    for g in grads.iter().flatten() {
+        for &v in g {
+            sq += (v as f64) * (v as f64);
+        }
+    }
+    let gnorm = (sq + 1e-12).sqrt() as f32;
+    let clip = (hyper.grad_clip / gnorm).min(1.0);
+    if clip < 1.0 {
+        for g in grads.iter_mut().flatten() {
+            for v in g.iter_mut() {
+                *v *= clip;
+            }
+        }
+    }
+
+    let (b1, b2, eps, wd) = (
+        hyper.adam_b1,
+        hyper.adam_b2,
+        hyper.adam_eps,
+        hyper.weight_decay,
+    );
+    let c1 = 1.0 - b1.powf(step);
+    let c2 = 1.0 - b2.powf(step);
+    let mut changed = 0u64;
+    let mut total = 0u64;
+
+    for (idx, t) in layout.trainables.iter().enumerate() {
+        let g = grads[t.param].take().expect("trainable param has a gradient");
+        let n = g.len();
+        let tseed = hash_u32(idx as u32, sr_seed);
+
+        // --- dense update W' (transient, never stored) ---
+        let mut w_dense = vec![0f32; n];
+        match t.opt {
+            OptSlots::AdamW { m: mi, v: vi } => {
+                let w = &params[t.param];
+                let (m_arr, v_arr) = two_mut(opt, mi, vi);
+                for i in 0..n {
+                    let gm = b1 * m_arr[i] + (1.0 - b1) * g[i];
+                    let gv = b2 * v_arr[i] + (1.0 - b2) * g[i] * g[i];
+                    m_arr[i] = gm;
+                    v_arr[i] = gv;
+                    let mhat = gm / c1;
+                    let vhat = gv / c2;
+                    w_dense[i] = w[i] - lr * (mhat / (vhat.sqrt() + eps) + wd * w[i]);
+                }
+                env_cast(m_arr, hyper.env);
+                env_state_cast(v_arr, hyper.env);
+            }
+            OptSlots::Factored { vr: ri, vc: ci } => {
+                let shape = &layout.manifest.params[t.param].shape;
+                let (rows, cols) = (shape[0], shape[1]);
+                let mut u = vec![0f32; n];
+                {
+                    let (vr, vc) = two_mut(opt, ri, ci);
+                    for r in 0..rows {
+                        let mut acc = 0f64;
+                        for c in 0..cols {
+                            let gv = g[r * cols + c];
+                            acc += (gv * gv + ADAFACTOR_EPS) as f64;
+                        }
+                        vr[r] = ADAFACTOR_B2 * vr[r]
+                            + (1.0 - ADAFACTOR_B2) * (acc / cols as f64) as f32;
+                    }
+                    for c in 0..cols {
+                        let mut acc = 0f64;
+                        for r in 0..rows {
+                            let gv = g[r * cols + c];
+                            acc += (gv * gv + ADAFACTOR_EPS) as f64;
+                        }
+                        vc[c] = ADAFACTOR_B2 * vc[c]
+                            + (1.0 - ADAFACTOR_B2) * (acc / rows as f64) as f32;
+                    }
+                    let mean_vr = (vr.iter().map(|&v| v as f64).sum::<f64>()
+                        / rows as f64)
+                        .max(ADAFACTOR_EPS as f64) as f32;
+                    for r in 0..rows {
+                        for c in 0..cols {
+                            let denom = (vr[r] * vc[c] / mean_vr).sqrt().max(1e-12);
+                            u[r * cols + c] = g[r * cols + c] / denom;
+                        }
+                    }
+                    env_state_cast(vr, hyper.env);
+                    env_state_cast(vc, hyper.env);
+                }
+                finish_adafactor(&params[t.param], &mut u, &mut w_dense, lr, wd);
+            }
+            OptSlots::Vector { v: vi } => {
+                let mut u = vec![0f32; n];
+                {
+                    let v_arr = &mut opt[vi];
+                    for i in 0..n {
+                        let g2 = g[i] * g[i] + ADAFACTOR_EPS;
+                        v_arr[i] = ADAFACTOR_B2 * v_arr[i] + (1.0 - ADAFACTOR_B2) * g2;
+                        u[i] = g[i] / v_arr[i].sqrt().max(1e-12);
+                    }
+                    env_state_cast(v_arr, hyper.env);
+                }
+                finish_adafactor(&params[t.param], &mut u, &mut w_dense, lr, wd);
+            }
+        }
+
+        // --- projection back onto the grid / storage format ---
+        if let Some(sidx) = t.scale {
+            let (qn, qp) = qrange(hyper.grid_bits);
+            let (qn, qp) = (qn as f32, qp as f32);
+            let mut s = params[sidx][0];
+            if hyper.recompute_scale {
+                // abl1: re-derive the grid from the transient dense update
+                s = absmean_scale(&w_dense, hyper.grid_bits);
+            }
+            let (w_new, s_new) = {
+                let w_old = &params[t.param];
+                match (hyper.mode, hyper.intervention) {
+                    (Mode::DqtAbsmax, _) => {
+                        // Fig. 5 ablation: per-step absmax scale +
+                        // round-to-nearest — small updates are absorbed
+                        let amax = w_dense.iter().fold(0f32, |a, &v| a.max(v.abs()));
+                        let s_max = qp / (amax + 1e-8);
+                        let w_new: Vec<f32> = w_dense
+                            .iter()
+                            .map(|&v| (v * s_max).round().clamp(qn, qp) / s_max)
+                            .collect();
+                        (w_new, s_max)
+                    }
+                    (_, Intervention::None) => {
+                        let w_new: Vec<f32> = w_dense
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &v)| sr_scalar(v, i as u32, tseed, qn, qp, s))
+                            .collect();
+                        (w_new, s)
+                    }
+                    (_, iv) => {
+                        // Fig. 7: rank |update| in grid units, intervene on
+                        // the bottom fraction
+                        let delta: Vec<f32> = w_dense
+                            .iter()
+                            .zip(w_old.iter())
+                            .map(|(&wn, &wo)| (wn - wo) * s)
+                            .collect();
+                        let mut mags: Vec<f32> = delta.iter().map(|d| d.abs()).collect();
+                        let thresh =
+                            percentile(&mut mags, hyper.intervention_frac * 100.0);
+                        let w_new: Vec<f32> = w_dense
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &v)| {
+                                let small = delta[i].abs() <= thresh;
+                                if !small {
+                                    return sr_scalar(v, i as u32, tseed, qn, qp, s);
+                                }
+                                match iv {
+                                    Intervention::ForceRemain => w_old[i],
+                                    _ => {
+                                        // force_update: move to the adjacent
+                                        // grid point in the update's direction
+                                        let dir = if delta[i] >= 0.0 { 1.0 } else { -1.0 };
+                                        ((w_old[i] * s).round() + dir).clamp(qn, qp) / s
+                                    }
+                                }
+                            })
+                            .collect();
+                        (w_new, s)
+                    }
+                }
+            };
+            changed += w_new
+                .iter()
+                .zip(params[t.param].iter())
+                .filter(|(a, b)| a != b)
+                .count() as u64;
+            total += n as u64;
+            params[t.param] = w_new;
+            params[sidx][0] = s_new;
+        } else if hyper.mode == Mode::Bitnet158 && t.is_qlinear {
+            // BitNet master update, stored in the env's precision — the
+            // Fig. 3 degradation mechanism (RTN-absorbed small updates).
+            env_cast(&mut w_dense, hyper.env);
+            {
+                // Fig. 6: BitNet update freq = change in the *quantized*
+                // weights under their per-step AbsMean scales
+                let w_old = &params[t.param];
+                let s_old = absmean_scale(w_old, 1.58);
+                let s_new = absmean_scale(&w_dense, 1.58);
+                changed += w_old
+                    .iter()
+                    .zip(w_dense.iter())
+                    .filter(|(&wo, &wn)| {
+                        sgn((wo * s_old).round().clamp(-1.0, 1.0))
+                            != sgn((wn * s_new).round().clamp(-1.0, 1.0))
+                    })
+                    .count() as u64;
+                total += n as u64;
+            }
+            params[t.param] = w_dense;
+        } else {
+            // dense (non-grid) parameter; fp32 baseline counts all params
+            if hyper.mode != Mode::Fp32 {
+                env_cast(&mut w_dense, hyper.env);
+            } else {
+                changed += w_dense
+                    .iter()
+                    .zip(params[t.param].iter())
+                    .filter(|(a, b)| a != b)
+                    .count() as u64;
+                total += n as u64;
+            }
+            params[t.param] = w_dense;
+        }
+    }
+
+    let upd_frac = if total > 0 {
+        changed as f32 / total as f32
+    } else {
+        0.0
+    };
+    (upd_frac, gnorm)
+}
+
+/// Adafactor tail: update clipping (`d = 1.0`) then the weight-decayed
+/// dense step.
+fn finish_adafactor(w: &[f32], u: &mut [f32], w_dense: &mut [f32], lr: f32, wd: f32) {
+    let n = u.len().max(1);
+    let rms =
+        ((u.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n as f64) + 1e-12).sqrt();
+    let scale = 1.0 / (rms.max(1.0) as f32);
+    for ((o, &uv), &wv) in w_dense.iter_mut().zip(u.iter()).zip(w.iter()) {
+        *o = wv - lr * (uv * scale + wd * wv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_matches_linear_interpolation() {
+        let mut v = vec![4.0f32, 1.0, 3.0, 2.0];
+        // sorted [1,2,3,4]; p20 → rank 0.6 → 1.6
+        assert!((percentile(&mut v, 20.0) - 1.6).abs() < 1e-6);
+        let mut v = vec![5.0f32];
+        assert_eq!(percentile(&mut v, 20.0), 5.0);
+        assert_eq!(percentile(&mut [], 50.0), 0.0);
+    }
+
+    #[test]
+    fn sgn_zero_is_zero() {
+        assert_eq!(sgn(0.0), 0.0);
+        assert_eq!(sgn(2.5), 1.0);
+        assert_eq!(sgn(-0.1), -1.0);
+    }
+
+    #[test]
+    fn env_state_cast_survives_large_second_moments() {
+        // E4M3 saturates at 448 — v must use E5M2 in the fp8 env
+        let mut v = vec![1000.0f32];
+        env_state_cast(&mut v, Env::Fp8);
+        assert!(v[0] > 448.0, "{}", v[0]);
+        let mut m = vec![1000.0f32];
+        env_cast(&mut m, Env::Fp8);
+        assert_eq!(m[0], 448.0);
+    }
+}

@@ -1,0 +1,441 @@
+//! Variant layout for the native backend: synthesizes the [`Manifest`]
+//! (param/opt-state order, shapes, roles) directly from a [`VariantSpec`]
+//! — the Rust twin of `python/compile/model.py::flat_param_names` +
+//! `optim.py::opt_state_names`, so a native-trained state checkpoints and
+//! reloads exactly like an artifact-trained one.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Env, Mode, ModelConfig, Optimizer, VariantSpec};
+use crate::runtime::artifact::{
+    Manifest, OptMeta, ParamMeta, TrainStepOutputs, VariantMeta, VariantModelMeta,
+};
+
+/// Fig. 7 intervention on the bottom-`intervention_frac` smallest updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Intervention {
+    None,
+    ForceRemain,
+    ForceUpdate,
+}
+
+/// Training hyperparameters fixed per variant (twin of the python
+/// `VariantConfig` defaults — the AOT graphs bake in the same values).
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    pub mode: Mode,
+    /// bit width of the stored weight grid (`dqt_ternary_inf` stores 8-bit,
+    /// BitNet's quantized *forward* is ternary)
+    pub grid_bits: f64,
+    pub env: Env,
+    pub optimizer: Optimizer,
+    pub intervention: Intervention,
+    pub intervention_frac: f64,
+    pub recompute_scale: bool,
+    pub act_bits: u32,
+    pub weight_decay: f32,
+    pub adam_b1: f32,
+    pub adam_b2: f32,
+    pub adam_eps: f32,
+    pub grad_clip: f32,
+    pub rope_theta: f32,
+    pub rms_eps: f32,
+    pub init_std: f32,
+}
+
+impl Hyper {
+    /// DQT-family variants store grid weights (+ fixed scales); BitNet
+    /// stores FP32 masters (twin of `model.has_grid_weights`).
+    pub fn has_grid_weights(&self) -> bool {
+        self.mode.quantized() && self.mode != Mode::Bitnet158
+    }
+}
+
+/// Index of one projection matrix (+ its `.s` scale when on the grid).
+#[derive(Clone, Copy, Debug)]
+pub struct Lin {
+    pub w: usize,
+    pub s: Option<usize>,
+}
+
+/// Parameter indices of one transformer layer.
+#[derive(Clone, Debug)]
+pub struct LayerIdx {
+    pub attn_norm: usize,
+    pub wq: Lin,
+    pub wk: Lin,
+    pub wv: Lin,
+    pub wo: Lin,
+    pub mlp_norm: usize,
+    pub w_gate: Lin,
+    pub w_up: Lin,
+    pub w_down: Lin,
+}
+
+/// Optimizer-state slots of one trainable parameter.
+#[derive(Clone, Copy, Debug)]
+pub enum OptSlots {
+    /// AdamW first/second moment (full shape each).
+    AdamW { m: usize, v: usize },
+    /// Adafactor factored second moment of a matrix (row + col vectors).
+    Factored { vr: usize, vc: usize },
+    /// Adafactor unfactored second moment (vectors/scalars).
+    Vector { v: usize },
+}
+
+/// One trainable parameter (everything except the frozen `.s` scales), in
+/// the python `trainable_names` order — the SR seed stream is keyed by
+/// this enumeration index.
+#[derive(Clone, Debug)]
+pub struct Trainable {
+    pub param: usize,
+    /// `.s` companion index — present exactly for grid params
+    pub scale: Option<usize>,
+    /// one of the seven per-layer projections (the BitNet-quantized set)
+    pub is_qlinear: bool,
+    pub opt: OptSlots,
+}
+
+/// Full index map of a variant: the synthesized manifest plus direct
+/// indices into its flat param/opt order.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub manifest: Manifest,
+    pub emb: usize,
+    pub final_norm: usize,
+    pub layers: Vec<LayerIdx>,
+    pub trainables: Vec<Trainable>,
+}
+
+fn parse_intervention(iv: &Option<String>) -> Result<Intervention> {
+    Ok(match iv.as_deref() {
+        None | Some("none") => Intervention::None,
+        Some("force_remain") => Intervention::ForceRemain,
+        Some("force_update") => Intervention::ForceUpdate,
+        Some(other) => return Err(anyhow!("unknown intervention {other:?}")),
+    })
+}
+
+/// Build hyperparameters + layout for `spec`. Errors on unknown models,
+/// unsupported bit widths and malformed head counts — the same conditions
+/// the python `VariantConfig.__post_init__` asserts.
+pub fn build(spec: &VariantSpec) -> Result<(Hyper, ModelConfig, Layout)> {
+    let cfg = spec
+        .model_config()
+        .ok_or_else(|| anyhow!("unknown model {:?}", spec.model))?;
+    if cfg.hidden_size % cfg.num_attention_heads != 0 {
+        return Err(anyhow!(
+            "hidden {} not divisible by heads {}",
+            cfg.hidden_size,
+            cfg.num_attention_heads
+        ));
+    }
+    if cfg.hidden_size / cfg.num_attention_heads % 2 != 0 {
+        return Err(anyhow!("head_dim must be even for RoPE"));
+    }
+    let grid_bits = match spec.mode {
+        Mode::DqtTernaryInf => 8.0, // §A.2: train an 8-bit grid, deploy ternary
+        Mode::Bitnet158 => 1.58,
+        _ => spec.bits,
+    };
+    if matches!(spec.mode, Mode::Dqt | Mode::DqtAbsmax)
+        && !((grid_bits - 1.58).abs() < 1e-9
+            || (grid_bits.fract() == 0.0 && (2.0..=8.0).contains(&grid_bits)))
+    {
+        return Err(anyhow!("unsupported grid bits {grid_bits}"));
+    }
+    let hyper = Hyper {
+        mode: spec.mode,
+        grid_bits,
+        env: spec.env,
+        optimizer: spec.optimizer,
+        intervention: parse_intervention(&spec.intervention)?,
+        intervention_frac: 0.2,
+        recompute_scale: spec.recompute_scale,
+        act_bits: 8,
+        weight_decay: 0.01,
+        adam_b1: 0.9,
+        adam_b2: 0.95,
+        adam_eps: 1e-8,
+        grad_clip: 1.0,
+        rope_theta: 10000.0,
+        rms_eps: 1e-5,
+        init_std: 0.02,
+    };
+    let layout = build_layout(spec, &cfg, &hyper)?;
+    Ok((hyper, cfg, layout))
+}
+
+fn push(params: &mut Vec<ParamMeta>, name: String, shape: Vec<usize>, role: &str) -> usize {
+    params.push(ParamMeta {
+        name,
+        shape,
+        dtype: "float32".into(),
+        role: Some(role.to_string()),
+    });
+    params.len() - 1
+}
+
+/// A projection matrix: grid (+ `.s` scale) in DQT modes, dense otherwise.
+fn lin(params: &mut Vec<ParamMeta>, grid: bool, name: String, shape: Vec<usize>) -> Lin {
+    if grid {
+        let w = push(params, name.clone(), shape, "grid");
+        let s = push(params, format!("{name}.s"), vec![], "scale");
+        Lin { w, s: Some(s) }
+    } else {
+        Lin {
+            w: push(params, name, shape, "dense"),
+            s: None,
+        }
+    }
+}
+
+fn build_layout(spec: &VariantSpec, cfg: &ModelConfig, hyper: &Hyper) -> Result<Layout> {
+    let (h, i_, v) = (cfg.hidden_size, cfg.intermediate_size, cfg.vocab_size);
+    let grid = hyper.has_grid_weights();
+
+    let mut params: Vec<ParamMeta> = Vec::new();
+    let emb = push(&mut params, "emb".into(), vec![v, h], "dense");
+    let mut layers = Vec::with_capacity(cfg.num_hidden_layers);
+    for l in 0..cfg.num_hidden_layers {
+        let p = format!("layers.{l}.");
+        layers.push(LayerIdx {
+            attn_norm: push(&mut params, format!("{p}attn_norm"), vec![h], "dense"),
+            wq: lin(&mut params, grid, format!("{p}wq"), vec![h, h]),
+            wk: lin(&mut params, grid, format!("{p}wk"), vec![h, h]),
+            wv: lin(&mut params, grid, format!("{p}wv"), vec![h, h]),
+            wo: lin(&mut params, grid, format!("{p}wo"), vec![h, h]),
+            mlp_norm: push(&mut params, format!("{p}mlp_norm"), vec![h], "dense"),
+            w_gate: lin(&mut params, grid, format!("{p}w_gate"), vec![i_, h]),
+            w_up: lin(&mut params, grid, format!("{p}w_up"), vec![i_, h]),
+            w_down: lin(&mut params, grid, format!("{p}w_down"), vec![h, i_]),
+        });
+    }
+    let final_norm = push(&mut params, "final_norm".into(), vec![h], "dense");
+
+    // optimizer state: step counter, then per-trainable slots in param
+    // order (`.s` scales are frozen grid metadata, not trainable)
+    let mut opt_state = vec![OptMeta {
+        name: "step".into(),
+        shape: vec![],
+    }];
+    let mut trainables = Vec::new();
+    for (pi, meta) in params.iter().enumerate() {
+        if meta.is_scale() {
+            continue;
+        }
+        let scale = if meta.is_grid() { Some(pi + 1) } else { None };
+        let is_qlinear = meta.name.contains(".w");
+        let opt = match hyper.optimizer {
+            Optimizer::Adamw => {
+                opt_state.push(OptMeta {
+                    name: format!("{}.m", meta.name),
+                    shape: meta.shape.clone(),
+                });
+                opt_state.push(OptMeta {
+                    name: format!("{}.v", meta.name),
+                    shape: meta.shape.clone(),
+                });
+                OptSlots::AdamW {
+                    m: opt_state.len() - 2,
+                    v: opt_state.len() - 1,
+                }
+            }
+            Optimizer::Adafactor if meta.shape.len() == 2 => {
+                opt_state.push(OptMeta {
+                    name: format!("{}.vr", meta.name),
+                    shape: vec![meta.shape[0]],
+                });
+                opt_state.push(OptMeta {
+                    name: format!("{}.vc", meta.name),
+                    shape: vec![meta.shape[1]],
+                });
+                OptSlots::Factored {
+                    vr: opt_state.len() - 2,
+                    vc: opt_state.len() - 1,
+                }
+            }
+            Optimizer::Adafactor => {
+                opt_state.push(OptMeta {
+                    name: format!("{}.v", meta.name),
+                    shape: meta.shape.clone(),
+                });
+                OptSlots::Vector {
+                    v: opt_state.len() - 1,
+                }
+            }
+        };
+        trainables.push(Trainable {
+            param: pi,
+            scale,
+            is_qlinear,
+            opt,
+        });
+    }
+
+    let mut entries = vec![
+        "init".to_string(),
+        "train_step".to_string(),
+        "eval_step".to_string(),
+        "logits_step".to_string(),
+    ];
+    if spec.mode.quantized() {
+        entries.push("eval_step_ternary".to_string());
+        entries.push("logits_step_ternary".to_string());
+    }
+
+    let manifest = Manifest {
+        variant: VariantMeta {
+            model: VariantModelMeta {
+                name: cfg.name.clone(),
+                vocab_size: cfg.vocab_size,
+                hidden_size: cfg.hidden_size,
+                num_hidden_layers: cfg.num_hidden_layers,
+                max_seq_len: cfg.max_seq_len,
+                batch_size: cfg.batch_size,
+                param_count: cfg.param_count(),
+            },
+            mode: spec.mode.as_str().to_string(),
+            bits: spec.bits,
+            env: spec.env.as_str().to_string(),
+            optimizer: spec.optimizer.as_str().to_string(),
+            intervention: spec
+                .intervention
+                .clone()
+                .unwrap_or_else(|| "none".to_string()),
+            variant_name: spec.variant_name(),
+        },
+        tokens_shape: vec![cfg.batch_size, cfg.max_seq_len + 1],
+        logits_tokens_shape: vec![cfg.batch_size, cfg.max_seq_len],
+        pad_id: crate::data::tokenizer::PAD_ID,
+        train_step_outputs: TrainStepOutputs {
+            n_params: params.len(),
+            n_opt: opt_state.len(),
+            metrics: vec!["loss".into(), "upd_frac".into(), "gnorm".into()],
+        },
+        entries,
+        params,
+        opt_state,
+    };
+
+    Ok(Layout {
+        manifest,
+        emb,
+        final_norm,
+        layers,
+        trainables,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(mode: Mode, bits: f64) -> VariantSpec {
+        VariantSpec::new("test", mode, bits)
+    }
+
+    #[test]
+    fn manifest_param_count_matches_model_config() {
+        for (mode, bits) in [
+            (Mode::Fp32, 1.58),
+            (Mode::Bitnet158, 1.58),
+            (Mode::Dqt, 1.58),
+            (Mode::Dqt, 8.0),
+        ] {
+            let (_, cfg, layout) = build(&spec(mode, bits)).unwrap();
+            let n: u64 = layout
+                .manifest
+                .params
+                .iter()
+                .filter(|p| !p.is_scale())
+                .map(|p| p.numel() as u64)
+                .sum();
+            assert_eq!(n, cfg.param_count(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn grid_params_only_in_dqt_modes() {
+        let (_, _, fp32) = build(&spec(Mode::Fp32, 1.58)).unwrap();
+        assert!(fp32.manifest.params.iter().all(|p| !p.is_grid()));
+        let (_, _, bitnet) = build(&spec(Mode::Bitnet158, 1.58)).unwrap();
+        assert!(bitnet.manifest.params.iter().all(|p| !p.is_grid()));
+        let (_, cfg, dqt) = build(&spec(Mode::Dqt, 1.58)).unwrap();
+        let grids = dqt.manifest.params.iter().filter(|p| p.is_grid()).count();
+        assert_eq!(grids, cfg.num_hidden_layers * 7);
+        // grid params are immediately followed by their `.s` companion —
+        // the artifact-manifest invariant the integration tests pin
+        for (i, p) in dqt.manifest.params.iter().enumerate() {
+            if p.is_grid() {
+                assert!(dqt.manifest.params[i + 1].is_scale(), "{}", p.name);
+                assert_eq!(dqt.manifest.params[i + 1].name, format!("{}.s", p.name));
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_param_share_matches_config() {
+        let (_, cfg, layout) = build(&spec(Mode::Dqt, 1.58)).unwrap();
+        let grid_values: u64 = layout
+            .manifest
+            .params
+            .iter()
+            .filter(|p| p.is_grid())
+            .map(|p| p.numel() as u64)
+            .sum();
+        assert_eq!(grid_values, cfg.quantized_param_count());
+    }
+
+    #[test]
+    fn opt_state_layout_adamw_and_adafactor() {
+        let (_, _, adamw) = build(&spec(Mode::Dqt, 1.58)).unwrap();
+        // step + (m, v) per trainable param
+        assert_eq!(adamw.manifest.opt_state.len(), 1 + 2 * adamw.trainables.len());
+        assert_eq!(adamw.manifest.opt_state[0].name, "step");
+
+        let sp = spec(Mode::Dqt, 1.58).with_optimizer(crate::config::Optimizer::Adafactor);
+        let (_, _, af) = build(&sp).unwrap();
+        // matrices get vr+vc (rows + cols), vectors a same-shape v
+        for t in &af.trainables {
+            let meta = &af.manifest.params[t.param];
+            match t.opt {
+                OptSlots::Factored { vr, vc } => {
+                    assert_eq!(meta.shape.len(), 2);
+                    assert_eq!(af.manifest.opt_state[vr].shape, vec![meta.shape[0]]);
+                    assert_eq!(af.manifest.opt_state[vc].shape, vec![meta.shape[1]]);
+                }
+                OptSlots::Vector { v } => {
+                    assert!(meta.shape.len() < 2);
+                    assert_eq!(af.manifest.opt_state[v].shape, meta.shape);
+                }
+                OptSlots::AdamW { .. } => panic!("adafactor layout has no adamw slots"),
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_inf_trains_an_8bit_grid() {
+        let (hyper, _, _) = build(&spec(Mode::DqtTernaryInf, 8.0)).unwrap();
+        assert_eq!(hyper.grid_bits, 8.0);
+        let (hyper, _, _) = build(&spec(Mode::Bitnet158, 1.58)).unwrap();
+        assert_eq!(hyper.grid_bits, 1.58);
+        assert!(!hyper.has_grid_weights());
+    }
+
+    #[test]
+    fn qlinear_flags_cover_the_seven_projections() {
+        let (_, cfg, layout) = build(&spec(Mode::Bitnet158, 1.58)).unwrap();
+        let n = layout.trainables.iter().filter(|t| t.is_qlinear).count();
+        assert_eq!(n, cfg.num_hidden_layers * 7);
+    }
+
+    #[test]
+    fn bad_specs_error() {
+        assert!(build(&VariantSpec::new("nope", Mode::Dqt, 1.58)).is_err());
+        assert!(build(&spec(Mode::Dqt, 9.0)).is_err());
+        assert!(build(&spec(Mode::Dqt, 1.0)).is_err());
+        let iv = spec(Mode::Dqt, 1.58).with_intervention("bogus");
+        assert!(build(&iv).is_err());
+    }
+}

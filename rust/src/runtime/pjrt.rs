@@ -1,0 +1,185 @@
+//! The PJRT backend: compiled AOT artifacts executed through XLA (the
+//! only place that touches PJRT executables). Owns the compiled entry
+//! points of one variant; state crosses the boundary as f32 literals in
+//! the manifest's flat order. Python never runs here — everything comes
+//! from `artifacts/`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::{ArtifactDir, Manifest};
+use super::client::{
+    lit_f32, lit_f32_scalar, lit_i32, lit_u32_scalar, scalar_f32, to_vec_f32, Executable, Runtime,
+};
+use super::{Backend, State, StepMetrics};
+
+/// Compiled entry points of a variant + the manifest that drives buffer
+/// layout.
+pub struct PjrtBackend {
+    pub artifact: ArtifactDir,
+    init: Executable,
+    train_step: Executable,
+    eval_step: Executable,
+    logits_step: Executable,
+    eval_step_ternary: Option<Executable>,
+    logits_step_ternary: Option<Executable>,
+}
+
+impl PjrtBackend {
+    /// Load + compile every entry point of `variant_name`.
+    pub fn load(
+        rt: &Runtime,
+        artifacts_root: impl AsRef<Path>,
+        variant_name: &str,
+    ) -> Result<Self> {
+        let artifact = ArtifactDir::locate(artifacts_root, variant_name)?;
+        let load = |entry: &str| rt.load(artifact.hlo_path(entry));
+        let maybe = |entry: &str| -> Result<Option<Executable>> {
+            if artifact.has_entry(entry) {
+                Ok(Some(rt.load(artifact.hlo_path(entry))?))
+            } else {
+                Ok(None)
+            }
+        };
+        Ok(PjrtBackend {
+            init: load("init")?,
+            train_step: load("train_step")?,
+            eval_step: load("eval_step")?,
+            logits_step: load("logits_step")?,
+            eval_step_ternary: maybe("eval_step_ternary")?,
+            logits_step_ternary: maybe("logits_step_ternary")?,
+            artifact,
+        })
+    }
+
+    fn split_state(&self, outs: Vec<xla::Literal>) -> Result<(State, Vec<xla::Literal>)> {
+        let m = self.manifest();
+        let n_p = m.params.len();
+        let n_o = m.opt_state.len();
+        if outs.len() < n_p + n_o {
+            return Err(anyhow!("expected ≥{} outputs, got {}", n_p + n_o, outs.len()));
+        }
+        let mut it = outs.into_iter();
+        let params: Vec<Vec<f32>> = (&mut it)
+            .take(n_p)
+            .map(|l| to_vec_f32(&l))
+            .collect::<Result<_>>()?;
+        let opt: Vec<Vec<f32>> = (&mut it)
+            .take(n_o)
+            .map(|l| to_vec_f32(&l))
+            .collect::<Result<_>>()?;
+        Ok((State::from_dense(params, opt), it.collect()))
+    }
+
+    fn state_literals(&self, state: &State) -> Result<Vec<xla::Literal>> {
+        let m = self.manifest();
+        let mut lits = Vec::with_capacity(m.n_state());
+        for (meta, p) in m.params.iter().zip(&state.params) {
+            lits.push(lit_f32(&p.values()?, &meta.shape)?);
+        }
+        for (meta, vals) in m.opt_state.iter().zip(&state.opt) {
+            lits.push(lit_f32(vals, &meta.shape)?);
+        }
+        Ok(lits)
+    }
+
+    fn param_literals(&self, state: &State) -> Result<Vec<xla::Literal>> {
+        let m = self.manifest();
+        m.params
+            .iter()
+            .zip(&state.params)
+            .map(|(meta, p)| lit_f32(&p.values()?, &meta.shape))
+            .collect()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.artifact.manifest
+    }
+
+    fn init_state(&self, seed: u32) -> Result<State> {
+        let outs = self.init.run(&[lit_u32_scalar(seed)?])?;
+        let (state, rest) = self.split_state(outs)?;
+        if !rest.is_empty() {
+            return Err(anyhow!("init returned {} extra outputs", rest.len()));
+        }
+        Ok(state)
+    }
+
+    fn train_step(
+        &self,
+        state: State,
+        tokens: &[i32],
+        sr_seed: u32,
+        lr: f32,
+    ) -> Result<(State, StepMetrics)> {
+        let m = self.manifest();
+        let mut args = self.state_literals(&state)?;
+        args.push(lit_i32(tokens, &m.tokens_shape)?);
+        args.push(lit_u32_scalar(sr_seed)?);
+        args.push(lit_f32_scalar(lr)?);
+        let outs = self.train_step.run(&args)?;
+        let (new_state, metrics) = self.split_state(outs)?;
+        if metrics.len() != m.train_step_outputs.metrics.len() {
+            return Err(anyhow!(
+                "expected {} metrics, got {}",
+                m.train_step_outputs.metrics.len(),
+                metrics.len()
+            ));
+        }
+        Ok((
+            new_state,
+            StepMetrics {
+                loss: scalar_f32(&metrics[0])?,
+                upd_frac: scalar_f32(&metrics[1])?,
+                gnorm: scalar_f32(&metrics[2])?,
+            },
+        ))
+    }
+
+    fn eval_step(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<(f32, f32)> {
+        let m = self.manifest();
+        let exe = if ternary {
+            self.eval_step_ternary
+                .as_ref()
+                .ok_or_else(|| anyhow!("variant has no ternary-inference entry"))?
+        } else {
+            &self.eval_step
+        };
+        let mut args = self.param_literals(state)?;
+        args.push(lit_i32(tokens, &m.tokens_shape)?);
+        let outs = exe.run(&args)?;
+        if outs.len() != 2 {
+            return Err(anyhow!("eval_step: expected 2 outputs, got {}", outs.len()));
+        }
+        Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
+    }
+
+    fn logits(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<Vec<f32>> {
+        let m = self.manifest();
+        let exe = if ternary {
+            self.logits_step_ternary
+                .as_ref()
+                .ok_or_else(|| anyhow!("variant has no ternary-inference entry"))?
+        } else {
+            &self.logits_step
+        };
+        let mut args = self.param_literals(state)?;
+        args.push(lit_i32(tokens, &m.logits_tokens_shape)?);
+        let outs = exe.run(&args)?;
+        if outs.len() != 1 {
+            return Err(anyhow!("logits_step: expected 1 output, got {}", outs.len()));
+        }
+        to_vec_f32(&outs[0])
+    }
+
+    fn has_ternary_inference(&self) -> bool {
+        self.eval_step_ternary.is_some()
+    }
+}

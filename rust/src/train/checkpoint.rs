@@ -129,7 +129,7 @@ fn companion_scale(manifest: &Manifest, state: &State, name: &str) -> Result<f32
     let j = manifest
         .param_index(&scale_name)
         .ok_or_else(|| anyhow!("grid param {name:?} has no companion scale {scale_name:?}"))?;
-    Ok(state.params[j].scalar())
+    state.params[j].scalar()
 }
 
 /// Serialize a full training state (params + optimizer) with format-true
@@ -161,9 +161,14 @@ pub fn save(
             // packed-grid mode fast path: the resident bytes ARE the wire
             // bytes when format and scale line up
             Param::Packed(pt) if pt.format == codec && pt.scale == scale => pt.bytes.clone(),
-            p => codec
-                .encode(&p.values(), scale)
-                .map_err(|e| anyhow!("encoding {:?}: {e}", meta.name))?,
+            p => {
+                let vals = p
+                    .values()
+                    .map_err(|e| anyhow!("reading {:?}: {e}", meta.name))?;
+                codec
+                    .encode(&vals, scale)
+                    .map_err(|e| anyhow!("encoding {:?}: {e}", meta.name))?
+            }
         };
         params.push(EntryHeader {
             name: meta.name.clone(),

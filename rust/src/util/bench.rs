@@ -108,7 +108,12 @@ impl Bench {
     }
 
     /// Benchmark with a bytes-throughput annotation.
-    pub fn bench_bytes<T>(&mut self, name: &str, bytes: u64, mut f: impl FnMut() -> T) -> &mut Self {
+    pub fn bench_bytes<T>(
+        &mut self,
+        name: &str,
+        bytes: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &mut Self {
         self.bench_inner(name, Some(bytes), None, &mut || {
             std::hint::black_box(f());
         })

@@ -1,0 +1,210 @@
+//! End-to-end training on the native CPU backend — the repo's proof that
+//! the paper's loop (SR updates straight to the quantized grids, no FP32
+//! masters) actually executes and converges, on any machine, with no
+//! artifacts, PJRT or Python. The `e2e-smoke-train` CI job runs this file
+//! as a required check on every PR.
+//!
+//! Also pins the determinism contract: `step_seed`/`hash_u32` golden
+//! values, and bitwise-identical loss curves across two runs of the same
+//! seed (the native-backend golden-curve guarantee).
+
+use dqt::config::{BackendKind, Mode, TrainConfig, VariantSpec};
+use dqt::data::Pipeline;
+use dqt::eval;
+use dqt::quant::sr::hash_u32;
+use dqt::runtime::VariantRuntime;
+use dqt::train::{checkpoint, step_seed, RunMetrics, Trainer};
+
+fn native(spec: &VariantSpec) -> VariantRuntime {
+    VariantRuntime::native(spec).expect("native backend")
+}
+
+fn pipeline_for(vrt: &VariantRuntime) -> Pipeline {
+    let m = vrt.manifest();
+    Pipeline::build(
+        "tiny",
+        1,
+        m.variant.model.vocab_size,
+        m.variant.model.max_seq_len,
+    )
+    .unwrap()
+}
+
+fn train(vrt: &VariantRuntime, steps: u64, seed: u64, peak_lr: f64) -> RunMetrics {
+    let pipeline = pipeline_for(vrt);
+    let cfg = TrainConfig {
+        steps,
+        warmup_steps: (steps / 10).max(2),
+        peak_lr,
+        dataset: "tiny".into(),
+        seed,
+        log_every: 0,
+        eval_every: 0,
+        ..TrainConfig::default()
+    };
+    let (_, metrics) = Trainer::new(vrt, &pipeline, cfg).run().unwrap();
+    metrics
+}
+
+/// The acceptance check: a tiny ternary DQT variant trains ~50 steps end
+/// to end on the native backend; loss decreases and SR updates actually
+/// land on the grid (`upd_frac > 0`).
+#[test]
+fn e2e_smoke_train_ternary_loss_decreases() {
+    let vrt = native(&VariantSpec::new("test", Mode::Dqt, 1.58));
+    assert_eq!(vrt.backend_name(), "native");
+    let metrics = train(&vrt, 50, 42, 2e-3);
+    assert_eq!(metrics.records.len(), 50);
+    let head: f32 = metrics.records[..5].iter().map(|r| r.loss).sum::<f32>() / 5.0;
+    let tail = metrics.tail_loss(5).unwrap();
+    assert!(
+        tail < head,
+        "loss did not decrease on the native backend: {head} -> {tail}"
+    );
+    assert!(metrics.records.iter().all(|r| r.loss.is_finite()));
+    assert!(
+        metrics.peak_upd_frac().unwrap() > 0.0,
+        "no SR updates landed (upd_frac stayed 0)"
+    );
+    assert!(metrics.final_dev_loss.unwrap().is_finite());
+}
+
+/// Every core mode trains under the native backend (Fig. 2 family).
+#[test]
+fn all_core_modes_train_natively() {
+    for (mode, bits) in [
+        (Mode::Fp32, 1.58),
+        (Mode::Bitnet158, 1.58),
+        (Mode::Dqt, 8.0),
+    ] {
+        let vrt = native(&VariantSpec::new("test", mode, bits));
+        let metrics = train(&vrt, 16, 42, 2e-3);
+        assert!(
+            metrics.records.iter().all(|r| r.loss.is_finite()),
+            "{mode:?}"
+        );
+        let head: f32 = metrics.records[..4].iter().map(|r| r.loss).sum::<f32>() / 4.0;
+        let tail = metrics.tail_loss(4).unwrap();
+        assert!(tail < head, "{mode:?}: {head} -> {tail}");
+    }
+}
+
+/// Golden loss curve: the same seed produces bitwise-identical metrics
+/// across two runs, and a different seed does not.
+#[test]
+fn golden_curve_same_seed_is_bitwise_identical() {
+    let vrt = native(&VariantSpec::new("test", Mode::Dqt, 1.58));
+    let a = train(&vrt, 10, 7, 1e-3);
+    let b = train(&vrt, 10, 7, 1e-3);
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "step {}", x.step);
+        assert_eq!(x.upd_frac.to_bits(), y.upd_frac.to_bits());
+        assert_eq!(x.gnorm.to_bits(), y.gnorm.to_bits());
+    }
+    assert_eq!(a.final_dev_loss.unwrap(), b.final_dev_loss.unwrap());
+    let c = train(&vrt, 10, 8, 1e-3);
+    assert!(a
+        .records
+        .iter()
+        .zip(c.records.iter())
+        .any(|(x, y)| x.loss != y.loss));
+}
+
+/// The per-step SR seed derivation is a pinned contract — the same
+/// `(run_seed, step)` must map to the same u32 forever, or historic runs
+/// stop being reproducible.
+#[test]
+fn step_seed_and_hash_are_pinned() {
+    assert_eq!(step_seed(42, 0), 142_593_372);
+    assert_eq!(step_seed(42, 1), 939_911_724);
+    assert_eq!(step_seed(42, 50), 41_768_088);
+    assert_eq!(step_seed(7, 5), 1_915_552_099);
+    assert_eq!(step_seed(0, 0), 0);
+    // the run seed folds in its high 32 bits
+    assert_eq!(step_seed((1u64 << 40) + 3, 2), 1_962_880_497);
+    assert_ne!(step_seed(3, 2), step_seed((1u64 << 40) + 3, 2));
+    // hash golden values (twin of the python kernel PRNG)
+    assert_eq!(hash_u32(3, 9), 3_629_876_710);
+    assert_eq!(hash_u32(12345, 67890), 2_856_791_855);
+}
+
+/// Native-trained states round-trip the format-true checkpoint codec and
+/// resume bit-identically — the native backend and the `.dqt` wire format
+/// compose.
+#[test]
+fn native_checkpoint_roundtrip_and_resume() {
+    let vrt = native(&VariantSpec::new("test", Mode::Dqt, 1.58));
+    let m = vrt.manifest();
+    let pipeline = pipeline_for(&vrt);
+    let loader = pipeline.loader(m.variant.model.batch_size, 6, 42);
+    let mut state = vrt.init_state(42).unwrap();
+    let mut last_batch = None;
+    while let Some(b) = loader.next() {
+        if b.step == 5 {
+            last_batch = Some(b);
+            break;
+        }
+        let (s2, _) = vrt
+            .train_step(state, &b.tokens, step_seed(42, b.step), 1e-3)
+            .unwrap();
+        state = s2;
+    }
+    let dir = std::env::temp_dir().join("dqt_native_e2e_ckpt");
+    let path = dir.join("model.dqt");
+    checkpoint::save(&path, m, &state, checkpoint::Codec::F32, true).unwrap();
+    let loaded = checkpoint::load_packed(&path, m).unwrap();
+    // grid params come back packed at the wire bit width…
+    assert!(m
+        .params
+        .iter()
+        .zip(&loaded.params)
+        .filter(|(meta, _)| meta.is_grid())
+        .all(|(_, p)| p.is_packed()));
+    // …and the resumed step equals the in-memory one exactly
+    let batch = last_batch.unwrap();
+    let seed = step_seed(42, 5);
+    let (_, met_mem) = vrt.train_step(state, &batch.tokens, seed, 1e-3).unwrap();
+    let (_, met_load) = vrt.train_step(loaded, &batch.tokens, seed, 1e-3).unwrap();
+    assert_eq!(met_mem.loss.to_bits(), met_load.loss.to_bits());
+    assert_eq!(met_mem.upd_frac, met_load.upd_frac);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The eval harness (perplexity + ternary §A.2 projection) runs on the
+/// native backend through the same `VariantRuntime` surface.
+#[test]
+fn native_eval_harness_and_ternary_inference() {
+    let vrt = native(&VariantSpec::new("test", Mode::Dqt, 8.0));
+    assert!(vrt.has_ternary_inference());
+    let pipeline = pipeline_for(&vrt);
+    let state = vrt.init_state(3).unwrap();
+    let ppl8 = eval::perplexity(&vrt, &state, &pipeline, false).unwrap();
+    let ppl3 = eval::perplexity(&vrt, &state, &pipeline, true).unwrap();
+    assert!(ppl8.is_finite() && ppl8 > 1.0);
+    assert!(ppl3.is_finite() && ppl3 > 1.0);
+    assert_ne!(ppl8, ppl3); // ternary projection must change the model
+}
+
+/// `BackendKind::Auto` falls back to the native backend when no real
+/// PJRT runtime is linked (the stub build), so zero-dependency training
+/// is the default everywhere.
+#[test]
+fn auto_backend_resolves_without_pjrt() {
+    let spec = VariantSpec::new("test", Mode::Dqt, 1.58);
+    let res = VariantRuntime::open(
+        BackendKind::Auto,
+        None,
+        dqt::default_artifacts_root(),
+        &spec,
+    );
+    if dqt::runtime::pjrt_available() {
+        // with a real PJRT runtime linked, Auto routes to artifacts —
+        // which may legitimately be unbuilt in this checkout
+        if let Ok(vrt) = res {
+            assert_eq!(vrt.backend_name(), "pjrt");
+        }
+    } else {
+        assert_eq!(res.unwrap().backend_name(), "native");
+    }
+}
