@@ -10,7 +10,7 @@ use dqt::data::corpus::CorpusSpec;
 use dqt::data::Pipeline;
 use dqt::eval;
 use dqt::quant::{sr, ternary};
-use dqt::runtime::VariantRuntime;
+use dqt::runtime::{Decoder, VariantRuntime};
 use dqt::train::{checkpoint, Trainer};
 
 fn main() -> Result<()> {
@@ -47,6 +47,7 @@ fn main() -> Result<()> {
     // --- deploy-time ternary projection + 2-bit packing on the host ---
     let mut packed_bytes = 0usize;
     let mut fp32_bytes = 0usize;
+    let mut gemv_checked = 0usize;
     for (i, meta) in m.params.iter().enumerate() {
         if !meta.is_grid() {
             continue;
@@ -62,9 +63,29 @@ fn main() -> Result<()> {
         // verify a lossless round-trip of the ternary grid
         let back = ternary::unpack(&packed, trits.len());
         assert_eq!(back, trits, "{}", meta.name);
+        // and that the fused GEMV (dot products straight off the 2-bit
+        // codes, scale once per row) matches unpack-then-dot — the
+        // decode-free matmul serving runs on
+        if gemv_checked < 4 && meta.shape.len() == 2 {
+            let (n_out, k) = (meta.shape[0], meta.shape[1]);
+            let x: Vec<f32> = (0..k).map(|j| ((j % 7) as f32 - 3.0) * 0.21).collect();
+            let y = ternary::gemv(&packed, &x, k, n_out, s3);
+            for (r, yr) in y.iter().enumerate() {
+                let mut reference = 0f32;
+                for j in 0..k {
+                    reference += w3[r * k + j] * x[j];
+                }
+                assert!(
+                    (yr - reference).abs() < 1e-3,
+                    "{} row {r}: fused {yr} vs reference {reference}",
+                    meta.name
+                );
+            }
+            gemv_checked += 1;
+        }
     }
     println!(
-        "\nternary packing: {:.2} MB → {:.3} MB ({:.1}x)",
+        "\nternary packing: {:.2} MB → {:.3} MB ({:.1}x), fused GEMV verified on {gemv_checked} matrices",
         fp32_bytes as f64 / 1e6,
         packed_bytes as f64 / 1e6,
         fp32_bytes as f64 / packed_bytes as f64
@@ -119,6 +140,31 @@ fn main() -> Result<()> {
     // packed state evaluates identically through the PJRT boundary decode
     let ppl_packed = eval::perplexity(&vrt, &packed_state, &pipeline, false)?;
     println!("perplexity from packed-grid state: {ppl_packed:.3} (int8 path {:.3})", r8.perplexity);
+
+    // --- decode-free generation: the deployed ternary model serves ---
+    let engine = dqt::serve::Engine::new(&vrt, &state, pipeline.tokenizer.clone(), true)?;
+    let dec = engine.decoder();
+    assert_eq!(
+        dec.packed_projections(),
+        dec.n_projections(),
+        "deploy-time serving must run every projection off the 2-bit codes"
+    );
+    let g = engine.generate(
+        "the",
+        &dqt::serve::GenParams {
+            max_new_tokens: 24,
+            temperature: 0.8,
+            seed: 7,
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "\ndecode-free ternary generation ({} tokens, {}, {} weight bytes resident): {:?}",
+        g.token_ids.len(),
+        g.finish.as_str(),
+        dec.weight_bytes(),
+        g.text
+    );
 
     println!("ternary inference stays close to int8 — deployment flexibility (§A.2).");
     Ok(())

@@ -1,0 +1,60 @@
+//! Serving-path throughput: prefill tokens/sec, single-stream decode
+//! tokens/sec, and batched decode tokens/sec at batch 1/4/16 — the
+//! numbers `BENCH_serving.json` tracks (schema enforced by
+//! `scripts/check_bench_schema.py`).
+//!
+//! Runs the decode-free packed-ternary path (2-bit codes + fused GEMV) of
+//! the tiny `test` variant on the native backend, so it produces real
+//! numbers on any machine. Each `serve_decode_bN` iteration is ONE
+//! batched decode step advancing N sequences by one token; the
+//! elements-throughput column is therefore aggregate tokens/sec.
+
+use dqt::config::{Mode, VariantSpec};
+use dqt::data::Pipeline;
+use dqt::runtime::{Decoder, DecoderCache, VariantRuntime};
+use dqt::serve::Engine;
+use dqt::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("serving");
+    let spec = VariantSpec::new("test", Mode::Dqt, 1.58);
+    let vrt = VariantRuntime::native(&spec).expect("native backend");
+    let mut state = vrt.init_state(42).unwrap();
+    state.pack_grids(vrt.manifest()).unwrap(); // serve from 2-bit residency
+    let m = vrt.manifest();
+    let pipeline = Pipeline::build(
+        "tiny",
+        1,
+        m.variant.model.vocab_size,
+        m.variant.model.max_seq_len,
+    )
+    .unwrap();
+    let engine = Engine::new(&vrt, &state, pipeline.tokenizer.clone(), false).unwrap();
+    let dec = engine.decoder();
+    assert_eq!(
+        dec.packed_projections(),
+        dec.n_projections(),
+        "serving bench must exercise the decode-free path"
+    );
+
+    // --- prefill: feed a prompt into a fresh cache, tokens/sec ---
+    let prompt = engine.prompt_ids("the cat sat on the mat and ran");
+    b.bench_elements("serve_prefill", prompt.len() as u64, || {
+        let mut cache = dec.new_cache();
+        for &t in &prompt {
+            dec.step(cache.as_mut(), t).unwrap();
+        }
+    });
+
+    // --- batched decode: one step over N live sequences per iteration ---
+    for batch in [1usize, 4, 16] {
+        let mut caches: Vec<Box<dyn DecoderCache>> =
+            (0..batch).map(|_| dec.new_cache()).collect();
+        let tokens: Vec<i32> = (0..batch).map(|i| (3 + i % 8) as i32).collect();
+        b.bench_elements(&format!("serve_decode_b{batch}"), batch as u64, || {
+            let mut refs: Vec<&mut dyn DecoderCache> =
+                caches.iter_mut().map(|c| &mut **c).collect();
+            dec.step_batch(&mut refs[..], &tokens).unwrap()
+        });
+    }
+}

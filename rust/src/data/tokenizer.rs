@@ -175,8 +175,9 @@ impl Tokenizer {
         out
     }
 
-    /// Decode ids back to text (PAD/BOS dropped, UNK → '?').
-    pub fn decode(&self, ids: &[i32]) -> String {
+    /// id → byte-piece table: PAD/BOS empty, UNK `'?'`, then the alphabet
+    /// and each merge's concatenated bytes.
+    fn piece_table(&self) -> Vec<Vec<u8>> {
         let mut table: Vec<Vec<u8>> = Vec::with_capacity(self.vocab_size);
         table.push(Vec::new()); // PAD
         table.push(Vec::new()); // BOS
@@ -189,13 +190,30 @@ impl Tokenizer {
             v.extend_from_slice(&table[b as usize]);
             table.push(v);
         }
+        table
+    }
+
+    /// Decode ids back to text (PAD/BOS dropped, UNK → '?').
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let table = self.piece_table();
         let mut bytes = Vec::new();
         for &id in ids {
-            if (id as usize) < table.len() {
+            if id >= 0 && (id as usize) < table.len() {
                 bytes.extend_from_slice(&table[id as usize]);
             }
         }
         String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Incremental detokenizer for generation: ids stream in one at a
+    /// time and text streams out as soon as its bytes complete — no
+    /// re-decoding of the prefix per token (the serving path's
+    /// per-token cost is O(piece), not O(sequence)).
+    pub fn decode_stream(&self) -> DecodeStream {
+        DecodeStream {
+            table: self.piece_table(),
+            pending: Vec::new(),
+        }
     }
 
     pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
@@ -247,6 +265,67 @@ impl Tokenizer {
             merges,
             vocab_size,
         })
+    }
+}
+
+/// Streaming detokenizer (see [`Tokenizer::decode_stream`]). Owns its
+/// piece table, so it has no borrow tie to the tokenizer and can live
+/// inside a long-running serving sequence.
+///
+/// Multi-byte UTF-8 sequences may straddle token boundaries (the BPE
+/// alphabet is bytes): [`DecodeStream::push`] only releases complete
+/// characters and holds the incomplete tail; a byte that can never start
+/// a valid sequence is replaced with U+FFFD, matching
+/// [`Tokenizer::decode`]'s lossy behavior.
+pub struct DecodeStream {
+    table: Vec<Vec<u8>>,
+    pending: Vec<u8>,
+}
+
+impl DecodeStream {
+    /// Append one id and return whatever text completed. PAD/BOS decode
+    /// to nothing; out-of-table ids are skipped (same as [`Tokenizer::decode`]).
+    pub fn push(&mut self, id: i32) -> String {
+        if id >= 0 && (id as usize) < self.table.len() {
+            self.pending.extend_from_slice(&self.table[id as usize]);
+        }
+        let mut out = String::new();
+        loop {
+            match std::str::from_utf8(&self.pending) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.pending.clear();
+                    break;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(std::str::from_utf8(&self.pending[..valid]).unwrap());
+                    match e.error_len() {
+                        // incomplete trailing sequence — wait for more bytes
+                        None => {
+                            self.pending.drain(..valid);
+                            break;
+                        }
+                        // definitely invalid — replace and continue
+                        Some(n) => {
+                            out.push('\u{FFFD}');
+                            self.pending.drain(..valid + n);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Flush any incomplete trailing bytes (lossy), ending the stream.
+    pub fn finish(&mut self) -> String {
+        if self.pending.is_empty() {
+            return String::new();
+        }
+        let s = String::from_utf8_lossy(&self.pending).into_owned();
+        self.pending.clear();
+        s
     }
 }
 
@@ -318,6 +397,67 @@ mod tests {
         let b = Tokenizer::train(&sample_docs(), 64);
         assert_eq!(a.merges, b.merges);
         assert_eq!(a.alphabet, b.alphabet);
+    }
+
+    /// Streaming decode equals batch decode over ids that include the
+    /// specials — UNK ('?'), BOS (empty) and PAD (empty) — plus
+    /// out-of-table ids (skipped) — the round-trip contract of the
+    /// incremental serving detokenizer.
+    #[test]
+    fn decode_stream_matches_batch_decode_with_specials() {
+        let docs = sample_docs();
+        let tok = Tokenizer::train(&docs, 64);
+        let mut ids = vec![BOS_ID];
+        ids.extend(tok.encode("the cat zqx ran")); // zqx → UNKs
+        ids.push(PAD_ID);
+        ids.push(BOS_ID);
+        ids.extend(tok.encode("a dog"));
+        ids.push(9999); // out of table — skipped by both paths
+        let mut stream = tok.decode_stream();
+        let mut streamed = String::new();
+        for &id in &ids {
+            streamed.push_str(&stream.push(id));
+        }
+        streamed.push_str(&stream.finish());
+        assert_eq!(streamed, tok.decode(&ids));
+        assert!(streamed.contains('?'), "UNK must surface: {streamed:?}");
+    }
+
+    /// Multi-byte UTF-8 straddling token boundaries: the stream holds the
+    /// incomplete tail instead of emitting garbage, and flushes losslessly
+    /// once the sequence completes.
+    #[test]
+    fn decode_stream_holds_split_utf8() {
+        let docs = vec!["héllo héllo wörld wörld".to_string(); 3];
+        let tok = Tokenizer::train(&docs, 96);
+        // every id decodes one alphabet byte at a time in the worst case;
+        // streaming over single-byte pieces must still form é correctly
+        let ids = tok.encode("héllo wörld");
+        let mut stream = tok.decode_stream();
+        let mut streamed = String::new();
+        for &id in &ids {
+            let chunk = stream.push(id);
+            // chunks are always valid UTF-8 (guaranteed by the String type)
+            streamed.push_str(&chunk);
+        }
+        streamed.push_str(&stream.finish());
+        assert_eq!(streamed, tok.decode(&ids));
+        assert!(streamed.contains('é') || streamed.contains('?'));
+    }
+
+    /// A byte that cannot start a UTF-8 sequence is replaced, not held
+    /// forever.
+    #[test]
+    fn decode_stream_replaces_invalid_bytes() {
+        let mut stream = DecodeStream {
+            table: vec![vec![0xFFu8], vec![b'a']],
+            pending: Vec::new(),
+        };
+        let a = stream.push(0);
+        let b = stream.push(1);
+        assert_eq!(a, "\u{FFFD}");
+        assert_eq!(b, "a");
+        assert_eq!(stream.finish(), "");
     }
 
     #[test]

@@ -26,6 +26,12 @@
 //! Python never runs at training time: the [`runtime`] module executes the
 //! variant through the selected backend and the [`train`] loop drives it.
 //!
+//! Deployment is the [`serve`] subsystem: KV-cached incremental decoding
+//! ([`runtime::Decoder`], decode-free off 2-bit packed ternary grids via
+//! the fused GEMV in [`quant::ternary`]), deterministic sampling,
+//! continuous batching, and a zero-dependency HTTP server — the `generate`
+//! and `serve` CLI subcommands (see `docs/SERVING.md`).
+//!
 //! Quickstart (no artifacts, no PJRT, no Python):
 //! `cargo run --release --example quickstart`.
 
@@ -38,6 +44,7 @@ pub mod memory;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 
 use std::path::PathBuf;

@@ -1,12 +1,14 @@
 //! `repro` — CLI for the DQT reproduction.
 //!
 //! Subcommands:
-//!   train   train one variant, save metrics + checkpoint
-//!   eval    evaluate a checkpoint (perplexity + zero-shot, ±ternary)
-//!   sweep   run a paper experiment (fig2 … table1, abl1/abl2)
-//!   report  render paper-style tables/figures from results/
-//!   list    show available artifacts and experiments
-//!   memory  print the memory model for a variant
+//!   train    train one variant, save metrics + checkpoint
+//!   eval     evaluate a checkpoint (perplexity + zero-shot, ±ternary)
+//!   generate KV-cached sampled decoding from a checkpoint
+//!   serve    HTTP inference server (continuous batching) on a checkpoint
+//!   sweep    run a paper experiment (fig2 … table1, abl1/abl2)
+//!   report   render paper-style tables/figures from results/
+//!   list     show available artifacts and experiments
+//!   memory   print the memory model for a variant
 //!
 //! Argument parsing is the in-tree `util::cli` (offline build, no clap).
 
@@ -37,11 +39,17 @@ COMMANDS
           [--dataset wiki] [--lr 1e-3] [--seed 42] [--out <dir>]
   eval    --checkpoint <model.dqt> (same variant flags) [--dataset wiki]
           [--ternary] [--items 100]
+  generate --checkpoint <model.dqt> (variant flags) --prompt \"text\"
+          [--max-new 48] [--temperature 0] [--top-k 0] [--top-p 1.0]
+          [--seed 0] [--ternary] [--dataset wiki]
+          [--data-seed 42  (must match the training --seed)]
+  serve   --checkpoint <model.dqt> (variant flags) [--addr 127.0.0.1:8080]
+          [--max-batch 8] [--ternary] [--dataset wiki] [--data-seed 42]
   sweep   --exp fig2|fig3|fig4|fig5|fig6|fig7|fig9|table1|abl1|abl2|all
           [--steps N] [--workers 1]
-  report  --exp table2|table3|memory|<exp-id with results>
+  report  --exp table2|table3|memory|serving|<exp-id with results>
   list
-  memory  (variant flags)
+  memory  (variant flags) [--batch 1]
 ";
 
 fn backend_kind(a: &Args) -> Result<BackendKind> {
@@ -70,6 +78,32 @@ fn variant_spec(a: &Args) -> Result<VariantSpec> {
         v = v.with_recompute_scale();
     }
     Ok(v)
+}
+
+/// Build a serving engine from a checkpoint: variant flags → backend →
+/// packed-grid state load (ternary grids stay 2-bit resident end to end)
+/// → tokenizer pipeline → prepared decoder.
+///
+/// The tokenizer is rebuilt deterministically from `--dataset` +
+/// `--data-seed`, which must match the `--seed` the checkpoint was
+/// trained with (the synthetic corpus — and therefore the BPE vocabulary
+/// — derives from that seed). Both default to 42, `repro train`'s
+/// default.
+fn open_engine(a: &Args, artifacts: &std::path::Path) -> Result<(dqt::serve::Engine, String)> {
+    let spec = variant_spec(a)?;
+    let cfg = spec
+        .model_config()
+        .ok_or_else(|| anyhow!("unknown model {:?}", spec.model))?;
+    let ckpt = PathBuf::from(a.req("checkpoint")?);
+    let dataset = a.str_or("dataset", "wiki");
+    let data_seed: u64 = a.parse_or("data-seed", 42)?;
+    let vrt = VariantRuntime::open(backend_kind(a)?, None, artifacts, &spec)?;
+    eprintln!("backend: {}", vrt.backend_name());
+    let state = checkpoint::load_packed(&ckpt, vrt.manifest())?;
+    let pipeline = Pipeline::build(&dataset, data_seed, cfg.vocab_size, cfg.max_seq_len)?;
+    let engine =
+        dqt::serve::Engine::new(&vrt, &state, pipeline.tokenizer.clone(), a.has("ternary"))?;
+    Ok((engine, spec.variant_name()))
 }
 
 fn main() -> Result<()> {
@@ -153,6 +187,41 @@ fn main() -> Result<()> {
                 println!("{}", r3.to_json().to_string_pretty());
             }
         }
+        "generate" => {
+            let (engine, name) = open_engine(&a, &artifacts)?;
+            let prompt = a.str_or("prompt", "");
+            let params = dqt::serve::GenParams {
+                max_new_tokens: a.parse_or("max-new", 48)?,
+                temperature: a.parse_or("temperature", 0.0f32)?,
+                top_k: a.parse_or("top-k", 0usize)?,
+                top_p: a.parse_or("top-p", 1.0f32)?,
+                seed: a.parse_or("seed", 0u32)?,
+            };
+            let t0 = std::time::Instant::now();
+            let g = engine.generate(&prompt, &params)?;
+            let secs = t0.elapsed().as_secs_f64();
+            println!("{}", g.text);
+            eprintln!(
+                "{name}: {} prompt + {} generated tokens in {:.2}s ({:.1} tok/s), finish: {}",
+                g.prompt_tokens,
+                g.token_ids.len(),
+                secs,
+                (g.prompt_tokens + g.token_ids.len()) as f64 / secs.max(1e-9),
+                g.finish.as_str()
+            );
+        }
+        "serve" => {
+            let (engine, name) = open_engine(&a, &artifacts)?;
+            let addr = a.str_or("addr", "127.0.0.1:8080");
+            let max_batch: usize = a.parse_or("max-batch", 8)?;
+            let server = dqt::serve::Server::bind(&addr, engine, max_batch)?;
+            eprintln!(
+                "serving {name} at http://{} (POST /v1/generate, GET /healthz, \
+                 GET /v1/stats; batch {max_batch})",
+                server.local_addr()?
+            );
+            server.run()?;
+        }
         "sweep" => {
             let exp = a.req("exp")?;
             let steps: u64 = a.parse_or("steps", 0)?;
@@ -181,6 +250,7 @@ fn main() -> Result<()> {
                 "table2" => println!("{}", report::table2()),
                 "table3" => println!("{}", report::table3()),
                 "memory" => println!("{}", report::memory_comparison("p1b")?),
+                "serving" => println!("{}", report::serving_memory("p1b")?),
                 e => {
                     let runs = report::load_runs(&results, e)?;
                     println!("{}", report::summary_table(&runs));
@@ -205,6 +275,10 @@ fn main() -> Result<()> {
             let b = memory::estimate(&spec, true).ok_or_else(|| anyhow!("unknown model"))?;
             println!("{}", b.to_json().to_string_pretty());
             println!("total: {:.1} MB", b.total_mb());
+            let batch: usize = a.parse_or("batch", 1)?;
+            let s = memory::serving_estimate(&spec, batch, a.has("ternary"))
+                .ok_or_else(|| anyhow!("unknown model"))?;
+            println!("serving (batch {batch}): {}", s.to_json().to_string_pretty());
         }
         other => {
             print!("{USAGE}");

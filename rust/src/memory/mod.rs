@@ -145,6 +145,82 @@ pub fn estimate_cfg(
     }
 }
 
+/// KV-cache bytes for serving: `2 · n_layer · seq_len · d_model · 4`
+/// (keys + values, f32) per sequence, scaled by the number of
+/// concurrently resident sequences (the scheduler's batch width).
+pub fn kv_cache_bytes(cfg: &ModelConfig, batch: usize) -> f64 {
+    2.0 * cfg.num_hidden_layers as f64
+        * cfg.max_seq_len as f64
+        * cfg.hidden_size as f64
+        * 4.0
+        * batch as f64
+}
+
+/// Serving-time memory of one variant: packed grid weights + dense
+/// high-precision params + KV cache. This is the whole footprint of the
+/// decode path — no gradients, no optimizer state, no f32 copies of the
+/// quantized projections (the fused GEMV reads the 2-bit codes directly).
+#[derive(Clone, Debug)]
+pub struct ServingBreakdown {
+    /// the quantized projections in their serving format (2-bit packed
+    /// when ternary-effective, dense f32 for non-ternary integer grids)
+    pub grid_weights: f64,
+    /// embedding + norms (+ all params in unquantized modes), f32
+    pub dense_weights: f64,
+    pub kv_cache: f64,
+    pub batch: usize,
+}
+
+impl ServingBreakdown {
+    pub fn total(&self) -> f64 {
+        self.grid_weights + self.dense_weights + self.kv_cache
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Value {
+        crate::util::json::Value::obj()
+            .set("grid_weights", self.grid_weights)
+            .set("dense_weights", self.dense_weights)
+            .set("kv_cache", self.kv_cache)
+            .set("batch", self.batch)
+            .set("total", self.total())
+    }
+}
+
+/// Estimate the serving footprint of `spec` at `batch` concurrent
+/// sequences. `ternary` models §A.2 deploy-time projection (any quantized
+/// variant serves 2-bit ternary); without it the stored grid format
+/// decides — ternary grids serve packed, wider integer grids serve dense
+/// f32 (no fused INTn kernel yet).
+pub fn serving_estimate(spec: &VariantSpec, batch: usize, ternary: bool) -> Option<ServingBreakdown> {
+    let cfg = spec.model_config()?;
+    let p_total = cfg.param_count() as f64;
+    let p_quant = if spec.mode.quantized() {
+        cfg.quantized_param_count() as f64
+    } else {
+        0.0
+    };
+    let serves_ternary = match spec.mode {
+        Mode::Fp32 => false,
+        Mode::Bitnet158 | Mode::DqtTernaryInf => true,
+        Mode::Dqt | Mode::DqtAbsmax => {
+            ternary
+                || crate::quant::Format::from_bits(spec.bits)
+                    == crate::quant::Format::Ternary2bit
+        }
+    };
+    let grid_weights = if serves_ternary {
+        p_quant * crate::quant::Format::Ternary2bit.bits_per_weight() / 8.0
+    } else {
+        p_quant * 4.0
+    };
+    Some(ServingBreakdown {
+        grid_weights,
+        dense_weights: (p_total - p_quant) * 4.0,
+        kv_cache: kv_cache_bytes(&cfg, batch),
+        batch,
+    })
+}
+
 /// Current process RSS in bytes (our own measured footprint, reported next
 /// to the analytic model in the experiments).
 pub fn process_rss_bytes() -> Option<u64> {
@@ -237,5 +313,54 @@ mod tests {
     fn rss_readable() {
         let rss = process_rss_bytes().unwrap();
         assert!(rss > 1_000_000);
+    }
+
+    #[test]
+    fn kv_cache_formula_and_batch_scaling() {
+        let cfg = ModelConfig::by_name("test").unwrap();
+        // 2 · layers · seq · hidden · 4
+        assert_eq!(kv_cache_bytes(&cfg, 1), 2.0 * 2.0 * 16.0 * 32.0 * 4.0);
+        assert_eq!(kv_cache_bytes(&cfg, 16), 16.0 * kv_cache_bytes(&cfg, 1));
+    }
+
+    #[test]
+    fn serving_ternary_is_grid_bytes_plus_kv() {
+        let s = serving_estimate(&spec(Mode::Dqt, 1.58, Env::Fp32, Optimizer::Adamw), 1, false)
+            .unwrap();
+        let cfg = ModelConfig::by_name("p1b").unwrap();
+        // quantized set at 2 bits/weight — the §1 deployment arithmetic
+        assert_eq!(s.grid_weights, cfg.quantized_param_count() as f64 * 2.0 / 8.0);
+        assert_eq!(
+            s.dense_weights,
+            (cfg.param_count() - cfg.quantized_param_count()) as f64 * 4.0
+        );
+        assert_eq!(s.kv_cache, kv_cache_bytes(&cfg, 1));
+        // serving is a small fraction of the training-state footprint
+        let train = estimate(&spec(Mode::Dqt, 1.58, Env::Fp32, Optimizer::Adamw), false)
+            .unwrap();
+        assert!(s.total() < train.state_bytes() / 4.0);
+    }
+
+    #[test]
+    fn serving_modes_and_ternary_override() {
+        let tern = |mode, bits, t| {
+            serving_estimate(&spec(mode, bits, Env::Fp32, Optimizer::Adamw), 1, t)
+                .unwrap()
+                .grid_weights
+        };
+        // int8 grids serve dense f32 unless §A.2 projection is forced
+        assert!(tern(Mode::Dqt, 8.0, false) > tern(Mode::Dqt, 8.0, true));
+        assert_eq!(tern(Mode::Dqt, 8.0, true), tern(Mode::Dqt, 1.58, false));
+        // BitNet and dqt_ternary_inf always serve ternary
+        assert_eq!(tern(Mode::Bitnet158, 1.58, false), tern(Mode::Dqt, 1.58, false));
+        assert_eq!(tern(Mode::DqtTernaryInf, 8.0, false), tern(Mode::Dqt, 1.58, false));
+        // fp32 has no grid at all
+        assert_eq!(tern(Mode::Fp32, 1.58, false), 0.0);
+        // json renders with a total
+        let s = serving_estimate(&spec(Mode::Dqt, 1.58, Env::Fp32, Optimizer::Adamw), 4, false)
+            .unwrap();
+        let j = s.to_json();
+        assert!(j.get("total").is_some() && j.get("kv_cache").is_some());
+        assert_eq!(j.get("batch").unwrap().as_usize(), Some(4));
     }
 }

@@ -92,6 +92,87 @@ pub fn packed_bytes(n: usize) -> usize {
     n.div_ceil(16) * 4
 }
 
+/// Decoded value of the trit at absolute index `i` in the packed stream.
+#[inline]
+fn trit_at(packed: &[u32], i: usize) -> f32 {
+    CODE_VALUES[((packed[i / 16] >> ((i % 16) * 2)) & 0b11) as usize]
+}
+
+/// Fused packed-ternary GEMM against a row-major `[n_out, k]` weight whose
+/// trits live contiguously in `packed` (row `r` starts at trit `r*k`):
+/// `y[M, n_out] = x[M, k] @ Wᵀ / scale`.
+///
+/// This is the decode-free serving matmul: the dot products run straight
+/// off the 2-bit codes (four trits per byte through the 256-entry LUT — no
+/// f32 weight materialization anywhere), and the AbsMean scale is applied
+/// once per output element instead of once per weight. The weight stream
+/// is read exactly once per call, so batching `m` sequences amortizes the
+/// code decode — the throughput lever continuous batching pulls.
+///
+/// Matches `unpack` on the unused `0b11` code (decoded as 0).
+pub fn gemm_nt(packed: &[u32], x: &[f32], m: usize, k: usize, n_out: usize, scale: f32) -> Vec<f32> {
+    assert!(
+        packed.len() * 16 >= n_out * k,
+        "packed ternary stream holds {} trits, {n_out}x{k} requested",
+        packed.len() * 16
+    );
+    assert_eq!(x.len(), m * k, "input is {} values, expected {m}x{k}", x.len());
+    let lut = byte_lut();
+    let inv_s = 1.0 / scale;
+    let mut y = vec![0f32; m * n_out];
+    let mut acc = vec![0f32; m];
+    for r in 0..n_out {
+        acc.fill(0.0);
+        let mut t = r * k; // absolute trit index
+        let mut j = 0; // column within the row
+        // head: trits before the next byte boundary (rows with k % 4 != 0)
+        while j < k && t % 4 != 0 {
+            let w = trit_at(packed, t);
+            if w != 0.0 {
+                for (bi, a) in acc.iter_mut().enumerate() {
+                    *a += w * x[bi * k + j];
+                }
+            }
+            j += 1;
+            t += 1;
+        }
+        // bulk: four trits per byte through the LUT
+        while j + 4 <= k {
+            let byte = ((packed[t / 16] >> ((t % 16) * 2)) & 0xFF) as usize;
+            if byte != 0 {
+                let w = &lut[byte];
+                for (bi, a) in acc.iter_mut().enumerate() {
+                    let xr = &x[bi * k + j..bi * k + j + 4];
+                    *a += w[0] * xr[0] + w[1] * xr[1] + w[2] * xr[2] + w[3] * xr[3];
+                }
+            }
+            j += 4;
+            t += 4;
+        }
+        // tail
+        while j < k {
+            let w = trit_at(packed, t);
+            if w != 0.0 {
+                for (bi, a) in acc.iter_mut().enumerate() {
+                    *a += w * x[bi * k + j];
+                }
+            }
+            j += 1;
+            t += 1;
+        }
+        for (bi, a) in acc.iter().enumerate() {
+            y[bi * n_out + r] = a * inv_s;
+        }
+    }
+    y
+}
+
+/// Fused packed-ternary GEMV: `y[n_out] = W @ x / scale` (single row of
+/// [`gemm_nt`] — the batch-1 decode step).
+pub fn gemv(packed: &[u32], x: &[f32], k: usize, n_out: usize, scale: f32) -> Vec<f32> {
+    gemm_nt(packed, x, 1, k, n_out, scale)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +228,80 @@ mod tests {
     fn compression_ratio_is_16x() {
         let n = 1_000_000;
         assert_eq!(packed_bytes(n) as f64 / (n * 4) as f64, 1.0 / 16.0);
+    }
+
+    /// Reference for the fused path: unpack to f32, then dense dot rows.
+    fn gemm_ref(packed: &[u32], x: &[f32], m: usize, k: usize, n_out: usize, s: f32) -> Vec<f32> {
+        let w: Vec<f32> = unpack(packed, n_out * k).iter().map(|&t| t / s).collect();
+        let mut y = vec![0f32; m * n_out];
+        for bi in 0..m {
+            for r in 0..n_out {
+                let mut acc = 0f32;
+                for j in 0..k {
+                    acc += x[bi * k + j] * w[r * k + j];
+                }
+                y[bi * n_out + r] = acc;
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn gemv_matches_unpack_then_dot_small() {
+        // k = 5 exercises the unaligned head/tail paths on every row > 0
+        let trits: Vec<f32> = (0..3 * 5).map(|i| ((i % 3) as f32) - 1.0).collect();
+        let p = pack(&trits).unwrap();
+        let x: Vec<f32> = (0..5).map(|i| 0.3 * i as f32 - 0.7).collect();
+        let y = gemv(&p, &x, 5, 3, 2.0);
+        let r = gemm_ref(&p, &x, 1, 5, 3, 2.0);
+        for (a, b) in y.iter().zip(r.iter()) {
+            assert!((a - b).abs() < 1e-6, "{y:?} vs {r:?}");
+        }
+    }
+
+    #[test]
+    fn prop_gemm_matches_unpack_then_dot_random_shapes() {
+        // random shapes (aligned and not), scales and batch sizes — the
+        // fused decode-free path must agree with unpack-then-dot everywhere
+        use crate::data::corpus::Rng;
+        let mut rng = Rng::new(0xEE7);
+        for case in 0..200 {
+            let k = 1 + rng.below(70);
+            let n_out = 1 + rng.below(40);
+            let m = 1 + rng.below(5);
+            let s = 0.5 + 40.0 * rng.next_f64() as f32;
+            let trits: Vec<f32> = (0..n_out * k).map(|_| rng.below(3) as f32 - 1.0).collect();
+            let p = pack(&trits).unwrap();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+            let y = gemm_nt(&p, &x, m, k, n_out, s);
+            let r = gemm_ref(&p, &x, m, k, n_out, s);
+            for (i, (a, b)) in y.iter().zip(r.iter()).enumerate() {
+                let tol = 1e-5f32.max(2e-6 * k as f32 / s);
+                assert!(
+                    (a - b).abs() < tol,
+                    "case {case} (m={m} k={k} n={n_out} s={s}) y[{i}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_handles_unused_code_like_unpack() {
+        // a stream full of 0b11 codes decodes to zeros in both paths
+        let words = vec![0xFFFF_FFFFu32; 2];
+        let x = vec![1.0f32; 8];
+        assert_eq!(gemv(&words, &x, 8, 4, 1.0), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn gemm_batched_equals_per_row_gemv() {
+        let trits: Vec<f32> = (0..6 * 16).map(|i| ((i * 7 % 3) as f32) - 1.0).collect();
+        let p = pack(&trits).unwrap();
+        let x: Vec<f32> = (0..3 * 16).map(|i| (i as f32 - 20.0) * 0.11).collect();
+        let batched = gemm_nt(&p, &x, 3, 16, 6, 4.0);
+        for bi in 0..3 {
+            let solo = gemv(&p, &x[bi * 16..(bi + 1) * 16], 16, 6, 4.0);
+            assert_eq!(&batched[bi * 6..(bi + 1) * 6], &solo[..], "row {bi}");
+        }
     }
 }

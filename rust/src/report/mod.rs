@@ -112,6 +112,44 @@ pub fn memory_comparison(model: &str) -> Result<String> {
     Ok(out)
 }
 
+/// Serving-footprint table (`repro report --exp serving`): packed grid
+/// bytes next to the KV-cache term at the batch widths the serving bench
+/// measures — what a deployed replica actually holds resident.
+pub fn serving_memory(model: &str) -> Result<String> {
+    let cfg = ModelConfig::by_name(model).ok_or_else(|| anyhow!("bad model"))?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Serving memory (weights + KV cache, no grads/optimizer), {model} \
+         (seq {}):\n",
+        cfg.max_seq_len
+    ));
+    out.push_str(
+        "| variant          | grid     | dense    | kv b=1   | kv b=16  | total b=16 |\n",
+    );
+    for (label, spec, ternary) in [
+        ("fp32", VariantSpec::new(model, Mode::Fp32, 1.58), false),
+        ("bitnet b1.58", VariantSpec::new(model, Mode::Bitnet158, 1.58), false),
+        ("dqt ternary", VariantSpec::new(model, Mode::Dqt, 1.58), false),
+        ("dqt 8bit", VariantSpec::new(model, Mode::Dqt, 8.0), false),
+        ("dqt 8bit →tern", VariantSpec::new(model, Mode::Dqt, 8.0), true),
+    ] {
+        let b1 = memory::serving_estimate(&spec, 1, ternary)
+            .ok_or_else(|| anyhow!("bad model"))?;
+        let b16 = memory::serving_estimate(&spec, 16, ternary)
+            .ok_or_else(|| anyhow!("bad model"))?;
+        out.push_str(&format!(
+            "| {:<16} | {:>8} | {:>8} | {:>8} | {:>8} | {:>10} |\n",
+            label,
+            human(b1.grid_weights),
+            human(b1.dense_weights),
+            human(b1.kv_cache),
+            human(b16.kv_cache),
+            human(b16.total()),
+        ));
+    }
+    Ok(out)
+}
+
 fn human(bytes: f64) -> String {
     if bytes >= 1e9 {
         format!("{:.2}G", bytes / 1e9)
@@ -263,6 +301,15 @@ mod tests {
     fn memory_comparison_renders() {
         let t = memory_comparison("p1b").unwrap();
         assert!(t.contains("dqt ternary"));
+    }
+
+    #[test]
+    fn serving_memory_renders_all_modes() {
+        let t = serving_memory("p1b").unwrap();
+        for needle in ["fp32", "bitnet b1.58", "dqt ternary", "dqt 8bit", "kv b=16"] {
+            assert!(t.contains(needle), "{needle} missing:\n{t}");
+        }
+        assert!(serving_memory("nope").is_err());
     }
 
     #[test]

@@ -185,6 +185,56 @@ pub struct StepMetrics {
     pub gnorm: f32,
 }
 
+/// Per-sequence KV-cache handle for incremental decoding — created by
+/// [`Decoder::new_cache`], advanced by [`Decoder::step_batch`]. Opaque to
+/// callers; the concrete layout belongs to the backend that made it.
+pub trait DecoderCache: Send {
+    /// Number of tokens appended so far (the next token's absolute
+    /// position).
+    fn position(&self) -> usize;
+    /// Forget the sequence (buffers stay allocated for reuse).
+    fn reset(&mut self);
+    /// Backend-side downcast hook.
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}
+
+/// A prepared incremental decoder for one model state: weights resident in
+/// their serving form (2-bit packed ternary for the quantized projections,
+/// dense f32 for embedding/norms), stepped one token per sequence per call
+/// with per-sequence KV caches. Built once per state via
+/// [`Backend::decoder`]; shared read-only across serving threads.
+pub trait Decoder: Send + Sync {
+    /// Positions a cache holds before the ring wraps (the model's trained
+    /// sequence length — generation beyond it slides the window).
+    fn max_positions(&self) -> usize;
+    fn vocab_size(&self) -> usize;
+    /// KV bytes one sequence adds per cached position
+    /// (`2 · n_layer · d_model · 4`).
+    fn kv_bytes_per_position(&self) -> usize;
+    /// Resident weight bytes in serving form (packed codes + dense f32).
+    fn weight_bytes(&self) -> usize;
+    /// How many of the projection matmuls run fused off packed codes
+    /// (decode-free) vs densely.
+    fn packed_projections(&self) -> usize;
+    /// Total projection matmuls (`7 · n_layer`).
+    fn n_projections(&self) -> usize;
+    /// Fresh, empty per-sequence KV cache.
+    fn new_cache(&self) -> Box<dyn DecoderCache>;
+    /// One batched decode step: append `tokens[i]` to `caches[i]` and
+    /// return next-token logits `[len, V]` row-major. Rows are
+    /// independent — batching never changes a sequence's numerics.
+    fn step_batch(
+        &self,
+        caches: &mut [&mut dyn DecoderCache],
+        tokens: &[i32],
+    ) -> Result<Vec<f32>>;
+    /// Single-sequence convenience wrapper over [`Decoder::step_batch`].
+    fn step(&self, cache: &mut dyn DecoderCache, token: i32) -> Result<Vec<f32>> {
+        let mut caches = [cache];
+        self.step_batch(&mut caches, &[token])
+    }
+}
+
 /// One executable variant: the four entry points plus the manifest that
 /// drives buffer layout. Implemented by [`PjrtBackend`] (compiled AOT
 /// artifacts) and [`NativeBackend`] (pure-Rust CPU reference).
@@ -216,6 +266,17 @@ pub trait Backend {
 
     /// Whether deploy-time ternary projection (§A.2) is available.
     fn has_ternary_inference(&self) -> bool;
+
+    /// Build a prepared incremental decoder for `state` (KV-cached
+    /// generation). `ternary` forces §A.2 deploy-time ternary projection.
+    /// Backends without a serving path keep the default error.
+    fn decoder(&self, state: &State, ternary: bool) -> Result<Box<dyn Decoder>> {
+        let _ = (state, ternary);
+        Err(anyhow!(
+            "backend {:?} has no incremental decode entry",
+            self.name()
+        ))
+    }
 }
 
 /// A variant bound to an execution backend. The train loop, checkpointing,
@@ -301,5 +362,10 @@ impl VariantRuntime {
 
     pub fn has_ternary_inference(&self) -> bool {
         self.backend.has_ternary_inference()
+    }
+
+    /// Prepared incremental decoder for serving (see [`Decoder`]).
+    pub fn decoder(&self, state: &State, ternary: bool) -> Result<Box<dyn Decoder>> {
+        self.backend.decoder(state, ternary)
     }
 }

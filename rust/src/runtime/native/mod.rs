@@ -21,11 +21,12 @@ use std::borrow::Cow;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{ModelConfig, VariantSpec};
+use crate::config::{Mode, ModelConfig, VariantSpec};
+use crate::quant::codec::Format;
 use crate::quant::sr::{hash_u32, uniform01};
-use crate::quant::{absmean_quantize, absmean_scale};
+use crate::quant::{absmean_quantize, absmean_scale, ternary};
 
-use super::{Backend, Manifest, State, StepMetrics};
+use super::{Backend, Decoder, DecoderCache, Manifest, Param, State, StepMetrics};
 
 /// The native CPU backend for one variant.
 pub struct NativeBackend {
@@ -73,6 +74,109 @@ impl NativeBackend {
             return Err(anyhow!("variant has no ternary-inference entry"));
         }
         Ok(())
+    }
+
+    /// Build the decode-time weights for `state` (see [`Decoder`]).
+    ///
+    /// `packed` selects the fused 2-bit representation for every
+    /// ternary-effective projection — the serving default, where the
+    /// decode matmuls run straight off the codes via
+    /// [`ternary::gemm_nt`] and no f32 weight is ever materialized.
+    /// `packed = false` keeps the same effective weights dense f32: the
+    /// bit-exact twin of the training forward, used by the KV-cache
+    /// parity tests.
+    pub fn decoder_with(
+        &self,
+        state: &State,
+        ternary_inf: bool,
+        packed: bool,
+    ) -> Result<Box<dyn Decoder>> {
+        self.check_state(state)?;
+        self.check_ternary(ternary_inf)?;
+        // decode-time weight treatment, mirroring `Net::effective_weight`:
+        // project = §A.2 AbsMean re-projection to ternary at build time
+        let project = match self.hyper.mode {
+            Mode::Fp32 => false,
+            Mode::Bitnet158 | Mode::DqtTernaryInf => true,
+            Mode::Dqt | Mode::DqtAbsmax => ternary_inf,
+        };
+        // grids already stored on the ternary grid pack without projection
+        let stored_ternary = self.hyper.has_grid_weights()
+            && Format::from_bits(self.hyper.grid_bits) == Format::Ternary2bit;
+        let build_lin = |lin: &spec::Lin| -> Result<model::DecodeLin> {
+            let p = &state.params[lin.w];
+            if project {
+                let w = p.values()?;
+                let s3 = absmean_scale(&w, 1.58);
+                let w3 = absmean_quantize(&w, 1.58, s3);
+                if packed {
+                    let codes: Vec<f32> = w3.iter().map(|&x| (x * s3).round()).collect();
+                    let words =
+                        ternary::pack(&codes).map_err(|e| anyhow!("packing projection: {e}"))?;
+                    Ok(model::DecodeLin::Ternary { words, scale: s3 })
+                } else {
+                    Ok(model::DecodeLin::Dense(w3))
+                }
+            } else if stored_ternary && packed {
+                match p {
+                    // resident 2-bit grids: adopt the packed bytes as-is
+                    // (no f32 round trip anywhere)
+                    Param::Packed(pt) if pt.format == Format::Ternary2bit => {
+                        let words = pt
+                            .bytes
+                            .chunks_exact(4)
+                            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                            .collect();
+                        let scale = pt
+                            .scale
+                            .ok_or_else(|| anyhow!("packed ternary grid without scale"))?;
+                        Ok(model::DecodeLin::Ternary { words, scale })
+                    }
+                    _ => {
+                        let si = lin
+                            .s
+                            .ok_or_else(|| anyhow!("ternary grid without companion scale"))?;
+                        let s = state.params[si].scalar()?;
+                        let w = p.values()?;
+                        let codes: Vec<f32> = w.iter().map(|&x| (x * s).round()).collect();
+                        let words =
+                            ternary::pack(&codes).map_err(|e| anyhow!("packing grid: {e}"))?;
+                        Ok(model::DecodeLin::Ternary { words, scale: s })
+                    }
+                }
+            } else {
+                Ok(model::DecodeLin::Dense(p.to_vec()?))
+            }
+        };
+        let mut layers = Vec::with_capacity(self.layout.layers.len());
+        for li in &self.layout.layers {
+            layers.push(model::DecodeLayer {
+                attn_norm: state.params[li.attn_norm].to_vec()?,
+                mlp_norm: state.params[li.mlp_norm].to_vec()?,
+                wq: build_lin(&li.wq)?,
+                wk: build_lin(&li.wk)?,
+                wv: build_lin(&li.wv)?,
+                wo: build_lin(&li.wo)?,
+                w_gate: build_lin(&li.w_gate)?,
+                w_up: build_lin(&li.w_up)?,
+                w_down: build_lin(&li.w_down)?,
+            });
+        }
+        let w = model::DecodeWeights {
+            quantized_acts: self.hyper.mode != Mode::Fp32,
+            act_bits: self.hyper.act_bits,
+            rope_theta: self.hyper.rope_theta,
+            rms_eps: self.hyper.rms_eps,
+            hidden: self.cfg.hidden_size,
+            inter: self.cfg.intermediate_size,
+            vocab: self.cfg.vocab_size,
+            n_heads: self.cfg.num_attention_heads,
+            seq_len: self.cfg.max_seq_len,
+            emb: state.params[self.layout.emb].to_vec()?,
+            final_norm: state.params[self.layout.final_norm].to_vec()?,
+            layers,
+        };
+        Ok(Box::new(NativeDecoder { w }))
     }
 
     /// Split a `[b, s+1]` token matrix into (inputs, labels) rows.
@@ -213,6 +317,83 @@ impl Backend for NativeBackend {
 
     fn has_ternary_inference(&self) -> bool {
         self.hyper.mode.quantized()
+    }
+
+    fn decoder(&self, state: &State, ternary: bool) -> Result<Box<dyn Decoder>> {
+        self.decoder_with(state, ternary, true)
+    }
+}
+
+/// The native backend's serving decoder: prepared [`model::DecodeWeights`]
+/// (packed ternary projections + dense embedding/norms) behind the
+/// backend-agnostic [`Decoder`] trait.
+pub struct NativeDecoder {
+    w: model::DecodeWeights,
+}
+
+impl Decoder for NativeDecoder {
+    fn max_positions(&self) -> usize {
+        self.w.seq_len
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.w.vocab
+    }
+
+    fn kv_bytes_per_position(&self) -> usize {
+        2 * self.w.layers.len() * self.w.hidden * 4
+    }
+
+    fn weight_bytes(&self) -> usize {
+        let mut b = (self.w.emb.len() + self.w.final_norm.len()) * 4;
+        for l in &self.w.layers {
+            b += (l.attn_norm.len() + l.mlp_norm.len()) * 4;
+            for lin in l.lins() {
+                b += lin.resident_bytes();
+            }
+        }
+        b
+    }
+
+    fn packed_projections(&self) -> usize {
+        self.w
+            .layers
+            .iter()
+            .flat_map(|l| l.lins())
+            .filter(|l| l.is_packed())
+            .count()
+    }
+
+    fn n_projections(&self) -> usize {
+        self.w.layers.len() * 7
+    }
+
+    fn new_cache(&self) -> Box<dyn DecoderCache> {
+        Box::new(self.w.new_cache())
+    }
+
+    fn step_batch(
+        &self,
+        caches: &mut [&mut dyn DecoderCache],
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let mut kvs: Vec<&mut model::KvCache> = Vec::with_capacity(caches.len());
+        for c in caches.iter_mut() {
+            kvs.push(
+                c.as_any_mut()
+                    .downcast_mut::<model::KvCache>()
+                    .ok_or_else(|| anyhow!("cache was not created by the native decoder"))?,
+            );
+        }
+        self.w.forward_step_batch(&mut kvs, tokens)
+    }
+
+    fn step(&self, cache: &mut dyn DecoderCache, token: i32) -> Result<Vec<f32>> {
+        let kv = cache
+            .as_any_mut()
+            .downcast_mut::<model::KvCache>()
+            .ok_or_else(|| anyhow!("cache was not created by the native decoder"))?;
+        self.w.forward_step(kv, token)
     }
 }
 
@@ -357,6 +538,123 @@ mod tests {
             .is_err());
         tokens[3] = be.cfg.vocab_size as i32 + 5;
         assert!(be.train_step(st, &tokens, 0, 1e-3).is_err());
+    }
+
+    /// KV-cached incremental decoding reproduces the full-sequence forward
+    /// position by position, for ternary and int8 variants (the parity
+    /// requirement of the serving subsystem). Dense decode weights are the
+    /// bit-exact twin of the training forward, so 1e-5 holds with margin;
+    /// the fused 2-bit GEMV path applies the AbsMean scale once per row
+    /// instead of once per weight, so it gets a (still tight) float-
+    /// association tolerance.
+    #[test]
+    fn kv_cache_decode_matches_full_forward() {
+        for (mode, bits, packed, tol) in [
+            (Mode::Dqt, 8.0, true, 1e-5f32), // int8 grid serves dense f32
+            (Mode::Dqt, 1.58, false, 1e-5),  // ternary grid, dense twin
+            (Mode::Fp32, 1.58, true, 1e-5),
+            (Mode::Dqt, 1.58, true, 2e-3), // fused packed-ternary GEMV
+        ] {
+            let be = backend(mode, bits);
+            let st = be.init_state(11).unwrap();
+            let shape = &be.layout.manifest.logits_tokens_shape;
+            let (b, s) = (shape[0], shape[1]);
+            let v = be.cfg.vocab_size;
+            let tokens: Vec<i32> = (0..b * s)
+                .map(|i| (hash_u32(i as u32, 5) % v as u32) as i32)
+                .collect();
+            let full = be.logits(&st, &tokens, false).unwrap();
+            let dec = be.decoder_with(&st, false, packed).unwrap();
+            for bi in 0..b {
+                let mut cache = dec.new_cache();
+                for i in 0..s {
+                    let step = dec.step(cache.as_mut(), tokens[bi * s + i]).unwrap();
+                    let want = &full[(bi * s + i) * v..(bi * s + i + 1) * v];
+                    for (c, (a, w)) in step.iter().zip(want.iter()).enumerate() {
+                        assert!(
+                            (a - w).abs() < tol,
+                            "{mode:?} b{bits} packed={packed} row {bi} pos {i} logit {c}: {a} vs {w}"
+                        );
+                    }
+                }
+                assert_eq!(cache.position(), s);
+            }
+        }
+    }
+
+    /// §A.2 deploy-time ternary projection: the decoder's build-time
+    /// AbsMean projection matches the full forward's per-call projection.
+    #[test]
+    fn kv_cache_decode_matches_ternary_projection() {
+        let be = backend(Mode::Dqt, 8.0);
+        let st = be.init_state(4).unwrap();
+        let shape = &be.layout.manifest.logits_tokens_shape;
+        let (_, s) = (shape[0], shape[1]);
+        let v = be.cfg.vocab_size;
+        let tokens: Vec<i32> = (0..shape[0] * s).map(|i| (i % v) as i32).collect();
+        let full = be.logits(&st, &tokens, true).unwrap();
+        let dec = be.decoder_with(&st, true, false).unwrap();
+        let mut cache = dec.new_cache();
+        for i in 0..s {
+            let step = dec.step(cache.as_mut(), tokens[i]).unwrap();
+            let want = &full[i * v..(i + 1) * v];
+            for (a, w) in step.iter().zip(want.iter()) {
+                assert!((a - w).abs() < 1e-5, "pos {i}: {a} vs {w}");
+            }
+        }
+        // fp32 has no ternary-inference entry on the decode path either
+        let fe = backend(Mode::Fp32, 1.58);
+        let fst = fe.init_state(1).unwrap();
+        assert!(fe.decoder_with(&fst, true, true).is_err());
+    }
+
+    /// The serving decoder is decode-free for ternary grids: every
+    /// projection runs fused off 2-bit codes, packed-resident states are
+    /// adopted without an f32 round trip, and the ring cache slides past
+    /// `seq_len` without erroring.
+    #[test]
+    fn decoder_serves_packed_grids_decode_free() {
+        let be = backend(Mode::Dqt, 1.58);
+        let mut st = be.init_state(2).unwrap();
+        st.pack_grids(&be.layout.manifest).unwrap();
+        let dec = be.decoder_with(&st, false, true).unwrap();
+        assert_eq!(dec.packed_projections(), dec.n_projections());
+        let dense_all: usize = be
+            .layout
+            .manifest
+            .params
+            .iter()
+            .filter(|p| !p.is_scale())
+            .map(|p| p.numel() * 4)
+            .sum();
+        assert!(dec.weight_bytes() < dense_all, "{} !< {dense_all}", dec.weight_bytes());
+        assert_eq!(
+            dec.kv_bytes_per_position(),
+            2 * be.cfg.num_hidden_layers * be.cfg.hidden_size * 4
+        );
+        // packed-resident and dense states produce bitwise-equal steps
+        let st_dense = be.init_state(2).unwrap();
+        let dec_dense = be.decoder_with(&st_dense, false, true).unwrap();
+        let mut c1 = dec.new_cache();
+        let mut c2 = dec_dense.new_cache();
+        for t in [1i32, 3, 5, 7] {
+            let a = dec.step(c1.as_mut(), t).unwrap();
+            let b = dec_dense.step(c2.as_mut(), t).unwrap();
+            assert_eq!(a, b);
+        }
+        // sliding window: decode far past the trained sequence length
+        let mut cache = dec.new_cache();
+        for i in 0..3 * be.cfg.max_seq_len {
+            let l = dec
+                .step(cache.as_mut(), (i % be.cfg.vocab_size) as i32)
+                .unwrap();
+            assert!(l.iter().all(|x| x.is_finite()), "pos {i}");
+        }
+        assert_eq!(cache.position(), 3 * be.cfg.max_seq_len);
+        // out-of-vocab tokens error cleanly
+        assert!(dec
+            .step(dec.new_cache().as_mut(), be.cfg.vocab_size as i32)
+            .is_err());
     }
 
     /// End-to-end gradient check of the full backward pass (embedding →

@@ -17,6 +17,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{Mode, ModelConfig};
 use crate::data::tokenizer::PAD_ID;
+use crate::quant::ternary;
 use crate::quant::{absmean_quantize, absmean_scale};
 
 use super::math::{
@@ -534,6 +535,282 @@ impl<'a> Net<'a> {
         }
 
         Ok((loss as f32, grads))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental decoding (KV-cached generation, the serving path)
+// ---------------------------------------------------------------------------
+
+/// Decode-time representation of one projection: dense f32 (fp32 mode and
+/// non-ternary integer grids) or 2-bit packed ternary codes with their
+/// AbsMean scale — the decode-free path, where every matmul runs fused off
+/// the codes via [`ternary::gemm_nt`] and no f32 weight is materialized.
+pub(crate) enum DecodeLin {
+    Dense(Vec<f32>),
+    Ternary { words: Vec<u32>, scale: f32 },
+}
+
+impl DecodeLin {
+    /// `y[M,N] = x[M,K] @ Wᵀ` for the decode micro-batch.
+    fn matmul(&self, x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        match self {
+            DecodeLin::Dense(w) => matmul_nt(x, w, m, k, n),
+            DecodeLin::Ternary { words, scale } => ternary::gemm_nt(words, x, m, k, n, *scale),
+        }
+    }
+
+    pub(crate) fn is_packed(&self) -> bool {
+        matches!(self, DecodeLin::Ternary { .. })
+    }
+
+    /// Resident bytes of this projection in serving form.
+    pub(crate) fn resident_bytes(&self) -> usize {
+        match self {
+            DecodeLin::Dense(w) => w.len() * 4,
+            DecodeLin::Ternary { words, .. } => words.len() * 4 + 4,
+        }
+    }
+}
+
+/// One layer's decode-time weights (norms stay dense f32, like training).
+pub(crate) struct DecodeLayer {
+    pub(crate) attn_norm: Vec<f32>,
+    pub(crate) mlp_norm: Vec<f32>,
+    pub(crate) wq: DecodeLin,
+    pub(crate) wk: DecodeLin,
+    pub(crate) wv: DecodeLin,
+    pub(crate) wo: DecodeLin,
+    pub(crate) w_gate: DecodeLin,
+    pub(crate) w_up: DecodeLin,
+    pub(crate) w_down: DecodeLin,
+}
+
+impl DecodeLayer {
+    pub(crate) fn lins(&self) -> [&DecodeLin; 7] {
+        [
+            &self.wq, &self.wk, &self.wv, &self.wo, &self.w_gate, &self.w_up, &self.w_down,
+        ]
+    }
+}
+
+/// Per-sequence KV cache: one `[seq_len, H]` ring buffer pair (keys and
+/// values, already RoPE-rotated) per layer, bounded by the model's trained
+/// sequence length. Positions past `seq_len` overwrite the oldest slot —
+/// attention then runs over the sliding window of the last `seq_len`
+/// tokens.
+pub struct KvCache {
+    /// `[n_layer, seq_len, H]`, keys
+    k: Vec<f32>,
+    /// `[n_layer, seq_len, H]`, values
+    v: Vec<f32>,
+    /// absolute next position (== tokens appended so far)
+    pos: usize,
+    seq_len: usize,
+    h: usize,
+}
+
+impl KvCache {
+    pub(crate) fn new(n_layer: usize, seq_len: usize, h: usize) -> KvCache {
+        KvCache {
+            k: vec![0f32; n_layer * seq_len * h],
+            v: vec![0f32; n_layer * seq_len * h],
+            pos: 0,
+            seq_len,
+            h,
+        }
+    }
+}
+
+impl crate::runtime::DecoderCache for KvCache {
+    fn position(&self) -> usize {
+        self.pos
+    }
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+/// Prepared decode-time weights of one model state: the serving twin of
+/// [`Net::forward`]. Everything the incremental step needs is resident in
+/// its serving form — packed ternary codes for the quantized projections,
+/// dense f32 for the embedding/norms/tied head.
+pub(crate) struct DecodeWeights {
+    /// act-quantize inputs to the projections (all quantized modes)
+    pub(crate) quantized_acts: bool,
+    pub(crate) act_bits: u32,
+    pub(crate) rope_theta: f32,
+    pub(crate) rms_eps: f32,
+    pub(crate) hidden: usize,
+    pub(crate) inter: usize,
+    pub(crate) vocab: usize,
+    pub(crate) n_heads: usize,
+    pub(crate) seq_len: usize,
+    pub(crate) emb: Vec<f32>,
+    pub(crate) final_norm: Vec<f32>,
+    pub(crate) layers: Vec<DecodeLayer>,
+}
+
+impl DecodeWeights {
+    pub(crate) fn new_cache(&self) -> KvCache {
+        KvCache::new(self.layers.len(), self.seq_len, self.hidden)
+    }
+
+    fn maybe_quant(&self, x: &[f32], width: usize) -> Vec<f32> {
+        if self.quantized_acts {
+            act_quant(x, width, self.act_bits)
+        } else {
+            x.to_vec()
+        }
+    }
+
+    /// Single-sequence incremental decode: append `token` at the cache's
+    /// position, return next-token logits `[V]`.
+    pub(crate) fn forward_step(&self, cache: &mut KvCache, token: i32) -> Result<Vec<f32>> {
+        self.forward_step_batch(&mut [cache], &[token])
+    }
+
+    /// One incremental decode step over a micro-batch of independent
+    /// sequences: append `tokens[i]` at `caches[i]`'s position and return
+    /// next-token logits `[m, V]`. Reuses the training forward's exact
+    /// RMSNorm / RoPE / softmax / SwiGLU arithmetic, so logits match
+    /// [`Net::forward`] position by position; the projections run through
+    /// [`DecodeLin`] (fused packed-ternary GEMV on the serving path).
+    /// Rows are independent — batch composition never changes a
+    /// sequence's numerics.
+    pub(crate) fn forward_step_batch(
+        &self,
+        caches: &mut [&mut KvCache],
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let m = tokens.len();
+        if caches.len() != m {
+            return Err(anyhow!("{} caches for {m} tokens", caches.len()));
+        }
+        if m == 0 {
+            return Ok(Vec::new());
+        }
+        let (h, i_, v) = (self.hidden, self.inter, self.vocab);
+        let nh = self.n_heads;
+        let d = h / nh;
+        let half = d / 2;
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        let kv_len = self.layers.len() * self.seq_len * h;
+        for cache in caches.iter() {
+            if cache.h != h || cache.seq_len != self.seq_len || cache.k.len() != kv_len {
+                return Err(anyhow!("KV cache geometry does not match this decoder"));
+            }
+        }
+        let mut x = vec![0f32; m * h];
+        for (r, &t) in tokens.iter().enumerate() {
+            if !(0..v as i32).contains(&t) {
+                return Err(anyhow!("token id {t} outside vocab 0..{v}"));
+            }
+            let id = t as usize;
+            x[r * h..(r + 1) * h].copy_from_slice(&self.emb[id * h..(id + 1) * h]);
+        }
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // --- attention block ---
+            let (xn, _) = rmsnorm(&x, &layer.attn_norm, self.rms_eps, h);
+            let xq = self.maybe_quant(&xn, h);
+            let mut q = layer.wq.matmul(&xq, m, h, h);
+            let mut k_new = layer.wk.matmul(&xq, m, h, h);
+            let v_new = layer.wv.matmul(&xq, m, h, h);
+            let mut ctx = vec![0f32; m * h];
+            for (bi, cache) in caches.iter_mut().enumerate() {
+                let pos = cache.pos;
+                rope_row(&mut q[bi * h..(bi + 1) * h], pos, nh, half, self.rope_theta);
+                rope_row(&mut k_new[bi * h..(bi + 1) * h], pos, nh, half, self.rope_theta);
+                let slot = pos % self.seq_len;
+                let base_l = (li * self.seq_len + slot) * h;
+                cache.k[base_l..base_l + h].copy_from_slice(&k_new[bi * h..(bi + 1) * h]);
+                cache.v[base_l..base_l + h].copy_from_slice(&v_new[bi * h..(bi + 1) * h]);
+                // window of cached positions, oldest first (chronological —
+                // the same accumulation order as the full forward)
+                let n_ctx = (pos + 1).min(self.seq_len);
+                let first = pos + 1 - n_ctx;
+                let mut att = vec![0f32; n_ctx];
+                for a in 0..nh {
+                    let hb = a * d;
+                    let qi = &q[bi * h + hb..][..d];
+                    for (jj, abs) in (first..=pos).enumerate() {
+                        let sj = abs % self.seq_len;
+                        let kj = &cache.k[(li * self.seq_len + sj) * h + hb..][..d];
+                        let mut acc = 0f32;
+                        for (qa, kb) in qi.iter().zip(kj.iter()) {
+                            acc += qa * kb;
+                        }
+                        att[jj] = acc * inv_sqrt_d;
+                    }
+                    softmax_prefix(&mut att, n_ctx);
+                    let ci = bi * h + hb;
+                    for (jj, abs) in (first..=pos).enumerate() {
+                        let p = att[jj];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let sj = abs % self.seq_len;
+                        let vj = &cache.v[(li * self.seq_len + sj) * h + hb..][..d];
+                        for (o, &vv) in ctx[ci..ci + d].iter_mut().zip(vj.iter()) {
+                            *o += p * vv;
+                        }
+                    }
+                }
+            }
+            let ctx_q = self.maybe_quant(&ctx, h);
+            let attn_out = layer.wo.matmul(&ctx_q, m, h, h);
+            let mut h_mid = x;
+            for (o, &a) in h_mid.iter_mut().zip(attn_out.iter()) {
+                *o += a;
+            }
+
+            // --- MLP block (SwiGLU) ---
+            let (xn2, _) = rmsnorm(&h_mid, &layer.mlp_norm, self.rms_eps, h);
+            let xq2 = self.maybe_quant(&xn2, h);
+            let gate = layer.w_gate.matmul(&xq2, m, h, i_);
+            let up = layer.w_up.matmul(&xq2, m, h, i_);
+            let mut down_in = vec![0f32; m * i_];
+            for ((o, &g), &u) in down_in.iter_mut().zip(gate.iter()).zip(up.iter()) {
+                *o = silu(g) * u;
+            }
+            let down_in_q = self.maybe_quant(&down_in, i_);
+            let down = layer.w_down.matmul(&down_in_q, m, i_, h);
+            let mut x_out = h_mid;
+            for (o, &dv) in x_out.iter_mut().zip(down.iter()) {
+                *o += dv;
+            }
+            x = x_out;
+        }
+        for cache in caches.iter_mut() {
+            cache.pos += 1;
+        }
+
+        let (xf, _) = rmsnorm(&x, &self.final_norm, self.rms_eps, h);
+        // tied LM head — dense f32, never quantized (same as training)
+        Ok(matmul_nt(&xf, &self.emb, m, h, v))
+    }
+}
+
+/// RoPE rotation of one `[H]` row at absolute position `pos` — the
+/// incremental twin of [`apply_rope`], with identical angle arithmetic so
+/// cached keys match the full forward bit for bit.
+fn rope_row(x: &mut [f32], pos: usize, nh: usize, half: usize, theta: f32) {
+    let d = 2 * half;
+    for a in 0..nh {
+        let base = a * d;
+        for j in 0..half {
+            let inv = 1.0 / theta.powf(2.0 * j as f32 / d as f32);
+            let ang = pos as f32 * inv;
+            let (c, sn) = (ang.cos(), ang.sin());
+            let x0 = x[base + 2 * j];
+            let x1 = x[base + 2 * j + 1];
+            x[base + 2 * j] = x0 * c - x1 * sn;
+            x[base + 2 * j + 1] = x0 * sn + x1 * c;
+        }
     }
 }
 

@@ -1,0 +1,205 @@
+//! The generation engine: prompt → prefill → sampled decode → text.
+//!
+//! An [`Engine`] binds a prepared [`Decoder`] (weights resident in serving
+//! form — 2-bit packed grids for ternary projections) to a tokenizer. It
+//! is immutable and `Sync`: every request gets its own KV cache and
+//! sampler, so one engine serves any number of concurrent sequences (the
+//! scheduler batches them; `generate` here is the one-shot convenience
+//! path the CLI uses).
+
+use anyhow::Result;
+
+use crate::data::tokenizer::{Tokenizer, BOS_ID};
+use crate::runtime::{Decoder, DecoderCache, State, VariantRuntime};
+
+use super::sampler::Sampler;
+
+/// Per-request generation parameters (the `POST /v1/generate` knobs).
+#[derive(Clone, Debug)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    /// 0 = greedy
+    pub temperature: f32,
+    /// 0 = disabled
+    pub top_k: usize,
+    /// ≥ 1.0 = disabled
+    pub top_p: f32,
+    /// seeds the sampler's hash stream — generations are deterministic
+    /// per (checkpoint, prompt, seed)
+    pub seed: u32,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams {
+            max_new_tokens: 48,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Why a generation stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// sampled the EOS/document-separator id
+    Eos,
+    /// produced `max_new_tokens`
+    Length,
+    /// hit the model's trained context length
+    CacheFull,
+    /// the decode step failed (the error is logged server-side)
+    Error,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::Length => "length",
+            FinishReason::CacheFull => "cache_full",
+            FinishReason::Error => "error",
+        }
+    }
+}
+
+/// One finished generation.
+#[derive(Clone, Debug)]
+pub struct Generation {
+    /// prompt ids actually fed (after BOS prepend + left truncation)
+    pub prompt_tokens: usize,
+    /// generated ids, including a terminal EOS when `finish == Eos`
+    pub token_ids: Vec<i32>,
+    /// generated text (EOS decodes to nothing)
+    pub text: String,
+    pub finish: FinishReason,
+}
+
+/// A model bound to a tokenizer, ready to generate.
+pub struct Engine {
+    decoder: Box<dyn Decoder>,
+    tokenizer: Tokenizer,
+    eos_id: i32,
+}
+
+impl Engine {
+    /// Prepare the serving engine for `state` on `vrt`'s backend.
+    /// `ternary` forces §A.2 deploy-time ternary projection (errors on
+    /// variants without a ternary-inference entry).
+    pub fn new(
+        vrt: &VariantRuntime,
+        state: &State,
+        tokenizer: Tokenizer,
+        ternary: bool,
+    ) -> Result<Engine> {
+        Ok(Engine::from_decoder(vrt.decoder(state, ternary)?, tokenizer))
+    }
+
+    /// Wrap an already-built decoder (tests, custom backends). The EOS id
+    /// is the tokenizer's BOS/document-separator — the only "document
+    /// ends here" signal the training stream contains.
+    pub fn from_decoder(decoder: Box<dyn Decoder>, tokenizer: Tokenizer) -> Engine {
+        Engine {
+            decoder,
+            tokenizer,
+            eos_id: BOS_ID,
+        }
+    }
+
+    pub fn decoder(&self) -> &dyn Decoder {
+        self.decoder.as_ref()
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    pub fn eos_id(&self) -> i32 {
+        self.eos_id
+    }
+
+    pub fn max_positions(&self) -> usize {
+        self.decoder.max_positions()
+    }
+
+    /// Encode a prompt for generation: BOS (document start) + BPE ids,
+    /// left-truncated to leave at least one position for decoding.
+    pub fn prompt_ids(&self, prompt: &str) -> Vec<i32> {
+        let mut ids = vec![self.eos_id];
+        ids.extend(self.tokenizer.encode(prompt));
+        let cap = self.decoder.max_positions().saturating_sub(1).max(1);
+        if ids.len() > cap {
+            ids.drain(..ids.len() - cap);
+        }
+        ids
+    }
+
+    /// One-shot generation from a text prompt (prefill + decode loop on a
+    /// fresh cache). For concurrent serving use [`super::Scheduler`].
+    pub fn generate(&self, prompt: &str, params: &GenParams) -> Result<Generation> {
+        self.generate_ids(self.prompt_ids(prompt), params)
+    }
+
+    /// One-shot generation from pre-tokenized ids.
+    pub fn generate_ids(&self, prompt: Vec<i32>, params: &GenParams) -> Result<Generation> {
+        let mut cache = self.decoder.new_cache();
+        let mut logits = Vec::new();
+        for &t in &prompt {
+            logits = self.decoder.step(cache.as_mut(), t)?;
+        }
+        let mut sampler = Sampler::new(params);
+        let mut stream = self.tokenizer.decode_stream();
+        let mut out = Vec::new();
+        let mut text = String::new();
+        let finish = if params.max_new_tokens == 0 || logits.is_empty() {
+            FinishReason::Length
+        } else {
+            loop {
+                let next = sampler.sample(&logits) as i32;
+                out.push(next);
+                if next == self.eos_id {
+                    break FinishReason::Eos;
+                }
+                text.push_str(&stream.push(next));
+                if out.len() >= params.max_new_tokens {
+                    break FinishReason::Length;
+                }
+                if cache.position() >= self.decoder.max_positions() {
+                    break FinishReason::CacheFull;
+                }
+                logits = self.decoder.step(cache.as_mut(), next)?;
+            }
+        };
+        text.push_str(&stream.finish());
+        Ok(Generation {
+            prompt_tokens: prompt.len(),
+            token_ids: out,
+            text,
+            finish,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_reason_strings() {
+        assert_eq!(FinishReason::Eos.as_str(), "eos");
+        assert_eq!(FinishReason::Length.as_str(), "length");
+        assert_eq!(FinishReason::CacheFull.as_str(), "cache_full");
+        assert_eq!(FinishReason::Error.as_str(), "error");
+    }
+
+    #[test]
+    fn default_params_are_greedy() {
+        let p = GenParams::default();
+        assert_eq!(p.temperature, 0.0);
+        assert!(p.max_new_tokens > 0);
+        assert_eq!(p.top_k, 0);
+        assert_eq!(p.top_p, 1.0);
+    }
+}

@@ -1,0 +1,335 @@
+//! Zero-dependency HTTP/1.1 inference server on `std::net::TcpListener`.
+//!
+//! Hand-rolled request parsing (request line + headers + Content-Length
+//! body), JSON via the in-tree `util::json`, one thread per connection,
+//! one decode-loop thread driving the continuous-batching scheduler.
+//!
+//! Endpoints:
+//!
+//! * `GET /healthz`       → `{"status":"ok", ...}` — liveness + model info
+//! * `GET /v1/stats`      → scheduler counters (tokens/sec bookkeeping)
+//! * `POST /v1/generate`  → request `{"prompt": "...", "max_new_tokens"?,
+//!   "temperature"?, "top_k"?, "top_p"?, "seed"?}`, response `{"id",
+//!   "text", "token_ids", "prompt_tokens", "gen_tokens",
+//!   "finish_reason"}`
+//!
+//! The full schema is documented in `docs/SERVING.md`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Decoder;
+use crate::util::json::{parse, Value};
+
+use super::engine::{Engine, GenParams};
+use super::scheduler::Scheduler;
+
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+const MAX_BODY_BYTES: usize = 1024 * 1024;
+/// Worst-case wait for a generation to schedule + decode.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(120);
+/// Decode-loop idle wait between condvar polls.
+const IDLE_WAIT: Duration = Duration::from_millis(50);
+
+/// The serving endpoint: a bound listener plus the shared scheduler.
+pub struct Server {
+    listener: TcpListener,
+    scheduler: Arc<Scheduler>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free port) and
+    /// wrap `engine` in a continuous-batching scheduler of width
+    /// `max_batch`.
+    pub fn bind(addr: &str, engine: Engine, max_batch: usize) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let scheduler = Arc::new(Scheduler::new(Arc::new(engine), max_batch));
+        Ok(Server { listener, scheduler })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn scheduler(&self) -> Arc<Scheduler> {
+        self.scheduler.clone()
+    }
+
+    /// Serve forever: spawns the decode loop, then one handler thread per
+    /// connection. (Process lifetime is the server lifetime — kill the
+    /// process to stop, as the smoke test does.)
+    pub fn run(self) -> Result<()> {
+        let sched = self.scheduler.clone();
+        std::thread::spawn(move || decode_loop(&sched));
+        for conn in self.listener.incoming() {
+            match conn {
+                Ok(stream) => {
+                    let sched = self.scheduler.clone();
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, &sched) {
+                            eprintln!("serve: connection error: {e}");
+                        }
+                    });
+                }
+                Err(e) => eprintln!("serve: accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The single decode thread: batched steps while there is work, condvar
+/// wait while idle. Step errors are logged and already failed the affected
+/// requests (the scheduler evicts them with `finish_reason = "error"`).
+fn decode_loop(sched: &Scheduler) {
+    loop {
+        match sched.step() {
+            Ok(0) => sched.wait_for_work(IDLE_WAIT),
+            Ok(_) => {}
+            Err(e) => {
+                eprintln!("serve: decode step failed: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            return respond(&mut stream, 400, &error_json(&e));
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let engine = sched.engine();
+            let body = Value::obj()
+                .set("status", "ok")
+                .set("vocab_size", engine.decoder().vocab_size())
+                .set("max_positions", engine.decoder().max_positions())
+                .set("weight_bytes", engine.decoder().weight_bytes())
+                .set(
+                    "kv_bytes_per_position",
+                    engine.decoder().kv_bytes_per_position(),
+                )
+                .set("packed_projections", engine.decoder().packed_projections())
+                .set("n_projections", engine.decoder().n_projections())
+                .set("pending", sched.pending());
+            respond(&mut stream, 200, &body)
+        }
+        ("GET", "/v1/stats") => {
+            let st = sched.stats();
+            let body = Value::obj()
+                .set("submitted", st.submitted)
+                .set("completed", st.completed)
+                .set("steps", st.steps)
+                .set("tokens_processed", st.tokens_processed)
+                .set("tokens_generated", st.tokens_generated)
+                .set("peak_batch", st.peak_batch)
+                .set("pending", sched.pending());
+            respond(&mut stream, 200, &body)
+        }
+        ("POST", "/v1/generate") => {
+            let (prompt, params) = match parse_generate(&req.body) {
+                Ok(pp) => pp,
+                Err(e) => return respond(&mut stream, 400, &error_json(&e)),
+            };
+            let (_, rx) = sched.submit_channel(&prompt, params);
+            match rx.recv_timeout(REQUEST_TIMEOUT) {
+                Ok((id, gen)) => {
+                    let ids =
+                        Value::Arr(gen.token_ids.iter().map(|&t| Value::from(t)).collect());
+                    let body = Value::obj()
+                        .set("id", id)
+                        .set("text", gen.text.as_str())
+                        .set("token_ids", ids)
+                        .set("prompt_tokens", gen.prompt_tokens)
+                        .set("gen_tokens", gen.token_ids.len())
+                        .set("finish_reason", gen.finish.as_str());
+                    let code = if gen.finish == super::FinishReason::Error {
+                        500
+                    } else {
+                        200
+                    };
+                    respond(&mut stream, code, &body)
+                }
+                Err(_) => respond(
+                    &mut stream,
+                    504,
+                    &error_json("generation timed out in the scheduler"),
+                ),
+            }
+        }
+        _ => respond(
+            &mut stream,
+            404,
+            &error_json(&format!("no route {} {}", req.method, req.path)),
+        ),
+    }
+}
+
+fn parse_generate(body: &[u8]) -> std::result::Result<(String, GenParams), String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let v = parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let prompt = v
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .ok_or_else(|| "missing string field \"prompt\"".to_string())?
+        .to_string();
+    let d = GenParams::default();
+    let params = GenParams {
+        max_new_tokens: v
+            .get("max_new_tokens")
+            .and_then(|x| x.as_usize())
+            .unwrap_or(d.max_new_tokens),
+        temperature: v
+            .get("temperature")
+            .and_then(|x| x.as_f64())
+            .map(|x| x as f32)
+            .unwrap_or(d.temperature),
+        top_k: v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(d.top_k),
+        top_p: v
+            .get("top_p")
+            .and_then(|x| x.as_f64())
+            .map(|x| x as f32)
+            .unwrap_or(d.top_p),
+        seed: v
+            .get("seed")
+            .and_then(|x| x.as_u64())
+            .map(|x| x as u32)
+            .unwrap_or(d.seed),
+    };
+    Ok((prompt, params))
+}
+
+fn error_json(msg: &str) -> Value {
+    Value::obj().set("error", msg)
+}
+
+/// Parse one HTTP/1.1 request: request line, headers (only
+/// Content-Length is honored), then exactly Content-Length body bytes.
+fn read_request(stream: &mut TcpStream) -> std::result::Result<Request, String> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let header_end = loop {
+        if let Some(p) = find_subslice(&buf, b"\r\n\r\n") {
+            break p;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err("headers too large".into());
+        }
+        let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed before headers completed".into());
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head =
+        std::str::from_utf8(&buf[..header_end]).map_err(|_| "non-UTF-8 headers".to_string())?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(format!("malformed request line {request_line:?}"));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, val)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = val
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad content-length {val:?}"))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(format!("body of {content_length} bytes exceeds the limit"));
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-body".into());
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Request { method, path, body })
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack
+        .windows(needle.len())
+        .position(|w| w == needle)
+}
+
+fn respond(stream: &mut TcpStream, code: u16, body: &Value) -> Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        500 => "Internal Server Error",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    };
+    let text = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        text.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(text.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_generate_defaults_and_overrides() {
+        let (p, g) = parse_generate(br#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(p, "hi");
+        assert_eq!(g.max_new_tokens, GenParams::default().max_new_tokens);
+        assert_eq!(g.temperature, 0.0);
+        let (_, g) = parse_generate(
+            br#"{"prompt": "x", "max_new_tokens": 7, "temperature": 1.5, "top_k": 3, "top_p": 0.9, "seed": 42}"#,
+        )
+        .unwrap();
+        assert_eq!(g.max_new_tokens, 7);
+        assert!((g.temperature - 1.5).abs() < 1e-6);
+        assert_eq!(g.top_k, 3);
+        assert!((g.top_p - 0.9).abs() < 1e-6);
+        assert_eq!(g.seed, 42);
+    }
+
+    #[test]
+    fn parse_generate_rejects_garbage() {
+        assert!(parse_generate(b"not json").is_err());
+        assert!(parse_generate(br#"{"no_prompt": 1}"#).is_err());
+        assert!(parse_generate(br#"{"prompt": 5}"#).is_err());
+    }
+
+    #[test]
+    fn find_subslice_works() {
+        assert_eq!(find_subslice(b"ab\r\n\r\ncd", b"\r\n\r\n"), Some(2));
+        assert_eq!(find_subslice(b"abcd", b"\r\n\r\n"), None);
+    }
+}

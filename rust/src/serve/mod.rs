@@ -1,0 +1,41 @@
+//! Serving subsystem: ternary inference as a running system.
+//!
+//! The paper's deployment claim (§1, §A.2) is that DQT models support
+//! inference directly from ternary weights; this module cashes that in as
+//! a four-part serving stack over the [`crate::runtime::Decoder`] entry
+//! point (KV-cached incremental decoding, decode-free on 2-bit packed
+//! grids):
+//!
+//! * [`engine`]    — [`Engine`]: prompt encoding → prefill → sampled
+//!                   decode → streamed detokenization, one call per
+//!                   request.
+//! * [`sampler`]   — [`Sampler`]: greedy / temperature / top-k / top-p,
+//!                   drawn from the same counter-hash stream as the SR
+//!                   kernels (`quant::sr::hash_u32`), so generations are
+//!                   deterministic per request seed.
+//! * [`scheduler`] — [`Scheduler`]: continuous batching. Requests are
+//!                   admitted mid-flight, every active sequence advances
+//!                   one token per batched decode step (prefill and
+//!                   decode interleave in the same batch), finished
+//!                   sequences are evicted immediately. Rows are
+//!                   numerically independent, so batching never changes
+//!                   a sequence's output.
+//! * [`http`]      — [`Server`]: a zero-dependency HTTP/1.1 server on
+//!                   `std::net::TcpListener` exposing `POST /v1/generate`,
+//!                   `GET /healthz` and `GET /v1/stats` (JSON via the
+//!                   in-tree `util::json`).
+//!
+//! Serving memory is grid bytes + KV cache: the decode hot path performs
+//! no f32 weight unpacking — every projection matmul goes through the
+//! fused packed-ternary GEMV (`quant::ternary::gemm_nt`) prepared once at
+//! engine build. See `docs/SERVING.md`.
+
+pub mod engine;
+pub mod http;
+pub mod sampler;
+pub mod scheduler;
+
+pub use engine::{Engine, FinishReason, GenParams, Generation};
+pub use http::Server;
+pub use sampler::Sampler;
+pub use scheduler::{Scheduler, SchedulerStats};

@@ -1,0 +1,225 @@
+//! Token sampling: greedy, temperature, top-k and top-p (nucleus),
+//! drawn from the counter-hash PRNG the SR kernels share
+//! (`quant::sr::uniform01`), so a generation is a pure function of
+//! `(weights, prompt, seed)` — reproducible across machines and across
+//! batch compositions.
+
+use crate::quant::sr::uniform01;
+
+use super::engine::GenParams;
+
+/// One request's sampling state: the knobs plus the PRNG cursor (one
+/// uniform draw per sampled token).
+pub struct Sampler {
+    /// 0 (or below) = greedy argmax
+    pub temperature: f32,
+    /// keep only the k highest-logit candidates (0 = disabled)
+    pub top_k: usize,
+    /// nucleus: smallest probability mass ≥ top_p (≥ 1.0 = disabled)
+    pub top_p: f32,
+    seed: u32,
+    counter: u32,
+}
+
+impl Sampler {
+    pub fn new(p: &GenParams) -> Sampler {
+        Sampler {
+            temperature: p.temperature,
+            top_k: p.top_k,
+            top_p: p.top_p,
+            seed: p.seed,
+            counter: 0,
+        }
+    }
+
+    /// Sample one token id from `logits`. Greedy when temperature ≤ 0;
+    /// otherwise softmax-with-temperature over the top-k set, truncated
+    /// to the top-p nucleus, inverse-CDF'd with the next uniform from the
+    /// `(counter, seed)` hash stream. Ties break toward the lower id, so
+    /// the choice is deterministic even with equal logits.
+    ///
+    /// Cost: plain temperature sampling is two O(V) passes with no
+    /// allocation of candidate order; top-k uses a partial selection
+    /// (`select_nth_unstable_by`) and only sorts the k survivors; a full
+    /// sort happens only for top-p without top-k (nucleus needs a global
+    /// order). This keeps per-token host work far below the decode GEMV.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        assert!(!logits.is_empty(), "sampling from empty logits");
+        if self.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        let u = uniform01(self.counter, self.seed);
+        self.counter = self.counter.wrapping_add(1);
+        let no_top_k = self.top_k == 0 || self.top_k >= logits.len();
+
+        // fast path: no candidate ordering needed at all
+        if no_top_k && self.top_p >= 1.0 {
+            let mut mx = f32::NEG_INFINITY;
+            for &v in logits {
+                mx = mx.max(v);
+            }
+            let mut sum = 0f32;
+            for &v in logits {
+                sum += ((v - mx) / self.temperature).exp();
+            }
+            let mut acc = 0f32;
+            for (i, &v) in logits.iter().enumerate() {
+                acc += ((v - mx) / self.temperature).exp() / sum;
+                if u < acc {
+                    return i;
+                }
+            }
+            return logits.len() - 1;
+        }
+
+        // candidates by logit descending (index ascending on ties makes
+        // the order — and therefore the draw — fully deterministic)
+        let by_logit_desc = |a: &usize, b: &usize| {
+            logits[*b]
+                .partial_cmp(&logits[*a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(b))
+        };
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if !no_top_k {
+            // partial selection: top_k survivors, then sort only those
+            let _ = idx.select_nth_unstable_by(self.top_k - 1, by_logit_desc);
+            idx.truncate(self.top_k);
+        }
+        idx.sort_by(by_logit_desc);
+
+        // softmax with temperature over the kept set
+        let mx = logits[idx[0]];
+        let mut probs: Vec<f32> = idx
+            .iter()
+            .map(|&i| ((logits[i] - mx) / self.temperature).exp())
+            .collect();
+        let sum: f32 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= sum;
+        }
+
+        // nucleus: smallest prefix whose mass reaches top_p
+        if self.top_p < 1.0 {
+            let mut acc = 0f32;
+            let mut keep = probs.len();
+            for (i, &p) in probs.iter().enumerate() {
+                acc += p;
+                if acc >= self.top_p {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            idx.truncate(keep);
+            probs.truncate(keep);
+            let s: f32 = probs.iter().sum();
+            for p in probs.iter_mut() {
+                *p /= s;
+            }
+        }
+
+        // inverse CDF
+        let mut acc = 0f32;
+        for (&i, &p) in idx.iter().zip(probs.iter()) {
+            acc += p;
+            if u < acc {
+                return i;
+            }
+        }
+        *idx.last().unwrap()
+    }
+}
+
+fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(temperature: f32, top_k: usize, top_p: f32, seed: u32) -> GenParams {
+        GenParams {
+            temperature,
+            top_k,
+            top_p,
+            seed,
+            ..GenParams::default()
+        }
+    }
+
+    #[test]
+    fn greedy_is_argmax_with_low_index_ties() {
+        let mut s = Sampler::new(&params(0.0, 0, 1.0, 9));
+        assert_eq!(s.sample(&[0.1, 3.0, -1.0, 3.0]), 1);
+        assert_eq!(s.sample(&[5.0, 5.0]), 0);
+    }
+
+    #[test]
+    fn same_seed_same_draws_different_seed_differs() {
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
+        let draw = |seed: u32| -> Vec<usize> {
+            let mut s = Sampler::new(&params(1.0, 0, 1.0, seed));
+            (0..64).map(|_| s.sample(&logits)).collect()
+        };
+        assert_eq!(draw(5), draw(5));
+        assert_ne!(draw(5), draw(6));
+    }
+
+    /// uniform01(0, 0) == 0 is pinned in `quant::sr`, so the first draw
+    /// of a seed-0 sampler over equal logits lands on the lowest index —
+    /// a cross-platform golden value for the sampling stream.
+    #[test]
+    fn pinned_first_draw_seed_zero() {
+        let mut s = Sampler::new(&params(1.0, 0, 1.0, 0));
+        assert_eq!(s.sample(&[1.0, 1.0, 1.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = [0.0f32, 1.0, 2.0, 3.0, 4.0];
+        let mut s = Sampler::new(&params(2.0, 2, 1.0, 3));
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 4 || t == 3, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn tiny_top_p_degenerates_to_argmax() {
+        let logits = [0.0f32, 1.0, 5.0, 2.0];
+        let mut s = Sampler::new(&params(1.0, 0, 1e-6, 7));
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 2);
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let logits = [0.0f32, 0.1, 0.2, 0.3];
+        let mut s = Sampler::new(&params(50.0, 0, 1.0, 11));
+        let mut seen = [false; 4];
+        for _ in 0..400 {
+            seen[s.sample(&logits)] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "{seen:?}");
+    }
+
+    #[test]
+    fn unbiased_at_temperature_one() {
+        // two-way 73/27 split: empirical frequency must track the softmax
+        let logits = [1.0f32, 0.0];
+        let p0 = (1f32.exp()) / (1f32.exp() + 1.0);
+        let mut s = Sampler::new(&params(1.0, 0, 1.0, 13));
+        let n = 20_000;
+        let hits = (0..n).filter(|_| s.sample(&logits) == 0).count();
+        let freq = hits as f32 / n as f32;
+        assert!((freq - p0).abs() < 0.02, "freq {freq} vs p {p0}");
+    }
+}

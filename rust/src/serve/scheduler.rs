@@ -1,0 +1,556 @@
+//! Continuous batching: many requests, one decode loop.
+//!
+//! The scheduler keeps up to `max_batch` sequences *active* and advances
+//! every one of them by exactly one token per [`Scheduler::step`] — a
+//! sequence still consuming its prompt is prefilled, one that has sampled
+//! tokens decodes, and both kinds ride the same batched
+//! [`Decoder::step_batch`] call (token-level batching). Requests are
+//! admitted mid-flight the moment a slot frees up and evicted the moment
+//! they finish, so the batch never drains to refill.
+//!
+//! Because decode rows are numerically independent, a sequence's output
+//! is identical whether it ran solo or packed with fifteen others — the
+//! invariant `tests/serve_e2e.rs` pins. Throughput is reported as
+//! aggregate tokens/sec over all rows of all steps.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::engine::{Engine, FinishReason, GenParams, Generation};
+use super::sampler::Sampler;
+use crate::data::tokenizer::DecodeStream;
+use crate::runtime::{Decoder, DecoderCache};
+
+/// Aggregate serving counters (monotonic since scheduler creation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedulerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// batched decode calls issued
+    pub steps: u64,
+    /// tokens pushed through the model (prefill + decode rows)
+    pub tokens_processed: u64,
+    /// tokens sampled
+    pub tokens_generated: u64,
+    pub peak_batch: usize,
+}
+
+/// One in-flight sequence.
+struct Seq {
+    id: u64,
+    prompt: Vec<i32>,
+    /// prompt tokens fed so far; == prompt.len() once decoding
+    fed: usize,
+    generated: Vec<i32>,
+    text: String,
+    stream: DecodeStream,
+    sampler: Sampler,
+    params: GenParams,
+    /// allocated at admission, not at submission (queued requests cost
+    /// nothing until a batch slot frees up)
+    cache: Option<Box<dyn DecoderCache>>,
+    tx: Option<Sender<(u64, Generation)>>,
+}
+
+struct Inner {
+    queue: VecDeque<Seq>,
+    active: Vec<Seq>,
+    /// sequences checked out by an in-progress [`Scheduler::step`] (the
+    /// model forward runs with the lock released; this keeps
+    /// [`Scheduler::pending`] honest and guards against a second stepper)
+    in_flight: usize,
+    /// finished generations awaiting [`Scheduler::take_finished`]
+    /// (channel-less submissions only)
+    finished: Vec<(u64, Generation)>,
+    next_id: u64,
+    stats: SchedulerStats,
+}
+
+/// The continuous-batching scheduler. Shared across submitter threads and
+/// one decode-loop thread; all coordination is one mutex + condvar.
+pub struct Scheduler {
+    engine: Arc<Engine>,
+    max_batch: usize,
+    inner: Mutex<Inner>,
+    work: Condvar,
+}
+
+impl Scheduler {
+    pub fn new(engine: Arc<Engine>, max_batch: usize) -> Scheduler {
+        Scheduler {
+            engine,
+            max_batch: max_batch.max(1),
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                active: Vec::new(),
+                in_flight: 0,
+                finished: Vec::new(),
+                next_id: 0,
+                stats: SchedulerStats::default(),
+            }),
+            work: Condvar::new(),
+        }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Queue a text prompt; poll [`Scheduler::take_finished`] for the
+    /// result.
+    pub fn submit(&self, prompt: &str, params: GenParams) -> u64 {
+        self.enqueue(self.engine.prompt_ids(prompt), params, None)
+    }
+
+    /// Queue a text prompt and get a channel the result is delivered on
+    /// (the HTTP handler path).
+    pub fn submit_channel(
+        &self,
+        prompt: &str,
+        params: GenParams,
+    ) -> (u64, Receiver<(u64, Generation)>) {
+        let (tx, rx) = channel();
+        let id = self.enqueue(self.engine.prompt_ids(prompt), params, Some(tx));
+        (id, rx)
+    }
+
+    /// Queue pre-tokenized ids (no BOS prepend, no truncation — the
+    /// caller owns the framing).
+    pub fn submit_ids(&self, prompt: Vec<i32>, params: GenParams) -> u64 {
+        self.enqueue(prompt, params, None)
+    }
+
+    fn enqueue(
+        &self,
+        prompt: Vec<i32>,
+        params: GenParams,
+        tx: Option<Sender<(u64, Generation)>>,
+    ) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let id = g.next_id;
+        g.next_id += 1;
+        g.stats.submitted += 1;
+        if prompt.is_empty() || params.max_new_tokens == 0 {
+            // nothing to condition on / nothing to produce — finish
+            // immediately, matching `Engine::generate_ids`'s behavior
+            let gen = Generation {
+                prompt_tokens: prompt.len(),
+                token_ids: Vec::new(),
+                text: String::new(),
+                finish: FinishReason::Length,
+            };
+            g.stats.completed += 1;
+            match tx {
+                Some(tx) => {
+                    let _ = tx.send((id, gen));
+                }
+                None => g.finished.push((id, gen)),
+            }
+            return id;
+        }
+        let seq = Seq {
+            id,
+            prompt,
+            fed: 0,
+            generated: Vec::new(),
+            text: String::new(),
+            stream: self.engine.tokenizer().decode_stream(),
+            sampler: Sampler::new(&params),
+            params,
+            cache: None,
+            tx,
+        };
+        g.queue.push_back(seq);
+        drop(g);
+        self.work.notify_all();
+        id
+    }
+
+    /// Queued + active (including checked-out) sequences.
+    pub fn pending(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.queue.len() + g.active.len() + g.in_flight
+    }
+
+    pub fn stats(&self) -> SchedulerStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Results of channel-less submissions finished since the last call.
+    pub fn take_finished(&self) -> Vec<(u64, Generation)> {
+        std::mem::take(&mut self.inner.lock().unwrap().finished)
+    }
+
+    /// Block until there is work to step (or `timeout` elapses) — the
+    /// decode loop's idle wait.
+    pub fn wait_for_work(&self, timeout: Duration) {
+        let g = self.inner.lock().unwrap();
+        if g.queue.is_empty() && g.active.is_empty() {
+            let _ = self.work.wait_timeout(g, timeout).unwrap();
+        }
+    }
+
+    /// One batched decode step: admit queued requests into free slots,
+    /// advance every active sequence one token, sample where the prompt
+    /// is exhausted, evict finished sequences. Returns the number of
+    /// tokens processed (0 = nothing to do).
+    ///
+    /// The batch is *checked out* under the lock and the model forward
+    /// runs with the lock released, so submissions and health probes
+    /// never wait on a decode step; sampling and eviction commit under a
+    /// second short critical section. A decode error finishes the whole
+    /// checked-out batch with [`FinishReason::Error`] before
+    /// propagating, so no request can hang.
+    pub fn step(&self) -> Result<usize> {
+        // --- phase 1 (locked): admit, then check the batch out ---
+        let (mut batch, tokens) = {
+            let mut g = self.inner.lock().unwrap();
+            if g.in_flight > 0 {
+                // another step() is mid-flight — one stepper at a time
+                return Ok(0);
+            }
+            while g.active.len() < self.max_batch {
+                let Some(mut seq) = g.queue.pop_front() else {
+                    break;
+                };
+                seq.cache = Some(self.engine.decoder().new_cache());
+                g.active.push(seq);
+            }
+            if g.active.is_empty() {
+                return Ok(0);
+            }
+            g.stats.peak_batch = g.stats.peak_batch.max(g.active.len());
+            let batch = std::mem::take(&mut g.active);
+            g.in_flight = batch.len();
+            // one input token per sequence: next prompt token while
+            // prefilling, else the last sampled token
+            let tokens: Vec<i32> = batch
+                .iter()
+                .map(|s| {
+                    if s.fed < s.prompt.len() {
+                        s.prompt[s.fed]
+                    } else {
+                        *s.generated.last().expect("decoding sequence has tokens")
+                    }
+                })
+                .collect();
+            (batch, tokens)
+        };
+
+        // --- phase 2 (unlocked): the batched model forward ---
+        let n = batch.len();
+        let step_result = {
+            let mut caches: Vec<&mut dyn DecoderCache> = batch
+                .iter_mut()
+                .map(|s| &mut **s.cache.as_mut().expect("active sequence has a cache"))
+                .collect();
+            self.engine.decoder().step_batch(&mut caches[..], &tokens)
+        };
+
+        // --- phase 3 (locked): sample, evict, return survivors ---
+        let mut g = self.inner.lock().unwrap();
+        let g = &mut *g;
+        g.in_flight = 0;
+        let logits = match step_result {
+            Ok(l) => l,
+            Err(e) => {
+                // fail every checked-out request instead of hanging clients
+                for mut s in batch {
+                    let gen = Generation {
+                        prompt_tokens: s.prompt.len(),
+                        token_ids: std::mem::take(&mut s.generated),
+                        text: std::mem::take(&mut s.text),
+                        finish: FinishReason::Error,
+                    };
+                    g.stats.completed += 1;
+                    match s.tx.take() {
+                        Some(tx) => {
+                            let _ = tx.send((s.id, gen));
+                        }
+                        None => g.finished.push((s.id, gen)),
+                    }
+                }
+                return Err(e);
+            }
+        };
+        g.stats.steps += 1;
+        g.stats.tokens_processed += n as u64;
+        let v = self.engine.decoder().vocab_size();
+        let max_pos = self.engine.decoder().max_positions();
+        let eos = self.engine.eos_id();
+
+        for (i, mut s) in batch.into_iter().enumerate() {
+            let prefilling = s.fed < s.prompt.len();
+            if prefilling {
+                s.fed += 1;
+            }
+            if prefilling && s.fed < s.prompt.len() {
+                g.active.push(s); // still prefilling — logits row unused
+                continue;
+            }
+            let next = s.sampler.sample(&logits[i * v..(i + 1) * v]) as i32;
+            s.generated.push(next);
+            g.stats.tokens_generated += 1;
+            let finish = if next == eos {
+                Some(FinishReason::Eos)
+            } else {
+                let piece = s.stream.push(next);
+                s.text.push_str(&piece);
+                if s.generated.len() >= s.params.max_new_tokens {
+                    Some(FinishReason::Length)
+                } else if s.cache.as_ref().map(|c| c.position()).unwrap_or(0) >= max_pos {
+                    Some(FinishReason::CacheFull)
+                } else {
+                    None
+                }
+            };
+            match finish {
+                None => g.active.push(s),
+                Some(finish) => {
+                    let mut text = std::mem::take(&mut s.text);
+                    text.push_str(&s.stream.finish());
+                    let gen = Generation {
+                        prompt_tokens: s.prompt.len(),
+                        token_ids: std::mem::take(&mut s.generated),
+                        text,
+                        finish,
+                    };
+                    g.stats.completed += 1;
+                    match s.tx.take() {
+                        Some(tx) => {
+                            let _ = tx.send((s.id, gen));
+                        }
+                        None => g.finished.push((s.id, gen)),
+                    }
+                }
+            }
+        }
+        Ok(n)
+    }
+
+    /// Drive [`Scheduler::step`] until queue and batch are empty; returns
+    /// total tokens processed. (Tests and batch jobs — the HTTP server
+    /// runs the loop on its own thread instead.)
+    pub fn run_until_idle(&self) -> Result<u64> {
+        let mut total = 0u64;
+        loop {
+            let n = self.step()? as u64;
+            if n == 0 {
+                return Ok(total);
+            }
+            total += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::Tokenizer;
+    use crate::runtime::Decoder;
+
+    /// Deterministic mock model: logits peak at `(token + 1) % vocab`, so
+    /// greedy decoding counts upward and hits the EOS id (1) predictably.
+    struct MockDecoder {
+        vocab: usize,
+        max_pos: usize,
+    }
+
+    struct MockCache {
+        pos: usize,
+    }
+
+    impl DecoderCache for MockCache {
+        fn position(&self) -> usize {
+            self.pos
+        }
+        fn reset(&mut self) {
+            self.pos = 0;
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    impl Decoder for MockDecoder {
+        fn max_positions(&self) -> usize {
+            self.max_pos
+        }
+        fn vocab_size(&self) -> usize {
+            self.vocab
+        }
+        fn kv_bytes_per_position(&self) -> usize {
+            8
+        }
+        fn weight_bytes(&self) -> usize {
+            64
+        }
+        fn packed_projections(&self) -> usize {
+            0
+        }
+        fn n_projections(&self) -> usize {
+            0
+        }
+        fn new_cache(&self) -> Box<dyn DecoderCache> {
+            Box::new(MockCache { pos: 0 })
+        }
+        fn step_batch(
+            &self,
+            caches: &mut [&mut dyn DecoderCache],
+            tokens: &[i32],
+        ) -> Result<Vec<f32>> {
+            let mut out = vec![0f32; tokens.len() * self.vocab];
+            for (r, &t) in tokens.iter().enumerate() {
+                if !(0..self.vocab as i32).contains(&t) {
+                    return Err(anyhow::anyhow!("token {t} out of vocab"));
+                }
+                let peak = (t as usize + 1) % self.vocab;
+                out[r * self.vocab + peak] = 10.0;
+            }
+            for c in caches.iter_mut() {
+                let mc = c.as_any_mut().downcast_mut::<MockCache>().unwrap();
+                mc.pos += 1;
+            }
+            Ok(out)
+        }
+    }
+
+    fn mock_engine(vocab: usize, max_pos: usize) -> Arc<Engine> {
+        let docs = vec!["a b c a b c".to_string(); 3];
+        let tok = Tokenizer::train(&docs, 16);
+        Arc::new(Engine::from_decoder(
+            Box::new(MockDecoder { vocab, max_pos }),
+            tok,
+        ))
+    }
+
+    #[test]
+    fn greedy_mock_counts_up_to_eos() {
+        let engine = mock_engine(8, 64);
+        let g = engine
+            .generate_ids(vec![3], &GenParams { max_new_tokens: 20, ..Default::default() })
+            .unwrap();
+        // 3 → 4 5 6 7 0 1(eos)
+        assert_eq!(g.token_ids, vec![4, 5, 6, 7, 0, 1]);
+        assert_eq!(g.finish, FinishReason::Eos);
+        assert_eq!(g.prompt_tokens, 1);
+    }
+
+    #[test]
+    fn max_new_tokens_caps_generation() {
+        let engine = mock_engine(8, 64);
+        let g = engine
+            .generate_ids(vec![2], &GenParams { max_new_tokens: 3, ..Default::default() })
+            .unwrap();
+        assert_eq!(g.token_ids, vec![3, 4, 5]);
+        assert_eq!(g.finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn cache_full_stops_generation() {
+        let engine = mock_engine(8, 4);
+        let g = engine
+            .generate_ids(vec![2], &GenParams { max_new_tokens: 100, ..Default::default() })
+            .unwrap();
+        assert_eq!(g.finish, FinishReason::CacheFull);
+        assert!(g.token_ids.len() < 100);
+    }
+
+    #[test]
+    fn continuous_batching_matches_solo_and_admits_midflight() {
+        let engine = mock_engine(16, 256);
+        let sched = Scheduler::new(engine.clone(), 2); // force queueing
+        let prompts: Vec<Vec<i32>> = vec![vec![3], vec![5, 6], vec![9], vec![2, 3, 4], vec![11]];
+        let params = GenParams { max_new_tokens: 12, ..Default::default() };
+        let ids: Vec<u64> = prompts
+            .iter()
+            .map(|p| sched.submit_ids(p.clone(), params.clone()))
+            .collect();
+        sched.run_until_idle().unwrap();
+        let mut finished = sched.take_finished();
+        finished.sort_by_key(|(id, _)| *id);
+        assert_eq!(finished.len(), prompts.len());
+        for ((id, gen), prompt) in finished.iter().zip(prompts.iter()) {
+            let solo = engine.generate_ids(prompt.clone(), &params).unwrap();
+            assert!(ids.contains(id));
+            assert_eq!(gen.token_ids, solo.token_ids, "request {id}");
+            assert_eq!(gen.text, solo.text, "request {id}");
+            assert_eq!(gen.finish, solo.finish, "request {id}");
+        }
+        let st = sched.stats();
+        assert_eq!(st.submitted, 5);
+        assert_eq!(st.completed, 5);
+        assert_eq!(st.peak_batch, 2);
+        assert!(st.tokens_generated >= 5);
+        assert!(st.tokens_processed >= st.tokens_generated);
+    }
+
+    #[test]
+    fn channel_submission_delivers() {
+        let engine = mock_engine(8, 64);
+        let sched = Scheduler::new(engine, 4);
+        let (id, rx) = sched.submit_channel("a", GenParams::default());
+        sched.run_until_idle().unwrap();
+        let (rid, gen) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(rid, id);
+        assert!(!gen.token_ids.is_empty());
+        assert!(sched.take_finished().is_empty()); // delivered via channel
+    }
+
+    #[test]
+    fn decode_error_fails_requests_instead_of_hanging() {
+        let engine = mock_engine(8, 64);
+        let sched = Scheduler::new(engine, 4);
+        let id = sched.submit_ids(vec![99], GenParams::default()); // out of vocab
+        assert!(sched.step().is_err());
+        let finished = sched.take_finished();
+        assert_eq!(finished.len(), 1);
+        assert_eq!(finished[0].0, id);
+        assert_eq!(finished[0].1.finish, FinishReason::Error);
+        assert_eq!(sched.pending(), 0);
+    }
+
+    /// `max_new_tokens: 0` behaves identically on the scheduler and the
+    /// one-shot engine path: an empty generation finished with `length`.
+    #[test]
+    fn zero_max_new_matches_engine_path() {
+        let engine = mock_engine(8, 64);
+        let sched = Scheduler::new(engine.clone(), 4);
+        let p = GenParams { max_new_tokens: 0, ..Default::default() };
+        let id = sched.submit_ids(vec![3], p.clone());
+        assert_eq!(sched.run_until_idle().unwrap(), 0);
+        let f = sched.take_finished();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].0, id);
+        let solo = engine.generate_ids(vec![3], &p).unwrap();
+        assert_eq!(f[0].1.token_ids, solo.token_ids);
+        assert_eq!(f[0].1.finish, solo.finish);
+        assert!(f[0].1.token_ids.is_empty());
+    }
+
+    #[test]
+    fn empty_prompt_finishes_immediately() {
+        let engine = mock_engine(8, 64);
+        let sched = Scheduler::new(engine, 4);
+        let id = sched.submit_ids(vec![], GenParams::default());
+        let f = sched.take_finished();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].0, id);
+        assert!(f[0].1.token_ids.is_empty());
+        assert_eq!(f[0].1.finish, FinishReason::Length);
+        assert_eq!(sched.pending(), 0);
+    }
+
+    #[test]
+    fn idle_scheduler_steps_zero() {
+        let engine = mock_engine(8, 64);
+        let sched = Scheduler::new(engine, 4);
+        assert_eq!(sched.step().unwrap(), 0);
+        assert_eq!(sched.run_until_idle().unwrap(), 0);
+        sched.wait_for_work(Duration::from_millis(10)); // returns on timeout
+    }
+}

@@ -1,10 +1,14 @@
 #!/usr/bin/env python3
-"""Fail when measured bench records drift from the checked-in
-BENCH_quant_codecs.json schema: every tracked benchmark name must have
-been measured, no unknown names may appear, and each record must carry
-the fields the perf-diff tooling reads. CI runs this after the bench job
-so a renamed/dropped benchmark (or a harness output change) fails the PR
-instead of silently breaking the perf history.
+"""Fail when measured bench records drift from the checked-in BENCH_*.json
+schemas: every tracked benchmark name must have been measured, no unknown
+names may appear, and each record must carry the fields the perf-diff
+tooling reads. CI runs this after the bench job so a renamed/dropped
+benchmark (or a harness output change) fails the PR instead of silently
+breaking the perf history.
+
+Baselines checked:
+  BENCH_quant_codecs.json <- rust/results/bench/quant_codecs.json
+  BENCH_serving.json      <- rust/results/bench/serving.json
 """
 
 import json
@@ -15,50 +19,67 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 RECORD_FIELDS = {"group", "name", "iters", "mean_ns", "p50_ns", "p95_ns"}
 BASELINE_KEYS = {"bench", "command", "metric", "tracked", "runs"}
 
+BASELINES = [
+    ("BENCH_quant_codecs.json", "rust/results/bench/quant_codecs.json"),
+    ("BENCH_serving.json", "rust/results/bench/serving.json"),
+]
 
-def main() -> int:
-    baseline_path = ROOT / "BENCH_quant_codecs.json"
+
+def check_one(baseline_name, measured_name):
+    baseline_path = ROOT / baseline_name
     baseline = json.loads(baseline_path.read_text())
-    measured_path = ROOT / "rust/results/bench/quant_codecs.json"
+    measured_path = ROOT / measured_name
     if not measured_path.exists():
-        print(
+        return [
             f"no measured records at {measured_path} — "
-            "run `cargo bench --bench quant_codecs` first",
-            file=sys.stderr,
-        )
-        return 1
+            f"run `cargo bench --bench {baseline.get('bench')}` first"
+        ]
     records = json.loads(measured_path.read_text())
 
     problems = []
     absent_keys = BASELINE_KEYS - baseline.keys()
     if absent_keys:
-        problems.append(f"baseline lacks keys {sorted(absent_keys)}")
+        problems.append(f"{baseline_name}: baseline lacks keys {sorted(absent_keys)}")
 
     tracked = set(baseline.get("tracked", []))
     measured = {r.get("name") for r in records}
     missing = tracked - measured
     extra = measured - tracked
     if missing:
-        problems.append(f"tracked benchmarks not measured: {sorted(missing)}")
+        problems.append(
+            f"{baseline_name}: tracked benchmarks not measured: {sorted(missing)}"
+        )
     if extra:
         problems.append(
-            f"measured benchmarks missing from 'tracked': {sorted(extra)} "
-            "(add them to BENCH_quant_codecs.json or rename back)"
+            f"{baseline_name}: measured benchmarks missing from 'tracked': "
+            f"{sorted(extra)} (add them to {baseline_name} or rename back)"
         )
     for r in records:
         lacking = RECORD_FIELDS - r.keys()
         if lacking:
-            problems.append(f"record {r.get('name')!r} lacks fields {sorted(lacking)}")
+            problems.append(
+                f"{baseline_name}: record {r.get('name')!r} lacks fields {sorted(lacking)}"
+            )
     for run in baseline.get("runs", []):
         if "label" not in run or "results" not in run:
-            problems.append(f"malformed baseline run entry: {run}")
+            problems.append(f"{baseline_name}: malformed baseline run entry: {run}")
+    if not problems:
+        print(
+            f"{baseline_name}: schema OK — {len(measured)} measured == "
+            f"{len(tracked)} tracked"
+        )
+    return problems
 
+
+def main() -> int:
+    problems = []
+    for baseline_name, measured_name in BASELINES:
+        problems.extend(check_one(baseline_name, measured_name))
     if problems:
         print("BENCH SCHEMA DRIFT:", file=sys.stderr)
         for p in problems:
             print(f"  - {p}", file=sys.stderr)
         return 1
-    print(f"bench schema OK: {len(measured)} measured == {len(tracked)} tracked")
     return 0
 
 

@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# Serve-smoke: train a tiny ternary DQT variant on the native backend,
+# serve it over HTTP, and assert the /v1/generate contract — 200s,
+# nonzero generated tokens, EOS termination, per-seed determinism.
+# CI runs this as the required serve-smoke job.
+#
+# Usage: scripts/serve_smoke.sh [port]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PORT="${1:-${DQT_SMOKE_PORT:-18473}}"
+OUT="$(mktemp -d)"
+SERVER_PID=""
+cleanup() {
+    [ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null || true
+    rm -rf "$OUT"
+}
+trap cleanup EXIT
+
+(cd rust && cargo build --release)
+BIN=rust/target/release/repro
+
+echo "== training a tiny ternary variant (native backend) =="
+"$BIN" train --model test --mode dqt --bits 1.58 --backend native \
+       --dataset tiny --steps 40 --seed 42 --out "$OUT"
+
+echo "== starting the server on 127.0.0.1:$PORT =="
+"$BIN" serve --model test --mode dqt --bits 1.58 --backend native \
+       --dataset tiny --checkpoint "$OUT/model.dqt" \
+       --addr "127.0.0.1:$PORT" --max-batch 4 &
+SERVER_PID=$!
+
+python3 scripts/serve_smoke_assert.py "http://127.0.0.1:$PORT"
+echo "serve-smoke OK"

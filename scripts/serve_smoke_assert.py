@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Assertions for the serve-smoke CI job, against a live `repro serve`.
+
+Checks (see docs/SERVING.md for the API contract):
+  1. /healthz answers 200 ok, with the ternary model fully packed
+     (packed_projections == n_projections — the decode-free assertion).
+  2. POST /v1/generate answers 200 with nonzero generated tokens and a
+     valid finish_reason.
+  3. Greedy generation is deterministic across requests.
+  4. Sampled generation is deterministic per seed and, across a sweep of
+     seeds, terminates at EOS at least once (the EOS-termination leg).
+  5. Bad requests get 400, unknown routes 404.
+
+Usage: serve_smoke_assert.py <base-url>
+"""
+
+import json
+import sys
+import time
+import urllib.error
+import urllib.request
+
+BASE = sys.argv[1] if len(sys.argv) > 1 else "http://127.0.0.1:18473"
+
+
+def get(path):
+    with urllib.request.urlopen(BASE + path, timeout=30) as r:
+        return r.status, json.loads(r.read().decode())
+
+
+def post(path, body):
+    req = urllib.request.Request(
+        BASE + path,
+        data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"},
+        method="POST",
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=60) as r:
+            return r.status, json.loads(r.read().decode())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read().decode())
+
+
+def wait_healthy():
+    for _ in range(100):
+        try:
+            status, body = get("/healthz")
+            if status == 200 and body.get("status") == "ok":
+                return body
+        except OSError:
+            pass
+        time.sleep(0.2)
+    raise SystemExit("server never became healthy")
+
+
+def main():
+    health = wait_healthy()
+    assert health["packed_projections"] == health["n_projections"] > 0, (
+        f"ternary serving must be decode-free: {health}"
+    )
+    print(f"healthz ok: {health}")
+
+    # greedy: 200, nonzero tokens, deterministic
+    body = {"prompt": "the cat sat", "max_new_tokens": 10}
+    status, a = post("/v1/generate", body)
+    assert status == 200, (status, a)
+    assert a["gen_tokens"] > 0 and len(a["token_ids"]) == a["gen_tokens"], a
+    assert a["finish_reason"] in ("eos", "length", "cache_full"), a
+    status, b = post("/v1/generate", body)
+    assert status == 200 and b["token_ids"] == a["token_ids"], (a, b)
+    print(f"greedy ok: {a['gen_tokens']} tokens, finish={a['finish_reason']}")
+
+    # seeded sampling: deterministic per seed, EOS within the sweep
+    eos_seed = None
+    for seed in range(48):
+        req = {
+            "prompt": "the cat",
+            "max_new_tokens": 12,
+            "temperature": 2.0,
+            "seed": seed,
+        }
+        status, g = post("/v1/generate", req)
+        assert status == 200 and g["gen_tokens"] > 0, (status, g)
+        if g["finish_reason"] == "eos":
+            eos_seed = seed
+            status, g2 = post("/v1/generate", req)
+            assert status == 200 and g2["token_ids"] == g["token_ids"], (g, g2)
+            break
+    assert eos_seed is not None, "no EOS termination across 48 sampled seeds"
+    print(f"eos termination ok (seed {eos_seed})")
+
+    # stats + error paths
+    status, stats = get("/v1/stats")
+    assert status == 200 and stats["completed"] >= 3, stats
+    status, err = post("/v1/generate", {"nope": 1})
+    assert status == 400 and "error" in err, (status, err)
+    try:
+        status, _ = get("/nope")
+    except urllib.error.HTTPError as e:
+        status = e.code
+    assert status == 404, status
+    print(f"stats + error paths ok: {stats}")
+
+
+if __name__ == "__main__":
+    main()
