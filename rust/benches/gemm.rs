@@ -1,0 +1,57 @@
+//! Kernel-layer GEMM throughput: the blocked dense kernels and the
+//! packed-ternary fused GEMM at 1/2/4 pool threads — the numbers
+//! `BENCH_kernels.json` tracks (schema enforced by
+//! `scripts/check_bench_schema.py`).
+//!
+//! Each iteration performs one full `[M,K] @ [N,K]ᵀ` product, and the
+//! elements-throughput annotation is `2·M·N·K` (multiply-adds counted as
+//! two FLOPs), so the reported `elem/s` column reads directly as FLOP/s.
+//! The acceptance check for the parallel kernel layer is that
+//! `*_gemm_t2` / `*_gemm_t4` mean times drop below `*_gemm_t1` on
+//! multi-core hardware — same bits out, fewer nanoseconds.
+
+use dqt::data::corpus::Rng;
+use dqt::kernels::{gemm, ternary as ternary_kernels, Pool};
+use dqt::quant::ternary;
+use dqt::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("kernels");
+    let fast = std::env::var("DQT_BENCH_FAST").is_ok();
+    // odd-ish shapes on purpose: the blocked kernels must not rely on
+    // block-aligned dimensions to perform
+    let (m, k, n) = if fast { (24, 160, 96) } else { (96, 448, 288) };
+    let mut rng = Rng::new(0xD0_77);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.next_f64() as f32 - 0.5).collect();
+    let w: Vec<f32> = (0..n * k).map(|_| rng.next_f64() as f32 - 0.5).collect();
+    let trits: Vec<f32> = (0..n * k).map(|_| rng.below(3) as f32 - 1.0).collect();
+    let packed = ternary::pack(&trits).unwrap();
+    let dy: Vec<f32> = (0..m * n).map(|_| rng.next_f64() as f32 - 0.5).collect();
+    let flops = 2 * (m * n * k) as u64;
+
+    for t in [1usize, 2, 4] {
+        let pool = Pool::new(t);
+        b.set_threads(t); // records carry the pool actually used
+        b.bench_elements(&format!("dense_gemm_t{t}"), flops, || {
+            gemm::matmul_nt(&pool, &x, &w, m, k, n)
+        });
+        b.bench_elements(&format!("ternary_gemm_t{t}"), flops, || {
+            ternary_kernels::gemm_nt(&pool, &packed, &x, m, k, n, 1.7)
+        });
+    }
+
+    // the backward kernels ride along at the widest setting so perf
+    // regressions in the gradient path surface here too
+    let pool = Pool::new(4);
+    b.set_threads(4);
+    b.bench_elements("dense_dgrad_t4", flops, || {
+        let mut dx = vec![0f32; m * k];
+        gemm::add_matmul_nn(&pool, &dy, &w, m, n, k, &mut dx);
+        dx
+    });
+    b.bench_elements("dense_wgrad_t4", flops, || {
+        let mut dw = vec![0f32; n * k];
+        gemm::add_matmul_tn(&pool, &dy, &x, m, n, k, &mut dw);
+        dw
+    });
+}

@@ -6,6 +6,29 @@
 //! the L2↔L3 contract and is covered by an integration test against the
 //! manifest index.
 
+/// Resolve the kernel-layer worker-thread count. Precedence: an explicit
+/// CLI value (`--threads`, when `Some` and non-zero) > the `DQT_THREADS`
+/// environment variable (non-zero) > the machine's available parallelism.
+/// Thread count is a pure throughput knob: the kernel layer is
+/// bitwise-deterministic across thread counts (see `docs/PERFORMANCE.md`).
+pub fn effective_threads(cli: Option<usize>) -> usize {
+    if let Some(t) = cli {
+        if t > 0 {
+            return t;
+        }
+    }
+    if let Ok(s) = std::env::var("DQT_THREADS") {
+        if let Ok(t) = s.trim().parse::<usize>() {
+            if t > 0 {
+                return t;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
 /// LLaMA-structured model configuration (paper Table 2 schema).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
@@ -434,6 +457,15 @@ mod tests {
         for k in [BackendKind::Auto, BackendKind::Native, BackendKind::Pjrt] {
             assert_eq!(BackendKind::parse(k.as_str()), Some(k));
         }
+    }
+
+    #[test]
+    fn effective_threads_prefers_explicit_value() {
+        assert_eq!(effective_threads(Some(3)), 3);
+        assert_eq!(effective_threads(Some(1)), 1);
+        // Some(0) and None fall through to env/cores — at least one thread
+        assert!(effective_threads(Some(0)) >= 1);
+        assert!(effective_threads(None) >= 1);
     }
 
     #[test]

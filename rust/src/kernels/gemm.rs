@@ -1,0 +1,274 @@
+//! Cache-blocked, row-partitioned dense GEMM kernels.
+//!
+//! Three shapes cover the whole model — the forward linear and the two
+//! gradients of `y = x·Wᵀ`:
+//!
+//! * [`matmul_nt`]     — `y[M,N] = x[M,K] @ w[N,K]ᵀ`
+//! * [`add_matmul_nn`] — `dx[M,K] += dy[M,N] @ w[N,K]`
+//! * [`add_matmul_tn`] — `dw[N,K] += dy[M,N]ᵀ @ x[M,K]`
+//!
+//! ## Determinism contract
+//!
+//! The pool only ever partitions **output rows**: a given output element
+//! is always produced by exactly one task, with exactly the same
+//! floating-point addition chain as the scalar reference loop. Blocking
+//! over K ([`KC`]) parks the running accumulator in the output between
+//! panels, which keeps the chain k-ascending, one product at a time —
+//! bitwise identical to an unblocked dot. Consequently every kernel here
+//! is bitwise-reproducible across thread counts *and* against the
+//! `#[cfg(test)]` scalar oracles retained in `runtime::native::math`
+//! (pinned by exact-equality property tests, not tolerance tests).
+//!
+//! ## Blocking scheme
+//!
+//! * `matmul_nt` walks K in [`KC`]-sized panels so one pass keeps the
+//!   `x`-row slice resident while streaming `w`; rows of `y` are chunked
+//!   ~4 chunks per worker for balance. Batches smaller than the pool
+//!   (decode steps, GEMV) switch to splitting each output row's columns
+//!   across the pool instead, so single-sequence decode still scales.
+//!   Chunk sizes come from [`Pool::chunk_rows`], whose minimum-work gate
+//!   runs tiny products inline (single chunk, no spawns) — partition
+//!   choice never changes the bits, only where they are computed.
+//! * `add_matmul_nn` reuses an [`NC`]-row panel of `w` across every row
+//!   of its band before moving on.
+//! * `add_matmul_tn` partitions the `dw` output channels; each pass over
+//!   a batch row `x[r]` is reused by the whole band.
+
+use super::pool::Pool;
+
+/// K-panel length (f32 elements): a panel of one `x` row is 1 KiB.
+const KC: usize = 256;
+/// Output-channel panel for the input-gradient kernel.
+const NC: usize = 64;
+
+/// `y[M,N] = x[M,K] @ w[N,K]ᵀ` — the forward linear (`w` row-major
+/// `[out, in]`, matching the python `x @ w.T`).
+pub fn matmul_nt(pool: &Pool, x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    let mut y = vec![0f32; m * n];
+    if m == 0 || n == 0 {
+        return y;
+    }
+    if m < pool.threads() {
+        // decode-sized batches: split each row's output columns instead
+        let cchunk = pool.chunk_rows(n, k);
+        for r in 0..m {
+            let xr = &x[r * k..(r + 1) * k];
+            pool.for_each_chunk_mut(&mut y[r * n..(r + 1) * n], cchunk, |ci, seg| {
+                let c0 = ci * cchunk;
+                for (j, o) in seg.iter_mut().enumerate() {
+                    let wr = &w[(c0 + j) * k..(c0 + j + 1) * k];
+                    let mut acc = 0f32;
+                    for (a, b) in xr.iter().zip(wr.iter()) {
+                        acc += a * b;
+                    }
+                    *o = acc;
+                }
+            });
+        }
+        return y;
+    }
+    let rows_per = pool.chunk_rows(m, n * k);
+    pool.for_each_chunk_mut(&mut y, rows_per * n, |ci, band| {
+        matmul_nt_band(x, w, ci * rows_per, band.len() / n, k, n, band);
+    });
+    y
+}
+
+/// One row-band of [`matmul_nt`]: rows `row0..row0+rows` of `y`, K walked
+/// in [`KC`] panels with the running total parked in `y` between panels
+/// (the accumulation chain stays k-ascending — see the module docs).
+fn matmul_nt_band(
+    x: &[f32],
+    w: &[f32],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    y: &mut [f32],
+) {
+    let mut kb = 0;
+    while kb < k {
+        let kc = KC.min(k - kb);
+        for r in 0..rows {
+            let xr = &x[(row0 + r) * k + kb..(row0 + r) * k + kb + kc];
+            let yr = &mut y[r * n..(r + 1) * n];
+            for (c, yc) in yr.iter_mut().enumerate() {
+                let wr = &w[c * k + kb..c * k + kb + kc];
+                let mut acc = *yc;
+                for (a, b) in xr.iter().zip(wr.iter()) {
+                    acc += a * b;
+                }
+                *yc = acc;
+            }
+        }
+        kb += kc;
+    }
+}
+
+/// `dx[M,K] += dy[M,N] @ w[N,K]` — input gradient of the linear.
+/// Partitioned over rows of `dx`; within a band, an [`NC`]-row panel of
+/// `w` is reused across every band row. Per element the contributions
+/// still land in ascending-`c` order, so the result is bitwise identical
+/// to the scalar loop at any thread count.
+pub fn add_matmul_nn(
+    pool: &Pool,
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(dx.len(), m * k);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let rows_per = pool.chunk_rows(m, n * k);
+    pool.for_each_chunk_mut(dx, rows_per * k, |ci, band| {
+        let row0 = ci * rows_per;
+        let rows = band.len() / k;
+        let mut cb = 0;
+        while cb < n {
+            let cc = NC.min(n - cb);
+            for r in 0..rows {
+                let dyr = &dy[(row0 + r) * n + cb..(row0 + r) * n + cb + cc];
+                let dxr = &mut band[r * k..(r + 1) * k];
+                for (cj, &d) in dyr.iter().enumerate() {
+                    if d == 0.0 {
+                        continue;
+                    }
+                    let wr = &w[(cb + cj) * k..(cb + cj + 1) * k];
+                    for (o, &wv) in dxr.iter_mut().zip(wr.iter()) {
+                        *o += d * wv;
+                    }
+                }
+            }
+            cb += cc;
+        }
+    });
+}
+
+/// `dw[N,K] += dy[M,N]ᵀ @ x[M,K]` — weight gradient of the linear.
+/// Partitioned over output channels of `dw`; every pass over a batch row
+/// `x[r]` serves the whole band. Contributions land in ascending-`r`
+/// order per element — the scalar loop's chain, bitwise.
+pub fn add_matmul_tn(
+    pool: &Pool,
+    dy: &[f32],
+    x: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    dw: &mut [f32],
+) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dw.len(), n * k);
+    if n == 0 || k == 0 {
+        return;
+    }
+    let cols_per = pool.chunk_rows(n, m * k);
+    pool.for_each_chunk_mut(dw, cols_per * k, |ci, band| {
+        let c0 = ci * cols_per;
+        let cols = band.len() / k;
+        for r in 0..m {
+            let xr = &x[r * k..(r + 1) * k];
+            let dyr = &dy[r * n..(r + 1) * n];
+            for cj in 0..cols {
+                let d = dyr[c0 + cj];
+                if d == 0.0 {
+                    continue;
+                }
+                let dwr = &mut band[cj * k..(cj + 1) * k];
+                for (o, &xv) in dwr.iter_mut().zip(xr.iter()) {
+                    *o += d * xv;
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect()
+    }
+
+    /// The blocked kernels are bitwise thread-count-invariant on shapes
+    /// that are NOT multiples of any block size (odd M, N, K, including
+    /// M smaller than the pool — the column-split decode path).
+    #[test]
+    fn kernels_are_bitwise_identical_across_thread_counts() {
+        let mut rng = Rng::new(0x6E44);
+        for case in 0..40 {
+            let m = 1 + rng.below(13);
+            let k = 1 + rng.below(2 * KC + 11);
+            let n = 1 + rng.below(37);
+            let x = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, n * k);
+            let dy = rand_vec(&mut rng, m * n);
+            let pools = [Pool::new(1), Pool::new(2), Pool::new(5)];
+            let ys: Vec<Vec<f32>> = pools
+                .iter()
+                .map(|p| matmul_nt(p, &x, &w, m, k, n))
+                .collect();
+            assert_eq!(ys[0], ys[1], "case {case} (m={m} k={k} n={n})");
+            assert_eq!(ys[0], ys[2], "case {case} (m={m} k={k} n={n})");
+            let dxs: Vec<Vec<f32>> = pools
+                .iter()
+                .map(|p| {
+                    let mut dx = rand_vec(&mut Rng::new(7), m * k);
+                    add_matmul_nn(p, &dy, &w, m, n, k, &mut dx);
+                    dx
+                })
+                .collect();
+            assert_eq!(dxs[0], dxs[1], "case {case} dx");
+            assert_eq!(dxs[0], dxs[2], "case {case} dx");
+            let dws: Vec<Vec<f32>> = pools
+                .iter()
+                .map(|p| {
+                    let mut dw = rand_vec(&mut Rng::new(9), n * k);
+                    add_matmul_tn(p, &dy, &x, m, n, k, &mut dw);
+                    dw
+                })
+                .collect();
+            assert_eq!(dws[0], dws[1], "case {case} dw");
+            assert_eq!(dws[0], dws[2], "case {case} dw");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_do_not_panic() {
+        let pool = Pool::new(3);
+        assert!(matmul_nt(&pool, &[], &[], 0, 4, 0).is_empty());
+        assert_eq!(matmul_nt(&pool, &[], &[], 1, 0, 2), vec![0.0, 0.0]);
+        let mut dx: Vec<f32> = vec![];
+        add_matmul_nn(&pool, &[], &[], 0, 0, 0, &mut dx);
+        let mut dw: Vec<f32> = vec![];
+        add_matmul_tn(&pool, &[], &[], 0, 0, 3, &mut dw);
+    }
+
+    #[test]
+    fn matmul_small_known_answer() {
+        // x = [[1,2],[3,4]], w = [[1,0],[0,1],[1,1]]
+        for threads in [1, 4] {
+            let pool = Pool::new(threads);
+            let y = matmul_nt(
+                &pool,
+                &[1.0, 2.0, 3.0, 4.0],
+                &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+                2,
+                2,
+                3,
+            );
+            assert_eq!(y, vec![1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Shared parallel kernel layer: one thread pool, every matmul.
+//!
+//! This module is the single dispatch point for the heavy linear algebra
+//! in the native backend and the serving path:
+//!
+//! * [`pool`]    — [`Pool`], a zero-dependency `std::thread::scope`-based
+//!                 scoped thread pool sized by `--threads` / `DQT_THREADS`
+//!                 (see [`crate::config::effective_threads`]).
+//! * [`gemm`]    — cache-blocked dense kernels (`matmul_nt`,
+//!                 `add_matmul_nn`, `add_matmul_tn`) with K-panel
+//!                 micro-blocking, row-partitioned across the pool.
+//! * [`ternary`] — the packed-ternary parallel GEMM/GEMV, fanning output
+//!                 channels of the 2-bit weight stream across the pool and
+//!                 delegating the byte-LUT dot products to
+//!                 [`crate::quant::ternary`].
+//!
+//! **Determinism contract.** Parallelism here never changes a result bit:
+//! work is partitioned over *output rows/channels only*, so each output
+//! element's floating-point accumulation chain is independent of the
+//! thread count (and identical to the scalar reference oracles kept under
+//! `#[cfg(test)]` in `runtime::native::math`). Training curves, eval
+//! losses and generated tokens are bitwise equal at every `DQT_THREADS`
+//! value — pinned at 1 vs 4 threads by `tests/parallel_determinism.rs`
+//! and the CI smoke matrix. See `docs/PERFORMANCE.md`.
+
+pub mod gemm;
+pub mod pool;
+pub mod ternary;
+
+pub use pool::{default_pool, Pool};

@@ -1,0 +1,234 @@
+//! Zero-dependency scoped thread pool.
+//!
+//! A [`Pool`] is just a worker count: every parallel region opens a
+//! `std::thread::scope`, fans the work across that many OS threads (the
+//! calling thread participates, so `threads = 1` never spawns), and joins
+//! before returning. No queues, no channels, no `unsafe`, no global
+//! mutable state — which is exactly what makes the determinism contract
+//! easy to audit: the pool only ever hands a task a *disjoint* region of
+//! the output, so the arithmetic inside a task is identical at every
+//! thread count.
+//!
+//! Sizing: [`Pool::new`] takes an explicit count (the `--threads` CLI
+//! knob); [`Pool::from_env`] resolves `DQT_THREADS` and falls back to the
+//! machine's available parallelism (see
+//! [`crate::config::effective_threads`]).
+
+use std::sync::OnceLock;
+
+/// A fixed-width fan-out handle for the kernel layer. Cheap to clone via
+/// `Arc`; `Pool::new(1)` (or [`Pool::serial`]) degrades every primitive
+/// to a plain loop on the calling thread.
+#[derive(Clone, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool that fans work across `threads` OS threads (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// The single-threaded pool: every primitive runs inline.
+    pub fn serial() -> Pool {
+        Pool::new(1)
+    }
+
+    /// Pool sized by `DQT_THREADS`, falling back to the machine's
+    /// available parallelism.
+    pub fn from_env() -> Pool {
+        Pool::new(crate::config::effective_threads(None))
+    }
+
+    /// Worker count this pool fans across (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Chunk extent for partitioning `rows` output rows whose per-row cost
+    /// is roughly `work_per_row` multiply-adds: ~4 chunks per worker for
+    /// load balance — or one single chunk when the whole job is too small
+    /// to amortize a scoped fan-out (a `for_each_chunk_mut` over one chunk
+    /// runs inline, spawning nothing). The threshold only changes *where*
+    /// work runs, never what it computes, so results stay bitwise
+    /// identical either way. All kernel-layer partitioners derive their
+    /// chunk sizes here so the policy lives in one place.
+    pub fn chunk_rows(&self, rows: usize, work_per_row: usize) -> usize {
+        // Minimum multiply-adds before fanning out: below this, the
+        // spawn/join cost of one scoped region exceeds the kernel work
+        // (relevant for batch-1 decode steps on small models).
+        const MIN_PAR_WORK: usize = 32 * 1024;
+        if self.threads <= 1 || rows.saturating_mul(work_per_row) < MIN_PAR_WORK {
+            return rows.max(1);
+        }
+        rows.div_ceil(self.threads * 4).max(1)
+    }
+
+    /// Split `data` into `chunk_len`-element chunks and run
+    /// `f(chunk_index, chunk)` on every one, fanned across the pool.
+    ///
+    /// Chunks are handed out as contiguous per-worker bands (no work
+    /// stealing), so the only thing the thread count changes is *which
+    /// thread* runs a chunk — never what a chunk computes. Callers
+    /// partition outputs in whole logical rows (pass `chunk_len` as a
+    /// multiple of the row width) to keep every accumulation chain intact.
+    pub fn for_each_chunk_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk_len = chunk_len.max(1);
+        let n_chunks = data.len().div_ceil(chunk_len);
+        let workers = self.threads.min(n_chunks);
+        if workers <= 1 {
+            for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        // contiguous bands of `per` chunks each; the last band runs on the
+        // calling thread so `threads` means total workers, not extras
+        let per = n_chunks.div_ceil(workers);
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut bands: Vec<(usize, &mut [T])> = Vec::with_capacity(workers);
+            let mut rest = data;
+            let mut chunk0 = 0usize;
+            while !rest.is_empty() {
+                let take = (per * chunk_len).min(rest.len());
+                let (band, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                rest = tail;
+                bands.push((chunk0, band));
+                chunk0 += per;
+            }
+            let last = bands.pop();
+            for (c0, band) in bands {
+                s.spawn(move || {
+                    for (j, c) in band.chunks_mut(chunk_len).enumerate() {
+                        f(c0 + j, c);
+                    }
+                });
+            }
+            if let Some((c0, band)) = last {
+                for (j, c) in band.chunks_mut(chunk_len).enumerate() {
+                    f(c0 + j, c);
+                }
+            }
+        });
+    }
+
+    /// Run `f(0) .. f(n-1)` across the pool and return the results in
+    /// task order. Tasks are assigned round-robin (task `i` runs on
+    /// worker `i % workers`); since every task only reads shared inputs
+    /// and builds its own output, placement cannot affect values.
+    pub fn map_collect<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = (1..workers)
+                .map(|w| {
+                    s.spawn(move || {
+                        let mut acc = Vec::new();
+                        let mut i = w;
+                        while i < n {
+                            acc.push((i, f(i)));
+                            i += workers;
+                        }
+                        acc
+                    })
+                })
+                .collect();
+            // stride 0 runs on the calling thread
+            let mut mine = Vec::new();
+            let mut i = 0;
+            while i < n {
+                mine.push((i, f(i)));
+                i += workers;
+            }
+            for (i, v) in mine {
+                out[i] = Some(v);
+            }
+            for h in handles {
+                for (i, v) in h.join().expect("kernel pool worker panicked") {
+                    out[i] = Some(v);
+                }
+            }
+        });
+        out.into_iter()
+            .map(|v| v.expect("every task index filled"))
+            .collect()
+    }
+}
+
+/// The process-wide default pool (`DQT_THREADS` / available cores),
+/// used by entry points that keep a pool-less signature for
+/// compatibility (e.g. [`crate::quant::ternary::gemm_nt`]). Code that
+/// owns a backend should thread an explicit pool instead.
+pub fn default_pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(Pool::from_env)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_indices_cover_everything_once() {
+        for threads in [1usize, 2, 3, 8] {
+            for len in [0usize, 1, 5, 16, 17, 100] {
+                for chunk in [1usize, 3, 7, 100] {
+                    let pool = Pool::new(threads);
+                    let mut data = vec![0u32; len];
+                    pool.for_each_chunk_mut(&mut data, chunk, |ci, c| {
+                        for v in c.iter_mut() {
+                            *v += 1 + ci as u32;
+                        }
+                    });
+                    for (i, v) in data.iter().enumerate() {
+                        assert_eq!(*v, 1 + (i / chunk) as u32, "t{threads} len{len} chunk{chunk} i{i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_collect_preserves_task_order() {
+        for threads in [1usize, 2, 5] {
+            let pool = Pool::new(threads);
+            let out = pool.map_collect(23, |i| i * i);
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>());
+            assert!(pool.map_collect(0, |i| i).is_empty());
+        }
+    }
+
+    #[test]
+    fn chunk_rows_policy() {
+        // serial pools and sub-threshold jobs get one chunk (inline, no
+        // spawns); large jobs get ~4 chunks per worker
+        assert_eq!(Pool::new(1).chunk_rows(100, 1_000_000), 100);
+        assert_eq!(Pool::new(4).chunk_rows(10, 1), 10);
+        assert_eq!(Pool::new(4).chunk_rows(100, 1_000_000), 7); // ceil(100/16)
+        assert_eq!(Pool::new(4).chunk_rows(0, 1_000_000), 1);
+    }
+
+    #[test]
+    fn pool_clamps_to_one_thread() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert_eq!(Pool::serial().threads(), 1);
+        assert!(Pool::from_env().threads() >= 1);
+    }
+}

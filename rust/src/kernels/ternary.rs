@@ -1,0 +1,105 @@
+//! Parallel packed-ternary GEMM/GEMV over 2-bit codes.
+//!
+//! The arithmetic lives in [`crate::quant::ternary::dot_rows`] — the
+//! byte-LUT fused dot products that read the 2-bit weight stream without
+//! ever materializing an f32 weight. This module owns the *partitioning*:
+//! output channels (rows of the packed weight) are fanned across the
+//! [`Pool`], each task writing its own contiguous band of a transposed
+//! `[n_out, M]` scratch, which is then transposed back to the row-major
+//! `[M, n_out]` the callers expect (for GEMV, `M = 1`, the scratch *is*
+//! the result and no transpose happens).
+//!
+//! Determinism: a task computes whole output channels with the exact
+//! accumulation order of the serial kernel, so results are bitwise
+//! identical at every thread count — the property the serving decode path
+//! relies on (`tests/parallel_determinism.rs`).
+
+use super::pool::Pool;
+use crate::quant::ternary::dot_rows;
+
+/// Fused packed-ternary GEMM against a row-major `[n_out, k]` weight whose
+/// trits live contiguously in `packed` (row `r` starts at trit `r*k`):
+/// `y[M, n_out] = x[M, k] @ Wᵀ / scale`, rows of `W` fanned across `pool`.
+pub fn gemm_nt(
+    pool: &Pool,
+    packed: &[u32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n_out: usize,
+    scale: f32,
+) -> Vec<f32> {
+    assert!(
+        packed.len() * 16 >= n_out * k,
+        "packed ternary stream holds {} trits, {n_out}x{k} requested",
+        packed.len() * 16
+    );
+    assert_eq!(x.len(), m * k, "input is {} values, expected {m}x{k}", x.len());
+    if m == 0 || n_out == 0 {
+        return vec![0f32; m * n_out];
+    }
+    let inv_s = 1.0 / scale;
+    // transposed scratch: output channel r owns the contiguous band
+    // yt[r*m..(r+1)*m], so channel-partitioning hands out disjoint slices
+    let mut yt = vec![0f32; n_out * m];
+    let rows_per = pool.chunk_rows(n_out, m * k);
+    pool.for_each_chunk_mut(&mut yt, rows_per * m, |ci, band| {
+        dot_rows(packed, x, m, k, ci * rows_per, band.len() / m, inv_s, band);
+    });
+    if m == 1 {
+        return yt; // [n_out, 1] and [1, n_out] are the same buffer
+    }
+    let mut y = vec![0f32; m * n_out];
+    for r in 0..n_out {
+        for bi in 0..m {
+            y[bi * n_out + r] = yt[r * m + bi];
+        }
+    }
+    y
+}
+
+/// Fused packed-ternary GEMV: `y[n_out] = W @ x / scale` (single row of
+/// [`gemm_nt`] — the batch-1 decode step, channel-parallel).
+pub fn gemv(pool: &Pool, packed: &[u32], x: &[f32], k: usize, n_out: usize, scale: f32) -> Vec<f32> {
+    gemm_nt(pool, packed, x, 1, k, n_out, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Rng;
+    use crate::quant::ternary::pack;
+
+    /// Channel-parallel GEMM is bitwise thread-count-invariant on shapes
+    /// that straddle the byte/word boundaries of the 2-bit stream — and
+    /// the pool's minimum-work gate, so both the inline and fanned-out
+    /// paths are exercised.
+    #[test]
+    fn parallel_gemm_is_bitwise_identical_across_thread_counts() {
+        let mut rng = Rng::new(0x7E51);
+        for case in 0..60 {
+            let k = 1 + rng.below(300);
+            let n_out = 1 + rng.below(60);
+            let m = 1 + rng.below(6);
+            let s = 0.5 + 10.0 * rng.next_f64() as f32;
+            let trits: Vec<f32> = (0..n_out * k).map(|_| rng.below(3) as f32 - 1.0).collect();
+            let p = pack(&trits).unwrap();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+            let y1 = gemm_nt(&Pool::new(1), &p, &x, m, k, n_out, s);
+            let y2 = gemm_nt(&Pool::new(2), &p, &x, m, k, n_out, s);
+            let y5 = gemm_nt(&Pool::new(5), &p, &x, m, k, n_out, s);
+            assert_eq!(y1, y2, "case {case} (m={m} k={k} n={n_out})");
+            assert_eq!(y1, y5, "case {case} (m={m} k={k} n={n_out})");
+        }
+    }
+
+    #[test]
+    fn gemv_equals_row_of_gemm() {
+        let trits: Vec<f32> = (0..6 * 17).map(|i| ((i * 5 % 3) as f32) - 1.0).collect();
+        let p = pack(&trits).unwrap();
+        let x: Vec<f32> = (0..17).map(|i| 0.2 * i as f32 - 1.1).collect();
+        let a = gemv(&Pool::new(3), &p, &x, 17, 6, 2.5);
+        let b = gemm_nt(&Pool::new(1), &p, &x, 1, 17, 6, 2.5);
+        assert_eq!(a, b);
+    }
+}

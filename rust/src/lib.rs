@@ -26,6 +26,12 @@
 //! Python never runs at training time: the [`runtime`] module executes the
 //! variant through the selected backend and the [`train`] loop drives it.
 //!
+//! Every matmul — training forward/backward, eval, and serving decode —
+//! dispatches through the [`kernels`] layer: a zero-dependency scoped
+//! thread pool plus cache-blocked dense and packed-ternary GEMMs that are
+//! bitwise-deterministic across thread counts (`--threads` /
+//! `DQT_THREADS`; see `docs/PERFORMANCE.md`).
+//!
 //! Deployment is the [`serve`] subsystem: KV-cached incremental decoding
 //! ([`runtime::Decoder`], decode-free off 2-bit packed ternary grids via
 //! the fused GEMV in [`quant::ternary`]), deterministic sampling,
@@ -40,6 +46,7 @@ pub mod util;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod kernels;
 pub mod memory;
 pub mod quant;
 pub mod report;

@@ -32,6 +32,9 @@ USAGE: repro <command> [flags]
 GLOBAL: --artifacts <dir>  --results <dir>
         --backend auto|native|pjrt   (auto = pjrt when linked, else the
                                       pure-Rust native CPU backend)
+        --threads N   kernel worker threads for the native backend
+                      (default: DQT_THREADS env, else all cores; results
+                      are bitwise identical at every thread count)
 
 COMMANDS
   train   --model t130 --mode dqt --bits 1.58 [--env fp32] [--optimizer adamw]
@@ -55,6 +58,19 @@ COMMANDS
 fn backend_kind(a: &Args) -> Result<BackendKind> {
     let s = a.str_or("backend", "auto");
     BackendKind::parse(&s).ok_or_else(|| anyhow!("bad --backend {s:?} (auto|native|pjrt)"))
+}
+
+/// Explicit kernel pool from `--threads` (None = let the backend size
+/// itself from `DQT_THREADS` / available cores).
+fn pool_from_args(a: &Args) -> Result<Option<std::sync::Arc<dqt::kernels::Pool>>> {
+    Ok(if a.has("threads") {
+        let t: usize = a.parse_or("threads", 0)?;
+        Some(std::sync::Arc::new(dqt::kernels::Pool::new(
+            dqt::config::effective_threads(Some(t)),
+        )))
+    } else {
+        None
+    })
 }
 
 fn variant_spec(a: &Args) -> Result<VariantSpec> {
@@ -97,8 +113,13 @@ fn open_engine(a: &Args, artifacts: &std::path::Path) -> Result<(dqt::serve::Eng
     let ckpt = PathBuf::from(a.req("checkpoint")?);
     let dataset = a.str_or("dataset", "wiki");
     let data_seed: u64 = a.parse_or("data-seed", 42)?;
-    let vrt = VariantRuntime::open(backend_kind(a)?, None, artifacts, &spec)?;
-    eprintln!("backend: {}", vrt.backend_name());
+    let vrt =
+        VariantRuntime::open_with_pool(backend_kind(a)?, None, artifacts, &spec, pool_from_args(a)?)?;
+    eprintln!(
+        "backend: {} ({} kernel threads)",
+        vrt.backend_name(),
+        vrt.threads()
+    );
     let state = checkpoint::load_packed(&ckpt, vrt.manifest())?;
     let pipeline = Pipeline::build(&dataset, data_seed, cfg.vocab_size, cfg.max_seq_len)?;
     let engine =
@@ -131,8 +152,18 @@ fn main() -> Result<()> {
             let steps: u64 = a.parse_or("steps", 300)?;
             let dataset = a.str_or("dataset", "wiki");
             let seed: u64 = a.parse_or("seed", 42)?;
-            let vrt = VariantRuntime::open(backend_kind(&a)?, None, &artifacts, &spec)?;
-            eprintln!("backend: {}", vrt.backend_name());
+            let vrt = VariantRuntime::open_with_pool(
+                backend_kind(&a)?,
+                None,
+                &artifacts,
+                &spec,
+                pool_from_args(&a)?,
+            )?;
+            eprintln!(
+                "backend: {} ({} kernel threads)",
+                vrt.backend_name(),
+                vrt.threads()
+            );
             let pipeline = Pipeline::build(&dataset, seed, cfg.vocab_size, cfg.max_seq_len)?;
             let tcfg = TrainConfig {
                 steps,
@@ -174,8 +205,18 @@ fn main() -> Result<()> {
             let ckpt = PathBuf::from(a.req("checkpoint")?);
             let dataset = a.str_or("dataset", "wiki");
             let items: usize = a.parse_or("items", 100)?;
-            let vrt = VariantRuntime::open(backend_kind(&a)?, None, &artifacts, &spec)?;
-            eprintln!("backend: {}", vrt.backend_name());
+            let vrt = VariantRuntime::open_with_pool(
+                backend_kind(&a)?,
+                None,
+                &artifacts,
+                &spec,
+                pool_from_args(&a)?,
+            )?;
+            eprintln!(
+                "backend: {} ({} kernel threads)",
+                vrt.backend_name(),
+                vrt.threads()
+            );
             let state = checkpoint::load(&ckpt, vrt.manifest())?;
             let pipeline = Pipeline::build(&dataset, 42, cfg.vocab_size, cfg.max_seq_len)?;
             let cspec = CorpusSpec::by_name(&dataset, 42)
@@ -212,12 +253,13 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let (engine, name) = open_engine(&a, &artifacts)?;
+            let threads = engine.decoder().threads();
             let addr = a.str_or("addr", "127.0.0.1:8080");
             let max_batch: usize = a.parse_or("max-batch", 8)?;
             let server = dqt::serve::Server::bind(&addr, engine, max_batch)?;
             eprintln!(
                 "serving {name} at http://{} (POST /v1/generate, GET /healthz, \
-                 GET /v1/stats; batch {max_batch})",
+                 GET /v1/stats; batch {max_batch}, {threads} kernel threads)",
                 server.local_addr()?
             );
             server.run()?;

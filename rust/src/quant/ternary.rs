@@ -98,30 +98,32 @@ fn trit_at(packed: &[u32], i: usize) -> f32 {
     CODE_VALUES[((packed[i / 16] >> ((i % 16) * 2)) & 0b11) as usize]
 }
 
-/// Fused packed-ternary GEMM against a row-major `[n_out, k]` weight whose
-/// trits live contiguously in `packed` (row `r` starts at trit `r*k`):
-/// `y[M, n_out] = x[M, k] @ Wᵀ / scale`.
+/// Fused byte-LUT dot products of packed weight rows `r0..r0+rows`
+/// against every row of `x[M, k]`, written *transposed*:
+/// `out[(r - r0) * m + bi] = (W_r · x_bi) * inv_s`.
 ///
-/// This is the decode-free serving matmul: the dot products run straight
-/// off the 2-bit codes (four trits per byte through the 256-entry LUT — no
-/// f32 weight materialization anywhere), and the AbsMean scale is applied
-/// once per output element instead of once per weight. The weight stream
-/// is read exactly once per call, so batching `m` sequences amortizes the
-/// code decode — the throughput lever continuous batching pulls.
-///
-/// Matches `unpack` on the unused `0b11` code (decoded as 0).
-pub fn gemm_nt(packed: &[u32], x: &[f32], m: usize, k: usize, n_out: usize, scale: f32) -> Vec<f32> {
-    assert!(
-        packed.len() * 16 >= n_out * k,
-        "packed ternary stream holds {} trits, {n_out}x{k} requested",
-        packed.len() * 16
-    );
-    assert_eq!(x.len(), m * k, "input is {} values, expected {m}x{k}", x.len());
+/// This is the arithmetic core the kernel layer partitions: the dot
+/// products run straight off the 2-bit codes (four trits per byte through
+/// the 256-entry LUT — no f32 weight materialization anywhere), and the
+/// per-(row, batch) accumulation order is fixed by the code stream walk,
+/// so callers may split the row range freely without changing one bit of
+/// the result. Matches `unpack` on the unused `0b11` code (decoded as 0).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dot_rows(
+    packed: &[u32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    r0: usize,
+    rows: usize,
+    inv_s: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * m);
     let lut = byte_lut();
-    let inv_s = 1.0 / scale;
-    let mut y = vec![0f32; m * n_out];
     let mut acc = vec![0f32; m];
-    for r in 0..n_out {
+    for rr in 0..rows {
+        let r = r0 + rr;
         acc.fill(0.0);
         let mut t = r * k; // absolute trit index
         let mut j = 0; // column within the row
@@ -161,10 +163,24 @@ pub fn gemm_nt(packed: &[u32], x: &[f32], m: usize, k: usize, n_out: usize, scal
             t += 1;
         }
         for (bi, a) in acc.iter().enumerate() {
-            y[bi * n_out + r] = a * inv_s;
+            out[rr * m + bi] = a * inv_s;
         }
     }
-    y
+}
+
+/// Fused packed-ternary GEMM against a row-major `[n_out, k]` weight whose
+/// trits live contiguously in `packed` (row `r` starts at trit `r*k`):
+/// `y[M, n_out] = x[M, k] @ Wᵀ / scale`.
+///
+/// This is the decode-free serving matmul (see [`dot_rows`] for the
+/// arithmetic): the weight stream is read exactly once per call, so
+/// batching `m` sequences amortizes the code decode — the throughput
+/// lever continuous batching pulls. Dispatches through
+/// [`crate::kernels::ternary`] on the process-default pool
+/// (`DQT_THREADS`); callers that own a backend pass their pool to the
+/// kernel-layer entry point directly.
+pub fn gemm_nt(packed: &[u32], x: &[f32], m: usize, k: usize, n_out: usize, scale: f32) -> Vec<f32> {
+    crate::kernels::ternary::gemm_nt(crate::kernels::default_pool(), packed, x, m, k, n_out, scale)
 }
 
 /// Fused packed-ternary GEMV: `y[n_out] = W @ x / scale` (single row of

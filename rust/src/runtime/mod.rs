@@ -207,6 +207,12 @@ pub trait Decoder: Send + Sync {
     /// Positions a cache holds before the ring wraps (the model's trained
     /// sequence length — generation beyond it slides the window).
     fn max_positions(&self) -> usize;
+    /// Worker threads the decoder's kernel layer fans matmuls across
+    /// (1 = serial). Purely informational: results are bitwise identical
+    /// at every thread count.
+    fn threads(&self) -> usize {
+        1
+    }
     fn vocab_size(&self) -> usize;
     /// KV bytes one sequence adds per cached position
     /// (`2 · n_layer · d_model · 4`).
@@ -241,6 +247,13 @@ pub trait Decoder: Send + Sync {
 pub trait Backend {
     /// Short backend identifier (`"native"` / `"pjrt"`).
     fn name(&self) -> &'static str;
+
+    /// Worker threads the backend's kernel layer fans matmuls across
+    /// (1 = serial; the native backend reports its pool size). A pure
+    /// throughput knob — never a numerics knob.
+    fn threads(&self) -> usize {
+        1
+    }
 
     fn manifest(&self) -> &Manifest;
 
@@ -300,10 +313,22 @@ impl VariantRuntime {
     }
 
     /// Build the pure-Rust CPU reference backend for `spec` — no
-    /// artifacts, no PJRT, no Python anywhere.
+    /// artifacts, no PJRT, no Python anywhere. Kernel pool sized from the
+    /// environment (`DQT_THREADS` / available cores).
     pub fn native(spec: &VariantSpec) -> Result<Self> {
         Ok(VariantRuntime {
             backend: Box::new(NativeBackend::new(spec)?),
+        })
+    }
+
+    /// Build the native backend on an explicit kernel pool — the
+    /// `--threads` CLI path and the thread-count parity tests.
+    pub fn native_with_pool(
+        spec: &VariantSpec,
+        pool: std::sync::Arc<crate::kernels::Pool>,
+    ) -> Result<Self> {
+        Ok(VariantRuntime {
+            backend: Box::new(NativeBackend::with_pool(spec, pool)?),
         })
     }
 
@@ -317,8 +342,24 @@ impl VariantRuntime {
         artifacts_root: impl AsRef<Path>,
         spec: &VariantSpec,
     ) -> Result<Self> {
+        Self::open_with_pool(kind, rt, artifacts_root, spec, None)
+    }
+
+    /// [`VariantRuntime::open`] with an explicit kernel pool for the
+    /// native backend (`None` = size from `DQT_THREADS` / cores; the PJRT
+    /// path ignores it — its parallelism lives in XLA).
+    pub fn open_with_pool(
+        kind: BackendKind,
+        rt: Option<&Runtime>,
+        artifacts_root: impl AsRef<Path>,
+        spec: &VariantSpec,
+        pool: Option<std::sync::Arc<crate::kernels::Pool>>,
+    ) -> Result<Self> {
         match kind.resolve(pjrt_available()) {
-            BackendKind::Native => Self::native(spec),
+            BackendKind::Native => match pool {
+                Some(pool) => Self::native_with_pool(spec, pool),
+                None => Self::native(spec),
+            },
             _ => {
                 let name = spec.variant_name();
                 match rt {
@@ -332,6 +373,11 @@ impl VariantRuntime {
     /// Which backend executes this variant (`"native"` / `"pjrt"`).
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Kernel-layer worker threads (see [`Backend::threads`]).
+    pub fn threads(&self) -> usize {
+        self.backend.threads()
     }
 
     pub fn manifest(&self) -> &Manifest {

@@ -1,69 +1,49 @@
 //! Dense math primitives for the native backend: matmuls against
 //! row-major `[out, in]` weights, RMSNorm forward/backward, per-row
 //! absmax activation fake-quantization and numerically stable softmax
-//! helpers. Everything is plain f32 loops over contiguous rows — the
-//! reference layer the Pallas kernels are benchmarked against, not a
-//! performance kernel itself.
+//! helpers.
+//!
+//! The matmuls are a thin facade over the shared parallel kernel layer
+//! ([`crate::kernels::gemm`]) — cache-blocked and fanned across the
+//! backend's [`Pool`], bitwise-deterministic at every thread count. The
+//! original scalar triple loops survive only as `#[cfg(test)]` reference
+//! oracles below, pinned against the blocked kernels by exact-equality
+//! property tests over odd (non-block-multiple) shapes. The row-wise
+//! norm/softmax/quant helpers remain plain loops: they are O(tokens ·
+//! width) against the matmuls' O(tokens · width²).
+
+use crate::kernels::{gemm, Pool};
 
 /// `y[M,N] = x[M,K] @ w[N,K]ᵀ` — the forward linear (`w` row-major
-/// `[out, in]`, matching the python `x @ w.T`).
-pub fn matmul_nt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(w.len(), n * k);
-    let mut y = vec![0f32; m * n];
-    for r in 0..m {
-        let xr = &x[r * k..(r + 1) * k];
-        let yr = &mut y[r * n..(r + 1) * n];
-        for (c, yc) in yr.iter_mut().enumerate() {
-            let wr = &w[c * k..(c + 1) * k];
-            let mut acc = 0f32;
-            for (a, b) in xr.iter().zip(wr.iter()) {
-                acc += a * b;
-            }
-            *yc = acc;
-        }
-    }
-    y
+/// `[out, in]`, matching the python `x @ w.T`), fanned across `pool`.
+pub fn matmul_nt(pool: &Pool, x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    gemm::matmul_nt(pool, x, w, m, k, n)
 }
 
 /// `dx[M,K] += dy[M,N] @ w[N,K]` — input gradient of the linear.
-pub fn add_matmul_nn(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize, dx: &mut [f32]) {
-    debug_assert_eq!(dy.len(), m * n);
-    debug_assert_eq!(w.len(), n * k);
-    debug_assert_eq!(dx.len(), m * k);
-    for r in 0..m {
-        let dyr = &dy[r * n..(r + 1) * n];
-        let dxr = &mut dx[r * k..(r + 1) * k];
-        for (c, &d) in dyr.iter().enumerate() {
-            if d == 0.0 {
-                continue;
-            }
-            let wr = &w[c * k..(c + 1) * k];
-            for (o, &wv) in dxr.iter_mut().zip(wr.iter()) {
-                *o += d * wv;
-            }
-        }
-    }
+pub fn add_matmul_nn(
+    pool: &Pool,
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    dx: &mut [f32],
+) {
+    gemm::add_matmul_nn(pool, dy, w, m, n, k, dx)
 }
 
 /// `dw[N,K] += dy[M,N]ᵀ @ x[M,K]` — weight gradient of the linear.
-pub fn add_matmul_tn(dy: &[f32], x: &[f32], m: usize, n: usize, k: usize, dw: &mut [f32]) {
-    debug_assert_eq!(dy.len(), m * n);
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(dw.len(), n * k);
-    for r in 0..m {
-        let dyr = &dy[r * n..(r + 1) * n];
-        let xr = &x[r * k..(r + 1) * k];
-        for (c, &d) in dyr.iter().enumerate() {
-            if d == 0.0 {
-                continue;
-            }
-            let dwr = &mut dw[c * k..(c + 1) * k];
-            for (o, &xv) in dwr.iter_mut().zip(xr.iter()) {
-                *o += d * xv;
-            }
-        }
-    }
+pub fn add_matmul_tn(
+    pool: &Pool,
+    dy: &[f32],
+    x: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    dw: &mut [f32],
+) {
+    gemm::add_matmul_tn(pool, dy, x, m, n, k, dw)
 }
 
 /// RMSNorm over rows of width `h`: `y = x · rsqrt(mean(x²)+eps) · g`.
@@ -192,27 +172,121 @@ fn sigmoid(x: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::corpus::Rng;
+
+    // -----------------------------------------------------------------
+    // Scalar reference oracles — the seed's original triple loops, kept
+    // verbatim so the blocked/parallel kernels have a fixed point to be
+    // bitwise-compared against.
+    // -----------------------------------------------------------------
+
+    fn matmul_nt_ref(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0f32; m * n];
+        for r in 0..m {
+            let xr = &x[r * k..(r + 1) * k];
+            let yr = &mut y[r * n..(r + 1) * n];
+            for (c, yc) in yr.iter_mut().enumerate() {
+                let wr = &w[c * k..(c + 1) * k];
+                let mut acc = 0f32;
+                for (a, b) in xr.iter().zip(wr.iter()) {
+                    acc += a * b;
+                }
+                *yc = acc;
+            }
+        }
+        y
+    }
+
+    fn add_matmul_nn_ref(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize, dx: &mut [f32]) {
+        for r in 0..m {
+            let dyr = &dy[r * n..(r + 1) * n];
+            let dxr = &mut dx[r * k..(r + 1) * k];
+            for (c, &d) in dyr.iter().enumerate() {
+                if d == 0.0 {
+                    continue;
+                }
+                let wr = &w[c * k..(c + 1) * k];
+                for (o, &wv) in dxr.iter_mut().zip(wr.iter()) {
+                    *o += d * wv;
+                }
+            }
+        }
+    }
+
+    fn add_matmul_tn_ref(dy: &[f32], x: &[f32], m: usize, n: usize, k: usize, dw: &mut [f32]) {
+        for r in 0..m {
+            let dyr = &dy[r * n..(r + 1) * n];
+            let xr = &x[r * k..(r + 1) * k];
+            for (c, &d) in dyr.iter().enumerate() {
+                if d == 0.0 {
+                    continue;
+                }
+                let dwr = &mut dw[c * k..(c + 1) * k];
+                for (o, &xv) in dwr.iter_mut().zip(xr.iter()) {
+                    *o += d * xv;
+                }
+            }
+        }
+    }
+
+    /// The determinism contract, end to end: blocked kernels equal the
+    /// scalar oracles *bitwise* — not within a tolerance — on random odd
+    /// shapes (M, N, K deliberately not multiples of any block size),
+    /// at one thread and at several.
+    #[test]
+    fn prop_blocked_kernels_match_scalar_oracles_bitwise() {
+        let mut rng = Rng::new(0xB10C);
+        for case in 0..50 {
+            let m = 1 + rng.below(11);
+            let k = 1 + rng.below(600); // crosses the KC=256 panel boundary
+            let n = 1 + rng.below(90); // crosses the NC=64 panel boundary
+            let x: Vec<f32> = (0..m * k).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+            let w: Vec<f32> = (0..n * k).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+            let dy: Vec<f32> = (0..m * n).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+            let want = matmul_nt_ref(&x, &w, m, k, n);
+            let mut want_dx = vec![0f32; m * k];
+            add_matmul_nn_ref(&dy, &w, m, n, k, &mut want_dx);
+            let mut want_dw = vec![0f32; n * k];
+            add_matmul_tn_ref(&dy, &x, m, n, k, &mut want_dw);
+            for threads in [1usize, 4] {
+                let pool = Pool::new(threads);
+                let got = matmul_nt(&pool, &x, &w, m, k, n);
+                assert_eq!(got, want, "case {case} t{threads} (m={m} k={k} n={n})");
+                let mut dx = vec![0f32; m * k];
+                add_matmul_nn(&pool, &dy, &w, m, n, k, &mut dx);
+                assert_eq!(dx, want_dx, "case {case} t{threads} dx");
+                let mut dw = vec![0f32; n * k];
+                add_matmul_tn(&pool, &dy, &x, m, n, k, &mut dw);
+                assert_eq!(dw, want_dw, "case {case} t{threads} dw");
+            }
+        }
+    }
 
     #[test]
     fn matmul_nt_small() {
         // x = [[1,2],[3,4]], w = [[1,0],[0,1],[1,1]] (3 outputs)
-        let y = matmul_nt(&[1.0, 2.0, 3.0, 4.0], &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0], 2, 2, 3);
+        let pool = Pool::serial();
+        let y = matmul_nt(&pool, &[1.0, 2.0, 3.0, 4.0], &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0], 2, 2, 3);
         assert_eq!(y, vec![1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
     }
 
     #[test]
     fn linear_backward_matches_numeric_gradient() {
+        let pool = Pool::serial();
         let (m, k, n) = (2usize, 3usize, 2usize);
         let x: Vec<f32> = (0..m * k).map(|i| (i as f32 - 2.5) * 0.3).collect();
         let w: Vec<f32> = (0..n * k).map(|i| (i as f32 - 2.0) * 0.17).collect();
         // L = Σ y²/2 ⇒ dy = y
-        let y = matmul_nt(&x, &w, m, k, n);
+        let y = matmul_nt(&pool, &x, &w, m, k, n);
         let mut dx = vec![0f32; m * k];
         let mut dw = vec![0f32; n * k];
-        add_matmul_nn(&y, &w, m, n, k, &mut dx);
-        add_matmul_tn(&y, &x, m, n, k, &mut dw);
+        add_matmul_nn(&pool, &y, &w, m, n, k, &mut dx);
+        add_matmul_tn(&pool, &y, &x, m, n, k, &mut dw);
         let loss = |x: &[f32], w: &[f32]| -> f32 {
-            matmul_nt(x, w, m, k, n).iter().map(|v| v * v / 2.0).sum()
+            matmul_nt(&Pool::serial(), x, w, m, k, n)
+                .iter()
+                .map(|v| v * v / 2.0)
+                .sum()
         };
         let eps = 1e-3;
         for i in 0..m * k {

@@ -18,10 +18,12 @@ mod optim;
 mod spec;
 
 use std::borrow::Cow;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{Mode, ModelConfig, VariantSpec};
+use crate::kernels::Pool;
 use crate::quant::codec::Format;
 use crate::quant::sr::{hash_u32, uniform01};
 use crate::quant::{absmean_quantize, absmean_scale, ternary};
@@ -33,14 +35,30 @@ pub struct NativeBackend {
     hyper: spec::Hyper,
     cfg: ModelConfig,
     layout: spec::Layout,
+    /// kernel pool every matmul (training, eval, serving prep) fans
+    /// across; shared with decoders built from this backend
+    pool: Arc<Pool>,
 }
 
 impl NativeBackend {
     /// Build the backend for `spec` (errors on unknown models or
-    /// unsupported bit widths — no filesystem access involved).
+    /// unsupported bit widths — no filesystem access involved). The
+    /// kernel pool is sized from the environment (`DQT_THREADS` /
+    /// available cores); use [`NativeBackend::with_pool`] for an explicit
+    /// handle (the `--threads` CLI path and the thread-parity tests).
     pub fn new(vspec: &VariantSpec) -> Result<Self> {
+        Self::with_pool(vspec, Arc::new(Pool::from_env()))
+    }
+
+    /// Build the backend for `spec` on an explicit kernel pool.
+    pub fn with_pool(vspec: &VariantSpec, pool: Arc<Pool>) -> Result<Self> {
         let (hyper, cfg, layout) = spec::build(vspec)?;
-        Ok(NativeBackend { hyper, cfg, layout })
+        Ok(NativeBackend {
+            hyper,
+            cfg,
+            layout,
+            pool,
+        })
     }
 
     fn net(&self) -> model::Net<'_> {
@@ -48,6 +66,7 @@ impl NativeBackend {
             hyper: &self.hyper,
             cfg: &self.cfg,
             layout: &self.layout,
+            pool: &self.pool,
         }
     }
 
@@ -175,6 +194,7 @@ impl NativeBackend {
             emb: state.params[self.layout.emb].to_vec()?,
             final_norm: state.params[self.layout.final_norm].to_vec()?,
             layers,
+            pool: self.pool.clone(),
         };
         Ok(Box::new(NativeDecoder { w }))
     }
@@ -209,6 +229,10 @@ fn normal(counter: u32, seed: u32) -> f32 {
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     fn manifest(&self) -> &Manifest {
@@ -281,6 +305,7 @@ impl Backend for NativeBackend {
         let (upd_frac, gnorm) = optim::apply_updates(
             &self.hyper,
             &self.layout,
+            &self.pool,
             &mut params,
             grads,
             &mut opt,
@@ -334,6 +359,10 @@ pub struct NativeDecoder {
 impl Decoder for NativeDecoder {
     fn max_positions(&self) -> usize {
         self.w.seq_len
+    }
+
+    fn threads(&self) -> usize {
+        self.w.pool.threads()
     }
 
     fn vocab_size(&self) -> usize {

@@ -12,12 +12,13 @@
 //! rule (paper §3) consumes.
 
 use std::borrow::Cow;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{Mode, ModelConfig};
 use crate::data::tokenizer::PAD_ID;
-use crate::quant::ternary;
+use crate::kernels::{self, Pool};
 use crate::quant::{absmean_quantize, absmean_scale};
 
 use super::math::{
@@ -31,11 +32,13 @@ pub(super) type Params<'a> = [Cow<'a, [f32]>];
 /// Per-param gradient buffers in manifest order (`None` for `.s` scales).
 pub(super) type Grads = Vec<Option<Vec<f32>>>;
 
-/// The model context: hyperparameters + parameter index map.
+/// The model context: hyperparameters + parameter index map + the kernel
+/// pool every matmul (and the batch×head attention fan-out) runs on.
 pub(super) struct Net<'a> {
     pub hyper: &'a Hyper,
     pub cfg: &'a ModelConfig,
     pub layout: &'a Layout,
+    pub pool: &'a Pool,
 }
 
 /// Per-layer forward caches consumed by the backward pass. (The STE
@@ -115,7 +118,7 @@ impl<'a> Net<'a> {
         ternary: bool,
     ) -> Vec<f32> {
         let wf = self.effective_weight(&params[lin.w], ternary);
-        matmul_nt(input_q, &wf, m, k_in, n_out)
+        matmul_nt(self.pool, input_q, &wf, m, k_in, n_out)
     }
 
     /// One projection backward: accumulates the weight gradient (STE: on
@@ -135,9 +138,9 @@ impl<'a> Net<'a> {
     ) {
         let wf = self.effective_weight(&params[lin.w], false);
         if let Some(dw) = grads[lin.w].as_mut() {
-            add_matmul_tn(dy, input_q, m, n_out, k_in, dw);
+            add_matmul_tn(self.pool, dy, input_q, m, n_out, k_in, dw);
         }
-        add_matmul_nn(dy, &wf, m, n_out, k_in, dx);
+        add_matmul_nn(self.pool, dy, &wf, m, n_out, k_in, dx);
     }
 
     fn rope_tables(&self, s: usize) -> (Vec<f32>, Vec<f32>) {
@@ -212,31 +215,46 @@ impl<'a> Net<'a> {
             for buf in [&mut q, &mut k] {
                 apply_rope(buf, &cos, &sin, b, s, nh, half);
             }
-            let mut att = vec![0f32; b * nh * s * s];
-            let mut ctx = vec![0f32; m * h];
-            for bi in 0..b {
-                for a in 0..nh {
-                    let base = a * d;
-                    for i in 0..s {
-                        let qi = &q[(bi * s + i) * h + base..][..d];
-                        let row = &mut att[((bi * nh + a) * s + i) * s..][..s];
-                        for (j, rj) in row.iter_mut().enumerate().take(i + 1) {
-                            let kj = &k[(bi * s + j) * h + base..][..d];
-                            let mut acc = 0f32;
-                            for (qa, kb) in qi.iter().zip(kj.iter()) {
-                                acc += qa * kb;
-                            }
-                            *rj = acc * inv_sqrt_d;
+            // attention fans out over (batch × head): each task owns one
+            // head's `[s, s]` probability block and `[s, d]` context block,
+            // so the arithmetic inside a task — and therefore the result —
+            // is identical at every thread count. The blocks are scattered
+            // back into the `[B, A, S, S]` / `[M, H]` layouts serially.
+            let blocks = self.pool.map_collect(b * nh, |t| {
+                let bi = t / nh;
+                let base = (t % nh) * d;
+                let mut att_blk = vec![0f32; s * s];
+                let mut ctx_blk = vec![0f32; s * d];
+                for i in 0..s {
+                    let qi = &q[(bi * s + i) * h + base..][..d];
+                    let row = &mut att_blk[i * s..(i + 1) * s];
+                    for (j, rj) in row.iter_mut().enumerate().take(i + 1) {
+                        let kj = &k[(bi * s + j) * h + base..][..d];
+                        let mut acc = 0f32;
+                        for (qa, kb) in qi.iter().zip(kj.iter()) {
+                            acc += qa * kb;
                         }
-                        softmax_prefix(row, i + 1);
-                        let ci = (bi * s + i) * h + base;
-                        for (j, &p) in row.iter().enumerate().take(i + 1) {
-                            let vj = &v_proj[(bi * s + j) * h + base..][..d];
-                            for (o, &vv) in ctx[ci..ci + d].iter_mut().zip(vj.iter()) {
-                                *o += p * vv;
-                            }
+                        *rj = acc * inv_sqrt_d;
+                    }
+                    softmax_prefix(row, i + 1);
+                    let ci = i * d;
+                    for (j, &p) in row.iter().enumerate().take(i + 1) {
+                        let vj = &v_proj[(bi * s + j) * h + base..][..d];
+                        for (o, &vv) in ctx_blk[ci..ci + d].iter_mut().zip(vj.iter()) {
+                            *o += p * vv;
                         }
                     }
+                }
+                (att_blk, ctx_blk)
+            });
+            let mut att = vec![0f32; b * nh * s * s];
+            let mut ctx = vec![0f32; m * h];
+            for (t, (att_blk, ctx_blk)) in blocks.into_iter().enumerate() {
+                let (bi, base) = (t / nh, (t % nh) * d);
+                att[t * s * s..(t + 1) * s * s].copy_from_slice(&att_blk);
+                for i in 0..s {
+                    ctx[(bi * s + i) * h + base..][..d]
+                        .copy_from_slice(&ctx_blk[i * d..(i + 1) * d]);
                 }
             }
             let ctx_q = self.maybe_quant(&ctx, h);
@@ -285,7 +303,7 @@ impl<'a> Net<'a> {
         let (xf, invf) =
             rmsnorm(&x_final_in, &params[self.layout.final_norm], self.hyper.rms_eps, h);
         // tied LM head — high precision, never quantized
-        let logits = matmul_nt(&xf, emb, m, h, v);
+        let logits = matmul_nt(self.pool, &xf, emb, m, h, v);
         Ok(Forward {
             logits,
             tokens: ids,
@@ -385,9 +403,9 @@ impl<'a> Net<'a> {
         // --- tied head backward ---
         let emb = &params[self.layout.emb];
         let mut dxf = vec![0f32; m * h];
-        add_matmul_nn(&dlogits, emb, m, v, h, &mut dxf);
+        add_matmul_nn(self.pool, &dlogits, emb, m, v, h, &mut dxf);
         if let Some(demb) = grads[self.layout.emb].as_mut() {
-            add_matmul_tn(&dlogits, &fwd.xf, m, v, h, demb);
+            add_matmul_tn(self.pool, &dlogits, &fwd.xf, m, v, h, demb);
         }
         drop(dlogits);
 
@@ -447,58 +465,75 @@ impl<'a> Net<'a> {
             let mut dctx = vec![0f32; m * h];
             self.lin_bwd(params, li.wo, &cache.ctx_q, &dh, m, h, h, &mut grads, &mut dctx);
 
-            // attention backward (per batch × head)
-            let mut dq = vec![0f32; m * h];
-            let mut dk = vec![0f32; m * h];
-            let mut dv = vec![0f32; m * h];
-            for bi in 0..b {
-                for a in 0..nh {
-                    let base = a * d;
-                    for i in 0..s {
-                        let arow = &cache.att[((bi * nh + a) * s + i) * s..][..s];
-                        let dci = &dctx[(bi * s + i) * h + base..][..d];
-                        // datt + dv
-                        let mut datt = vec![0f32; i + 1];
-                        for (j, dj) in datt.iter_mut().enumerate() {
-                            let vj = &cache.v[(bi * s + j) * h + base..][..d];
-                            let mut acc = 0f32;
-                            for (ca, vb) in dci.iter().zip(vj.iter()) {
-                                acc += ca * vb;
-                            }
-                            *dj = acc;
-                            let p = arow[j];
-                            if p != 0.0 {
-                                let dvj = &mut dv[(bi * s + j) * h + base..][..d];
-                                for (o, &ca) in dvj.iter_mut().zip(dci.iter()) {
-                                    *o += p * ca;
-                                }
-                            }
+            // attention backward fans out over (batch × head), like the
+            // forward: each task accumulates its head's `[s, d]` dq/dk/dv
+            // blocks locally (every write in the serial loop stayed inside
+            // one head's column block, so the blocks partition the output
+            // exactly) and the scatter back to `[M, H]` is serial.
+            let dctx_ref = &dctx;
+            let bwd_blocks = self.pool.map_collect(b * nh, |t| {
+                let bi = t / nh;
+                let base = (t % nh) * d;
+                let mut dq_blk = vec![0f32; s * d];
+                let mut dk_blk = vec![0f32; s * d];
+                let mut dv_blk = vec![0f32; s * d];
+                for i in 0..s {
+                    let arow = &cache.att[(t * s + i) * s..][..s];
+                    let dci = &dctx_ref[(bi * s + i) * h + base..][..d];
+                    // datt + dv
+                    let mut datt = vec![0f32; i + 1];
+                    for (j, dj) in datt.iter_mut().enumerate() {
+                        let vj = &cache.v[(bi * s + j) * h + base..][..d];
+                        let mut acc = 0f32;
+                        for (ca, vb) in dci.iter().zip(vj.iter()) {
+                            acc += ca * vb;
                         }
-                        // softmax backward
-                        let mut tsum = 0f32;
-                        for (j, &dj) in datt.iter().enumerate() {
-                            tsum += dj * arow[j];
-                        }
-                        let qi = &cache.q[(bi * s + i) * h + base..][..d];
-                        let dqi = &mut dq[(bi * s + i) * h + base..][..d];
-                        for (j, &dj) in datt.iter().enumerate() {
-                            let dz = arow[j] * (dj - tsum) * inv_sqrt_d;
-                            if dz == 0.0 {
-                                continue;
-                            }
-                            let kj = &cache.k[(bi * s + j) * h + base..][..d];
-                            for (o, &kv) in dqi.iter_mut().zip(kj.iter()) {
-                                *o += dz * kv;
-                            }
-                            let dkj = &mut dk[(bi * s + j) * h + base..][..d];
-                            for (o, &qv) in dkj.iter_mut().zip(qi.iter()) {
-                                *o += dz * qv;
+                        *dj = acc;
+                        let p = arow[j];
+                        if p != 0.0 {
+                            let dvj = &mut dv_blk[j * d..(j + 1) * d];
+                            for (o, &ca) in dvj.iter_mut().zip(dci.iter()) {
+                                *o += p * ca;
                             }
                         }
                     }
+                    // softmax backward
+                    let mut tsum = 0f32;
+                    for (j, &dj) in datt.iter().enumerate() {
+                        tsum += dj * arow[j];
+                    }
+                    let qi = &cache.q[(bi * s + i) * h + base..][..d];
+                    let dqi = &mut dq_blk[i * d..(i + 1) * d];
+                    for (j, &dj) in datt.iter().enumerate() {
+                        let dz = arow[j] * (dj - tsum) * inv_sqrt_d;
+                        if dz == 0.0 {
+                            continue;
+                        }
+                        let kj = &cache.k[(bi * s + j) * h + base..][..d];
+                        for (o, &kv) in dqi.iter_mut().zip(kj.iter()) {
+                            *o += dz * kv;
+                        }
+                        let dkj = &mut dk_blk[j * d..(j + 1) * d];
+                        for (o, &qv) in dkj.iter_mut().zip(qi.iter()) {
+                            *o += dz * qv;
+                        }
+                    }
+                }
+                (dq_blk, dk_blk, dv_blk)
+            });
+            drop(dctx);
+            let mut dq = vec![0f32; m * h];
+            let mut dk = vec![0f32; m * h];
+            let mut dv = vec![0f32; m * h];
+            for (t, (dq_blk, dk_blk, dv_blk)) in bwd_blocks.into_iter().enumerate() {
+                let (bi, base) = (t / nh, (t % nh) * d);
+                for i in 0..s {
+                    let row = (bi * s + i) * h + base;
+                    dq[row..row + d].copy_from_slice(&dq_blk[i * d..(i + 1) * d]);
+                    dk[row..row + d].copy_from_slice(&dk_blk[i * d..(i + 1) * d]);
+                    dv[row..row + d].copy_from_slice(&dv_blk[i * d..(i + 1) * d]);
                 }
             }
-            drop(dctx);
             // RoPE is an orthogonal rotation — backward is the inverse spin
             for buf in [&mut dq, &mut dk] {
                 unapply_rope(buf, &cos, &sin, b, s, nh, half);
@@ -545,7 +580,9 @@ impl<'a> Net<'a> {
 /// Decode-time representation of one projection: dense f32 (fp32 mode and
 /// non-ternary integer grids) or 2-bit packed ternary codes with their
 /// AbsMean scale — the decode-free path, where every matmul runs fused off
-/// the codes via [`ternary::gemm_nt`] and no f32 weight is materialized.
+/// the codes via [`kernels::ternary::gemm_nt`] and no f32 weight is
+/// materialized. Both forms fan across the serving pool: output channels
+/// of the packed stream, output rows/columns of the dense GEMM.
 pub(crate) enum DecodeLin {
     Dense(Vec<f32>),
     Ternary { words: Vec<u32>, scale: f32 },
@@ -553,10 +590,12 @@ pub(crate) enum DecodeLin {
 
 impl DecodeLin {
     /// `y[M,N] = x[M,K] @ Wᵀ` for the decode micro-batch.
-    fn matmul(&self, x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    fn matmul(&self, pool: &Pool, x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         match self {
-            DecodeLin::Dense(w) => matmul_nt(x, w, m, k, n),
-            DecodeLin::Ternary { words, scale } => ternary::gemm_nt(words, x, m, k, n, *scale),
+            DecodeLin::Dense(w) => matmul_nt(pool, x, w, m, k, n),
+            DecodeLin::Ternary { words, scale } => {
+                kernels::ternary::gemm_nt(pool, words, x, m, k, n, *scale)
+            }
         }
     }
 
@@ -652,6 +691,9 @@ pub(crate) struct DecodeWeights {
     pub(crate) emb: Vec<f32>,
     pub(crate) final_norm: Vec<f32>,
     pub(crate) layers: Vec<DecodeLayer>,
+    /// kernel pool the projection matmuls and the per-sequence attention
+    /// fan across (threaded in from the backend at decoder build)
+    pub(crate) pool: Arc<Pool>,
 }
 
 impl DecodeWeights {
@@ -713,14 +755,15 @@ impl DecodeWeights {
             x[r * h..(r + 1) * h].copy_from_slice(&self.emb[id * h..(id + 1) * h]);
         }
 
+        let pool = &*self.pool;
         for (li, layer) in self.layers.iter().enumerate() {
             // --- attention block ---
             let (xn, _) = rmsnorm(&x, &layer.attn_norm, self.rms_eps, h);
             let xq = self.maybe_quant(&xn, h);
-            let mut q = layer.wq.matmul(&xq, m, h, h);
-            let mut k_new = layer.wk.matmul(&xq, m, h, h);
-            let v_new = layer.wv.matmul(&xq, m, h, h);
-            let mut ctx = vec![0f32; m * h];
+            let mut q = layer.wq.matmul(pool, &xq, m, h, h);
+            let mut k_new = layer.wk.matmul(pool, &xq, m, h, h);
+            let v_new = layer.wv.matmul(pool, &xq, m, h, h);
+            // phase 1 (serial): RoPE + append this step's K/V to each cache
             for (bi, cache) in caches.iter_mut().enumerate() {
                 let pos = cache.pos;
                 rope_row(&mut q[bi * h..(bi + 1) * h], pos, nh, half, self.rope_theta);
@@ -729,14 +772,24 @@ impl DecodeWeights {
                 let base_l = (li * self.seq_len + slot) * h;
                 cache.k[base_l..base_l + h].copy_from_slice(&k_new[bi * h..(bi + 1) * h]);
                 cache.v[base_l..base_l + h].copy_from_slice(&v_new[bi * h..(bi + 1) * h]);
+            }
+            // phase 2 (parallel over sequences): attention reads the caches
+            // immutably; each task computes its own `[H]` context row, so
+            // batch rows stay numerically independent and thread-invariant
+            let cache_refs: Vec<&KvCache> = caches.iter().map(|c| &**c).collect();
+            let q_ref = &q;
+            let ctx_rows = pool.map_collect(m, |bi| {
+                let cache = cache_refs[bi];
+                let pos = cache.pos;
                 // window of cached positions, oldest first (chronological —
                 // the same accumulation order as the full forward)
                 let n_ctx = (pos + 1).min(self.seq_len);
                 let first = pos + 1 - n_ctx;
+                let mut row = vec![0f32; h];
                 let mut att = vec![0f32; n_ctx];
                 for a in 0..nh {
                     let hb = a * d;
-                    let qi = &q[bi * h + hb..][..d];
+                    let qi = &q_ref[bi * h + hb..][..d];
                     for (jj, abs) in (first..=pos).enumerate() {
                         let sj = abs % self.seq_len;
                         let kj = &cache.k[(li * self.seq_len + sj) * h + hb..][..d];
@@ -747,7 +800,6 @@ impl DecodeWeights {
                         att[jj] = acc * inv_sqrt_d;
                     }
                     softmax_prefix(&mut att, n_ctx);
-                    let ci = bi * h + hb;
                     for (jj, abs) in (first..=pos).enumerate() {
                         let p = att[jj];
                         if p == 0.0 {
@@ -755,14 +807,19 @@ impl DecodeWeights {
                         }
                         let sj = abs % self.seq_len;
                         let vj = &cache.v[(li * self.seq_len + sj) * h + hb..][..d];
-                        for (o, &vv) in ctx[ci..ci + d].iter_mut().zip(vj.iter()) {
+                        for (o, &vv) in row[hb..hb + d].iter_mut().zip(vj.iter()) {
                             *o += p * vv;
                         }
                     }
                 }
+                row
+            });
+            let mut ctx = vec![0f32; m * h];
+            for (bi, row) in ctx_rows.into_iter().enumerate() {
+                ctx[bi * h..(bi + 1) * h].copy_from_slice(&row);
             }
             let ctx_q = self.maybe_quant(&ctx, h);
-            let attn_out = layer.wo.matmul(&ctx_q, m, h, h);
+            let attn_out = layer.wo.matmul(pool, &ctx_q, m, h, h);
             let mut h_mid = x;
             for (o, &a) in h_mid.iter_mut().zip(attn_out.iter()) {
                 *o += a;
@@ -771,14 +828,14 @@ impl DecodeWeights {
             // --- MLP block (SwiGLU) ---
             let (xn2, _) = rmsnorm(&h_mid, &layer.mlp_norm, self.rms_eps, h);
             let xq2 = self.maybe_quant(&xn2, h);
-            let gate = layer.w_gate.matmul(&xq2, m, h, i_);
-            let up = layer.w_up.matmul(&xq2, m, h, i_);
+            let gate = layer.w_gate.matmul(pool, &xq2, m, h, i_);
+            let up = layer.w_up.matmul(pool, &xq2, m, h, i_);
             let mut down_in = vec![0f32; m * i_];
             for ((o, &g), &u) in down_in.iter_mut().zip(gate.iter()).zip(up.iter()) {
                 *o = silu(g) * u;
             }
             let down_in_q = self.maybe_quant(&down_in, i_);
-            let down = layer.w_down.matmul(&down_in_q, m, i_, h);
+            let down = layer.w_down.matmul(pool, &down_in_q, m, i_, h);
             let mut x_out = h_mid;
             for (o, &dv) in x_out.iter_mut().zip(down.iter()) {
                 *o += dv;
@@ -791,7 +848,7 @@ impl DecodeWeights {
 
         let (xf, _) = rmsnorm(&x, &self.final_norm, self.rms_eps, h);
         // tied LM head — dense f32, never quantized (same as training)
-        Ok(matmul_nt(&xf, &self.emb, m, h, v))
+        Ok(matmul_nt(pool, &xf, &self.emb, m, h, v))
     }
 }
 

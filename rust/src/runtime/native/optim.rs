@@ -6,6 +6,7 @@
 //! per-tensor SR seed stream `hash_u32(trainable_index, sr_seed)`.
 
 use crate::config::{Env, Mode};
+use crate::kernels::Pool;
 use crate::quant::sr::{hash_u32, sr_scalar};
 use crate::quant::{absmean_scale, bf16, fp8, qrange};
 
@@ -69,9 +70,18 @@ fn two_mut(v: &mut [Vec<f32>], i: usize, j: usize) -> (&mut Vec<f32>, &mut Vec<f
 /// One optimizer step over every trainable parameter, in place.
 /// Returns `(upd_frac, gnorm)` — the fraction of quantized weights whose
 /// value changed (Fig. 6) and the pre-clip global gradient norm.
+///
+/// The §3 stochastic-rounding projection (the per-weight hot loop of the
+/// DQT update) fans across `pool`; `sr_scalar` is a pure function of the
+/// weight index, so the partition cannot change a bit of the result. The
+/// moment updates and reductions stay serial — their accumulation order
+/// is part of the determinism contract and they are a small fraction of
+/// the step next to the backward matmuls.
+#[allow(clippy::too_many_arguments)]
 pub(super) fn apply_updates(
     hyper: &Hyper,
     layout: &Layout,
+    pool: &Pool,
     params: &mut [Vec<f32>],
     mut grads: Grads,
     opt: &mut [Vec<f32>],
@@ -209,11 +219,19 @@ pub(super) fn apply_updates(
                         (w_new, s_max)
                     }
                     (_, Intervention::None) => {
-                        let w_new: Vec<f32> = w_dense
-                            .iter()
-                            .enumerate()
-                            .map(|(i, &v)| sr_scalar(v, i as u32, tseed, qn, qp, s))
-                            .collect();
+                        // the paper's SR projection, fanned across the
+                        // pool — elementwise in the weight index, so the
+                        // chunking is invisible to the result (work per
+                        // weight ≈ one counter hash + a few flops)
+                        let mut w_new = vec![0f32; n];
+                        let chunk = pool.chunk_rows(n, 8);
+                        pool.for_each_chunk_mut(&mut w_new, chunk, |ci, seg| {
+                            let off = ci * chunk;
+                            for (j, o) in seg.iter_mut().enumerate() {
+                                let i = off + j;
+                                *o = sr_scalar(w_dense[i], i as u32, tseed, qn, qp, s);
+                            }
+                        });
                         (w_new, s)
                     }
                     (_, iv) => {

@@ -32,8 +32,6 @@ const MAX_HEADER_BYTES: usize = 16 * 1024;
 const MAX_BODY_BYTES: usize = 1024 * 1024;
 /// Worst-case wait for a generation to schedule + decode.
 const REQUEST_TIMEOUT: Duration = Duration::from_secs(120);
-/// Decode-loop idle wait between condvar polls.
-const IDLE_WAIT: Duration = Duration::from_millis(50);
 
 /// The serving endpoint: a bound listener plus the shared scheduler.
 pub struct Server {
@@ -82,13 +80,17 @@ impl Server {
     }
 }
 
-/// The single decode thread: batched steps while there is work, condvar
-/// wait while idle. Step errors are logged and already failed the affected
-/// requests (the scheduler evicts them with `finish_reason = "error"`).
+/// The single decode thread: batched steps while there is work, a true
+/// condvar park while idle — `Scheduler::park_until_work` blocks with no
+/// poll interval, so an idle server burns no CPU and a submission wakes
+/// the loop immediately. Step errors are logged and already failed the
+/// affected requests (the scheduler evicts them with
+/// `finish_reason = "error"`); the short sleep only rate-limits a
+/// persistently failing model.
 fn decode_loop(sched: &Scheduler) {
     loop {
         match sched.step() {
-            Ok(0) => sched.wait_for_work(IDLE_WAIT),
+            Ok(0) => sched.park_until_work(),
             Ok(_) => {}
             Err(e) => {
                 eprintln!("serve: decode step failed: {e}");
@@ -127,6 +129,7 @@ fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
                 )
                 .set("packed_projections", engine.decoder().packed_projections())
                 .set("n_projections", engine.decoder().n_projections())
+                .set("threads", engine.decoder().threads())
                 .set("pending", sched.pending());
             respond(&mut stream, 200, &body)
         }
@@ -139,6 +142,11 @@ fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
                 .set("tokens_processed", st.tokens_processed)
                 .set("tokens_generated", st.tokens_generated)
                 .set("peak_batch", st.peak_batch)
+                // configuration attribution: kernel threads + cumulative
+                // decode throughput, so recorded numbers are comparable
+                .set("threads", sched.engine().decoder().threads())
+                .set("decode_ns", st.decode_ns)
+                .set("decode_tokens_per_sec", st.decode_tokens_per_sec())
                 .set("pending", sched.pending());
             respond(&mut stream, 200, &body)
         }

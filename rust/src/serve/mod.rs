@@ -27,8 +27,13 @@
 //!
 //! Serving memory is grid bytes + KV cache: the decode hot path performs
 //! no f32 weight unpacking — every projection matmul goes through the
-//! fused packed-ternary GEMV (`quant::ternary::gemm_nt`) prepared once at
-//! engine build. See `docs/SERVING.md`.
+//! channel-parallel fused packed-ternary GEMM
+//! (`kernels::ternary::gemm_nt` on the backend's thread pool) prepared
+//! once at engine build, so batched decode scales with cores while
+//! staying bitwise-deterministic across thread counts. The decode loop
+//! parks on a condvar when idle and `/v1/stats` reports the active
+//! thread count plus cumulative decode tokens/sec. See
+//! `docs/SERVING.md` and `docs/PERFORMANCE.md`.
 
 pub mod engine;
 pub mod http;

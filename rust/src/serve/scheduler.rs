@@ -37,6 +37,23 @@ pub struct SchedulerStats {
     /// tokens sampled
     pub tokens_generated: u64,
     pub peak_batch: usize,
+    /// wall-clock nanoseconds spent inside batched model forwards
+    /// (the lock-released phase of [`Scheduler::step`])
+    pub decode_ns: u64,
+}
+
+impl SchedulerStats {
+    /// Cumulative decode throughput: tokens pushed through the model per
+    /// second of model-forward wall time (0.0 before the first step).
+    /// Together with the thread count reported by `/v1/stats`, this makes
+    /// bench numbers attributable to a configuration.
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_ns == 0 {
+            0.0
+        } else {
+            self.tokens_processed as f64 * 1e9 / self.decode_ns as f64
+        }
+    }
 }
 
 /// One in-flight sequence.
@@ -185,12 +202,24 @@ impl Scheduler {
         std::mem::take(&mut self.inner.lock().unwrap().finished)
     }
 
-    /// Block until there is work to step (or `timeout` elapses) — the
-    /// decode loop's idle wait.
+    /// Block until there is work to step (or `timeout` elapses) — a
+    /// bounded idle wait for callers that need to regain control.
     pub fn wait_for_work(&self, timeout: Duration) {
         let g = self.inner.lock().unwrap();
         if g.queue.is_empty() && g.active.is_empty() {
             let _ = self.work.wait_timeout(g, timeout).unwrap();
+        }
+    }
+
+    /// Park the calling thread until there is work to step — the decode
+    /// loop's idle wait. A true condvar park (no poll interval): an idle
+    /// server burns no CPU, and a submission wakes the loop immediately,
+    /// so admission latency is the model forward, not a sleep quantum.
+    /// Loops on the condition, so spurious wakeups are harmless.
+    pub fn park_until_work(&self) {
+        let mut g = self.inner.lock().unwrap();
+        while g.queue.is_empty() && g.active.is_empty() && g.in_flight == 0 {
+            g = self.work.wait(g).unwrap();
         }
     }
 
@@ -243,6 +272,7 @@ impl Scheduler {
 
         // --- phase 2 (unlocked): the batched model forward ---
         let n = batch.len();
+        let t0 = std::time::Instant::now();
         let step_result = {
             let mut caches: Vec<&mut dyn DecoderCache> = batch
                 .iter_mut()
@@ -250,11 +280,13 @@ impl Scheduler {
                 .collect();
             self.engine.decoder().step_batch(&mut caches[..], &tokens)
         };
+        let decode_ns = t0.elapsed().as_nanos() as u64;
 
         // --- phase 3 (locked): sample, evict, return survivors ---
         let mut g = self.inner.lock().unwrap();
         let g = &mut *g;
         g.in_flight = 0;
+        g.stats.decode_ns += decode_ns;
         let logits = match step_result {
             Ok(l) => l,
             Err(e) => {
@@ -328,6 +360,11 @@ impl Scheduler {
                     }
                 }
             }
+        }
+        if !g.active.is_empty() || !g.queue.is_empty() {
+            // a thread parked in `park_until_work` while this step was
+            // mid-flight (in_flight > 0) must be re-woken for the survivors
+            self.work.notify_all();
         }
         Ok(n)
     }
@@ -543,6 +580,25 @@ mod tests {
         assert!(f[0].1.token_ids.is_empty());
         assert_eq!(f[0].1.finish, FinishReason::Length);
         assert_eq!(sched.pending(), 0);
+    }
+
+    #[test]
+    fn park_until_work_wakes_on_submit_and_decode_time_is_accounted() {
+        let engine = mock_engine(8, 64);
+        let sched = Arc::new(Scheduler::new(engine, 4));
+        let s2 = sched.clone();
+        let submitter = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            s2.submit_ids(vec![3], GenParams::default());
+        });
+        sched.park_until_work(); // no timeout: returns only once work exists
+        assert!(sched.pending() > 0);
+        submitter.join().unwrap();
+        sched.run_until_idle().unwrap();
+        let st = sched.stats();
+        assert!(st.decode_ns > 0, "model-forward time must be accounted");
+        assert!(st.decode_tokens_per_sec() > 0.0);
+        assert_eq!(SchedulerStats::default().decode_tokens_per_sec(), 0.0);
     }
 
     #[test]

@@ -11,6 +11,11 @@ pub struct Bench {
     /// minimum measuring time per benchmark
     pub measure_time: Duration,
     pub warmup_time: Duration,
+    /// thread count stamped on subsequent records; `None` = the process
+    /// environment's (`config::effective_threads`). Benchmarks that run
+    /// on an explicit `kernels::Pool` must set this so the recorded
+    /// configuration matches the pool actually used.
+    threads_override: Option<usize>,
     records: Vec<Record>,
 }
 
@@ -24,6 +29,10 @@ pub struct Record {
     pub p95_ns: f64,
     pub bytes: Option<u64>,
     pub elements: Option<u64>,
+    /// kernel worker threads active in this process (`--threads` /
+    /// `DQT_THREADS` / cores) — recorded so every perf number is
+    /// attributable to a configuration
+    pub threads: usize,
 }
 
 impl Record {
@@ -65,6 +74,7 @@ impl Record {
                 "elements",
                 self.elements.map(Value::from).unwrap_or(Value::Null),
             )
+            .set("threads", self.threads)
     }
 }
 
@@ -96,8 +106,16 @@ impl Bench {
             } else {
                 Duration::from_millis(500)
             },
+            threads_override: None,
             records: Vec::new(),
         }
+    }
+
+    /// Stamp subsequent records with an explicit thread count (the pool
+    /// the benchmark actually runs on) instead of the process default.
+    pub fn set_threads(&mut self, threads: usize) -> &mut Self {
+        self.threads_override = Some(threads);
+        self
     }
 
     /// Benchmark `f`, which performs ONE iteration per call.
@@ -168,6 +186,9 @@ impl Bench {
             p95_ns: p(0.95),
             bytes,
             elements,
+            threads: self
+                .threads_override
+                .unwrap_or_else(|| crate::config::effective_threads(None)),
         };
         rec.report();
         self.records.push(rec);
@@ -205,6 +226,7 @@ mod tests {
         assert_eq!(b.records.len(), 1);
         assert!(b.records[0].iters >= 5);
         assert!(b.records[0].mean_ns > 0.0);
+        assert!(b.records[0].threads >= 1);
         b.records.clear(); // avoid writing results in unit tests
     }
 

@@ -1,0 +1,163 @@
+//! Determinism under parallelism — the kernel layer's contract, pinned
+//! end to end: a real multi-step ternary training run and real KV-cached
+//! decode steps must be **bitwise identical** at 1 kernel thread and at
+//! several. The CI smoke matrix re-runs the e2e jobs under
+//! `DQT_THREADS=1` and `DQT_THREADS=4`; this file pins the same property
+//! in-process with explicit pools, so a violation fails fast with the
+//! offending step/logit identified.
+
+use std::sync::Arc;
+
+use dqt::config::{Mode, TrainConfig, VariantSpec};
+use dqt::data::Pipeline;
+use dqt::kernels::Pool;
+use dqt::runtime::VariantRuntime;
+use dqt::serve::{Engine, GenParams};
+use dqt::train::Trainer;
+
+fn vrt_with(threads: usize) -> VariantRuntime {
+    VariantRuntime::native_with_pool(
+        &VariantSpec::new("test", Mode::Dqt, 1.58),
+        Arc::new(Pool::new(threads)),
+    )
+    .expect("native backend")
+}
+
+fn pipeline_for(vrt: &VariantRuntime) -> Pipeline {
+    let m = vrt.manifest();
+    Pipeline::build(
+        "tiny",
+        1,
+        m.variant.model.vocab_size,
+        m.variant.model.max_seq_len,
+    )
+    .unwrap()
+}
+
+/// A 20-step ternary train run produces a bitwise-identical loss curve —
+/// and a bitwise-identical final state — at 1 and 4 kernel threads.
+#[test]
+fn ternary_train_run_is_bitwise_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let vrt = vrt_with(threads);
+        assert_eq!(vrt.threads(), threads);
+        let pipeline = pipeline_for(&vrt);
+        let cfg = TrainConfig {
+            steps: 20,
+            warmup_steps: 2,
+            peak_lr: 2e-3,
+            dataset: "tiny".into(),
+            seed: 42,
+            log_every: 0,
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        Trainer::new(&vrt, &pipeline, cfg).run().unwrap()
+    };
+    let (state1, m1) = run(1);
+    let (state4, m4) = run(4);
+    assert_eq!(m1.records.len(), 20);
+    assert_eq!(m1.records.len(), m4.records.len());
+    for (a, b) in m1.records.iter().zip(m4.records.iter()) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss @ step {}", a.step);
+        assert_eq!(a.upd_frac.to_bits(), b.upd_frac.to_bits(), "upd_frac @ step {}", a.step);
+        assert_eq!(a.gnorm.to_bits(), b.gnorm.to_bits(), "gnorm @ step {}", a.step);
+    }
+    assert_eq!(
+        m1.final_dev_loss.unwrap().to_bits(),
+        m4.final_dev_loss.unwrap().to_bits()
+    );
+    assert_eq!(state1.params.len(), state4.params.len());
+    for (i, (a, b)) in state1.params.iter().zip(state4.params.iter()).enumerate() {
+        assert_eq!(a, b, "param {i} diverged across thread counts");
+    }
+    for (a, b) in state1.opt.iter().zip(state4.opt.iter()) {
+        assert_eq!(a, b);
+    }
+}
+
+/// KV-cached decode steps on the packed-ternary serving path return
+/// bitwise-identical logits — and therefore identical generations — at
+/// 1 and 4 kernel threads, for both batch-1 GEMV and batched decode.
+#[test]
+fn decode_and_generation_are_bitwise_identical_across_thread_counts() {
+    let engines: Vec<Engine> = [1usize, 4]
+        .iter()
+        .map(|&t| {
+            let vrt = vrt_with(t);
+            let state = vrt.init_state(42).unwrap();
+            let pipeline = pipeline_for(&vrt);
+            Engine::new(&vrt, &state, pipeline.tokenizer.clone(), false).unwrap()
+        })
+        .collect();
+    assert_eq!(engines[0].decoder().threads(), 1);
+    assert_eq!(engines[1].decoder().threads(), 4);
+
+    // raw decode steps, batch 1: bitwise logit equality position by position
+    let tokens = [1i32, 3, 5, 2, 7, 4];
+    let mut caches: Vec<_> = engines.iter().map(|e| e.decoder().new_cache()).collect();
+    for &t in &tokens {
+        let l1 = engines[0].decoder().step(caches[0].as_mut(), t).unwrap();
+        let l4 = engines[1].decoder().step(caches[1].as_mut(), t).unwrap();
+        assert_eq!(l1.len(), l4.len());
+        for (i, (a, b)) in l1.iter().zip(l4.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "token {t} logit {i}");
+        }
+    }
+
+    // batched decode: advance 3 sequences together on each engine
+    let batched: Vec<Vec<f32>> = engines
+        .iter()
+        .map(|e| {
+            let dec = e.decoder();
+            let mut cs: Vec<_> = (0..3).map(|_| dec.new_cache()).collect();
+            let mut refs: Vec<&mut dyn dqt::runtime::DecoderCache> =
+                cs.iter_mut().map(|c| &mut **c).collect();
+            dec.step_batch(&mut refs[..], &[2, 4, 6]).unwrap()
+        })
+        .collect();
+    assert_eq!(batched[0].len(), 3 * engines[0].decoder().vocab_size());
+    assert_eq!(batched[0], batched[1]);
+
+    // full generations (greedy and sampled) match token for token
+    for params in [
+        GenParams {
+            max_new_tokens: 12,
+            ..Default::default()
+        },
+        GenParams {
+            max_new_tokens: 12,
+            temperature: 1.3,
+            top_k: 8,
+            seed: 9,
+            ..Default::default()
+        },
+    ] {
+        let g1 = engines[0].generate("the cat sat", &params).unwrap();
+        let g4 = engines[1].generate("the cat sat", &params).unwrap();
+        assert_eq!(g1.token_ids, g4.token_ids);
+        assert_eq!(g1.text, g4.text);
+        assert_eq!(g1.finish, g4.finish);
+    }
+}
+
+/// Eval (full-forward NLL) is bitwise thread-count-invariant too — the
+/// path `repro eval` and the dev-loss probes take.
+#[test]
+fn eval_nll_is_bitwise_identical_across_thread_counts() {
+    let vrt1 = vrt_with(1);
+    let vrt4 = vrt_with(4);
+    let state1 = vrt1.init_state(7).unwrap();
+    let state4 = vrt4.init_state(7).unwrap();
+    let m = vrt1.manifest();
+    let shape = &m.tokens_shape;
+    let v = m.variant.model.vocab_size as i32;
+    let tokens: Vec<i32> = (0..shape[0] * shape[1]).map(|i| (i as i32 * 7 + 3) % v).collect();
+    let (nll1, c1) = vrt1.eval_step(&state1, &tokens, false).unwrap();
+    let (nll4, c4) = vrt4.eval_step(&state4, &tokens, false).unwrap();
+    assert_eq!(nll1.to_bits(), nll4.to_bits());
+    assert_eq!(c1, c4);
+    let (t1, _) = vrt1.eval_step(&state1, &tokens, true).unwrap();
+    let (t4, _) = vrt4.eval_step(&state4, &tokens, true).unwrap();
+    assert_eq!(t1.to_bits(), t4.to_bits());
+}

@@ -247,6 +247,13 @@ fn http_server_round_trip() {
     assert_eq!(code, 200);
     assert!(stats.get("completed").and_then(|v| v.as_u64()).unwrap() >= 2);
     assert!(stats.get("tokens_generated").and_then(|v| v.as_u64()).unwrap() > 0);
+    // configuration attribution: kernel threads + cumulative decode rate
+    assert!(stats.get("threads").and_then(|v| v.as_usize()).unwrap() >= 1);
+    assert!(stats.get("decode_tokens_per_sec").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    assert_eq!(
+        health.get("threads").and_then(|v| v.as_usize()),
+        stats.get("threads").and_then(|v| v.as_usize())
+    );
 
     let (code, err) = post_generate(addr, "{\"no_prompt\": 1}");
     assert_eq!(code, 400);

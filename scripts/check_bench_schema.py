@@ -9,6 +9,7 @@ breaking the perf history.
 Baselines checked:
   BENCH_quant_codecs.json <- rust/results/bench/quant_codecs.json
   BENCH_serving.json      <- rust/results/bench/serving.json
+  BENCH_kernels.json      <- rust/results/bench/kernels.json
 """
 
 import json
@@ -16,12 +17,15 @@ import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
-RECORD_FIELDS = {"group", "name", "iters", "mean_ns", "p50_ns", "p95_ns"}
+# "threads" records the active kernel-pool width (config::effective_threads)
+# so every perf number is attributable to a configuration
+RECORD_FIELDS = {"group", "name", "iters", "mean_ns", "p50_ns", "p95_ns", "threads"}
 BASELINE_KEYS = {"bench", "command", "metric", "tracked", "runs"}
 
 BASELINES = [
     ("BENCH_quant_codecs.json", "rust/results/bench/quant_codecs.json"),
     ("BENCH_serving.json", "rust/results/bench/serving.json"),
+    ("BENCH_kernels.json", "rust/results/bench/kernels.json"),
 ]
 
 

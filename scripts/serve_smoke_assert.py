@@ -90,9 +90,12 @@ def main():
     assert eos_seed is not None, "no EOS termination across 48 sampled seeds"
     print(f"eos termination ok (seed {eos_seed})")
 
-    # stats + error paths
+    # stats + error paths (threads + decode throughput attribute every
+    # recorded number to a configuration — the kernel-layer contract)
     status, stats = get("/v1/stats")
     assert status == 200 and stats["completed"] >= 3, stats
+    assert stats.get("threads", 0) >= 1, stats
+    assert stats.get("decode_tokens_per_sec", 0) > 0, stats
     status, err = post("/v1/generate", {"nope": 1})
     assert status == 400 and "error" in err, (status, err)
     try:
