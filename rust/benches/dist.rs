@@ -1,0 +1,82 @@
+//! Distributed-plane benchmarks: world-2 all-reduce throughput over
+//! localhost TCP (MB/s of f32 gradient traffic through the fixed-rank-
+//! order tree reduce), and the weight-resync frame sizes — packed grid
+//! codes vs f32 — that the memory model's `dist_estimate` predicts.
+//! §Perf target: the t130 packed sync ships >10× fewer bytes than f32.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use dqt::config::{Mode, ModelConfig, VariantSpec};
+use dqt::dist::Collective;
+use dqt::runtime::VariantRuntime;
+use dqt::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("dist");
+
+    // --- world-2 all-reduce over loopback, t130-sized f32 gradient set ---
+    let n = ModelConfig::by_name("t130").unwrap().param_count() as usize;
+    let bytes = (n * 4) as u64;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || {
+        let Ok(mut col) = Collective::join(&addr, 1, 2, "bench", Duration::from_secs(30))
+        else {
+            return;
+        };
+        let mut grads = vec![Some(vec![1.0f32; n])];
+        let (mut nll, mut count) = (0.0f32, 0u64);
+        let mut step = 0u64;
+        // lockstep with the coordinator until it hangs up
+        while col.all_reduce(step, &mut grads, &mut nll, &mut count).is_ok() {
+            step += 1;
+        }
+    });
+    {
+        let mut col =
+            Collective::host(listener, 2, "bench", Duration::from_secs(30)).unwrap();
+        let mut grads = vec![Some(vec![1.0f32; n])];
+        let (mut nll, mut count) = (0.0f32, 0u64);
+        let mut step = 0u64;
+        b.bench_bytes("allreduce_w2_t130_f32", bytes, || {
+            col.all_reduce(step, &mut grads, &mut nll, &mut count)
+                .expect("all-reduce");
+            step += 1;
+        });
+        // dropping the collective hangs up on the worker
+    }
+    let _ = worker.join();
+
+    // --- weight-resync frames: packed grid codes + scales vs f32 ---
+    let vrt = VariantRuntime::native(&VariantSpec::new("t130", Mode::Dqt, 1.58)).unwrap();
+    let state = vrt.init_state(1).unwrap();
+    let manifest = vrt.manifest();
+    let packed_len = Collective::build_grid_sync(manifest, &state, true, 0)
+        .unwrap()
+        .encode()
+        .len() as u64;
+    let f32_len = Collective::build_grid_sync(manifest, &state, false, 0)
+        .unwrap()
+        .encode()
+        .len() as u64;
+    assert!(
+        packed_len * 10 < f32_len,
+        "packed sync {packed_len}B should be >10x under f32 sync {f32_len}B"
+    );
+    println!(
+        "dist/grid_sync sizes: packed {packed_len} B vs f32 {f32_len} B \
+         ({:.1}x less on the wire)",
+        f32_len as f64 / packed_len as f64
+    );
+    b.bench_bytes("grid_sync_packed_t130", packed_len, || {
+        Collective::build_grid_sync(manifest, &state, true, 0)
+            .unwrap()
+            .encode()
+    });
+    b.bench_bytes("grid_sync_f32_t130", f32_len, || {
+        Collective::build_grid_sync(manifest, &state, false, 0)
+            .unwrap()
+            .encode()
+    });
+}

@@ -398,6 +398,88 @@ impl TrainConfig {
     }
 }
 
+/// Distributed data-parallel run configuration (`dqt train --workers N` /
+/// `dqt worker --rank R --join ADDR`; see `docs/DISTRIBUTED.md`).
+///
+/// The determinism contract binds the legal world sizes: per-rank shard
+/// bands must slice the fixed gradient-reduction tree at subtree
+/// boundaries, which holds exactly when `world` is a power of two that
+/// divides the model's global batch size ([`DistConfig::validate`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistConfig {
+    /// total ranks (1 = the single-process reference run)
+    pub world: usize,
+    /// this process's rank; rank 0 hosts the rendezvous and owns outputs
+    pub rank: usize,
+    /// rendezvous address — rank 0 binds it, workers join it
+    /// (port 0 lets the OS pick; the spawned-local path passes the bound
+    /// port to its workers)
+    pub addr: String,
+    /// broadcast the grid weights every N steps (0 = never). Under the
+    /// determinism contract this is a bit-exact no-op — it exists to pin
+    /// ranks back together in deployments that break the contract
+    /// (mixed hardware, lossy transports) and to bound silent drift.
+    pub sync_every: u64,
+    /// ship the resync as packed grid codes + scales (the variant's true
+    /// bit width, ~16× less traffic for ternary) instead of f32
+    pub packed_sync: bool,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            world: 1,
+            rank: 0,
+            addr: "127.0.0.1:0".into(),
+            sync_every: 25,
+            packed_sync: true,
+        }
+    }
+}
+
+/// The determinism contract's sharding rule, in one place: check that
+/// `world` is a power of two dividing the `rows`-row global batch (so
+/// contiguous equal bands are subtrees of the fixed gradient-reduction
+/// tree) and return rank's band `[lo, hi)`. Every sharding site —
+/// [`DistConfig::validate`], [`DistConfig::band`], the trainer's
+/// `run_sharded` — derives from here, so the contract cannot drift
+/// between them.
+pub fn shard_band(world: usize, rank: usize, rows: usize) -> anyhow::Result<(usize, usize)> {
+    if world == 0 || !world.is_power_of_two() {
+        anyhow::bail!(
+            "world {world} is not a power of two (the fixed reduction \
+             tree splits bands in halves)"
+        );
+    }
+    if rows % world != 0 {
+        anyhow::bail!("world {world} does not divide the global batch of {rows} rows");
+    }
+    if rank >= world {
+        anyhow::bail!("rank {rank} out of range for world {world}");
+    }
+    let per = rows / world;
+    Ok((rank * per, (rank + 1) * per))
+}
+
+impl DistConfig {
+    pub fn is_distributed(&self) -> bool {
+        self.world > 1
+    }
+
+    /// Check the world/rank against the determinism contract for a model
+    /// with `batch_size` global rows.
+    pub fn validate(&self, batch_size: usize) -> anyhow::Result<()> {
+        shard_band(self.world, self.rank, batch_size).map(|_| ())
+    }
+
+    /// This rank's contiguous row band `[lo, hi)` of a `rows`-row global
+    /// batch (equal bands; `validate` guarantees divisibility).
+    pub fn band(&self, rows: usize) -> (usize, usize) {
+        let per = rows / self.world;
+        (self.rank * per, (self.rank + 1) * per)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -466,6 +548,48 @@ mod tests {
         // Some(0) and None fall through to env/cores — at least one thread
         assert!(effective_threads(Some(0)) >= 1);
         assert!(effective_threads(None) >= 1);
+    }
+
+    #[test]
+    fn dist_config_validation() {
+        let mut d = DistConfig::default();
+        assert!(!d.is_distributed());
+        assert!(d.validate(16).is_ok());
+        d.world = 2;
+        assert!(d.is_distributed());
+        assert!(d.validate(16).is_ok());
+        d.world = 4;
+        assert!(d.validate(16).is_ok());
+        assert!(d.validate(6).is_err()); // 4 does not divide 6
+        d.world = 3;
+        assert!(d.validate(6).is_err()); // 3 is not a power of two
+        d.world = 0;
+        assert!(d.validate(16).is_err());
+        d.world = 4;
+        d.rank = 4;
+        assert!(d.validate(16).is_err()); // rank out of range
+    }
+
+    #[test]
+    fn dist_config_bands_tile_the_batch() {
+        let rows = 16;
+        for world in [1usize, 2, 4, 8] {
+            let mut covered = vec![0u32; rows];
+            for rank in 0..world {
+                let d = DistConfig {
+                    world,
+                    rank,
+                    ..DistConfig::default()
+                };
+                d.validate(rows).unwrap();
+                let (lo, hi) = d.band(rows);
+                assert_eq!(hi - lo, rows / world);
+                for c in &mut covered[lo..hi] {
+                    *c += 1;
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "world {world}");
+        }
     }
 
     #[test]

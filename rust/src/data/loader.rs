@@ -33,10 +33,32 @@ pub struct Loader {
 
 impl Loader {
     pub fn new(ds: Arc<Dataset>, batch_size: usize, n_steps: u64, seed: u64) -> Self {
+        Self::new_sharded(ds, batch_size, n_steps, seed, (0, batch_size))
+    }
+
+    /// Shard-aware loader for distributed data parallelism: every rank
+    /// walks the *same* epoch/shuffle stream over the full
+    /// `global_batch`-row batches, but only materializes its contiguous
+    /// row band `[band.0, band.1)` of each one. The bands of N ranks
+    /// therefore tile the 1-worker batch exactly — same rows, same order,
+    /// no duplication — which is half of the distributed determinism
+    /// contract (the other half is the fixed gradient-reduction tree).
+    pub fn new_sharded(
+        ds: Arc<Dataset>,
+        global_batch: usize,
+        n_steps: u64,
+        seed: u64,
+        band: (usize, usize),
+    ) -> Self {
+        assert!(
+            band.0 < band.1 && band.1 <= global_batch,
+            "bad shard band {band:?} of a {global_batch}-row batch"
+        );
         let (tx, rx) = sync_channel::<Batch>(PREFETCH);
         let handle = std::thread::spawn(move || {
             let w = ds.width();
             let n = ds.n_train;
+            let band_rows = band.1 - band.0;
             let mut order: Vec<usize> = (0..n).collect();
             let mut pos = 0usize;
             let mut epoch = 0u64;
@@ -48,19 +70,21 @@ impl Loader {
             };
             reshuffle(&mut order, epoch);
             for step in 0..n_steps {
-                let mut tokens = Vec::with_capacity(batch_size * w);
-                for _ in 0..batch_size {
+                let mut tokens = Vec::with_capacity(band_rows * w);
+                for row in 0..global_batch {
                     if pos >= n {
                         pos = 0;
                         epoch += 1;
                         reshuffle(&mut order, epoch);
                     }
-                    tokens.extend_from_slice(ds.train_chunk(order[pos]));
+                    if (band.0..band.1).contains(&row) {
+                        tokens.extend_from_slice(ds.train_chunk(order[pos]));
+                    }
                     pos += 1;
                 }
                 let batch = Batch {
                     tokens,
-                    batch_size,
+                    batch_size: band_rows,
                     width: w,
                     step,
                 };
@@ -167,6 +191,48 @@ mod tests {
             .map(|b| b.tokens.iter().filter(|&&t| t != 0).count())
             .sum();
         assert_eq!(total_nonpad, ds.dev_token_count());
+    }
+
+    /// Distributed sharding contract: the per-rank bands of every world
+    /// size tile the 1-worker global batch exactly once, step for step —
+    /// concatenating the bands in rank order reproduces the unsharded
+    /// batch bit for bit.
+    #[test]
+    fn shard_bands_tile_the_global_batch_exactly_once() {
+        let ds = dataset();
+        let (global_batch, steps, seed) = (4usize, 6u64, 11u64);
+        let full: Vec<Batch> = {
+            let l = Loader::new(ds.clone(), global_batch, steps, seed);
+            std::iter::from_fn(|| l.next()).collect()
+        };
+        assert_eq!(full.len(), steps as usize);
+        for world in [2usize, 4] {
+            let per = global_batch / world;
+            let mut shards: Vec<Vec<Batch>> = Vec::new();
+            for rank in 0..world {
+                let band = (rank * per, (rank + 1) * per);
+                let l = Loader::new_sharded(ds.clone(), global_batch, steps, seed, band);
+                shards.push(std::iter::from_fn(|| l.next()).collect());
+            }
+            for (si, fb) in full.iter().enumerate() {
+                let mut tiled: Vec<i32> = Vec::new();
+                for shard in &shards {
+                    let b = &shard[si];
+                    assert_eq!(b.step, fb.step);
+                    assert_eq!(b.batch_size, per);
+                    assert_eq!(b.width, fb.width);
+                    tiled.extend_from_slice(&b.tokens);
+                }
+                assert_eq!(tiled, fb.tokens, "world {world} step {si}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bad shard band")]
+    fn shard_band_bounds_are_checked() {
+        let ds = dataset();
+        let _ = Loader::new_sharded(ds, 4, 1, 0, (2, 5));
     }
 
     #[test]

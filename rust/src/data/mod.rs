@@ -41,6 +41,20 @@ impl Pipeline {
     pub fn loader(&self, batch_size: usize, n_steps: u64, seed: u64) -> loader::Loader {
         loader::Loader::new(self.dataset.clone(), batch_size, n_steps, seed)
     }
+
+    /// Shard-aware loader for one rank of a distributed run: yields only
+    /// the contiguous row band `[band.0, band.1)` of each `global_batch`-
+    /// row batch while walking the same epoch/shuffle stream as every
+    /// other rank (see [`loader::Loader::new_sharded`]).
+    pub fn loader_sharded(
+        &self,
+        global_batch: usize,
+        n_steps: u64,
+        seed: u64,
+        band: (usize, usize),
+    ) -> loader::Loader {
+        loader::Loader::new_sharded(self.dataset.clone(), global_batch, n_steps, seed, band)
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,736 @@
+//! TCP collectives over a star topology: rank 0 hosts the rendezvous and
+//! owns the reduction; workers hold one duplex link each.
+//!
+//! The all-reduce is *fixed-rank-order*: rank 0 collects the band partials
+//! in rank order and combines them with the same halving tree
+//! ([`tree_reduce`]) the backend uses over batch rows inside a band —
+//! contiguous equal bands of a power-of-two world are subtrees of that
+//! tree, so the cross-rank combine literally finishes the 1-worker run's
+//! summation chain. Every node of the tree is
+//! [`crate::runtime::add_grad_buffers`]; nothing about the transport can
+//! change a bit of the result (see `docs/DISTRIBUTED.md`).
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::quant::codec::{Format, PackedTensor};
+use crate::runtime::{add_grad_buffers, GradReducer, Manifest, Param, State};
+
+use super::wire::Frame;
+
+/// How long rendezvous waits for the full world to arrive.
+pub const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(120);
+/// Per-frame socket timeout during training — a peer that stalls longer
+/// than this is treated as dead instead of hanging the run forever.
+pub const STEP_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// One rank's membership in the training collective.
+pub struct Collective {
+    rank: usize,
+    world: usize,
+    /// rank 0: one stream per worker, index `rank - 1`; workers: exactly
+    /// one stream, to rank 0. Empty for a solo world.
+    links: Vec<TcpStream>,
+}
+
+/// One rank's contribution flowing through [`tree_reduce`].
+pub(crate) struct GradPart {
+    pub entries: Vec<Option<Vec<f32>>>,
+    pub nll: f32,
+    pub count: u64,
+}
+
+/// The fixed halving tree over rank partials: split at
+/// `lo + (hi - lo) / 2`, combine left + right (in that order) with
+/// [`add_grad_buffers`]. Identical in shape to the per-row tree inside a
+/// band, which is what makes an N-rank reduction finish the 1-worker
+/// chain bit for bit.
+pub(crate) fn tree_reduce(parts: Vec<GradPart>) -> Result<GradPart> {
+    fn rec(parts: &mut [Option<GradPart>], lo: usize, hi: usize) -> Result<GradPart> {
+        if hi - lo == 1 {
+            return Ok(parts[lo].take().expect("each part consumed once"));
+        }
+        let mid = lo + (hi - lo) / 2;
+        let mut l = rec(parts, lo, mid)?;
+        let r = rec(parts, mid, hi)?;
+        add_grad_buffers(&mut l.entries, &r.entries)?;
+        l.nll += r.nll;
+        l.count += r.count;
+        Ok(l)
+    }
+    if parts.is_empty() {
+        return Err(anyhow!("tree_reduce of zero parts"));
+    }
+    let n = parts.len();
+    let mut slots: Vec<Option<GradPart>> = parts.into_iter().map(Some).collect();
+    rec(&mut slots, 0, n)
+}
+
+fn configure(stream: &TcpStream, timeout: Duration) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    Ok(())
+}
+
+impl Collective {
+    /// The world-1 collective: no sockets, every operation is the
+    /// identity. The 1-worker reference run goes through exactly the same
+    /// code path as an N-worker rank, minus the wire.
+    pub fn solo() -> Collective {
+        Collective {
+            rank: 0,
+            world: 1,
+            links: Vec::new(),
+        }
+    }
+
+    /// Rank 0: accept Hellos on `listener` until all of `1..world` have
+    /// joined (in any arrival order — the Hello names the rank), validate
+    /// each against this run, Welcome them, and order the links by rank.
+    pub fn host(
+        listener: TcpListener,
+        world: usize,
+        variant: &str,
+        timeout: Duration,
+    ) -> Result<Collective> {
+        if world <= 1 {
+            return Ok(Collective::solo());
+        }
+        listener
+            .set_nonblocking(true)
+            .context("rendezvous listener")?;
+        let deadline = Instant::now() + timeout;
+        let mut slots: Vec<Option<TcpStream>> = (0..world - 1).map(|_| None).collect();
+        let mut joined = 0usize;
+        // Validate one accepted connection up to its Welcome. A failure
+        // here must not kill the rendezvous: a stray connection (port
+        // scanner, health check, mistyped worker invocation) is the
+        // *peer's* problem — reject it, keep listening for the real
+        // workers until the deadline.
+        let admit = |mut stream: TcpStream,
+                     peer: std::net::SocketAddr,
+                     slots: &mut [Option<TcpStream>]|
+         -> Result<()> {
+            stream.set_nonblocking(false)?;
+            configure(&stream, timeout)?;
+            let hello = Frame::read_from(&mut stream)
+                .with_context(|| format!("rendezvous hello from {peer}"))?;
+            let Frame::Hello {
+                rank,
+                world: w,
+                variant: v,
+            } = hello
+            else {
+                return Err(anyhow!("{peer} sent a non-hello frame at rendezvous"));
+            };
+            if w as usize != world {
+                return Err(anyhow!(
+                    "{peer} joined with world {w}, this run has world {world}"
+                ));
+            }
+            if v != variant {
+                return Err(anyhow!(
+                    "{peer} is training {v:?}, this run trains {variant:?}"
+                ));
+            }
+            let r = rank as usize;
+            if r == 0 || r >= world {
+                return Err(anyhow!("{peer} claims invalid rank {r} of {world}"));
+            }
+            if slots[r - 1].is_some() {
+                return Err(anyhow!("two workers claim rank {r}"));
+            }
+            Frame::Welcome {
+                rank,
+                world: world as u32,
+            }
+            .write_to(&mut stream)?;
+            slots[r - 1] = Some(stream);
+            Ok(())
+        };
+        while joined < world - 1 {
+            match listener.accept() {
+                Ok((stream, peer)) => match admit(stream, peer, &mut slots) {
+                    Ok(()) => joined += 1,
+                    Err(e) => eprintln!("dist: rendezvous rejected {peer}: {e:#}"),
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow!(
+                            "rendezvous timed out: {joined} of {} workers joined",
+                            world - 1
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(anyhow!("rendezvous accept: {e}")),
+            }
+        }
+        let links: Vec<TcpStream> = slots.into_iter().map(|s| s.unwrap()).collect();
+        // rendezvous is over; training frames get the long per-step window
+        for link in &links {
+            configure(link, STEP_TIMEOUT)?;
+        }
+        Ok(Collective {
+            rank: 0,
+            world,
+            links,
+        })
+    }
+
+    /// Worker: connect to rank 0 at `addr` (retrying until it is up or
+    /// `timeout` passes), introduce ourselves, await the Welcome.
+    pub fn join(
+        addr: &str,
+        rank: usize,
+        world: usize,
+        variant: &str,
+        timeout: Duration,
+    ) -> Result<Collective> {
+        if rank == 0 || rank >= world {
+            return Err(anyhow!("rank {rank} cannot join a world of {world}"));
+        }
+        let deadline = Instant::now() + timeout;
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow!("joining {addr} timed out: {e}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        };
+        configure(&stream, timeout)?;
+        Frame::Hello {
+            rank: rank as u32,
+            world: world as u32,
+            variant: variant.to_string(),
+        }
+        .write_to(&mut stream)?;
+        match Frame::read_from(&mut stream).context("awaiting rendezvous welcome")? {
+            Frame::Welcome { rank: r, world: w } if r as usize == rank && w as usize == world => {}
+            other => return Err(anyhow!("unexpected rendezvous reply: {other:?}")),
+        }
+        // rendezvous is over; training frames get the long per-step window
+        configure(&stream, STEP_TIMEOUT)?;
+        Ok(Collective {
+            rank,
+            world,
+            links: vec![stream],
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn is_coordinator(&self) -> bool {
+        self.rank == 0
+    }
+
+    /// Fixed-rank-order all-reduce of one step's gradient partial (plus
+    /// the NLL sum and token count riding along), in place on every rank.
+    /// `step` tags the frames so a desynchronized peer fails loudly.
+    pub fn all_reduce(
+        &mut self,
+        step: u64,
+        grads: &mut [Option<Vec<f32>>],
+        nll: &mut f32,
+        count: &mut u64,
+    ) -> Result<()> {
+        if self.world == 1 {
+            return Ok(());
+        }
+        let lens: Vec<Option<usize>> = grads.iter().map(|g| g.as_ref().map(Vec::len)).collect();
+        let check = |entries: &[Option<Vec<f32>>], who: &str| -> Result<()> {
+            if entries.len() != lens.len() {
+                return Err(anyhow!(
+                    "{who} sent {} gradient entries, expected {}",
+                    entries.len(),
+                    lens.len()
+                ));
+            }
+            for (i, (e, l)) in entries.iter().zip(lens.iter()).enumerate() {
+                if e.as_ref().map(Vec::len) != *l {
+                    return Err(anyhow!("{who} gradient entry {i} has the wrong layout"));
+                }
+            }
+            Ok(())
+        };
+        if self.rank == 0 {
+            // own partial first, then rank order — the tree wants them
+            // positionally
+            let local: Vec<Option<Vec<f32>>> =
+                grads.iter_mut().map(std::mem::take).collect();
+            let mut parts = vec![GradPart {
+                entries: local,
+                nll: *nll,
+                count: *count,
+            }];
+            for r in 1..self.world {
+                let frame = Frame::read_from(&mut self.links[r - 1])
+                    .with_context(|| format!("rank 0 awaiting rank {r}'s partial"))?;
+                let Frame::GradSet {
+                    step: s,
+                    nll,
+                    count,
+                    entries,
+                } = frame
+                else {
+                    return Err(anyhow!("rank {r} sent a non-gradient frame mid-step"));
+                };
+                if s != step {
+                    return Err(anyhow!("rank {r} is at step {s}, rank 0 at {step}"));
+                }
+                check(&entries, &format!("rank {r}"))?;
+                parts.push(GradPart { entries, nll, count });
+            }
+            let reduced = tree_reduce(parts)?;
+            let frame = Frame::GradSet {
+                step,
+                nll: reduced.nll,
+                count: reduced.count,
+                entries: reduced.entries,
+            };
+            let buf = frame.encode();
+            for link in &mut self.links {
+                link.write_all(&buf)?;
+                link.flush()?;
+            }
+            let Frame::GradSet {
+                nll: rn,
+                count: rc,
+                entries,
+                ..
+            } = frame
+            else {
+                unreachable!()
+            };
+            for (slot, e) in grads.iter_mut().zip(entries) {
+                *slot = e;
+            }
+            *nll = rn;
+            *count = rc;
+        } else {
+            let local: Vec<Option<Vec<f32>>> =
+                grads.iter_mut().map(std::mem::take).collect();
+            Frame::GradSet {
+                step,
+                nll: *nll,
+                count: *count,
+                entries: local,
+            }
+            .write_to(&mut self.links[0])?;
+            let frame = Frame::read_from(&mut self.links[0])
+                .with_context(|| format!("rank {} awaiting the reduced set", self.rank))?;
+            let Frame::GradSet {
+                step: s,
+                nll: rn,
+                count: rc,
+                entries,
+            } = frame
+            else {
+                return Err(anyhow!("rank 0 sent a non-gradient frame mid-step"));
+            };
+            if s != step {
+                return Err(anyhow!(
+                    "rank 0 reduced step {s}, rank {} is at {step}",
+                    self.rank
+                ));
+            }
+            check(&entries, "rank 0")?;
+            for (slot, e) in grads.iter_mut().zip(entries) {
+                *slot = e;
+            }
+            *nll = rn;
+            *count = rc;
+        }
+        Ok(())
+    }
+
+    /// Build the resync frame for `state`: every grid param in `format`
+    /// (its true bit width when packed, f32 otherwise) plus every `.s`
+    /// scale as f32. Shared with the bench and the memory model tests.
+    pub fn build_grid_sync(
+        manifest: &Manifest,
+        state: &State,
+        packed: bool,
+        step: u64,
+    ) -> Result<Frame> {
+        let grid_fmt = if packed {
+            Format::from_bits(manifest.variant.bits)
+        } else {
+            Format::F32
+        };
+        let mut entries = Vec::new();
+        for (i, meta) in manifest.params.iter().enumerate() {
+            let (fmt, scale) = if meta.is_grid() {
+                let scale_name = format!("{}.s", meta.name);
+                let j = manifest.param_index(&scale_name).ok_or_else(|| {
+                    anyhow!("grid param {:?} has no companion scale", meta.name)
+                })?;
+                let s = state.params[j].scalar()?;
+                if grid_fmt.is_grid_format() {
+                    (grid_fmt, Some(s))
+                } else {
+                    (grid_fmt, None)
+                }
+            } else if meta.is_scale() {
+                (Format::F32, None)
+            } else {
+                continue; // dense params (emb/norms) are not part of the resync
+            };
+            let vals = state.params[i].to_vec()?;
+            let pt = PackedTensor::pack(&vals, meta.shape.clone(), fmt, scale)
+                .map_err(|e| anyhow!("packing {:?} for sync: {e}", meta.name))?;
+            entries.push((i as u32, pt));
+        }
+        Ok(Frame::GridSync { step, entries })
+    }
+
+    /// Adopt a received resync into `state` (grid + scale params only;
+    /// indices and shapes are validated against the manifest first).
+    pub fn apply_grid_sync(
+        manifest: &Manifest,
+        state: &mut State,
+        entries: Vec<(u32, PackedTensor)>,
+    ) -> Result<()> {
+        for (idx, pt) in entries {
+            let i = idx as usize;
+            let meta = manifest
+                .params
+                .get(i)
+                .ok_or_else(|| anyhow!("sync entry for unknown param index {i}"))?;
+            if !meta.is_grid() && !meta.is_scale() {
+                return Err(anyhow!(
+                    "sync entry {i} ({:?}) is neither grid nor scale",
+                    meta.name
+                ));
+            }
+            if pt.numel() != meta.numel() {
+                return Err(anyhow!(
+                    "sync entry {:?} has {} values, manifest wants {}",
+                    meta.name,
+                    pt.numel(),
+                    meta.numel()
+                ));
+            }
+            let vals = pt
+                .unpack()
+                .map_err(|e| anyhow!("decoding sync entry {:?}: {e}", meta.name))?;
+            state.params[i] = Param::Dense(vals);
+        }
+        Ok(())
+    }
+
+    /// Collective weight resync: rank 0 broadcasts its grid weights (and
+    /// scales) and *adopts the same decoded values itself*, workers adopt
+    /// them too — so after a sync every rank holds exactly
+    /// `unpack(pack(state0))`, even if rank 0 had drifted off-grid (the
+    /// scenario the resync exists for). Under the determinism contract
+    /// the round trip is a bit-exact no-op — grid values are exactly
+    /// `k / s` — so the contract is unperturbed. Returns the wire bytes
+    /// this rank shipped (summed over links) or received.
+    pub fn sync_grids(
+        &mut self,
+        step: u64,
+        manifest: &Manifest,
+        state: &mut State,
+        packed: bool,
+    ) -> Result<u64> {
+        if self.world == 1 {
+            return Ok(0);
+        }
+        if self.rank == 0 {
+            let frame = Self::build_grid_sync(manifest, state, packed, step)?;
+            let buf = frame.encode();
+            for link in &mut self.links {
+                link.write_all(&buf)?;
+                link.flush()?;
+            }
+            let Frame::GridSync { entries, .. } = frame else {
+                unreachable!("build_grid_sync returns GridSync");
+            };
+            Self::apply_grid_sync(manifest, state, entries)?;
+            Ok(buf.len() as u64 * self.links.len() as u64)
+        } else {
+            let (frame, bytes) = Frame::read_from_counted(&mut self.links[0])
+                .with_context(|| format!("rank {} awaiting grid sync", self.rank))?;
+            let Frame::GridSync { step: s, entries } = frame else {
+                return Err(anyhow!("rank 0 sent a non-sync frame at a sync step"));
+            };
+            if s != step {
+                return Err(anyhow!(
+                    "rank 0 synced step {s}, rank {} is at {step}",
+                    self.rank
+                ));
+            }
+            Self::apply_grid_sync(manifest, state, entries)?;
+            Ok(bytes)
+        }
+    }
+
+    /// Orderly teardown: workers announce Bye, rank 0 drains them (a
+    /// worker that died instead is reported, not hung on).
+    pub fn shutdown(mut self) -> Result<()> {
+        if self.world == 1 {
+            return Ok(());
+        }
+        if self.rank == 0 {
+            for r in 1..self.world {
+                match Frame::read_from(&mut self.links[r - 1]) {
+                    Ok(Frame::Bye { .. }) => {}
+                    Ok(other) => {
+                        return Err(anyhow!("rank {r} sent {other:?} instead of Bye"))
+                    }
+                    Err(e) => return Err(anyhow!("rank {r} vanished at shutdown: {e}")),
+                }
+            }
+        } else {
+            Frame::Bye {
+                rank: self.rank as u32,
+            }
+            .write_to(&mut self.links[0])?;
+        }
+        Ok(())
+    }
+}
+
+impl GradReducer for Collective {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn reduce(
+        &mut self,
+        step: u64,
+        grads: &mut [Option<Vec<f32>>],
+        nll: &mut f32,
+        count: &mut u64,
+    ) -> Result<()> {
+        self.all_reduce(step, grads, nll, count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode, VariantSpec};
+    use crate::runtime::{Backend, NativeBackend};
+
+    fn short() -> Duration {
+        Duration::from_secs(10)
+    }
+
+    /// Bind an ephemeral rendezvous port and pair host/join across
+    /// threads, running `work` on every rank.
+    fn run_world<T: Send + 'static>(
+        world: usize,
+        work: impl Fn(Collective) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let work = std::sync::Arc::new(work);
+        let mut handles = Vec::new();
+        for rank in 1..world {
+            let addr = addr.clone();
+            let work = work.clone();
+            handles.push(std::thread::spawn(move || {
+                let col = Collective::join(&addr, rank, world, "test-variant", short()).unwrap();
+                work(col)
+            }));
+        }
+        let col = Collective::host(listener, world, "test-variant", short()).unwrap();
+        let mut out = vec![work(col)];
+        for h in handles {
+            out.push(h.join().unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn tree_reduce_matches_manual_tree() {
+        // four parts with distinguishable values: tree = (p0+p1)+(p2+p3)
+        let part = |v: f32| GradPart {
+            entries: vec![Some(vec![v, 10.0 * v]), None],
+            nll: v,
+            count: v as u64,
+        };
+        let r = tree_reduce(vec![part(1.0), part(2.0), part(3.0), part(4.0)]).unwrap();
+        let expect = ((1.0f32 + 2.0) + (3.0 + 4.0), (10.0f32 + 20.0) + (30.0 + 40.0));
+        assert_eq!(r.entries[0].as_ref().unwrap()[0].to_bits(), expect.0.to_bits());
+        assert_eq!(r.entries[0].as_ref().unwrap()[1].to_bits(), expect.1.to_bits());
+        assert_eq!(r.entries[1], None);
+        assert_eq!(r.nll, 10.0);
+        assert_eq!(r.count, 10);
+        // mismatched layouts error instead of corrupting
+        let bad = GradPart {
+            entries: vec![Some(vec![1.0])],
+            nll: 0.0,
+            count: 0,
+        };
+        assert!(tree_reduce(vec![part(1.0), bad]).is_err());
+        assert!(tree_reduce(vec![]).is_err());
+    }
+
+    #[test]
+    fn rendezvous_and_all_reduce_world_4() {
+        let outs = run_world(4, |mut col| {
+            let r = col.rank() as f32;
+            let mut grads = vec![Some(vec![r + 1.0, 2.0 * (r + 1.0)]), None];
+            let mut nll = r + 1.0;
+            let mut count = col.rank() as u64 + 1;
+            col.all_reduce(3, &mut grads, &mut nll, &mut count).unwrap();
+            col.shutdown().unwrap();
+            (grads, nll, count)
+        });
+        // tree over ranks: ((1+2)+(3+4)) = 10, same for the doubled lane
+        for (grads, nll, count) in &outs {
+            assert_eq!(grads[0].as_ref().unwrap(), &vec![10.0f32, 20.0]);
+            assert_eq!(grads[1], None);
+            assert_eq!(*nll, 10.0);
+            assert_eq!(*count, 10);
+        }
+    }
+
+    #[test]
+    fn all_reduce_is_lockstep_over_many_steps() {
+        let outs = run_world(2, |mut col| {
+            let mut acc = Vec::new();
+            for step in 0..5u64 {
+                let base = (col.rank() as f32 + 1.0) * (step as f32 + 1.0);
+                let mut grads = vec![Some(vec![base])];
+                let (mut nll, mut count) = (0.0, 0);
+                col.all_reduce(step, &mut grads, &mut nll, &mut count)
+                    .unwrap();
+                acc.push(grads[0].as_ref().unwrap()[0]);
+            }
+            col.shutdown().unwrap();
+            acc
+        });
+        assert_eq!(outs[0], outs[1]);
+        // step s: (s+1) + 2(s+1) = 3(s+1)
+        assert_eq!(outs[0], vec![3.0, 6.0, 9.0, 12.0, 15.0]);
+    }
+
+    /// A stray connection (port scanner / health check) that talks
+    /// garbage must be rejected without killing the rendezvous for the
+    /// real workers.
+    #[test]
+    fn rendezvous_survives_stray_connections() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stray_addr = addr.clone();
+        let stray = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(&stray_addr).unwrap();
+            let _ = s.write_all(b"GET / HTTP/1.1\r\n\r\n");
+        });
+        let worker = std::thread::spawn(move || {
+            let mut col = Collective::join(&addr, 1, 2, "v", short()).unwrap();
+            let mut g = vec![Some(vec![1.0f32])];
+            let (mut n, mut c) = (0.0, 0);
+            col.all_reduce(0, &mut g, &mut n, &mut c).unwrap();
+            col.shutdown().unwrap();
+            g[0].as_ref().unwrap()[0]
+        });
+        let mut col = Collective::host(listener, 2, "v", short()).unwrap();
+        let mut g = vec![Some(vec![2.0f32])];
+        let (mut n, mut c) = (0.0, 0);
+        col.all_reduce(0, &mut g, &mut n, &mut c).unwrap();
+        col.shutdown().unwrap();
+        stray.join().unwrap();
+        assert_eq!(worker.join().unwrap(), 3.0);
+        assert_eq!(g[0].as_ref().unwrap()[0], 3.0);
+    }
+
+    #[test]
+    fn join_validates_rank_bounds() {
+        assert!(Collective::join("127.0.0.1:1", 0, 2, "v", short()).is_err());
+        assert!(Collective::join("127.0.0.1:1", 2, 2, "v", short()).is_err());
+    }
+
+    #[test]
+    fn solo_collective_is_identity() {
+        let mut col = Collective::solo();
+        assert_eq!(col.world(), 1);
+        let mut grads = vec![Some(vec![1.5f32])];
+        let (mut nll, mut count) = (2.5f32, 3u64);
+        col.all_reduce(0, &mut grads, &mut nll, &mut count).unwrap();
+        assert_eq!(grads[0].as_ref().unwrap(), &vec![1.5f32]);
+        assert_eq!((nll, count), (2.5, 3));
+        let be = NativeBackend::new(&VariantSpec::new("test", Mode::Dqt, 1.58)).unwrap();
+        let mut st = be.init_state(1).unwrap();
+        assert_eq!(
+            Collective::solo()
+                .sync_grids(0, be.manifest(), &mut st, true)
+                .unwrap(),
+            0
+        );
+        Collective::solo().shutdown().unwrap();
+    }
+
+    /// A packed grid sync carries a worker's diverged grid weights back
+    /// onto rank 0's exact values (and leaves dense params alone), and the
+    /// pack/decode round trip of on-grid values is bit-exact.
+    #[test]
+    fn grid_sync_restores_worker_to_coordinator_state() {
+        let be = NativeBackend::new(&VariantSpec::new("test", Mode::Dqt, 1.58)).unwrap();
+        let manifest = be.manifest().clone();
+        let coordinator_state = be.init_state(7).unwrap();
+        let outs = run_world(2, move |mut col| {
+            let be = NativeBackend::new(&VariantSpec::new("test", Mode::Dqt, 1.58)).unwrap();
+            let mut st = be.init_state(if col.rank() == 0 { 7 } else { 8 }).unwrap();
+            let bytes = col.sync_grids(4, be.manifest(), &mut st, true).unwrap();
+            col.shutdown().unwrap();
+            (st, bytes)
+        });
+        let (ref rank0_state, sent) = outs[0];
+        let (ref worker_state, received) = outs[1];
+        assert!(sent > 0 && received == sent);
+        for (i, meta) in manifest.params.iter().enumerate() {
+            let a = rank0_state.params[i].to_vec().unwrap();
+            let b = worker_state.params[i].to_vec().unwrap();
+            let c = coordinator_state.params[i].to_vec().unwrap();
+            if meta.is_grid() || meta.is_scale() {
+                assert_eq!(a, b, "{} not synced", meta.name);
+                assert_eq!(a, c, "{} drifted on rank 0", meta.name);
+            } else {
+                assert_ne!(a, b, "{} should differ (different init seeds)", meta.name);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_grid_sync_validates_entries() {
+        let be = NativeBackend::new(&VariantSpec::new("test", Mode::Dqt, 1.58)).unwrap();
+        let m = be.manifest().clone();
+        let mut st = be.init_state(1).unwrap();
+        // out-of-range index
+        let pt = PackedTensor::pack(&[1.0], vec![1], Format::F32, None).unwrap();
+        assert!(
+            Collective::apply_grid_sync(&m, &mut st, vec![(9999, pt.clone())]).is_err()
+        );
+        // dense (non-grid) target
+        let emb_idx = m.params.iter().position(|p| !p.is_grid() && !p.is_scale());
+        if let Some(i) = emb_idx {
+            assert!(
+                Collective::apply_grid_sync(&m, &mut st, vec![(i as u32, pt.clone())]).is_err()
+            );
+        }
+        // shape mismatch against a real grid param
+        let grid_idx = m.params.iter().position(|p| p.is_grid()).unwrap();
+        assert!(
+            Collective::apply_grid_sync(&m, &mut st, vec![(grid_idx as u32, pt)]).is_err()
+        );
+    }
+}

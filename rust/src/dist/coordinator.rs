@@ -1,0 +1,164 @@
+//! Rank 0 of a distributed run: hosts the rendezvous, optionally spawns
+//! the other ranks as local worker processes (`dqt train --workers N`),
+//! trains its own band, and owns the run's outputs. Multi-host runs skip
+//! the spawning and let `dqt worker --rank R --join ADDR` processes on
+//! other machines fill the world.
+
+use std::net::TcpListener;
+use std::process::{Child, Command};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{DistConfig, TrainConfig, VariantSpec};
+use crate::data::Pipeline;
+use crate::kernels::Pool;
+use crate::runtime::{State, VariantRuntime};
+use crate::train::{RunMetrics, Trainer};
+
+use super::collective::{Collective, RENDEZVOUS_TIMEOUT};
+use super::DistExchange;
+
+/// Child worker processes spawned by rank 0. Dropped children are killed
+/// (a failed coordinator never leaves orphan trainers burning CPU);
+/// [`LocalWorkers::wait`] reaps them and fails on any non-zero exit.
+pub struct LocalWorkers {
+    children: Vec<(usize, Child)>,
+}
+
+impl LocalWorkers {
+    /// Spawn ranks `1..world` of this binary as `worker` subcommand
+    /// processes joining `addr`. `passthrough` carries the variant/train
+    /// flags the ranks must agree on (built by the CLI from its own
+    /// invocation).
+    pub fn spawn(world: usize, addr: &str, passthrough: &[String]) -> Result<LocalWorkers> {
+        let exe = std::env::current_exe().context("locating our own binary")?;
+        let mut children = Vec::new();
+        for rank in 1..world {
+            let child = Command::new(&exe)
+                .arg("worker")
+                .arg("--rank")
+                .arg(rank.to_string())
+                .arg("--workers")
+                .arg(world.to_string())
+                .arg("--join")
+                .arg(addr)
+                .args(passthrough)
+                .spawn()
+                .with_context(|| format!("spawning local worker rank {rank}"))?;
+            children.push((rank, child));
+        }
+        Ok(LocalWorkers { children })
+    }
+
+    /// Reap every worker; errors if any exited non-zero.
+    pub fn wait(&mut self) -> Result<()> {
+        for (rank, mut child) in self.children.drain(..) {
+            let status = child
+                .wait()
+                .with_context(|| format!("waiting for worker rank {rank}"))?;
+            if !status.success() {
+                return Err(anyhow!("worker rank {rank} exited with {status}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for LocalWorkers {
+    fn drop(&mut self) {
+        for (_, child) in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// What the distributed run did, next to its training results.
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    pub world: usize,
+    /// resyncs performed and their cumulative wire bytes (rank 0's side)
+    pub syncs: u64,
+    pub sync_bytes: u64,
+}
+
+/// Run rank 0 of a distributed training job end to end: bind the
+/// rendezvous address, optionally spawn `world - 1` local worker
+/// processes (`spawn_passthrough = Some(flags)`; `None` waits for
+/// multi-host workers to join instead), train the rank-0 band in
+/// lockstep, and tear the world down. Returns the runtime it trained on
+/// (callers need its manifest to persist the checkpoint) with the final
+/// state + metrics — bitwise equal to what `--workers 1` produces, by
+/// the determinism contract — plus a wire-traffic report.
+pub fn train_distributed(
+    spec: &VariantSpec,
+    tcfg: &TrainConfig,
+    dcfg: &DistConfig,
+    pool: Option<Arc<Pool>>,
+    spawn_passthrough: Option<&[String]>,
+) -> Result<(VariantRuntime, State, RunMetrics, DistReport)> {
+    if dcfg.rank != 0 {
+        return Err(anyhow!("train_distributed is the rank-0 entry"));
+    }
+    let cfg = spec
+        .model_config()
+        .ok_or_else(|| anyhow!("unknown model {:?}", spec.model))?;
+    dcfg.validate(cfg.batch_size)?;
+    let variant = spec.variant_name();
+
+    let vrt = match pool {
+        Some(pool) => VariantRuntime::native_with_pool(spec, pool)?,
+        None => VariantRuntime::native(spec)?,
+    };
+    let pipeline = Pipeline::build(&tcfg.dataset, tcfg.seed, cfg.vocab_size, cfg.max_seq_len)?;
+
+    let listener = TcpListener::bind(&dcfg.addr)
+        .with_context(|| format!("binding rendezvous address {}", dcfg.addr))?;
+    let bound = listener.local_addr()?;
+    let mut workers = match spawn_passthrough {
+        Some(flags) if dcfg.world > 1 => {
+            eprintln!(
+                "dist: rank 0/{} hosting {} — spawning {} local workers",
+                dcfg.world,
+                bound,
+                dcfg.world - 1
+            );
+            Some(LocalWorkers::spawn(dcfg.world, &bound.to_string(), flags)?)
+        }
+        _ => {
+            if dcfg.world > 1 {
+                eprintln!(
+                    "dist: rank 0/{} hosting {} — waiting for {} external \
+                     workers (`repro worker --rank R --workers {} --join {bound}`)",
+                    dcfg.world,
+                    bound,
+                    dcfg.world - 1,
+                    dcfg.world
+                );
+            }
+            None
+        }
+    };
+
+    let col = Collective::host(listener, dcfg.world, &variant, RENDEZVOUS_TIMEOUT)?;
+    let mut ex = DistExchange::new(col, dcfg);
+    let mut trainer = Trainer::new(&vrt, &pipeline, tcfg.clone());
+    let world = dcfg.world;
+    trainer.progress = Some(Box::new(move |step, loss| {
+        eprintln!("[rank 0/{world}] step {step}: loss {loss:.4}");
+    }));
+    let (state, metrics) = trainer.run_sharded(&mut ex)?;
+    let report = DistReport {
+        world: dcfg.world,
+        syncs: ex.syncs(),
+        sync_bytes: ex.sync_bytes(),
+    };
+    // end the trainer's borrow of `vrt` so it can be handed back
+    drop(trainer);
+    ex.into_collective().shutdown()?;
+    if let Some(w) = workers.as_mut() {
+        w.wait()?;
+    }
+    Ok((vrt, state, metrics, report))
+}

@@ -1,0 +1,117 @@
+//! Distributed data-parallel training — zero-dependency TCP, bitwise
+//! deterministic.
+//!
+//! The paper's §1 memory argument compounds across workers: DQT has no
+//! FP32 master weights to replicate, and because the master state *is* a
+//! 2-bit grid, the periodic weight resync ships packed ternary codes +
+//! scales at ~16× less traffic than an f32 exchange. This module is the
+//! training-plane twin of the `serve` subsystem's data plane:
+//!
+//! * [`wire`] — length-prefixed binary frames (f32 gradient sets,
+//!   [`crate::quant::codec::PackedTensor`] grid syncs via the codec
+//!   registry), with checkpoint-grade corrupt-frame hardening.
+//! * [`collective`] — rendezvous over `TcpListener`, fixed-rank-order
+//!   tree all-reduce, packed grid broadcast. [`Collective`] implements
+//!   [`crate::runtime::GradReducer`], so the native backend's sharded
+//!   train step reduces straight through it.
+//! * [`coordinator`] — rank 0: hosts rendezvous, spawns local worker
+//!   processes (`dqt train --workers N`), trains, owns the outputs.
+//! * [`worker`] — rank R ≥ 1: joins a coordinator
+//!   (`dqt worker --rank R --join ADDR`, multi-host capable), trains in
+//!   lockstep, writes nothing.
+//!
+//! ## Determinism contract (extends `docs/PERFORMANCE.md`)
+//!
+//! Gradients are summed by a *fixed halving tree over global batch rows*
+//! whose leaves are per-row unnormalized gradients. Contiguous equal
+//! row bands of a power-of-two world are subtrees of that tree, so the
+//! rank-order cross-rank combine finishes the exact chain the 1-worker
+//! run computes: an N-worker run is **bitwise equal** to the 1-worker
+//! run — loss curve, final state, eval NLL — at every step, at every
+//! kernel thread count. Pinned by `rust/tests/dist.rs` and the required
+//! CI `dist-smoke` job. See `docs/DISTRIBUTED.md`.
+
+pub mod collective;
+pub mod coordinator;
+pub mod wire;
+pub mod worker;
+
+use anyhow::Result;
+
+use crate::config::DistConfig;
+use crate::runtime::{GradReducer, Manifest, State};
+use crate::train::StepExchange;
+
+pub use collective::Collective;
+pub use coordinator::{train_distributed, DistReport, LocalWorkers};
+pub use wire::Frame;
+
+/// The [`StepExchange`] a distributed rank trains through: the TCP
+/// collective as the gradient reducer plus the every-K-steps packed-grid
+/// resync. A `Collective::solo()` exchange is the 1-worker reference —
+/// same code path, no sockets.
+pub struct DistExchange {
+    col: Collective,
+    sync_every: u64,
+    packed_sync: bool,
+    sync_bytes: u64,
+    syncs: u64,
+}
+
+impl DistExchange {
+    pub fn new(col: Collective, dcfg: &DistConfig) -> Self {
+        DistExchange {
+            col,
+            sync_every: dcfg.sync_every,
+            packed_sync: dcfg.packed_sync,
+            sync_bytes: 0,
+            syncs: 0,
+        }
+    }
+
+    /// Cumulative wire bytes the resyncs shipped or received on this rank.
+    pub fn sync_bytes(&self) -> u64 {
+        self.sync_bytes
+    }
+
+    /// Number of resyncs performed.
+    pub fn syncs(&self) -> u64 {
+        self.syncs
+    }
+
+    /// Hand the collective back (for the shutdown handshake).
+    pub fn into_collective(self) -> Collective {
+        self.col
+    }
+}
+
+impl StepExchange for DistExchange {
+    fn rank(&self) -> usize {
+        self.col.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.col.world()
+    }
+
+    fn reducer(&mut self) -> &mut dyn GradReducer {
+        &mut self.col
+    }
+
+    fn sync_state(
+        &mut self,
+        manifest: &Manifest,
+        state: &mut State,
+        step: u64,
+    ) -> Result<u64> {
+        if self.sync_every == 0 || step == 0 || step % self.sync_every != 0 {
+            return Ok(0);
+        }
+        let bytes = self
+            .col
+            .sync_grids(step, manifest, state, self.packed_sync)?;
+        self.sync_bytes += bytes;
+        self.syncs += 1;
+        Ok(bytes)
+    }
+}

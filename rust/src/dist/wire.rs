@@ -1,0 +1,596 @@
+//! Length-prefixed binary frames for the distributed training plane.
+//!
+//! One frame = a 1-byte tag, an 8-byte little-endian payload length, then
+//! the payload. Tensors travel in two shapes: raw little-endian f32 runs
+//! (gradient partials — [`Frame::GradSet`]) and [`PackedTensor`] grids
+//! ([`Frame::GridSync`]), whose on-wire packing is exactly the codec
+//! registry in [`crate::quant::codec`] — the same `Format` tags and byte
+//! layouts the `.dqt` checkpoint format uses, so a ternary weight resync
+//! ships 2 bits/weight + one f32 scale per matrix instead of 32
+//! bits/weight (~16× less traffic).
+//!
+//! Decoding is hardened the way `train::checkpoint` is: truncated
+//! headers, short payload reads, oversized length prefixes, unknown tags,
+//! trailing bytes and packed-size mismatches all report as errors instead
+//! of panicking or reading garbage (pinned by the tests below).
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, Result};
+
+use crate::quant::codec::{Format, PackedTensor};
+
+/// Bumped whenever a frame layout changes; checked at rendezvous.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Hard cap on one frame's payload — a corrupt length prefix fails loudly
+/// instead of attempting a multi-gigabyte allocation.
+pub const MAX_FRAME_BYTES: u64 = 1 << 32;
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_GRAD_SET: u8 = 3;
+const TAG_GRID_SYNC: u8 = 4;
+const TAG_BYE: u8 = 5;
+
+/// One message of the distributed protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Worker → coordinator at rendezvous: who am I, what am I training.
+    Hello {
+        rank: u32,
+        world: u32,
+        variant: String,
+    },
+    /// Coordinator → worker: rendezvous accepted.
+    Welcome { rank: u32, world: u32 },
+    /// One rank's gradient partial (worker → coordinator) or the reduced
+    /// global set (coordinator → workers): per-param buffers in manifest
+    /// order (`None` for `.s` scales), plus the masked-NLL sum and
+    /// non-pad token count riding the same reduction.
+    GradSet {
+        step: u64,
+        nll: f32,
+        count: u64,
+        entries: Vec<Option<Vec<f32>>>,
+    },
+    /// Periodic weight resync (coordinator → workers): `(param index,
+    /// packed tensor)` pairs — grid weights in the variant's true bit
+    /// width (or f32 when packed sync is off) and their f32 scales.
+    GridSync {
+        step: u64,
+        entries: Vec<(u32, PackedTensor)>,
+    },
+    /// Orderly teardown.
+    Bye { rank: u32 },
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32_slice(buf: &mut Vec<u8>, vals: &[f32]) {
+    put_u64(buf, vals.len() as u64);
+    for &v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked payload reader: every decode error names what ran out
+/// instead of slicing out of bounds.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow!("corrupt frame: {what} length overflows"))?;
+        if end > self.buf.len() {
+            return Err(anyhow!(
+                "corrupt frame: {what} wants {n} bytes, {} remain",
+                self.buf.len() - self.pos
+            ));
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.u32(what)? as usize;
+        let bytes = self.take(n, what)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|_| anyhow!("corrupt frame: {what} is not UTF-8"))?
+            .to_string())
+    }
+
+    fn f32_slice(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.u64(what)? as usize;
+        let bytes = self.take(
+            n.checked_mul(4)
+                .ok_or_else(|| anyhow!("corrupt frame: {what} length overflows"))?,
+            what,
+        )?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn finish(self, tag: &str) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(anyhow!(
+                "corrupt frame: {tag} has {} trailing bytes",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Frame {
+    fn tag(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => TAG_HELLO,
+            Frame::Welcome { .. } => TAG_WELCOME,
+            Frame::GradSet { .. } => TAG_GRAD_SET,
+            Frame::GridSync { .. } => TAG_GRID_SYNC,
+            Frame::Bye { .. } => TAG_BYE,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            Frame::Hello {
+                rank,
+                world,
+                variant,
+            } => {
+                put_u32(&mut buf, PROTOCOL_VERSION);
+                put_u32(&mut buf, *rank);
+                put_u32(&mut buf, *world);
+                put_str(&mut buf, variant);
+            }
+            Frame::Welcome { rank, world } => {
+                put_u32(&mut buf, PROTOCOL_VERSION);
+                put_u32(&mut buf, *rank);
+                put_u32(&mut buf, *world);
+            }
+            Frame::GradSet {
+                step,
+                nll,
+                count,
+                entries,
+            } => {
+                put_u64(&mut buf, *step);
+                put_f32(&mut buf, *nll);
+                put_u64(&mut buf, *count);
+                put_u32(&mut buf, entries.len() as u32);
+                for e in entries {
+                    match e {
+                        Some(vals) => {
+                            buf.push(1);
+                            put_f32_slice(&mut buf, vals);
+                        }
+                        None => buf.push(0),
+                    }
+                }
+            }
+            Frame::GridSync { step, entries } => {
+                put_u64(&mut buf, *step);
+                put_u32(&mut buf, entries.len() as u32);
+                for (idx, pt) in entries {
+                    put_u32(&mut buf, *idx);
+                    // on-wire packing == the codec registry: same tag
+                    // strings and byte layouts as the checkpoint format
+                    put_str(&mut buf, &pt.format.tag());
+                    buf.push(pt.shape.len() as u8);
+                    for &d in &pt.shape {
+                        put_u64(&mut buf, d as u64);
+                    }
+                    match pt.scale {
+                        Some(s) => {
+                            buf.push(1);
+                            put_f32(&mut buf, s);
+                        }
+                        None => buf.push(0),
+                    }
+                    put_u64(&mut buf, pt.bytes.len() as u64);
+                    buf.extend_from_slice(&pt.bytes);
+                }
+            }
+            Frame::Bye { rank } => put_u32(&mut buf, *rank),
+        }
+        buf
+    }
+
+    /// Serialize to the full wire form: tag, length prefix, payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.payload();
+        let mut buf = Vec::with_capacity(9 + payload.len());
+        buf.push(self.tag());
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        buf
+    }
+
+    /// Write the frame and flush; returns the bytes shipped.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<u64> {
+        let buf = self.encode();
+        w.write_all(&buf)?;
+        w.flush()?;
+        Ok(buf.len() as u64)
+    }
+
+    /// Read one frame; returns it with the total bytes consumed.
+    pub fn read_from_counted(r: &mut impl Read) -> Result<(Frame, u64)> {
+        let mut header = [0u8; 9];
+        r.read_exact(&mut header).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                anyhow!("truncated frame header (connection closed mid-frame)")
+            } else {
+                anyhow!("reading frame header: {e}")
+            }
+        })?;
+        let tag = header[0];
+        let len = u64::from_le_bytes(header[1..9].try_into().unwrap());
+        if len > MAX_FRAME_BYTES {
+            return Err(anyhow!(
+                "corrupt frame: oversized payload length {len} (cap {MAX_FRAME_BYTES})"
+            ));
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                anyhow!("frame payload truncated: wanted {len} bytes")
+            } else {
+                anyhow!("reading frame payload: {e}")
+            }
+        })?;
+        Ok((Self::decode(tag, &payload)?, 9 + len))
+    }
+
+    /// Read one frame from a stream.
+    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
+        Ok(Self::read_from_counted(r)?.0)
+    }
+
+    fn decode(tag: u8, payload: &[u8]) -> Result<Frame> {
+        let mut c = Cursor::new(payload);
+        let frame = match tag {
+            TAG_HELLO => {
+                let version = c.u32("hello version")?;
+                if version != PROTOCOL_VERSION {
+                    return Err(anyhow!(
+                        "protocol version mismatch: peer speaks v{version}, \
+                         this build speaks v{PROTOCOL_VERSION}"
+                    ));
+                }
+                Frame::Hello {
+                    rank: c.u32("hello rank")?,
+                    world: c.u32("hello world")?,
+                    variant: c.str("hello variant")?,
+                }
+            }
+            TAG_WELCOME => {
+                let version = c.u32("welcome version")?;
+                if version != PROTOCOL_VERSION {
+                    return Err(anyhow!(
+                        "protocol version mismatch: peer speaks v{version}, \
+                         this build speaks v{PROTOCOL_VERSION}"
+                    ));
+                }
+                Frame::Welcome {
+                    rank: c.u32("welcome rank")?,
+                    world: c.u32("welcome world")?,
+                }
+            }
+            TAG_GRAD_SET => {
+                let step = c.u64("grad step")?;
+                let nll = c.f32("grad nll")?;
+                let count = c.u64("grad count")?;
+                let n = c.u32("grad entry count")? as usize;
+                // cap the up-front reservation by what the payload could
+                // possibly hold (≥1 byte per entry) — a corrupt count must
+                // not turn into a huge allocation before bounds checks run
+                let mut entries = Vec::with_capacity(n.min(payload.len()));
+                for i in 0..n {
+                    let what = format!("grad entry {i}");
+                    match c.u8(&what)? {
+                        0 => entries.push(None),
+                        1 => entries.push(Some(c.f32_slice(&what)?)),
+                        m => {
+                            return Err(anyhow!(
+                                "corrupt frame: grad entry {i} has presence marker {m}"
+                            ))
+                        }
+                    }
+                }
+                Frame::GradSet {
+                    step,
+                    nll,
+                    count,
+                    entries,
+                }
+            }
+            TAG_GRID_SYNC => {
+                let step = c.u64("sync step")?;
+                let n = c.u32("sync entry count")? as usize;
+                // same huge-count guard as GradSet above
+                let mut entries = Vec::with_capacity(n.min(payload.len()));
+                for i in 0..n {
+                    let what = format!("sync entry {i}");
+                    let idx = c.u32(&what)?;
+                    let format =
+                        Format::from_tag(&c.str(&what)?).map_err(|e| anyhow!("{what}: {e}"))?;
+                    let ndim = c.u8(&what)? as usize;
+                    let mut shape = Vec::with_capacity(ndim);
+                    for _ in 0..ndim {
+                        shape.push(c.u64(&what)? as usize);
+                    }
+                    let scale = match c.u8(&what)? {
+                        0 => None,
+                        1 => Some(c.f32(&what)?),
+                        m => {
+                            return Err(anyhow!(
+                                "corrupt frame: {what} has scale marker {m}"
+                            ))
+                        }
+                    };
+                    let nbytes = c.u64(&what)? as usize;
+                    let bytes = c.take(nbytes, &what)?.to_vec();
+                    // from_bytes re-checks the codec's size invariant —
+                    // the same hardening the checkpoint loader applies
+                    let pt = PackedTensor::from_bytes(bytes, shape, format, scale)
+                        .map_err(|e| anyhow!("{what}: {e}"))?;
+                    entries.push((idx, pt));
+                }
+                Frame::GridSync { step, entries }
+            }
+            TAG_BYE => Frame::Bye {
+                rank: c.u32("bye rank")?,
+            },
+            other => return Err(anyhow!("unknown frame tag {other}")),
+        };
+        c.finish(match tag {
+            TAG_HELLO => "hello",
+            TAG_WELCOME => "welcome",
+            TAG_GRAD_SET => "grad_set",
+            TAG_GRID_SYNC => "grid_sync",
+            _ => "bye",
+        })?;
+        Ok(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor as IoCursor;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let buf = f.encode();
+        let (back, n) = Frame::read_from_counted(&mut IoCursor::new(&buf)).unwrap();
+        assert_eq!(n, buf.len() as u64);
+        back
+    }
+
+    fn ternary_pt(n: usize, s: f32) -> PackedTensor {
+        let vals: Vec<f32> = (0..n).map(|i| ((i % 3) as f32 - 1.0) / s).collect();
+        PackedTensor::pack(&vals, vec![n], Format::Ternary2bit, Some(s)).unwrap()
+    }
+
+    fn f32_pt(n: usize) -> PackedTensor {
+        let vals: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 3.0).collect();
+        PackedTensor::pack(&vals, vec![n], Format::F32, None).unwrap()
+    }
+
+    #[test]
+    fn all_frames_roundtrip() {
+        let frames = [
+            Frame::Hello {
+                rank: 3,
+                world: 4,
+                variant: "test-dqt-b1p58".into(),
+            },
+            Frame::Welcome { rank: 3, world: 4 },
+            Frame::GradSet {
+                step: 17,
+                nll: 42.5,
+                count: 96,
+                entries: vec![
+                    Some(vec![1.0, -2.5, 3.25]),
+                    None,
+                    Some(vec![]),
+                    Some(vec![f32::MIN_POSITIVE, f32::MAX]),
+                ],
+            },
+            Frame::GridSync {
+                step: 8,
+                entries: vec![
+                    (2, ternary_pt(37, 25.0)),
+                    (5, f32_pt(16)),
+                    (
+                        9,
+                        PackedTensor::pack(
+                            &(0..24).map(|i| ((i % 5) as f32 - 2.0) / 7.0).collect::<Vec<_>>(),
+                            vec![4, 6],
+                            Format::IntN(4),
+                            Some(7.0),
+                        )
+                        .unwrap(),
+                    ),
+                ],
+            },
+            Frame::Bye { rank: 1 },
+        ];
+        for f in &frames {
+            assert_eq!(&roundtrip(f), f);
+        }
+    }
+
+    #[test]
+    fn grad_values_roundtrip_bitwise() {
+        let vals: Vec<f32> = (0..1000).map(|i| (i as f32).sin() * 1e-3).collect();
+        let f = Frame::GradSet {
+            step: 0,
+            nll: 1.25,
+            count: 10,
+            entries: vec![Some(vals.clone())],
+        };
+        let Frame::GradSet { entries, .. } = roundtrip(&f) else {
+            panic!("wrong frame");
+        };
+        let back = entries[0].as_ref().unwrap();
+        for (a, b) in vals.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncated_header_and_payload_error_cleanly() {
+        let buf = Frame::Bye { rank: 7 }.encode();
+        // cut inside the 9-byte header
+        for cut in 0..9 {
+            let err = Frame::read_from(&mut IoCursor::new(&buf[..cut])).unwrap_err();
+            assert!(
+                err.to_string().contains("truncated frame header"),
+                "cut {cut}: {err}"
+            );
+        }
+        // cut inside the payload
+        let err = Frame::read_from(&mut IoCursor::new(&buf[..buf.len() - 1])).unwrap_err();
+        assert!(err.to_string().contains("payload truncated"), "{err}");
+    }
+
+    #[test]
+    fn unknown_tag_and_oversized_length_rejected() {
+        let mut buf = Frame::Bye { rank: 0 }.encode();
+        buf[0] = 99;
+        let err = Frame::read_from(&mut IoCursor::new(&buf)).unwrap_err();
+        assert!(err.to_string().contains("unknown frame tag"), "{err}");
+
+        let mut buf = Frame::Bye { rank: 0 }.encode();
+        buf[1..9].copy_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        let err = Frame::read_from(&mut IoCursor::new(&buf)).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut buf = Frame::Bye { rank: 0 }.encode();
+        buf.push(0xAB);
+        let len = (buf.len() - 9) as u64;
+        buf[1..9].copy_from_slice(&len.to_le_bytes());
+        let err = Frame::read_from(&mut IoCursor::new(&buf)).unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err}");
+    }
+
+    #[test]
+    fn short_grad_entry_errors_not_panics() {
+        // a GradSet whose declared f32 run is longer than the payload
+        let f = Frame::GradSet {
+            step: 1,
+            nll: 0.0,
+            count: 1,
+            entries: vec![Some(vec![1.0, 2.0, 3.0])],
+        };
+        let mut buf = f.encode();
+        let cut = buf.len() - 6;
+        buf.truncate(cut);
+        let len = (cut - 9) as u64;
+        buf[1..9].copy_from_slice(&len.to_le_bytes());
+        let err = Frame::read_from(&mut IoCursor::new(&buf)).unwrap_err();
+        assert!(err.to_string().contains("grad entry"), "{err}");
+    }
+
+    #[test]
+    fn grid_entry_size_invariant_enforced() {
+        // hand-corrupt a GridSync payload: declare 37 ternary values but
+        // ship too few packed bytes → the codec size check must fire
+        let good = Frame::GridSync {
+            step: 0,
+            entries: vec![(0, ternary_pt(37, 25.0))],
+        };
+        let buf = good.encode();
+        // a lying PackedTensor cannot be built (from_bytes validates), so
+        // corrupt the wire directly: drop the last packed byte and patch
+        // both length prefixes so only the codec size check can catch it
+        let n_packed = super::Format::Ternary2bit.packed_bytes(37) as u64;
+        let bytes_len_off = buf.len() - n_packed as usize - 8;
+        let mut bad = buf.clone();
+        bad[bytes_len_off..bytes_len_off + 8].copy_from_slice(&(n_packed - 1).to_le_bytes());
+        bad.truncate(buf.len() - 1);
+        let frame_len = (bad.len() - 9) as u64;
+        bad[1..9].copy_from_slice(&frame_len.to_le_bytes());
+        let err = Frame::read_from(&mut IoCursor::new(&bad)).unwrap_err();
+        assert!(
+            err.to_string().contains("sync entry"),
+            "expected codec size failure, got: {err}"
+        );
+    }
+
+    /// The satellite claim, measured on the wire: a ternary grid resync
+    /// frame is ~16× smaller than the same tensor shipped as f32.
+    #[test]
+    fn packed_sync_ships_far_fewer_bytes_than_f32() {
+        let n = 4096;
+        let packed = Frame::GridSync {
+            step: 0,
+            entries: vec![(0, ternary_pt(n, 20.0))],
+        }
+        .encode();
+        let dense = Frame::GridSync {
+            step: 0,
+            entries: vec![(0, f32_pt(n))],
+        }
+        .encode();
+        assert!(
+            packed.len() * 10 < dense.len(),
+            "packed {} !<< dense {}",
+            packed.len(),
+            dense.len()
+        );
+        // and the asymptotic ratio approaches 16 (2 bits vs 32 bits)
+        let ratio = dense.len() as f64 / packed.len() as f64;
+        assert!(ratio > 14.0, "ratio {ratio}");
+    }
+}

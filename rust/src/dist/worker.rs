@@ -1,0 +1,72 @@
+//! Rank R ≥ 1 of a distributed run: join a coordinator, train the
+//! assigned band in lockstep, write nothing. The `dqt worker --rank R
+//! --workers N --join ADDR` subcommand is a thin shell over [`run`] —
+//! point it at a coordinator on any host.
+//!
+//! Every worker holds the full replicated state (data parallelism) and —
+//! by the determinism contract — a *bit-identical* copy of it at every
+//! step, so a worker's final loss equals rank 0's. Workers still compute
+//! their own metrics (the integration tests assert rank parity on them)
+//! but rank 0 is the only rank that persists anything.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{DistConfig, TrainConfig, VariantSpec};
+use crate::data::Pipeline;
+use crate::kernels::Pool;
+use crate::runtime::{State, VariantRuntime};
+use crate::train::{RunMetrics, Trainer};
+
+use super::collective::{Collective, RENDEZVOUS_TIMEOUT};
+use super::DistExchange;
+
+/// Join `dcfg.addr` as rank `dcfg.rank` and train to completion. Returns
+/// the final state + metrics (bit-identical to every other rank's).
+pub fn run(
+    spec: &VariantSpec,
+    tcfg: &TrainConfig,
+    dcfg: &DistConfig,
+    pool: Option<Arc<Pool>>,
+) -> Result<(State, RunMetrics)> {
+    if dcfg.rank == 0 {
+        return Err(anyhow!("rank 0 trains via `train --workers N`, not `worker`"));
+    }
+    let cfg = spec
+        .model_config()
+        .ok_or_else(|| anyhow!("unknown model {:?}", spec.model))?;
+    dcfg.validate(cfg.batch_size)?;
+    let variant = spec.variant_name();
+    let vrt = match pool {
+        Some(pool) => VariantRuntime::native_with_pool(spec, pool)?,
+        None => VariantRuntime::native(spec)?,
+    };
+    // same dataset + seed as every other rank → same corpus, same BPE
+    // vocabulary, same shuffle stream (the shard band picks our rows)
+    let pipeline = Pipeline::build(&tcfg.dataset, tcfg.seed, cfg.vocab_size, cfg.max_seq_len)?;
+    eprintln!(
+        "dist: rank {}/{} joining {} ({} kernel threads)",
+        dcfg.rank,
+        dcfg.world,
+        dcfg.addr,
+        vrt.threads()
+    );
+    let col = Collective::join(&dcfg.addr, dcfg.rank, dcfg.world, &variant, RENDEZVOUS_TIMEOUT)?;
+    let mut ex = DistExchange::new(col, dcfg);
+    let mut trainer = Trainer::new(&vrt, &pipeline, tcfg.clone());
+    let (rank, world) = (dcfg.rank, dcfg.world);
+    trainer.progress = Some(Box::new(move |step, loss| {
+        eprintln!("[rank {rank}/{world}] step {step}: loss {loss:.4}");
+    }));
+    let (state, metrics) = trainer.run_sharded(&mut ex)?;
+    ex.into_collective().shutdown()?;
+    eprintln!(
+        "dist: rank {}/{} done — final loss {:.4}, dev loss {:.4}",
+        dcfg.rank,
+        dcfg.world,
+        metrics.tail_loss(10).unwrap_or(f32::NAN),
+        metrics.final_dev_loss.unwrap_or(f32::NAN)
+    );
+    Ok((state, metrics))
+}

@@ -32,6 +32,13 @@
 //! bitwise-deterministic across thread counts (`--threads` /
 //! `DQT_THREADS`; see `docs/PERFORMANCE.md`).
 //!
+//! Training scales across processes and hosts through the [`dist`]
+//! subsystem: zero-dependency TCP data parallelism whose fixed-tree
+//! gradient reduction makes an N-worker run bitwise equal to the
+//! 1-worker run, and whose periodic weight resync ships the 2-bit packed
+//! grids (~16× less traffic than f32) — `dqt train --workers N` /
+//! `dqt worker --join ADDR` (see `docs/DISTRIBUTED.md`).
+//!
 //! Deployment is the [`serve`] subsystem: KV-cached incremental decoding
 //! ([`runtime::Decoder`], decode-free off 2-bit packed ternary grids via
 //! the fused GEMV in [`quant::ternary`]), deterministic sampling,
@@ -45,6 +52,7 @@ pub mod config;
 pub mod util;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod eval;
 pub mod kernels;
 pub mod memory;

@@ -16,7 +16,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use dqt::config::{BackendKind, Env, Mode, Optimizer, TrainConfig, VariantSpec};
+use dqt::config::{BackendKind, DistConfig, Env, Mode, Optimizer, TrainConfig, VariantSpec};
 use dqt::coordinator;
 use dqt::data::corpus::CorpusSpec;
 use dqt::data::Pipeline;
@@ -40,6 +40,16 @@ COMMANDS
   train   --model t130 --mode dqt --bits 1.58 [--env fp32] [--optimizer adamw]
           [--intervention none] [--recompute-scale] [--steps 300]
           [--dataset wiki] [--lr 1e-3] [--seed 42] [--out <dir>]
+          [--workers N]        distributed data-parallel run: rank 0 hosts
+                               the rendezvous and spawns N-1 local worker
+                               processes; bitwise equal to --workers 1
+                               (power-of-two N dividing the batch)
+          [--dist-addr 127.0.0.1:0]  rendezvous bind address
+          [--no-spawn]         multi-host: wait for external `worker`s
+          [--sync-every 25]    packed grid-weight resync period (0 = off)
+          [--sync-format packed|f32]
+  worker  --rank R --workers N --join HOST:PORT (same variant/train flags
+          as the coordinator) — one rank of a multi-host run
   eval    --checkpoint <model.dqt> (same variant flags) [--dataset wiki]
           [--ternary] [--items 100]
   generate --checkpoint <model.dqt> (variant flags) --prompt \"text\"
@@ -50,9 +60,10 @@ COMMANDS
           [--max-batch 8] [--ternary] [--dataset wiki] [--data-seed 42]
   sweep   --exp fig2|fig3|fig4|fig5|fig6|fig7|fig9|table1|abl1|abl2|all
           [--steps N] [--workers 1]
-  report  --exp table2|table3|memory|serving|<exp-id with results>
+  report  --exp table2|table3|memory|serving|dist|<exp-id with results>
   list
-  memory  (variant flags) [--batch 1]
+  memory  (variant flags) [--batch 1] [--workers N  distributed estimate:
+          per-rank resident bytes + wire bytes per sync, f32 vs packed]
 ";
 
 fn backend_kind(a: &Args) -> Result<BackendKind> {
@@ -127,6 +138,69 @@ fn open_engine(a: &Args, artifacts: &std::path::Path) -> Result<(dqt::serve::Eng
     Ok((engine, spec.variant_name()))
 }
 
+/// Training-loop config shared by `train` and `worker` — every rank of a
+/// distributed run must derive the *identical* schedule (warmup included)
+/// from the same flags.
+fn train_config_from(a: &Args) -> Result<TrainConfig> {
+    let steps: u64 = a.parse_or("steps", 300)?;
+    Ok(TrainConfig {
+        steps,
+        warmup_steps: (steps / 10).max(1),
+        peak_lr: a.parse_or("lr", 1e-3)?,
+        dataset: a.str_or("dataset", "wiki"),
+        seed: a.parse_or("seed", 42)?,
+        ..TrainConfig::default()
+    })
+}
+
+/// Distributed flags shared by `train --workers` and `worker`.
+fn dist_config_from(a: &Args, world: usize, rank: usize, addr: String) -> Result<DistConfig> {
+    let fmt = a.str_or("sync-format", "packed");
+    let packed_sync = match fmt.as_str() {
+        "packed" => true,
+        "f32" => false,
+        other => return Err(anyhow!("bad --sync-format {other:?} (packed|f32)")),
+    };
+    Ok(DistConfig {
+        world,
+        rank,
+        addr,
+        sync_every: a.parse_or("sync-every", DistConfig::default().sync_every)?,
+        packed_sync,
+    })
+}
+
+/// The flags a spawned local worker must replay so every rank agrees on
+/// the variant, the schedule and the sync policy (`--rank`/`--join` are
+/// appended per worker by the spawner).
+fn dist_passthrough(a: &Args) -> Vec<String> {
+    let mut v = Vec::new();
+    for k in [
+        "model",
+        "mode",
+        "bits",
+        "env",
+        "optimizer",
+        "intervention",
+        "steps",
+        "dataset",
+        "lr",
+        "seed",
+        "sync-every",
+        "sync-format",
+        "threads",
+    ] {
+        if let Some(val) = a.get(k) {
+            v.push(format!("--{k}"));
+            v.push(val.to_string());
+        }
+    }
+    if a.has("recompute-scale") {
+        v.push("--recompute-scale".into());
+    }
+    v
+}
+
 fn main() -> Result<()> {
     let a = Args::from_env()?;
     let Some(cmd) = a.positional.first().cloned() else {
@@ -149,9 +223,55 @@ fn main() -> Result<()> {
             let cfg = spec
                 .model_config()
                 .ok_or_else(|| anyhow!("unknown model {:?}", spec.model))?;
-            let steps: u64 = a.parse_or("steps", 300)?;
-            let dataset = a.str_or("dataset", "wiki");
-            let seed: u64 = a.parse_or("seed", 42)?;
+            let tcfg = train_config_from(&a)?;
+            let out_dir = a
+                .get("out")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| results.join("train").join(&name));
+            if a.has("workers") {
+                // distributed data-parallel path (native backend only —
+                // the PJRT path has no sharded train entry): rank 0 hosts
+                // rendezvous + spawns local workers; bitwise equal to the
+                // --workers 1 run by the dist determinism contract
+                if backend_kind(&a)? == BackendKind::Pjrt {
+                    bail!("--workers needs the native backend (PJRT has no sharded train entry)");
+                }
+                let world: usize = a.parse_or("workers", 1)?;
+                let dcfg =
+                    dist_config_from(&a, world, 0, a.str_or("dist-addr", "127.0.0.1:0"))?;
+                let passthrough = dist_passthrough(&a);
+                let spawn = if a.has("no-spawn") {
+                    None
+                } else {
+                    Some(passthrough.as_slice())
+                };
+                let (vrt, state, metrics, dr) = dqt::dist::train_distributed(
+                    &spec,
+                    &tcfg,
+                    &dcfg,
+                    pool_from_args(&a)?,
+                    spawn,
+                )?;
+                metrics.save(&out_dir)?;
+                checkpoint::save(
+                    &out_dir.join("model.dqt"),
+                    vrt.manifest(),
+                    &state,
+                    checkpoint::Codec::F32,
+                    true,
+                )?;
+                println!(
+                    "trained {name} on {} workers: final loss {:.4}, dev loss {:.4} \
+                     ({} grid resyncs, {} sync bytes on the wire) → {}",
+                    dr.world,
+                    metrics.tail_loss(10).unwrap_or(f32::NAN),
+                    metrics.final_dev_loss.unwrap_or(f32::NAN),
+                    dr.syncs,
+                    dr.sync_bytes,
+                    out_dir.display()
+                );
+                return Ok(());
+            }
             let vrt = VariantRuntime::open_with_pool(
                 backend_kind(&a)?,
                 None,
@@ -164,19 +284,8 @@ fn main() -> Result<()> {
                 vrt.backend_name(),
                 vrt.threads()
             );
-            let pipeline = Pipeline::build(&dataset, seed, cfg.vocab_size, cfg.max_seq_len)?;
-            let tcfg = TrainConfig {
-                steps,
-                warmup_steps: (steps / 10).max(1),
-                peak_lr: a.parse_or("lr", 1e-3)?,
-                dataset: dataset.clone(),
-                seed,
-                ..TrainConfig::default()
-            };
-            let out_dir = a
-                .get("out")
-                .map(PathBuf::from)
-                .unwrap_or_else(|| results.join("train").join(&name));
+            let pipeline =
+                Pipeline::build(&tcfg.dataset, tcfg.seed, cfg.vocab_size, cfg.max_seq_len)?;
             let mut tr = Trainer::new(&vrt, &pipeline, tcfg);
             tr.progress = Some(Box::new(|step, loss| {
                 eprintln!("step {step}: loss {loss:.4}");
@@ -196,6 +305,18 @@ fn main() -> Result<()> {
                 metrics.final_dev_loss.unwrap_or(f32::NAN),
                 out_dir.display()
             );
+        }
+        "worker" => {
+            let spec = variant_spec(&a)?;
+            let world: usize = a.parse_or("workers", 0)?;
+            let rank: usize = a.parse_or("rank", 0)?;
+            let join = a.req("join")?;
+            if world < 2 {
+                bail!("worker needs --workers N (N >= 2) matching the coordinator");
+            }
+            let tcfg = train_config_from(&a)?;
+            let dcfg = dist_config_from(&a, world, rank, join)?;
+            dqt::dist::worker::run(&spec, &tcfg, &dcfg, pool_from_args(&a)?)?;
         }
         "eval" => {
             let spec = variant_spec(&a)?;
@@ -293,6 +414,10 @@ fn main() -> Result<()> {
                 "table3" => println!("{}", report::table3()),
                 "memory" => println!("{}", report::memory_comparison("p1b")?),
                 "serving" => println!("{}", report::serving_memory("p1b")?),
+                "dist" => println!(
+                    "{}",
+                    report::dist_memory("p1b", a.parse_or("workers", 4)?)?
+                ),
                 e => {
                     let runs = report::load_runs(&results, e)?;
                     println!("{}", report::summary_table(&runs));
@@ -321,6 +446,15 @@ fn main() -> Result<()> {
             let s = memory::serving_estimate(&spec, batch, a.has("ternary"))
                 .ok_or_else(|| anyhow!("unknown model"))?;
             println!("serving (batch {batch}): {}", s.to_json().to_string_pretty());
+            if a.has("workers") {
+                let workers: usize = a.parse_or("workers", 1)?;
+                let d = memory::dist_estimate(&spec, workers)
+                    .ok_or_else(|| anyhow!("unknown model"))?;
+                println!(
+                    "distributed ({workers} workers): {}",
+                    d.to_json().to_string_pretty()
+                );
+            }
         }
         other => {
             print!("{USAGE}");

@@ -221,6 +221,92 @@ pub fn serving_estimate(spec: &VariantSpec, batch: usize, ternary: bool) -> Opti
     })
 }
 
+/// Distributed data-parallel estimate for one variant at `workers` ranks:
+/// what each rank keeps resident and what the training plane ships.
+///
+/// Data parallelism replicates the model state (weights + grads +
+/// optimizer) on every rank and shards the *batch*, so activations divide
+/// by the world while state does not — and the wire costs are where DQT's
+/// §1 argument compounds: the per-step gradient exchange is f32 (one full
+/// parameter-sized partial each way per worker link), but the periodic
+/// weight resync ships the 2-bit packed grid + scales, ~16× less than an
+/// f32 weight broadcast (`dist::wire`'s `GridSync` framing).
+#[derive(Clone, Debug)]
+pub struct DistBreakdown {
+    pub workers: usize,
+    /// weights + grads + optimizer resident on *each* rank (replicated)
+    pub per_rank_state: f64,
+    /// activation memory for one rank's contiguous batch shard
+    pub per_rank_activations: f64,
+    /// f32 gradient partial one worker link carries per step, each way
+    pub grad_bytes_per_step: f64,
+    /// one weight resync as f32 values (grid matrices + scales)
+    pub sync_bytes_f32: f64,
+    /// one weight resync as packed grid codes + f32 scales
+    pub sync_bytes_packed: f64,
+}
+
+impl DistBreakdown {
+    /// Traffic saved by syncing packed grids instead of f32.
+    pub fn sync_ratio(&self) -> f64 {
+        if self.sync_bytes_packed > 0.0 {
+            self.sync_bytes_f32 / self.sync_bytes_packed
+        } else {
+            1.0
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Value {
+        crate::util::json::Value::obj()
+            .set("workers", self.workers)
+            .set("per_rank_state", self.per_rank_state)
+            .set("per_rank_activations", self.per_rank_activations)
+            .set("grad_bytes_per_step", self.grad_bytes_per_step)
+            .set("sync_bytes_f32", self.sync_bytes_f32)
+            .set("sync_bytes_packed", self.sync_bytes_packed)
+            .set("sync_ratio", self.sync_ratio())
+    }
+}
+
+/// Estimate the distributed footprint of `spec` at `workers` ranks (the
+/// `memory --workers N` CLI view and `report --exp dist`).
+pub fn dist_estimate(spec: &VariantSpec, workers: usize) -> Option<DistBreakdown> {
+    let cfg = spec.model_config()?;
+    let workers = workers.max(1);
+    let b = estimate_cfg(&cfg, spec, false);
+    let p_total = cfg.param_count() as f64;
+    let p_quant = if spec.mode.quantized() {
+        cfg.quantized_param_count() as f64
+    } else {
+        0.0
+    };
+    // one f32 scale per grid matrix rides every resync
+    let n_scales = if spec.mode.quantized() {
+        (7 * cfg.num_hidden_layers) as f64
+    } else {
+        0.0
+    };
+    // the stored grid width (ternary-inf trains an 8-bit grid, like the
+    // weights term above). Only DQT modes *have* an on-grid master to
+    // pack: BitNet's masters are continuous, so its "packed" sync is the
+    // same f32 broadcast.
+    let bpw = match spec.mode {
+        Mode::Dqt | Mode::DqtAbsmax => {
+            crate::quant::Format::from_bits(spec.bits).bits_per_weight()
+        }
+        Mode::DqtTernaryInf => crate::quant::Format::from_bits(8.0).bits_per_weight(),
+        Mode::Fp32 | Mode::Bitnet158 => 32.0,
+    };
+    Some(DistBreakdown {
+        workers,
+        per_rank_state: b.state_bytes(),
+        per_rank_activations: b.activations / workers as f64,
+        grad_bytes_per_step: p_total * 4.0,
+        sync_bytes_f32: p_quant * 4.0 + n_scales * 4.0,
+        sync_bytes_packed: p_quant * bpw / 8.0 + n_scales * 4.0,
+    })
+}
+
 /// Current process RSS in bytes (our own measured footprint, reported next
 /// to the analytic model in the experiments).
 pub fn process_rss_bytes() -> Option<u64> {
@@ -339,6 +425,40 @@ mod tests {
         let train = estimate(&spec(Mode::Dqt, 1.58, Env::Fp32, Optimizer::Adamw), false)
             .unwrap();
         assert!(s.total() < train.state_bytes() / 4.0);
+    }
+
+    #[test]
+    fn dist_estimate_packed_sync_is_16x_cheaper_for_ternary() {
+        let d = dist_estimate(&spec(Mode::Dqt, 1.58, Env::Fp32, Optimizer::Adamw), 4).unwrap();
+        // 2 bits vs 32 bits, scales amortized away at p1b size
+        assert!(d.sync_ratio() > 14.0, "ratio {}", d.sync_ratio());
+        assert!(d.sync_bytes_packed < d.sync_bytes_f32 / 10.0);
+        // the per-step gradient exchange is a full f32 parameter set
+        let cfg = ModelConfig::by_name("p1b").unwrap();
+        assert_eq!(d.grad_bytes_per_step, cfg.param_count() as f64 * 4.0);
+        // state replicates; activations shard with the batch
+        let d1 = dist_estimate(&spec(Mode::Dqt, 1.58, Env::Fp32, Optimizer::Adamw), 1).unwrap();
+        assert_eq!(d.per_rank_state, d1.per_rank_state);
+        assert_eq!(d.per_rank_activations * 4.0, d1.per_rank_activations);
+        // int8 grids still pack 4×
+        let d8 = dist_estimate(&spec(Mode::Dqt, 8.0, Env::Fp32, Optimizer::Adamw), 4).unwrap();
+        assert!((d8.sync_ratio() - 4.0).abs() < 0.2, "{}", d8.sync_ratio());
+    }
+
+    #[test]
+    fn dist_estimate_non_grid_modes_cannot_pack() {
+        // BitNet masters are continuous; fp32 has nothing quantized at all
+        let b = dist_estimate(&spec(Mode::Bitnet158, 1.58, Env::Fp32, Optimizer::Adamw), 2)
+            .unwrap();
+        assert_eq!(b.sync_bytes_packed, b.sync_bytes_f32);
+        assert!(b.sync_bytes_f32 > 0.0);
+        let f = dist_estimate(&spec(Mode::Fp32, 1.58, Env::Fp32, Optimizer::Adamw), 2).unwrap();
+        assert_eq!(f.sync_bytes_f32, 0.0);
+        assert_eq!(f.sync_ratio(), 1.0);
+        // json carries the ratio
+        let j = b.to_json();
+        assert!(j.get("sync_ratio").is_some());
+        assert_eq!(j.get("workers").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -150,6 +150,47 @@ pub fn serving_memory(model: &str) -> Result<String> {
     Ok(out)
 }
 
+/// Distributed-training traffic table (`repro report --exp dist`): what
+/// each rank keeps resident and what one training step / one weight
+/// resync puts on the wire, f32 vs packed-grid exchange — the place the
+/// paper's no-master-weights argument shows up as network bytes.
+pub fn dist_memory(model: &str, workers: usize) -> Result<String> {
+    let cfg = ModelConfig::by_name(model).ok_or_else(|| anyhow!("bad model"))?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Distributed data-parallel traffic, {model} at {workers} workers \
+         (global batch {}):\n",
+        cfg.batch_size
+    ));
+    out.push_str(
+        "| variant        | state/rank | acts/rank | grads/step | sync f32 | sync packed | ratio |\n",
+    );
+    for (label, spec) in [
+        ("fp32", VariantSpec::new(model, Mode::Fp32, 1.58)),
+        ("bitnet b1.58", VariantSpec::new(model, Mode::Bitnet158, 1.58)),
+        ("dqt ternary", VariantSpec::new(model, Mode::Dqt, 1.58)),
+        ("dqt 8bit", VariantSpec::new(model, Mode::Dqt, 8.0)),
+    ] {
+        let d = memory::dist_estimate(&spec, workers).ok_or_else(|| anyhow!("bad model"))?;
+        out.push_str(&format!(
+            "| {:<14} | {:>10} | {:>9} | {:>10} | {:>8} | {:>11} | {:>5.1} |\n",
+            label,
+            human(d.per_rank_state),
+            human(d.per_rank_activations),
+            human(d.grad_bytes_per_step),
+            human(d.sync_bytes_f32),
+            human(d.sync_bytes_packed),
+            d.sync_ratio(),
+        ));
+    }
+    out.push_str(
+        "grads/step: one rank's f32 gradient partial, each way per worker \
+         link; sync: an every-K-steps weight resync as f32 vs the packed \
+         grid codes + scales (dist::wire GridSync framing).\n",
+    );
+    Ok(out)
+}
+
 fn human(bytes: f64) -> String {
     if bytes >= 1e9 {
         format!("{:.2}G", bytes / 1e9)
@@ -310,6 +351,15 @@ mod tests {
             assert!(t.contains(needle), "{needle} missing:\n{t}");
         }
         assert!(serving_memory("nope").is_err());
+    }
+
+    #[test]
+    fn dist_memory_renders_and_shows_packed_savings() {
+        let t = dist_memory("p1b", 4).unwrap();
+        for needle in ["fp32", "bitnet b1.58", "dqt ternary", "dqt 8bit", "sync packed"] {
+            assert!(t.contains(needle), "{needle} missing:\n{t}");
+        }
+        assert!(dist_memory("nope", 4).is_err());
     }
 
     #[test]

@@ -185,6 +185,93 @@ pub struct StepMetrics {
     pub gnorm: f32,
 }
 
+/// Per-param gradient buffers in the manifest's flat order (`None` for
+/// `.s` scales and anything else without a gradient) — the value that
+/// crosses the backward → optimizer boundary in the sharded train step.
+pub type GradBuffers = Vec<Option<Vec<f32>>>;
+
+/// Hook between backward and the optimizer in
+/// [`Backend::train_step_sharded`]: turns one rank's band-partial gradient
+/// sums (plus the band's masked-NLL sum and non-pad token count) into the
+/// global sums across every band, in place.
+///
+/// Determinism contract: the reduction must combine rank partials with the
+/// *fixed halving tree over ranks* (see `dist::collective::tree_reduce`),
+/// which — because contiguous equal bands of a power-of-two world are
+/// subtrees of the same halving tree over global batch rows the backend
+/// uses within a band — reproduces the 1-worker summation chain bit for
+/// bit. [`NoReduce`] is the world-1 identity.
+pub trait GradReducer {
+    /// Total ranks participating (1 = single process).
+    fn world(&self) -> usize {
+        1
+    }
+    /// Reduce the local band partial into the global sum, in place, on
+    /// every rank. `step` identifies the train step for cross-rank frame
+    /// validation.
+    fn reduce(
+        &mut self,
+        step: u64,
+        grads: &mut [Option<Vec<f32>>],
+        nll: &mut f32,
+        count: &mut u64,
+    ) -> Result<()>;
+}
+
+/// One internal node of the fixed reduction tree: `left[i] += right[i]`
+/// elementwise over aligned gradient buffers. Every cross-row and
+/// cross-rank combine in the sharded path goes through this exact loop, so
+/// the whole tree's arithmetic is one addition order regardless of where
+/// its nodes execute. Errors on layout mismatches (a corrupt or
+/// mis-matched peer frame) instead of panicking mid-train.
+pub fn add_grad_buffers(
+    left: &mut [Option<Vec<f32>>],
+    right: &[Option<Vec<f32>>],
+) -> Result<()> {
+    if left.len() != right.len() {
+        return Err(anyhow!(
+            "gradient sets disagree: {} vs {} entries",
+            left.len(),
+            right.len()
+        ));
+    }
+    for (i, (l, r)) in left.iter_mut().zip(right.iter()).enumerate() {
+        match (l, r) {
+            (Some(l), Some(r)) => {
+                if l.len() != r.len() {
+                    return Err(anyhow!(
+                        "gradient entry {i} disagrees: {} vs {} values",
+                        l.len(),
+                        r.len()
+                    ));
+                }
+                for (a, &b) in l.iter_mut().zip(r.iter()) {
+                    *a += b;
+                }
+            }
+            (None, None) => {}
+            _ => return Err(anyhow!("gradient entry {i}: presence mismatch")),
+        }
+    }
+    Ok(())
+}
+
+/// The identity reducer: a 1-worker sharded run reduces nothing, so the
+/// N-worker contract can be checked against it bit for bit.
+pub struct NoReduce;
+
+impl GradReducer for NoReduce {
+    fn reduce(
+        &mut self,
+        _step: u64,
+        _grads: &mut [Option<Vec<f32>>],
+        _nll: &mut f32,
+        _count: &mut u64,
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
 /// Per-sequence KV-cache handle for incremental decoding — created by
 /// [`Decoder::new_cache`], advanced by [`Decoder::step_batch`]. Opaque to
 /// callers; the concrete layout belongs to the backend that made it.
@@ -270,6 +357,35 @@ pub trait Backend {
         sr_seed: u32,
         lr: f32,
     ) -> Result<(State, StepMetrics)>;
+
+    /// One *sharded* training step for distributed data parallelism: the
+    /// caller holds rows `band.0..band.1` of the `global_rows`-row global
+    /// batch (`tokens` is `[band_rows, seq+1]`), the backend computes the
+    /// band's gradient partial as a fixed halving tree over per-row
+    /// unnormalized gradients, hands it to `reducer` for the cross-rank
+    /// sum, normalizes by the reduced global token count, and applies the
+    /// optimizer + SR projection exactly once to the reduced update — so
+    /// every rank steps to a bit-identical state. `step` tags the
+    /// reducer's wire frames. Backends without a distributed entry keep
+    /// the default error.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_sharded(
+        &self,
+        state: State,
+        tokens: &[i32],
+        band: (usize, usize),
+        global_rows: usize,
+        step: u64,
+        sr_seed: u32,
+        lr: f32,
+        reducer: &mut dyn GradReducer,
+    ) -> Result<(State, StepMetrics)> {
+        let _ = (state, tokens, band, global_rows, step, sr_seed, lr, reducer);
+        Err(anyhow!(
+            "backend {:?} has no sharded train entry",
+            self.name()
+        ))
+    }
 
     /// Sum-NLL + token count over one batch (dev loss / perplexity).
     fn eval_step(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<(f32, f32)>;
@@ -396,6 +512,24 @@ impl VariantRuntime {
         lr: f32,
     ) -> Result<(State, StepMetrics)> {
         self.backend.train_step(state, tokens, sr_seed, lr)
+    }
+
+    /// Sharded train step for distributed data parallelism (see
+    /// [`Backend::train_step_sharded`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step_sharded(
+        &self,
+        state: State,
+        tokens: &[i32],
+        band: (usize, usize),
+        global_rows: usize,
+        step: u64,
+        sr_seed: u32,
+        lr: f32,
+        reducer: &mut dyn GradReducer,
+    ) -> Result<(State, StepMetrics)> {
+        self.backend
+            .train_step_sharded(state, tokens, band, global_rows, step, sr_seed, lr, reducer)
     }
 
     pub fn eval_step(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<(f32, f32)> {

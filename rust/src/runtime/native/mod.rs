@@ -28,7 +28,10 @@ use crate::quant::codec::Format;
 use crate::quant::sr::{hash_u32, uniform01};
 use crate::quant::{absmean_quantize, absmean_scale, ternary};
 
-use super::{Backend, Decoder, DecoderCache, Manifest, Param, State, StepMetrics};
+use super::{
+    add_grad_buffers, Backend, Decoder, DecoderCache, GradReducer, Manifest, Param, State,
+    StepMetrics,
+};
 
 /// The native CPU backend for one variant.
 pub struct NativeBackend {
@@ -199,6 +202,47 @@ impl NativeBackend {
         Ok(Box::new(NativeDecoder { w }))
     }
 
+    /// The band's gradient partial: the fixed halving tree over global
+    /// row indices `lo..hi`, whose leaves are per-row *unnormalized*
+    /// (sum-CE) gradients and whose internal nodes are
+    /// [`add_grad_buffers`] (left + right, in that order). Because the
+    /// split index is a pure function of the global range — never of the
+    /// world size — an N-rank partition into contiguous equal bands (N a
+    /// power of two) slices this tree at subtree boundaries, which is
+    /// what makes the cross-rank reduction able to finish the 1-worker
+    /// chain bit for bit. Memory: one gradient set per tree level
+    /// (O(log rows)), not one per row.
+    #[allow(clippy::too_many_arguments)]
+    fn band_grads(
+        &self,
+        view: &[Cow<'_, [f32]>],
+        inputs: &[i32],
+        labels: &[i32],
+        s: usize,
+        band_lo: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<(f32, u64, Vec<Option<Vec<f32>>>)> {
+        if hi - lo == 1 {
+            let off = (lo - band_lo) * s;
+            let row_in = &inputs[off..off + s];
+            let row_lab = &labels[off..off + s];
+            let count = row_lab
+                .iter()
+                .filter(|&&l| l != crate::data::tokenizer::PAD_ID)
+                .count() as u64;
+            let (nll, grads) =
+                self.net()
+                    .loss_and_grads_scaled(view, row_in, row_lab, 1, s, Some(1.0))?;
+            return Ok((nll, count, grads));
+        }
+        let mid = lo + (hi - lo) / 2;
+        let (nll_l, c_l, mut g_l) = self.band_grads(view, inputs, labels, s, band_lo, lo, mid)?;
+        let (nll_r, c_r, g_r) = self.band_grads(view, inputs, labels, s, band_lo, mid, hi)?;
+        add_grad_buffers(&mut g_l, &g_r)?;
+        Ok((nll_l + nll_r, c_l + c_r, g_l))
+    }
+
     /// Split a `[b, s+1]` token matrix into (inputs, labels) rows.
     fn split_rows(&self, tokens: &[i32]) -> Result<(Vec<i32>, Vec<i32>, usize, usize)> {
         let shape = &self.layout.manifest.tokens_shape;
@@ -302,6 +346,98 @@ impl Backend for NativeBackend {
                 params.iter().map(|v| Cow::Borrowed(v.as_slice())).collect();
             self.net().loss_and_grads(&view, &inputs, &labels, b, s)?
         };
+        let (upd_frac, gnorm) = optim::apply_updates(
+            &self.hyper,
+            &self.layout,
+            &self.pool,
+            &mut params,
+            grads,
+            &mut opt,
+            lr,
+            sr_seed,
+        );
+        Ok((
+            State::from_dense(params, opt),
+            StepMetrics {
+                loss,
+                upd_frac,
+                gnorm,
+            },
+        ))
+    }
+
+    /// The distributed twin of [`NativeBackend::train_step`] (paper-
+    /// faithful data parallelism): per-row unnormalized gradients are
+    /// combined by the fixed halving tree over global batch rows
+    /// ([`NativeBackend::band_grads`]), the reducer completes the tree
+    /// across ranks, every rank then scales by the *global* non-pad token
+    /// count and runs the identical optimizer + §3 SR projection — one SR
+    /// application to the reduced update, so weights stay on-grid and all
+    /// ranks step to a bit-identical state.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_sharded(
+        &self,
+        state: State,
+        tokens: &[i32],
+        band: (usize, usize),
+        global_rows: usize,
+        step: u64,
+        sr_seed: u32,
+        lr: f32,
+        reducer: &mut dyn GradReducer,
+    ) -> Result<(State, StepMetrics)> {
+        let shape = &self.layout.manifest.tokens_shape;
+        let (bsz, w) = (shape[0], shape[1]);
+        if global_rows != bsz {
+            return Err(anyhow!(
+                "global batch is {global_rows} rows, manifest wants {bsz}"
+            ));
+        }
+        let (lo, hi) = band;
+        if lo >= hi || hi > global_rows {
+            return Err(anyhow!("bad band {lo}..{hi} of {global_rows} rows"));
+        }
+        let rows = hi - lo;
+        if tokens.len() != rows * w {
+            return Err(anyhow!(
+                "expected {rows}x{w} shard tokens, got {}",
+                tokens.len()
+            ));
+        }
+        self.check_state(&state)?;
+        let s = w - 1;
+        let mut inputs = Vec::with_capacity(rows * s);
+        let mut labels = Vec::with_capacity(rows * s);
+        for bi in 0..rows {
+            let row = &tokens[bi * w..(bi + 1) * w];
+            inputs.extend_from_slice(&row[..s]);
+            labels.extend_from_slice(&row[1..]);
+        }
+        let mut params: Vec<Vec<f32>> = state
+            .params
+            .iter()
+            .map(|p| p.to_vec())
+            .collect::<Result<_>>()?;
+        let mut opt = state.opt;
+        if opt.len() != self.layout.manifest.opt_state.len() || opt.is_empty() {
+            return Err(anyhow!("optimizer state does not match the manifest"));
+        }
+        let (mut nll, mut count, mut grads) = {
+            let view: Vec<Cow<'_, [f32]>> =
+                params.iter().map(|v| Cow::Borrowed(v.as_slice())).collect();
+            self.band_grads(&view, &inputs, &labels, s, lo, lo, hi)?
+        };
+        reducer.reduce(step, &mut grads, &mut nll, &mut count)?;
+        // global normalization, applied identically on every rank *after*
+        // the reduction (the per-row leaves were built with denom = 1.0)
+        let denom = (count as f32).max(1.0);
+        let inv = 1.0 / denom;
+        for g in grads.iter_mut().flatten() {
+            for v in g.iter_mut() {
+                *v *= inv;
+            }
+        }
+        let loss = nll / denom;
         let (upd_frac, gnorm) = optim::apply_updates(
             &self.hyper,
             &self.layout,
@@ -683,6 +819,158 @@ mod tests {
         // out-of-vocab tokens error cleanly
         assert!(dec
             .step(dec.new_cache().as_mut(), be.cfg.vocab_size as i32)
+            .is_err());
+    }
+
+    /// A gradient-set reducer that steals the band partial and aborts —
+    /// used to harvest one rank's contribution without stepping.
+    struct CaptureReducer {
+        out: Option<(Vec<Option<Vec<f32>>>, f32, u64)>,
+    }
+
+    impl GradReducer for CaptureReducer {
+        fn world(&self) -> usize {
+            2
+        }
+        fn reduce(
+            &mut self,
+            _step: u64,
+            grads: &mut [Option<Vec<f32>>],
+            nll: &mut f32,
+            count: &mut u64,
+        ) -> anyhow::Result<()> {
+            self.out = Some((grads.to_vec(), *nll, *count));
+            Err(anyhow!("captured"))
+        }
+    }
+
+    /// A reducer standing in for the peer rank: combines the local left-
+    /// band partial with a pre-captured right-band partial in tree order
+    /// (left + right), exactly what the TCP collective does for world 2.
+    struct InjectRight {
+        right: Vec<Option<Vec<f32>>>,
+        right_nll: f32,
+        right_count: u64,
+    }
+
+    impl GradReducer for InjectRight {
+        fn world(&self) -> usize {
+            2
+        }
+        fn reduce(
+            &mut self,
+            _step: u64,
+            grads: &mut [Option<Vec<f32>>],
+            nll: &mut f32,
+            count: &mut u64,
+        ) -> anyhow::Result<()> {
+            add_grad_buffers(grads, &self.right)?;
+            *nll += self.right_nll;
+            *count += self.right_count;
+            Ok(())
+        }
+    }
+
+    /// The sharded-step determinism contract at the backend level: a full-
+    /// band 1-worker step and a two-band step whose partials are combined
+    /// in tree order produce bitwise-identical states and metrics. This is
+    /// the socket-free pin of what `dist::Collective` does over TCP.
+    #[test]
+    fn sharded_step_band_split_is_bitwise_invariant() {
+        let be = backend(Mode::Dqt, 1.58);
+        let st = be.init_state(3).unwrap();
+        let tokens = tiny_tokens(&be, 8);
+        let shape = &be.layout.manifest.tokens_shape;
+        let (bsz, w) = (shape[0], shape[1]);
+        assert!(bsz >= 2 && bsz % 2 == 0);
+        let (lr, seed) = (2e-3f32, 77u32);
+
+        // 1-worker reference: the whole band through the identity reducer
+        let nr = &mut crate::runtime::NoReduce;
+        let (full_state, full_m) = be
+            .train_step_sharded(st.clone(), &tokens, (0, bsz), bsz, 0, seed, lr, nr)
+            .unwrap();
+
+        // capture the right band's partial, then inject it into the left
+        let mid = bsz / 2;
+        let mut cap = CaptureReducer { out: None };
+        let err = be
+            .train_step_sharded(
+                st.clone(),
+                &tokens[mid * w..],
+                (mid, bsz),
+                bsz,
+                0,
+                seed,
+                lr,
+                &mut cap,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("captured"));
+        let (right, right_nll, right_count) = cap.out.unwrap();
+        let mut inj = InjectRight {
+            right,
+            right_nll,
+            right_count,
+        };
+        let (split_state, split_m) = be
+            .train_step_sharded(st, &tokens[..mid * w], (0, mid), bsz, 0, seed, lr, &mut inj)
+            .unwrap();
+
+        assert_eq!(full_m.loss.to_bits(), split_m.loss.to_bits());
+        assert_eq!(full_m.upd_frac.to_bits(), split_m.upd_frac.to_bits());
+        assert_eq!(full_m.gnorm.to_bits(), split_m.gnorm.to_bits());
+        for (i, (a, b)) in full_state
+            .params
+            .iter()
+            .zip(split_state.params.iter())
+            .enumerate()
+        {
+            assert_eq!(a, b, "param {i} diverged across the band split");
+        }
+        for (a, b) in full_state.opt.iter().zip(split_state.opt.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn sharded_step_trains_and_validates() {
+        let be = backend(Mode::Dqt, 1.58);
+        let st = be.init_state(1).unwrap();
+        let tokens = tiny_tokens(&be, 3);
+        let shape = &be.layout.manifest.tokens_shape;
+        let (bsz, w) = (shape[0], shape[1]);
+        let nr = &mut crate::runtime::NoReduce;
+        let (st2, m) = be
+            .train_step_sharded(st.clone(), &tokens, (0, bsz), bsz, 0, 11, 1e-2, nr)
+            .unwrap();
+        assert!(m.loss.is_finite() && m.loss > 0.0);
+        assert!(m.gnorm > 0.0);
+        assert_eq!(st2.step(), 1.0);
+        // weights stay on the ternary grid after the single SR projection
+        for (i, meta) in be.layout.manifest.params.iter().enumerate() {
+            if meta.is_grid() {
+                let s = st2.params[i + 1].scalar().unwrap();
+                for &v in st2.params[i].values().unwrap().iter() {
+                    let k = v * s;
+                    assert!((k - k.round()).abs() < 1e-3);
+                }
+            }
+        }
+        // error paths: empty/overflowing bands, wrong shard length, wrong
+        // global batch
+        let nr = &mut crate::runtime::NoReduce;
+        assert!(be
+            .train_step_sharded(st.clone(), &tokens, (1, 1), bsz, 0, 0, 1e-3, nr)
+            .is_err());
+        assert!(be
+            .train_step_sharded(st.clone(), &tokens, (0, bsz + 1), bsz, 0, 0, 1e-3, nr)
+            .is_err());
+        assert!(be
+            .train_step_sharded(st.clone(), &tokens[..w], (0, bsz), bsz, 0, 0, 1e-3, nr)
+            .is_err());
+        assert!(be
+            .train_step_sharded(st, &tokens, (0, bsz), bsz + 2, 0, 0, 1e-3, nr)
             .is_err());
     }
 

@@ -352,6 +352,25 @@ impl<'a> Net<'a> {
         b: usize,
         s: usize,
     ) -> Result<(f32, Grads)> {
+        self.loss_and_grads_scaled(params, inputs, labels, b, s, None)
+    }
+
+    /// [`Net::loss_and_grads`] with an explicit CE normalization constant.
+    /// `None` divides by this batch's own non-pad token count (the
+    /// single-process mean loss). `Some(d)` lets a caller normalize over a
+    /// larger global batch: the distributed sharded step passes `Some(1.0)`
+    /// to obtain raw NLL-*sum* gradients per row (division by 1.0 is exact,
+    /// so every per-row chain stays bitwise canonical) and applies the
+    /// global `1/denom` once, after the cross-rank reduction.
+    pub fn loss_and_grads_scaled(
+        &self,
+        params: &Params,
+        inputs: &[i32],
+        labels: &[i32],
+        b: usize,
+        s: usize,
+        denom_override: Option<f32>,
+    ) -> Result<(f32, Grads)> {
         let (h, i_, v) = (
             self.cfg.hidden_size,
             self.cfg.intermediate_size,
@@ -380,7 +399,7 @@ impl<'a> Net<'a> {
 
         // --- cross-entropy: loss + dlogits ---
         let n_mask = labels.iter().filter(|&&l| l != PAD_ID).count();
-        let denom = (n_mask as f32).max(1.0);
+        let denom = denom_override.unwrap_or((n_mask as f32).max(1.0));
         let mut loss = 0f64;
         let mut dlogits = vec![0f32; m * v];
         for (r, &label) in labels.iter().enumerate() {

@@ -7,4 +7,4 @@ pub mod trainer;
 
 pub use metrics::{RunMetrics, StepRecord};
 pub use scheduler::CosineSchedule;
-pub use trainer::{step_seed, train_and_save, Trainer};
+pub use trainer::{step_seed, train_and_save, StepExchange, Trainer};

@@ -13,7 +13,7 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::data::{loader, Pipeline};
 use crate::quant::sr::hash_u32;
-use crate::runtime::{State, VariantRuntime};
+use crate::runtime::{GradReducer, Manifest, State, VariantRuntime};
 
 use super::metrics::{RunMetrics, StepRecord};
 use super::scheduler::CosineSchedule;
@@ -22,6 +22,25 @@ use super::scheduler::CosineSchedule;
 /// graph further hashes per tensor.
 pub fn step_seed(run_seed: u64, step: u64) -> u32 {
     hash_u32(step as u32, (run_seed as u32) ^ ((run_seed >> 32) as u32))
+}
+
+/// One rank's view of a distributed data-parallel run: who it is, the
+/// gradient reducer the sharded train step calls between backward and the
+/// optimizer, and the periodic collective weight resync. `Trainer`
+/// ([`Trainer::run_sharded`]) drives the exchange without knowing what
+/// transport is behind it — `dist::DistExchange` implements it over TCP,
+/// and the same type over `Collective::solo()` is the world-1 reference.
+pub trait StepExchange {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+    /// The reducer handed to [`crate::runtime::Backend::train_step_sharded`].
+    fn reducer(&mut self) -> &mut dyn GradReducer;
+    /// Collective weight-resync hook, called after every completed step;
+    /// implementations own the cadence (`DistConfig::sync_every`).
+    /// Returns the wire bytes this rank shipped or received (0 = no sync
+    /// this step).
+    fn sync_state(&mut self, manifest: &Manifest, state: &mut State, step: u64)
+        -> Result<u64>;
 }
 
 pub struct Trainer<'a> {
@@ -82,6 +101,69 @@ impl<'a> Trainer<'a> {
             let t0 = Instant::now();
             let (new_state, sm) = self.vrt.train_step(state, &batch.tokens, seed, lr)?;
             state = new_state;
+            let rec = StepRecord {
+                step,
+                loss: sm.loss,
+                lr,
+                upd_frac: sm.upd_frac,
+                gnorm: sm.gnorm,
+                step_ms: t0.elapsed().as_secs_f32() * 1e3,
+            };
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                if let Some(cb) = self.progress.as_mut() {
+                    cb(step, sm.loss);
+                }
+            }
+            metrics.push(rec);
+            if cfg.eval_every > 0 && step > 0 && step % cfg.eval_every == 0 {
+                let dl = self.dev_loss(&state, false)?;
+                metrics.dev_losses.push((step, dl));
+            }
+        }
+        metrics.final_dev_loss = Some(self.dev_loss(&state, false)?);
+        metrics.wall_secs = wall.elapsed().as_secs_f64();
+        Ok((state, metrics))
+    }
+
+    /// Run the configured number of steps as one rank of a distributed
+    /// data-parallel job: every rank initializes the identical state
+    /// (same seed), consumes its contiguous shard band of the global
+    /// batch stream, and steps through
+    /// [`crate::runtime::Backend::train_step_sharded`] with the
+    /// exchange's reducer — so all ranks hold bit-identical states at
+    /// every step and this method's result on *any* rank equals the
+    /// 1-worker run's. Metrics (including the final dev loss) are
+    /// computed on every rank for the same reason; rank 0 is the one
+    /// that persists them.
+    pub fn run_sharded(&mut self, ex: &mut dyn StepExchange) -> Result<(State, RunMetrics)> {
+        let m = self.vrt.manifest();
+        let cfg = self.cfg.clone();
+        let rows = m.variant.model.batch_size;
+        let band = crate::config::shard_band(ex.world(), ex.rank(), rows)?;
+        let sched = CosineSchedule::new(cfg.peak_lr, cfg.min_lr, cfg.warmup_steps, cfg.steps);
+        let mut state = self.vrt.init_state(cfg.seed as u32)?;
+        let loader = self
+            .pipeline
+            .loader_sharded(rows, cfg.steps, cfg.seed, band);
+        let mut metrics = RunMetrics::new(&m.variant.variant_name, &cfg.dataset);
+        let wall = Instant::now();
+        while let Some(batch) = loader.next() {
+            let step = batch.step;
+            let lr = sched.lr(step) as f32;
+            let seed = step_seed(cfg.seed, step);
+            let t0 = Instant::now();
+            let (new_state, sm) = self.vrt.train_step_sharded(
+                state,
+                &batch.tokens,
+                band,
+                rows,
+                step,
+                seed,
+                lr,
+                ex.reducer(),
+            )?;
+            state = new_state;
+            ex.sync_state(m, &mut state, step)?;
             let rec = StepRecord {
                 step,
                 loss: sm.loss,

@@ -1,0 +1,208 @@
+//! Distributed determinism — the dist subsystem's contract, pinned end to
+//! end over real localhost TCP: a 2-worker data-parallel ternary training
+//! run must be **bitwise identical** to the 1-worker run — loss curve,
+//! final state, eval NLL — and every rank must hold the same replica at
+//! the end. The ranks deliberately run *different kernel thread counts*
+//! (1 vs 2), composing this contract with PR 4's thread-invariance: the
+//! reduction tree is fixed by global batch row indices, so neither the
+//! transport nor the pool can move a bit. The required CI `dist-smoke`
+//! job re-checks the same property across OS processes via the CLI.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dqt::config::{DistConfig, Mode, TrainConfig, VariantSpec};
+use dqt::data::Pipeline;
+use dqt::dist::{Collective, DistExchange};
+use dqt::kernels::Pool;
+use dqt::runtime::{GradReducer, Manifest, NoReduce, State, VariantRuntime};
+use dqt::train::{RunMetrics, StepExchange, Trainer};
+
+const STEPS: u64 = 12;
+
+fn tcfg() -> TrainConfig {
+    TrainConfig {
+        steps: STEPS,
+        warmup_steps: 2,
+        peak_lr: 2e-3,
+        dataset: "tiny".into(),
+        seed: 42,
+        log_every: 0,
+        eval_every: 0,
+        ..TrainConfig::default()
+    }
+}
+
+fn dcfg(world: usize, rank: usize, sync_every: u64, packed: bool) -> DistConfig {
+    DistConfig {
+        world,
+        rank,
+        addr: "127.0.0.1:0".into(),
+        sync_every,
+        packed_sync: packed,
+    }
+}
+
+/// Train one rank to completion on its own backend + pipeline.
+fn run_rank(col: Collective, d: &DistConfig, threads: usize) -> (State, RunMetrics, u64) {
+    let vrt = VariantRuntime::native_with_pool(
+        &VariantSpec::new("test", Mode::Dqt, 1.58),
+        Arc::new(Pool::new(threads)),
+    )
+    .unwrap();
+    let m = vrt.manifest();
+    let pipeline = Pipeline::build(
+        "tiny",
+        42,
+        m.variant.model.vocab_size,
+        m.variant.model.max_seq_len,
+    )
+    .unwrap();
+    let mut ex = DistExchange::new(col, d);
+    let (state, metrics) = Trainer::new(&vrt, &pipeline, tcfg())
+        .run_sharded(&mut ex)
+        .unwrap();
+    let sync_bytes = ex.sync_bytes();
+    ex.into_collective().shutdown().unwrap();
+    (state, metrics, sync_bytes)
+}
+
+fn assert_metrics_bitwise(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: step counts");
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss @ {}", x.step);
+        assert_eq!(
+            x.upd_frac.to_bits(),
+            y.upd_frac.to_bits(),
+            "{what}: upd_frac @ {}",
+            x.step
+        );
+        assert_eq!(x.gnorm.to_bits(), y.gnorm.to_bits(), "{what}: gnorm @ {}", x.step);
+        assert_eq!(x.lr.to_bits(), y.lr.to_bits(), "{what}: lr @ {}", x.step);
+    }
+    assert_eq!(
+        a.final_dev_loss.unwrap().to_bits(),
+        b.final_dev_loss.unwrap().to_bits(),
+        "{what}: eval NLL"
+    );
+}
+
+fn assert_states_bitwise(a: &State, b: &State, what: &str) {
+    assert_eq!(a.params.len(), b.params.len());
+    for (i, (x, y)) in a.params.iter().zip(b.params.iter()).enumerate() {
+        assert_eq!(x, y, "{what}: param {i}");
+    }
+    for (x, y) in a.opt.iter().zip(b.opt.iter()) {
+        assert_eq!(x, y, "{what}: optimizer state");
+    }
+}
+
+/// Launch a 2-rank world over localhost TCP (rank 1 on its own thread,
+/// with its own backend, pipeline and a *different* pool width) and
+/// return both ranks' results.
+fn run_world_2(
+    sync_every: u64,
+    packed: bool,
+) -> ((State, RunMetrics, u64), (State, RunMetrics, u64)) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || {
+        let variant = VariantSpec::new("test", Mode::Dqt, 1.58).variant_name();
+        let col =
+            Collective::join(&addr, 1, 2, &variant, Duration::from_secs(30)).unwrap();
+        run_rank(col, &dcfg(2, 1, sync_every, packed), 2)
+    });
+    let variant = VariantSpec::new("test", Mode::Dqt, 1.58).variant_name();
+    let col = Collective::host(listener, 2, &variant, Duration::from_secs(30)).unwrap();
+    let rank0 = run_rank(col, &dcfg(2, 0, sync_every, packed), 1);
+    let rank1 = worker.join().unwrap();
+    (rank0, rank1)
+}
+
+/// The acceptance pin: 2-worker run ≡ 1-worker run, bit for bit, with the
+/// packed grid resync active — and both ranks end as identical replicas.
+#[test]
+fn two_worker_tcp_run_is_bitwise_equal_to_one_worker() {
+    let (solo_state, solo_metrics, solo_sync) =
+        run_rank(Collective::solo(), &dcfg(1, 0, 5, true), 1);
+    assert_eq!(solo_sync, 0, "a solo world has nothing to sync");
+    assert_eq!(solo_metrics.records.len(), STEPS as usize);
+
+    let ((state0, metrics0, sync0), (state1, metrics1, sync1)) = run_world_2(5, true);
+    assert_metrics_bitwise(&solo_metrics, &metrics0, "2-worker vs 1-worker (rank 0)");
+    assert_states_bitwise(&solo_state, &state0, "2-worker vs 1-worker (rank 0)");
+    // both ranks are bit-identical replicas, and the worker's own metrics
+    // agree with rank 0's — the loss really is the global batch loss
+    assert_metrics_bitwise(&metrics0, &metrics1, "rank 0 vs rank 1");
+    assert_states_bitwise(&state0, &state1, "rank 0 vs rank 1");
+    // the resync actually shipped packed bytes (steps 5 and 10)
+    assert!(sync0 > 0 && sync1 == sync0, "sync bytes: {sync0} vs {sync1}");
+}
+
+/// The resync format and cadence cannot perturb the run: syncing f32
+/// instead of packed grids, or not syncing at all, still lands on the
+/// same bits — and the packed frames are measurably smaller than f32.
+#[test]
+fn sync_format_and_cadence_do_not_change_the_bits() {
+    let (solo_state, solo_metrics, _) = run_rank(Collective::solo(), &dcfg(1, 0, 0, true), 1);
+    let ((state_none, metrics_none, sync_none), _) = run_world_2(0, true);
+    assert_eq!(sync_none, 0);
+    assert_metrics_bitwise(&solo_metrics, &metrics_none, "no-sync run");
+    assert_states_bitwise(&solo_state, &state_none, "no-sync run");
+
+    let ((state_f32, metrics_f32, bytes_f32), _) = run_world_2(4, false);
+    assert_metrics_bitwise(&solo_metrics, &metrics_f32, "f32-sync run");
+    assert_states_bitwise(&solo_state, &state_f32, "f32-sync run");
+
+    let ((_, _, bytes_packed), _) = run_world_2(4, true);
+    assert!(
+        bytes_packed * 4 < bytes_f32,
+        "packed sync {bytes_packed} bytes should be far under f32 sync {bytes_f32}"
+    );
+}
+
+/// `run_sharded` enforces the determinism contract's world constraint.
+#[test]
+fn run_sharded_rejects_illegal_worlds() {
+    struct FakeExchange {
+        world: usize,
+        nr: NoReduce,
+    }
+    impl StepExchange for FakeExchange {
+        fn rank(&self) -> usize {
+            0
+        }
+        fn world(&self) -> usize {
+            self.world
+        }
+        fn reducer(&mut self) -> &mut dyn GradReducer {
+            &mut self.nr
+        }
+        fn sync_state(
+            &mut self,
+            _m: &Manifest,
+            _s: &mut State,
+            _step: u64,
+        ) -> anyhow::Result<u64> {
+            Ok(0)
+        }
+    }
+    let vrt = VariantRuntime::native(&VariantSpec::new("test", Mode::Dqt, 1.58)).unwrap();
+    let m = vrt.manifest();
+    let pipeline = Pipeline::build(
+        "tiny",
+        42,
+        m.variant.model.vocab_size,
+        m.variant.model.max_seq_len,
+    )
+    .unwrap();
+    // "test" has a 2-row global batch: world 3 is not a power of two,
+    // world 4 does not divide it
+    for (world, needle) in [(3usize, "power of two"), (4, "does not divide")] {
+        let err = Trainer::new(&vrt, &pipeline, tcfg())
+            .run_sharded(&mut FakeExchange { world, nr: NoReduce })
+            .unwrap_err();
+        assert!(err.to_string().contains(needle), "world {world}: {err}");
+    }
+}

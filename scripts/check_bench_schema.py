@@ -7,9 +7,11 @@ benchmark (or a harness output change) fails the PR instead of silently
 breaking the perf history.
 
 Baselines checked:
-  BENCH_quant_codecs.json <- rust/results/bench/quant_codecs.json
-  BENCH_serving.json      <- rust/results/bench/serving.json
-  BENCH_kernels.json      <- rust/results/bench/kernels.json
+  BENCH_quant_codecs.json  <- rust/results/bench/quant_codecs.json
+  BENCH_serving.json       <- rust/results/bench/serving.json
+  BENCH_kernels.json       <- rust/results/bench/kernels.json
+  BENCH_data_pipeline.json <- rust/results/bench/data_pipeline.json
+  BENCH_dist.json          <- rust/results/bench/dist.json
 """
 
 import json
@@ -26,6 +28,8 @@ BASELINES = [
     ("BENCH_quant_codecs.json", "rust/results/bench/quant_codecs.json"),
     ("BENCH_serving.json", "rust/results/bench/serving.json"),
     ("BENCH_kernels.json", "rust/results/bench/kernels.json"),
+    ("BENCH_data_pipeline.json", "rust/results/bench/data_pipeline.json"),
+    ("BENCH_dist.json", "rust/results/bench/dist.json"),
 ]
 
 

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Dist-smoke: train the tiny ternary DQT variant for 20 steps twice —
+# once with --workers 1 (the single-process reference through the dist
+# code path) and once with --workers 2 (rank 0 + one spawned local worker
+# process over localhost TCP, packed grid resync active) — then assert
+# the two runs are BITWISE equal: loss curve, final dev loss (eval NLL)
+# and the saved checkpoint bytes. CI runs this as the required dist-smoke
+# job; the same property is pinned in-process by rust/tests/dist.rs.
+#
+# Usage: scripts/dist_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="$(mktemp -d)"
+cleanup() { rm -rf "$OUT"; }
+trap cleanup EXIT
+
+(cd rust && cargo build --release)
+BIN=rust/target/release/repro
+
+COMMON=(--model test --mode dqt --bits 1.58 --backend native
+        --dataset tiny --steps 20 --seed 42 --sync-every 5)
+
+echo "== 1-worker reference run (dist path, identity reducer) =="
+"$BIN" train "${COMMON[@]}" --workers 1 --out "$OUT/w1"
+
+echo "== 2-worker run (rank 0 + spawned local worker, packed sync) =="
+"$BIN" train "${COMMON[@]}" --workers 2 --out "$OUT/w2"
+
+python3 scripts/dist_smoke_assert.py "$OUT/w1" "$OUT/w2"
+echo "dist-smoke OK"

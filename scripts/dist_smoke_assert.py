@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Assert a 2-worker distributed run is bitwise equal to the 1-worker run.
+
+Usage: dist_smoke_assert.py <dir_w1> <dir_w2>
+
+Each directory is a `repro train --out` result: metrics.json + curve.csv +
+model.dqt. Checks, in order:
+
+  1. the per-step loss curve (loss, lr, upd_frac, gnorm columns of
+     curve.csv — step_ms is wall time and legitimately differs) is
+     IDENTICAL text, i.e. bit-identical f32 values;
+  2. final_dev_loss (the eval NLL over the dev split) is identical in
+     metrics.json;
+  3. the saved checkpoints (model.dqt: every weight, scale and optimizer
+     tensor) are byte-identical files.
+
+Any diff prints the first offending step/field and exits non-zero.
+"""
+
+import hashlib
+import json
+import pathlib
+import sys
+
+
+def die(msg: str) -> None:
+    print(f"DIST SMOKE FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def curve_rows(d: pathlib.Path):
+    lines = (d / "curve.csv").read_text().strip().splitlines()
+    header = lines[0].split(",")
+    keep = [i for i, name in enumerate(header) if name != "step_ms"]
+    return [tuple(line.split(",")[i] for i in keep) for line in lines[1:]]
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        die("usage: dist_smoke_assert.py <dir_w1> <dir_w2>")
+    w1, w2 = pathlib.Path(sys.argv[1]), pathlib.Path(sys.argv[2])
+
+    # 1. loss curve, field by field
+    c1, c2 = curve_rows(w1), curve_rows(w2)
+    if len(c1) != len(c2):
+        die(f"step counts differ: {len(c1)} vs {len(c2)}")
+    if not c1:
+        die("empty loss curves")
+    for row1, row2 in zip(c1, c2):
+        if row1 != row2:
+            die(f"loss curve diverged at step {row1[0]}: {row1} vs {row2}")
+    print(f"curve OK: {len(c1)} steps bitwise equal")
+
+    # 2. eval NLL (final dev loss)
+    m1 = json.loads((w1 / "metrics.json").read_text())
+    m2 = json.loads((w2 / "metrics.json").read_text())
+    d1, d2 = m1.get("final_dev_loss"), m2.get("final_dev_loss")
+    if d1 is None or d2 is None:
+        die(f"missing final_dev_loss: {d1} vs {d2}")
+    if d1 != d2:
+        die(f"final dev loss (eval NLL) differs: {d1} vs {d2}")
+    print(f"eval NLL OK: {d1}")
+
+    # 3. checkpoint bytes
+    h1 = hashlib.sha256((w1 / "model.dqt").read_bytes()).hexdigest()
+    h2 = hashlib.sha256((w2 / "model.dqt").read_bytes()).hexdigest()
+    if h1 != h2:
+        die(f"checkpoints differ: {h1} vs {h2}")
+    print(f"checkpoint OK: sha256 {h1[:16]}… identical")
+
+
+if __name__ == "__main__":
+    main()
