@@ -9,7 +9,14 @@
 //! The acceptance check for the parallel kernel layer is that
 //! `*_gemm_t2` / `*_gemm_t4` mean times drop below `*_gemm_t1` on
 //! multi-core hardware — same bits out, fewer nanoseconds.
+//!
+//! The fast tier (`Precision::Fast`) rides the same shapes and ASSERTS
+//! its acceptance floors in-process at the end of the run: the
+//! activation-block LUT ternary GEMM must be ≥2× faster than the exact
+//! packed-ternary GEMM, and the wide multi-accumulator dense kernel ≥1.5×
+//! faster than the exact dense kernel, at equal (single) thread count.
 
+use dqt::config::Precision;
 use dqt::data::corpus::Rng;
 use dqt::kernels::{gemm, ternary as ternary_kernels, Pool};
 use dqt::quant::ternary;
@@ -19,8 +26,10 @@ fn main() {
     let mut b = Bench::new("kernels");
     let fast = std::env::var("DQT_BENCH_FAST").is_ok();
     // odd-ish shapes on purpose: the blocked kernels must not rely on
-    // block-aligned dimensions to perform
-    let (m, k, n) = if fast { (24, 160, 96) } else { (96, 448, 288) };
+    // block-aligned dimensions to perform. Both shapes stay LUT-eligible
+    // (k % 4 == 0, n ≥ kernels::ternary::LUT_MIN_CHANNELS) so the
+    // `ternary_lut_*` entries measure the table path, not the fallback.
+    let (m, k, n) = if fast { (24, 160, 160) } else { (96, 448, 288) };
     let mut rng = Rng::new(0xD0_77);
     let x: Vec<f32> = (0..m * k).map(|_| rng.next_f64() as f32 - 0.5).collect();
     let w: Vec<f32> = (0..n * k).map(|_| rng.next_f64() as f32 - 0.5).collect();
@@ -40,6 +49,20 @@ fn main() {
         });
     }
 
+    // fast tier: identical shapes on Precision::Fast pools, so each
+    // `*_fast_tN` / `ternary_lut_tN` row is directly comparable to its
+    // exact-tier sibling above
+    for t in [1usize, 2, 4] {
+        let pool = Pool::with_precision(t, Precision::Fast);
+        b.set_threads(t);
+        b.bench_elements(&format!("dense_gemm_fast_t{t}"), flops, || {
+            gemm::matmul_nt(&pool, &x, &w, m, k, n)
+        });
+        b.bench_elements(&format!("ternary_lut_t{t}"), flops, || {
+            ternary_kernels::gemm_nt(&pool, &packed, &x, m, k, n, 1.7)
+        });
+    }
+
     // the backward kernels ride along at the widest setting so perf
     // regressions in the gradient path surface here too
     let pool = Pool::new(4);
@@ -54,4 +77,20 @@ fn main() {
         gemm::add_matmul_tn(&pool, &dy, &x, m, n, k, &mut dw);
         dw
     });
+
+    // acceptance floors for the fast tier, asserted here so the bench job
+    // itself fails on a perf regression (equal thread count: t=1 keeps
+    // scheduler noise out of the ratio)
+    let mean = |name: &str| b.mean_ns(name).expect(name);
+    let dense_speedup = mean("dense_gemm_t1") / mean("dense_gemm_fast_t1");
+    let ternary_speedup = mean("ternary_gemm_t1") / mean("ternary_lut_t1");
+    println!("fast-tier speedup @ t1: dense {dense_speedup:.2}x, ternary {ternary_speedup:.2}x");
+    assert!(
+        dense_speedup >= 1.5,
+        "fast dense kernel below the 1.5x floor over exact at t1: {dense_speedup:.2}x"
+    );
+    assert!(
+        ternary_speedup >= 2.0,
+        "LUT ternary GEMM below the 2x floor over exact at t1: {ternary_speedup:.2}x"
+    );
 }

@@ -29,6 +29,58 @@ pub fn effective_threads(cli: Option<usize>) -> usize {
         .unwrap_or(1)
 }
 
+/// Kernel numeric tier (`--precision exact|fast` / `DQT_PRECISION`).
+///
+/// `Exact` keeps every kernel on the scalar, ascending-`k` accumulation
+/// chains that make results bitwise-reproducible across thread counts —
+/// the default everywhere and the oracle the fast tier is tested against.
+/// `Fast` opts into reassociated float summation (wide multi-accumulator
+/// dense microkernels, activation-block LUT ternary GEMM) that LLVM can
+/// auto-vectorize: the same math in a different addition order, so
+/// results agree with exact to f32 tolerance rather than bitwise. Fast
+/// mode is still deterministic for a *fixed* thread count (same seed ⇒
+/// same bits). See `docs/PERFORMANCE.md` §"Two-tier precision policy".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    #[default]
+    Exact,
+    Fast,
+}
+
+impl Precision {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::Exact => "exact",
+            Precision::Fast => "fast",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "exact" => Precision::Exact,
+            "fast" => Precision::Fast,
+            _ => return None,
+        })
+    }
+}
+
+/// Resolve the kernel numeric tier. Precedence: an explicit CLI value
+/// (`--precision`, when `Some`) > the `DQT_PRECISION` environment
+/// variable > [`Precision::Exact`]. Unlike `--threads`, the tier *can*
+/// change low-order result bits (fast reassociates sums), which is why
+/// exact is the unconditional default and fast is strictly opt-in.
+pub fn effective_precision(cli: Option<Precision>) -> Precision {
+    if let Some(p) = cli {
+        return p;
+    }
+    if let Ok(s) = std::env::var("DQT_PRECISION") {
+        if let Some(p) = Precision::parse(s.trim()) {
+            return p;
+        }
+    }
+    Precision::Exact
+}
+
 /// LLaMA-structured model configuration (paper Table 2 schema).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
@@ -548,6 +600,20 @@ mod tests {
         // Some(0) and None fall through to env/cores — at least one thread
         assert!(effective_threads(Some(0)) >= 1);
         assert!(effective_threads(None) >= 1);
+    }
+
+    #[test]
+    fn precision_parse_roundtrip_and_default() {
+        assert_eq!(Precision::parse("exact"), Some(Precision::Exact));
+        assert_eq!(Precision::parse("fast"), Some(Precision::Fast));
+        assert_eq!(Precision::parse("loose"), None);
+        assert_eq!(Precision::default(), Precision::Exact);
+        for p in [Precision::Exact, Precision::Fast] {
+            assert_eq!(Precision::parse(p.as_str()), Some(p));
+        }
+        // an explicit CLI tier always wins; no CLI and no env ⇒ exact
+        assert_eq!(effective_precision(Some(Precision::Fast)), Precision::Fast);
+        assert_eq!(effective_precision(Some(Precision::Exact)), Precision::Exact);
     }
 
     #[test]

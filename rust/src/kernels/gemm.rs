@@ -19,6 +19,20 @@
 //! `#[cfg(test)]` scalar oracles retained in `runtime::native::math`
 //! (pinned by exact-equality property tests, not tolerance tests).
 //!
+//! ## Fast tier
+//!
+//! When the pool carries [`Precision::Fast`], each kernel dispatches to a
+//! wide multi-accumulator microkernel instead: [`LANES`]-lane (`[f32; 8]`)
+//! partial accumulators per output column, [`NB_FAST`] columns per block,
+//! an unrolled K loop, and a fixed pairwise horizontal reduction at the
+//! end ([`hsum8`]). The independent lanes break the loop-carried addition
+//! dependence, so LLVM auto-vectorizes the inner loop to SIMD — that is
+//! the whole speedup; there are no intrinsics here. Reassociating the sum
+//! changes low-order bits, so fast results match exact to f32 tolerance
+//! (property-tested below), not bitwise; every output element still has
+//! *one* fixed chain, so fast mode stays deterministic for a fixed thread
+//! count. Exact remains the default tier ([`Pool::new`]).
+//!
 //! ## Blocking scheme
 //!
 //! * `matmul_nt` walks K in [`KC`]-sized panels so one pass keeps the
@@ -35,11 +49,18 @@
 //!   a batch row `x[r]` is reused by the whole band.
 
 use super::pool::Pool;
+use crate::config::Precision;
 
 /// K-panel length (f32 elements): a panel of one `x` row is 1 KiB.
 const KC: usize = 256;
 /// Output-channel panel for the input-gradient kernel.
 const NC: usize = 64;
+/// Fast tier: f32 lanes per partial accumulator (one 256-bit vector).
+const LANES: usize = 8;
+/// Fast tier: output columns per dense microkernel block — four
+/// independent `[f32; LANES]` accumulators live across the K loop, and
+/// the `x` panel loaded for column `c` is reused by all four.
+const NB_FAST: usize = 4;
 
 /// `y[M,N] = x[M,K] @ w[N,K]ᵀ` — the forward linear (`w` row-major
 /// `[out, in]`, matching the python `x @ w.T`).
@@ -50,6 +71,7 @@ pub fn matmul_nt(pool: &Pool, x: &[f32], w: &[f32], m: usize, k: usize, n: usize
     if m == 0 || n == 0 {
         return y;
     }
+    let fast = pool.precision() == Precision::Fast;
     if m < pool.threads() {
         // decode-sized batches: split each row's output columns instead
         let cchunk = pool.chunk_rows(n, k);
@@ -59,11 +81,15 @@ pub fn matmul_nt(pool: &Pool, x: &[f32], w: &[f32], m: usize, k: usize, n: usize
                 let c0 = ci * cchunk;
                 for (j, o) in seg.iter_mut().enumerate() {
                     let wr = &w[(c0 + j) * k..(c0 + j + 1) * k];
-                    let mut acc = 0f32;
-                    for (a, b) in xr.iter().zip(wr.iter()) {
-                        acc += a * b;
-                    }
-                    *o = acc;
+                    *o = if fast {
+                        dot_fast(xr, wr)
+                    } else {
+                        let mut acc = 0f32;
+                        for (a, b) in xr.iter().zip(wr.iter()) {
+                            acc += a * b;
+                        }
+                        acc
+                    };
                 }
             });
         }
@@ -71,9 +97,117 @@ pub fn matmul_nt(pool: &Pool, x: &[f32], w: &[f32], m: usize, k: usize, n: usize
     }
     let rows_per = pool.chunk_rows(m, n * k);
     pool.for_each_chunk_mut(&mut y, rows_per * n, |ci, band| {
-        matmul_nt_band(x, w, ci * rows_per, band.len() / n, k, n, band);
+        if fast {
+            matmul_nt_band_fast(x, w, ci * rows_per, band.len() / n, k, n, band);
+        } else {
+            matmul_nt_band(x, w, ci * rows_per, band.len() / n, k, n, band);
+        }
     });
     y
+}
+
+/// Fast-tier pairwise horizontal reduction of one lane accumulator. The
+/// tree shape is fixed, so a given output element's value is independent
+/// of which band/path computed it.
+#[inline]
+fn hsum8(a: &[f32; LANES]) -> f32 {
+    ((a[0] + a[4]) + (a[2] + a[6])) + ((a[1] + a[5]) + (a[3] + a[7]))
+}
+
+/// Fast-tier dot product: one `[f32; LANES]` accumulator, K unrolled by
+/// [`LANES`], scalar tail, [`hsum8`] reduction. The per-element chain is
+/// identical to a single column of [`matmul_nt_band_fast`], so the
+/// column-split decode path and the row-banded path agree bitwise.
+#[inline]
+fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let kb = k - k % LANES;
+    let mut acc = [0f32; LANES];
+    let mut j = 0;
+    while j < kb {
+        let xs = &a[j..j + LANES];
+        let ws = &b[j..j + LANES];
+        for l in 0..LANES {
+            acc[l] += xs[l] * ws[l];
+        }
+        j += LANES;
+    }
+    let mut t = hsum8(&acc);
+    while j < k {
+        t += a[j] * b[j];
+        j += 1;
+    }
+    t
+}
+
+/// Fast-tier row-band of [`matmul_nt`]: [`NB_FAST`] output columns per
+/// block, each with its own `[f32; LANES]` accumulator across an unrolled
+/// K loop (the `x` panel is loaded once per block and reused by all four
+/// columns). No K-panels: the whole `x` row stays L1/L2-resident and `y`
+/// is written exactly once.
+fn matmul_nt_band_fast(
+    x: &[f32],
+    w: &[f32],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    y: &mut [f32],
+) {
+    let kb = k - k % LANES;
+    for r in 0..rows {
+        let xr = &x[(row0 + r) * k..(row0 + r) * k + k];
+        let yr = &mut y[r * n..(r + 1) * n];
+        let mut c = 0;
+        while c + NB_FAST <= n {
+            let w0 = &w[c * k..c * k + k];
+            let w1 = &w[(c + 1) * k..(c + 1) * k + k];
+            let w2 = &w[(c + 2) * k..(c + 2) * k + k];
+            let w3 = &w[(c + 3) * k..(c + 3) * k + k];
+            let mut a0 = [0f32; LANES];
+            let mut a1 = [0f32; LANES];
+            let mut a2 = [0f32; LANES];
+            let mut a3 = [0f32; LANES];
+            let mut j = 0;
+            while j < kb {
+                let xs = &xr[j..j + LANES];
+                let s0 = &w0[j..j + LANES];
+                let s1 = &w1[j..j + LANES];
+                let s2 = &w2[j..j + LANES];
+                let s3 = &w3[j..j + LANES];
+                for l in 0..LANES {
+                    let xv = xs[l];
+                    a0[l] += xv * s0[l];
+                    a1[l] += xv * s1[l];
+                    a2[l] += xv * s2[l];
+                    a3[l] += xv * s3[l];
+                }
+                j += LANES;
+            }
+            let mut t0 = hsum8(&a0);
+            let mut t1 = hsum8(&a1);
+            let mut t2 = hsum8(&a2);
+            let mut t3 = hsum8(&a3);
+            while j < k {
+                let xv = xr[j];
+                t0 += xv * w0[j];
+                t1 += xv * w1[j];
+                t2 += xv * w2[j];
+                t3 += xv * w3[j];
+                j += 1;
+            }
+            yr[c] = t0;
+            yr[c + 1] = t1;
+            yr[c + 2] = t2;
+            yr[c + 3] = t3;
+            c += NB_FAST;
+        }
+        while c < n {
+            yr[c] = dot_fast(xr, &w[c * k..c * k + k]);
+            c += 1;
+        }
+    }
 }
 
 /// One row-band of [`matmul_nt`]: rows `row0..row0+rows` of `y`, K walked
@@ -127,10 +261,15 @@ pub fn add_matmul_nn(
     if m == 0 || k == 0 || n == 0 {
         return;
     }
+    let fast = pool.precision() == Precision::Fast;
     let rows_per = pool.chunk_rows(m, n * k);
     pool.for_each_chunk_mut(dx, rows_per * k, |ci, band| {
         let row0 = ci * rows_per;
         let rows = band.len() / k;
+        if fast {
+            add_nn_rows_fast(dy, w, row0, rows, n, k, band);
+            return;
+        }
         let mut cb = 0;
         while cb < n {
             let cc = NC.min(n - cb);
@@ -152,6 +291,52 @@ pub fn add_matmul_nn(
     });
 }
 
+/// Fast-tier band of [`add_matmul_nn`]: [`NB_FAST`] `dy` columns are
+/// folded into `dx` per pass, so each element of the band is
+/// loaded/stored once per four contributions instead of once per one —
+/// and the four-term update has no loop-carried dependence, so it
+/// vectorizes. Reassociates the ascending-`c` chain (tolerance, not
+/// bitwise, vs exact).
+fn add_nn_rows_fast(
+    dy: &[f32],
+    w: &[f32],
+    row0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+    band: &mut [f32],
+) {
+    let nb = n - n % NB_FAST;
+    for r in 0..rows {
+        let dyr = &dy[(row0 + r) * n..(row0 + r) * n + n];
+        let dxr = &mut band[r * k..(r + 1) * k];
+        let mut c = 0;
+        while c < nb {
+            let (d0, d1, d2, d3) = (dyr[c], dyr[c + 1], dyr[c + 2], dyr[c + 3]);
+            if d0 != 0.0 || d1 != 0.0 || d2 != 0.0 || d3 != 0.0 {
+                let w0 = &w[c * k..c * k + k];
+                let w1 = &w[(c + 1) * k..(c + 1) * k + k];
+                let w2 = &w[(c + 2) * k..(c + 2) * k + k];
+                let w3 = &w[(c + 3) * k..(c + 3) * k + k];
+                for j in 0..k {
+                    dxr[j] += d0 * w0[j] + d1 * w1[j] + d2 * w2[j] + d3 * w3[j];
+                }
+            }
+            c += NB_FAST;
+        }
+        while c < n {
+            let d = dyr[c];
+            if d != 0.0 {
+                let wr = &w[c * k..c * k + k];
+                for (o, &wv) in dxr.iter_mut().zip(wr.iter()) {
+                    *o += d * wv;
+                }
+            }
+            c += 1;
+        }
+    }
+}
+
 /// `dw[N,K] += dy[M,N]ᵀ @ x[M,K]` — weight gradient of the linear.
 /// Partitioned over output channels of `dw`; every pass over a batch row
 /// `x[r]` serves the whole band. Contributions land in ascending-`r`
@@ -171,10 +356,15 @@ pub fn add_matmul_tn(
     if n == 0 || k == 0 {
         return;
     }
+    let fast = pool.precision() == Precision::Fast;
     let cols_per = pool.chunk_rows(n, m * k);
     pool.for_each_chunk_mut(dw, cols_per * k, |ci, band| {
         let c0 = ci * cols_per;
         let cols = band.len() / k;
+        if fast {
+            add_tn_cols_fast(dy, x, c0, cols, m, n, k, band);
+            return;
+        }
         for r in 0..m {
             let xr = &x[r * k..(r + 1) * k];
             let dyr = &dy[r * n..(r + 1) * n];
@@ -190,6 +380,61 @@ pub fn add_matmul_tn(
             }
         }
     });
+}
+
+/// Fast-tier band of [`add_matmul_tn`]: [`NB_FAST`] batch rows folded
+/// into each `dw` channel per pass (the transpose-side twin of
+/// [`add_nn_rows_fast`] — same four-term vectorizable update, same
+/// tolerance-not-bitwise contract vs the ascending-`r` exact chain).
+#[allow(clippy::too_many_arguments)]
+fn add_tn_cols_fast(
+    dy: &[f32],
+    x: &[f32],
+    c0: usize,
+    cols: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    band: &mut [f32],
+) {
+    let mb = m - m % NB_FAST;
+    let mut r = 0;
+    while r < mb {
+        let x0 = &x[r * k..r * k + k];
+        let x1 = &x[(r + 1) * k..(r + 1) * k + k];
+        let x2 = &x[(r + 2) * k..(r + 2) * k + k];
+        let x3 = &x[(r + 3) * k..(r + 3) * k + k];
+        for cj in 0..cols {
+            let c = c0 + cj;
+            let (d0, d1, d2, d3) = (
+                dy[r * n + c],
+                dy[(r + 1) * n + c],
+                dy[(r + 2) * n + c],
+                dy[(r + 3) * n + c],
+            );
+            if d0 != 0.0 || d1 != 0.0 || d2 != 0.0 || d3 != 0.0 {
+                let dwr = &mut band[cj * k..(cj + 1) * k];
+                for j in 0..k {
+                    dwr[j] += d0 * x0[j] + d1 * x1[j] + d2 * x2[j] + d3 * x3[j];
+                }
+            }
+        }
+        r += NB_FAST;
+    }
+    while r < m {
+        let xr = &x[r * k..(r + 1) * k];
+        let dyr = &dy[r * n..(r + 1) * n];
+        for cj in 0..cols {
+            let d = dyr[c0 + cj];
+            if d != 0.0 {
+                let dwr = &mut band[cj * k..(cj + 1) * k];
+                for (o, &xv) in dwr.iter_mut().zip(xr.iter()) {
+                    *o += d * xv;
+                }
+            }
+        }
+        r += 1;
+    }
 }
 
 #[cfg(test)]
@@ -246,13 +491,96 @@ mod tests {
 
     #[test]
     fn degenerate_shapes_do_not_panic() {
-        let pool = Pool::new(3);
-        assert!(matmul_nt(&pool, &[], &[], 0, 4, 0).is_empty());
-        assert_eq!(matmul_nt(&pool, &[], &[], 1, 0, 2), vec![0.0, 0.0]);
-        let mut dx: Vec<f32> = vec![];
-        add_matmul_nn(&pool, &[], &[], 0, 0, 0, &mut dx);
-        let mut dw: Vec<f32> = vec![];
-        add_matmul_tn(&pool, &[], &[], 0, 0, 3, &mut dw);
+        for pool in [Pool::new(3), Pool::with_precision(3, Precision::Fast)] {
+            assert!(matmul_nt(&pool, &[], &[], 0, 4, 0).is_empty());
+            assert_eq!(matmul_nt(&pool, &[], &[], 1, 0, 2), vec![0.0, 0.0]);
+            let mut dx: Vec<f32> = vec![];
+            add_matmul_nn(&pool, &[], &[], 0, 0, 0, &mut dx);
+            let mut dw: Vec<f32> = vec![];
+            add_matmul_tn(&pool, &[], &[], 0, 0, 3, &mut dw);
+        }
+    }
+
+    /// Fast-tier kernels agree with exact to f32 tolerance on shapes that
+    /// are not multiples of any lane/block width, at every thread count —
+    /// and over the whole suite the reassociated sums must actually
+    /// differ from exact somewhere (else the fast path silently ran the
+    /// exact chains and the tolerance gate is vacuous).
+    #[test]
+    fn fast_kernels_match_exact_within_tolerance() {
+        let mut rng = Rng::new(0xFA57);
+        let mut any_bit_diff = false;
+        for case in 0..40 {
+            let m = 1 + rng.below(13);
+            let k = 1 + rng.below(2 * KC + 11);
+            let n = 1 + rng.below(37);
+            let x = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, n * k);
+            let dy = rand_vec(&mut rng, m * n);
+            let close = |a: &[f32], b: &[f32], dim: usize, what: &str| {
+                let tol = 1e-5 + dim as f32 * 1e-6;
+                for (i, (u, v)) in a.iter().zip(b.iter()).enumerate() {
+                    assert!(
+                        (u - v).abs() <= tol * (1.0 + v.abs()),
+                        "case {case} {what}[{i}]: fast {u} vs exact {v} (m={m} k={k} n={n})"
+                    );
+                }
+            };
+            let y_exact = matmul_nt(&Pool::new(1), &x, &w, m, k, n);
+            let mut dx_exact = rand_vec(&mut Rng::new(7), m * k);
+            add_matmul_nn(&Pool::new(1), &dy, &w, m, n, k, &mut dx_exact);
+            let mut dw_exact = rand_vec(&mut Rng::new(9), n * k);
+            add_matmul_tn(&Pool::new(1), &dy, &x, m, n, k, &mut dw_exact);
+            for threads in [1usize, 2, 5] {
+                let fp = Pool::with_precision(threads, Precision::Fast);
+                let y = matmul_nt(&fp, &x, &w, m, k, n);
+                close(&y, &y_exact, k, "y");
+                any_bit_diff |= y != y_exact;
+                let mut dx = rand_vec(&mut Rng::new(7), m * k);
+                add_matmul_nn(&fp, &dy, &w, m, n, k, &mut dx);
+                close(&dx, &dx_exact, n, "dx");
+                any_bit_diff |= dx != dx_exact;
+                let mut dw = rand_vec(&mut Rng::new(9), n * k);
+                add_matmul_tn(&fp, &dy, &x, m, n, k, &mut dw);
+                close(&dw, &dw_exact, m, "dw");
+                any_bit_diff |= dw != dw_exact;
+            }
+        }
+        assert!(
+            any_bit_diff,
+            "fast tier never reassociated a single sum across 40 cases"
+        );
+    }
+
+    /// Fast mode is deterministic for a fixed thread count: rerunning the
+    /// same kernel on an identical pool reproduces every bit.
+    #[test]
+    fn fast_kernels_are_deterministic_per_thread_count() {
+        let mut rng = Rng::new(0xD373);
+        for threads in [1usize, 4] {
+            let fp = Pool::with_precision(threads, Precision::Fast);
+            let (m, k, n) = (9, 2 * KC + 5, 33);
+            let x = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, n * k);
+            let dy = rand_vec(&mut rng, m * n);
+            assert_eq!(
+                matmul_nt(&fp, &x, &w, m, k, n),
+                matmul_nt(&fp, &x, &w, m, k, n),
+                "t{threads}"
+            );
+            let run_nn = || {
+                let mut dx = vec![0.1f32; m * k];
+                add_matmul_nn(&fp, &dy, &w, m, n, k, &mut dx);
+                dx
+            };
+            assert_eq!(run_nn(), run_nn(), "t{threads} dx");
+            let run_tn = || {
+                let mut dw = vec![0.2f32; n * k];
+                add_matmul_tn(&fp, &dy, &x, m, n, k, &mut dw);
+                dw
+            };
+            assert_eq!(run_tn(), run_tn(), "t{threads} dw");
+        }
     }
 
     #[test]

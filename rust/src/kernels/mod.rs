@@ -22,6 +22,16 @@
 //! losses and generated tokens are bitwise equal at every `DQT_THREADS`
 //! value — pinned at 1 vs 4 threads by `tests/parallel_determinism.rs`
 //! and the CI smoke matrix. See `docs/PERFORMANCE.md`.
+//!
+//! **Two-tier precision.** The [`Pool`] also carries a
+//! [`crate::config::Precision`] tier (`--precision exact|fast` /
+//! `DQT_PRECISION`). `Exact` — the default — is the contract above.
+//! `Fast` dispatches eligible kernels to SIMD-friendly variants (wide
+//! multi-accumulator dense microkernels in [`gemm`], the
+//! activation-block LUT GEMM in [`ternary`]) whose reassociated sums
+//! match exact to f32 tolerance instead of bitwise, while remaining
+//! deterministic for a fixed thread count. See `docs/PERFORMANCE.md`
+//! §"Two-tier precision policy".
 
 pub mod gemm;
 pub mod pool;

@@ -13,22 +13,40 @@
 //! knob); [`Pool::from_env`] resolves `DQT_THREADS` and falls back to the
 //! machine's available parallelism (see
 //! [`crate::config::effective_threads`]).
+//!
+//! The pool also carries the kernel numeric tier
+//! ([`crate::config::Precision`]): it is the one handle every matmul call
+//! site already threads through, so the `--precision` policy rides along
+//! the same way `--threads` does. `Pool::new` defaults to `Exact`, which
+//! keeps every pre-existing construction site on the bitwise-deterministic
+//! kernels.
 
 use std::sync::OnceLock;
 
-/// A fixed-width fan-out handle for the kernel layer. Cheap to clone via
+use crate::config::Precision;
+
+/// A fixed-width fan-out handle for the kernel layer, carrying the
+/// numeric tier the kernels should dispatch on. Cheap to clone via
 /// `Arc`; `Pool::new(1)` (or [`Pool::serial`]) degrades every primitive
 /// to a plain loop on the calling thread.
 #[derive(Clone, Debug)]
 pub struct Pool {
     threads: usize,
+    precision: Precision,
 }
 
 impl Pool {
-    /// A pool that fans work across `threads` OS threads (clamped to ≥ 1).
+    /// A pool that fans work across `threads` OS threads (clamped to ≥ 1),
+    /// on the exact (bitwise-deterministic) kernel tier.
     pub fn new(threads: usize) -> Pool {
+        Pool::with_precision(threads, Precision::Exact)
+    }
+
+    /// A pool with an explicit numeric tier (the `--precision` CLI path).
+    pub fn with_precision(threads: usize, precision: Precision) -> Pool {
         Pool {
             threads: threads.max(1),
+            precision,
         }
     }
 
@@ -37,15 +55,23 @@ impl Pool {
         Pool::new(1)
     }
 
-    /// Pool sized by `DQT_THREADS`, falling back to the machine's
-    /// available parallelism.
+    /// Pool sized by `DQT_THREADS` on the `DQT_PRECISION` tier, falling
+    /// back to the machine's available parallelism and the exact tier.
     pub fn from_env() -> Pool {
-        Pool::new(crate::config::effective_threads(None))
+        Pool::with_precision(
+            crate::config::effective_threads(None),
+            crate::config::effective_precision(None),
+        )
     }
 
     /// Worker count this pool fans across (≥ 1).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Numeric tier the kernels dispatch on.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Chunk extent for partitioning `rows` output rows whose per-row cost
@@ -57,14 +83,26 @@ impl Pool {
     /// identical either way. All kernel-layer partitioners derive their
     /// chunk sizes here so the policy lives in one place.
     pub fn chunk_rows(&self, rows: usize, work_per_row: usize) -> usize {
-        // Minimum multiply-adds before fanning out: below this, the
-        // spawn/join cost of one scoped region exceeds the kernel work
-        // (relevant for batch-1 decode steps on small models).
-        const MIN_PAR_WORK: usize = 32 * 1024;
-        if self.threads <= 1 || rows.saturating_mul(work_per_row) < MIN_PAR_WORK {
+        let gate = Pool::min_par_work(self.precision);
+        if self.threads <= 1 || rows.saturating_mul(work_per_row) < gate {
             return rows.max(1);
         }
         rows.div_ceil(self.threads * 4).max(1)
+    }
+
+    /// Minimum nominal multiply-adds before [`Pool::chunk_rows`] fans
+    /// out: below this, the spawn/join cost of one scoped region exceeds
+    /// the kernel work (relevant for batch-1 decode steps on small
+    /// models). Callers quote work in *nominal* madds (`rows × k`-style),
+    /// so the gate is tier-specific: a fast-tier weight costs roughly a
+    /// quarter of an exact one (one LUT hit + add instead of four
+    /// decode-multiply-adds; vectorized dense lanes), so a fan-out must
+    /// cover ~4x more nominal work before it pays for itself.
+    pub const fn min_par_work(precision: Precision) -> usize {
+        match precision {
+            Precision::Exact => 32 * 1024,
+            Precision::Fast => 128 * 1024,
+        }
     }
 
     /// Split `data` into `chunk_len`-element chunks and run
@@ -226,9 +264,31 @@ mod tests {
     }
 
     #[test]
+    fn chunk_rows_gate_is_per_precision() {
+        // the fast tier's cheaper per-weight cost raises the fan-out gate
+        // 4x, so a mid-size job pools under exact but stays inline under
+        // fast — and both tiers pool once past the fast gate
+        assert_eq!(Pool::min_par_work(Precision::Exact), 32 * 1024);
+        assert_eq!(Pool::min_par_work(Precision::Fast), 128 * 1024);
+        let exact4 = Pool::new(4);
+        let fast4 = Pool::with_precision(4, Precision::Fast);
+        assert_eq!(exact4.precision(), Precision::Exact);
+        assert_eq!(fast4.precision(), Precision::Fast);
+        // 100k nominal madds: past the exact gate, under the fast gate
+        assert_eq!(exact4.chunk_rows(100, 1_000), 7); // pooled
+        assert_eq!(fast4.chunk_rows(100, 1_000), 100); // inline
+        // 200k nominal madds: past both gates
+        assert_eq!(exact4.chunk_rows(100, 2_000), 7);
+        assert_eq!(fast4.chunk_rows(100, 2_000), 7);
+        // serial pools always run inline regardless of tier
+        assert_eq!(Pool::with_precision(1, Precision::Fast).chunk_rows(100, 1_000_000), 100);
+    }
+
+    #[test]
     fn pool_clamps_to_one_thread() {
         assert_eq!(Pool::new(0).threads(), 1);
         assert_eq!(Pool::serial().threads(), 1);
         assert!(Pool::from_env().threads() >= 1);
+        assert_eq!(Pool::with_precision(0, Precision::Fast).threads(), 1);
     }
 }

@@ -13,9 +13,35 @@
 //! accumulation order of the serial kernel, so results are bitwise
 //! identical at every thread count — the property the serving decode path
 //! relies on (`tests/parallel_determinism.rs`).
+//!
+//! ## Fast tier
+//!
+//! A pool carrying [`Precision::Fast`] switches eligible calls
+//! (byte-aligned rows, `k % 4 == 0`, and at least [`LUT_MIN_CHANNELS`]
+//! output channels to amortize the build) to the activation-block LUT
+//! GEMM: [`crate::quant::ternary::block_tables`] precomputes, per
+//! activation row and 4-wide activation block, the partial dot sum of
+//! every possible weight byte (256 entries, built once per call and
+//! fanned over the pool), after which each weight byte costs one table
+//! hit + one add per batch row instead of four decode-multiply-adds
+//! ([`crate::quant::ternary::dot_rows_lut`]). The fast tier's contract
+//! is f32 tolerance vs exact plus bitwise determinism for a fixed thread
+//! count (table values are partition-independent; channels keep one
+//! fixed chain); the *current* table chain happens to agree with exact
+//! bitwise, because trit weights are exact ±1/0 and both kernels group
+//! sums by weight byte. Ineligible calls fall back to the exact core
+//! even under a fast pool.
 
 use super::pool::Pool;
-use crate::quant::ternary::dot_rows;
+use crate::config::Precision;
+use crate::quant::ternary::{block_tables, dot_rows, dot_rows_lut};
+
+/// Minimum output channels before the fast tier builds activation-block
+/// tables: a block-row costs 255 madds per batch row to build and saves
+/// ~3 of 4 madds per channel per batch row, so the build amortizes past
+/// ~85 channels — gated higher for a clear win. Below this (tiny attn
+/// projections) the exact core is used even under a fast pool.
+pub const LUT_MIN_CHANNELS: usize = 128;
 
 /// Fused packed-ternary GEMM against a row-major `[n_out, k]` weight whose
 /// trits live contiguously in `packed` (row `r` starts at trit `r*k`):
@@ -43,9 +69,26 @@ pub fn gemm_nt(
     // yt[r*m..(r+1)*m], so channel-partitioning hands out disjoint slices
     let mut yt = vec![0f32; n_out * m];
     let rows_per = pool.chunk_rows(n_out, m * k);
-    pool.for_each_chunk_mut(&mut yt, rows_per * m, |ci, band| {
-        dot_rows(packed, x, m, k, ci * rows_per, band.len() / m, inv_s, band);
-    });
+    let use_lut =
+        pool.precision() == Precision::Fast && k % 4 == 0 && n_out >= LUT_MIN_CHANNELS;
+    if use_lut {
+        // one table build per activation row, amortized over all n_out
+        // channels; [block][byte][batch] layout keeps the per-byte adds
+        // contiguous across the batch
+        let blocks = k / 4;
+        let mut tables = vec![0f32; blocks * 256 * m];
+        let bchunk = pool.chunk_rows(blocks, 256 * m);
+        pool.for_each_chunk_mut(&mut tables, bchunk * 256 * m, |ci, band| {
+            block_tables(x, m, k, ci * bchunk, band);
+        });
+        pool.for_each_chunk_mut(&mut yt, rows_per * m, |ci, band| {
+            dot_rows_lut(packed, &tables, m, k, ci * rows_per, band.len() / m, inv_s, band);
+        });
+    } else {
+        pool.for_each_chunk_mut(&mut yt, rows_per * m, |ci, band| {
+            dot_rows(packed, x, m, k, ci * rows_per, band.len() / m, inv_s, band);
+        });
+    }
     if m == 1 {
         return yt; // [n_out, 1] and [1, n_out] are the same buffer
     }
@@ -90,6 +133,60 @@ mod tests {
             let y5 = gemm_nt(&Pool::new(5), &p, &x, m, k, n_out, s);
             assert_eq!(y1, y2, "case {case} (m={m} k={k} n={n_out})");
             assert_eq!(y1, y5, "case {case} (m={m} k={k} n={n_out})");
+        }
+    }
+
+    /// Above the channel gate, a fast pool routes through the
+    /// activation-block LUT: results match exact to f32 tolerance at
+    /// every thread count, and rerunning on an identical pool is
+    /// bitwise-deterministic. (Tolerance is the *contract*; the current
+    /// LUT chain happens to match exact bitwise because trit weights are
+    /// exact ±1/0 and both kernels group sums by weight byte — a future
+    /// table layout is free to reassociate within the gate.)
+    #[test]
+    fn fast_lut_gemm_matches_exact_within_tolerance() {
+        let mut rng = Rng::new(0xFA58);
+        for case in 0..10 {
+            let k = 4 * (1 + rng.below(50)); // byte-aligned
+            let n_out = super::LUT_MIN_CHANNELS + rng.below(40);
+            let m = 1 + rng.below(5);
+            let s = 0.5 + 10.0 * rng.next_f64() as f32;
+            let trits: Vec<f32> = (0..n_out * k).map(|_| rng.below(3) as f32 - 1.0).collect();
+            let p = pack(&trits).unwrap();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+            let exact = gemm_nt(&Pool::new(1), &p, &x, m, k, n_out, s);
+            for threads in [1usize, 2, 5] {
+                let fp = Pool::with_precision(threads, Precision::Fast);
+                let fast = gemm_nt(&fp, &p, &x, m, k, n_out, s);
+                let rerun = gemm_nt(&fp, &p, &x, m, k, n_out, s);
+                assert_eq!(fast, rerun, "case {case} t{threads} not deterministic");
+                let tol = 1e-5 + 1e-6 * k as f32;
+                for (i, (a, b)) in fast.iter().zip(exact.iter()).enumerate() {
+                    assert!(
+                        (a - b).abs() <= tol * (1.0 + b.abs()),
+                        "case {case} t{threads} (m={m} k={k} n={n_out}) [{i}]: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Below the channel gate — or with unaligned rows — a fast pool
+    /// falls back to the exact core, bitwise.
+    #[test]
+    fn fast_pool_falls_back_to_exact_when_ineligible() {
+        let mut rng = Rng::new(0xFA59);
+        for &(k, n_out) in &[
+            (40usize, super::LUT_MIN_CHANNELS - 1), // too few channels
+            (41, super::LUT_MIN_CHANNELS + 8),      // k % 4 != 0
+        ] {
+            let m = 2;
+            let trits: Vec<f32> = (0..n_out * k).map(|_| rng.below(3) as f32 - 1.0).collect();
+            let p = pack(&trits).unwrap();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+            let exact = gemm_nt(&Pool::new(1), &p, &x, m, k, n_out, 2.0);
+            let fast = gemm_nt(&Pool::with_precision(3, Precision::Fast), &p, &x, m, k, n_out, 2.0);
+            assert_eq!(exact, fast, "k={k} n={n_out}");
         }
     }
 

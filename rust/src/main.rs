@@ -35,6 +35,12 @@ GLOBAL: --artifacts <dir>  --results <dir>
         --threads N   kernel worker threads for the native backend
                       (default: DQT_THREADS env, else all cores; results
                       are bitwise identical at every thread count)
+        --precision exact|fast   kernel numeric tier (default:
+                      DQT_PRECISION env, else exact). exact keeps the
+                      bitwise-deterministic chains; fast opts into
+                      SIMD-friendly reassociated kernels, identical to
+                      exact within f32 tolerance and still deterministic
+                      per thread count (docs/PERFORMANCE.md)
 
 COMMANDS
   train   --model t130 --mode dqt --bits 1.58 [--env fp32] [--optimizer adamw]
@@ -71,17 +77,32 @@ fn backend_kind(a: &Args) -> Result<BackendKind> {
     BackendKind::parse(&s).ok_or_else(|| anyhow!("bad --backend {s:?} (auto|native|pjrt)"))
 }
 
-/// Explicit kernel pool from `--threads` (None = let the backend size
-/// itself from `DQT_THREADS` / available cores).
+/// Explicit kernel pool from `--threads` / `--precision` (None = let the
+/// backend size itself from `DQT_THREADS` / `DQT_PRECISION` / cores).
 fn pool_from_args(a: &Args) -> Result<Option<std::sync::Arc<dqt::kernels::Pool>>> {
-    Ok(if a.has("threads") {
-        let t: usize = a.parse_or("threads", 0)?;
-        Some(std::sync::Arc::new(dqt::kernels::Pool::new(
-            dqt::config::effective_threads(Some(t)),
-        )))
+    if !a.has("threads") && !a.has("precision") {
+        return Ok(None);
+    }
+    let threads = if a.has("threads") {
+        dqt::config::effective_threads(Some(a.parse_or("threads", 0)?))
+    } else {
+        dqt::config::effective_threads(None)
+    };
+    let precision = if a.has("precision") {
+        let s = a.str_or("precision", "exact");
+        Some(
+            dqt::config::Precision::parse(&s)
+                .ok_or_else(|| anyhow!("bad --precision {s:?} (exact|fast)"))?,
+        )
     } else {
         None
-    })
+    };
+    Ok(Some(std::sync::Arc::new(
+        dqt::kernels::Pool::with_precision(
+            threads,
+            dqt::config::effective_precision(precision),
+        ),
+    )))
 }
 
 fn variant_spec(a: &Args) -> Result<VariantSpec> {
@@ -127,9 +148,10 @@ fn open_engine(a: &Args, artifacts: &std::path::Path) -> Result<(dqt::serve::Eng
     let vrt =
         VariantRuntime::open_with_pool(backend_kind(a)?, None, artifacts, &spec, pool_from_args(a)?)?;
     eprintln!(
-        "backend: {} ({} kernel threads)",
+        "backend: {} ({} kernel threads, {} precision)",
         vrt.backend_name(),
-        vrt.threads()
+        vrt.threads(),
+        vrt.precision().as_str()
     );
     let state = checkpoint::load_packed(&ckpt, vrt.manifest())?;
     let pipeline = Pipeline::build(&dataset, data_seed, cfg.vocab_size, cfg.max_seq_len)?;
@@ -189,6 +211,7 @@ fn dist_passthrough(a: &Args) -> Vec<String> {
         "sync-every",
         "sync-format",
         "threads",
+        "precision",
     ] {
         if let Some(val) = a.get(k) {
             v.push(format!("--{k}"));
@@ -280,9 +303,10 @@ fn main() -> Result<()> {
                 pool_from_args(&a)?,
             )?;
             eprintln!(
-                "backend: {} ({} kernel threads)",
+                "backend: {} ({} kernel threads, {} precision)",
                 vrt.backend_name(),
-                vrt.threads()
+                vrt.threads(),
+                vrt.precision().as_str()
             );
             let pipeline =
                 Pipeline::build(&tcfg.dataset, tcfg.seed, cfg.vocab_size, cfg.max_seq_len)?;
@@ -334,9 +358,10 @@ fn main() -> Result<()> {
                 pool_from_args(&a)?,
             )?;
             eprintln!(
-                "backend: {} ({} kernel threads)",
+                "backend: {} ({} kernel threads, {} precision)",
                 vrt.backend_name(),
-                vrt.threads()
+                vrt.threads(),
+                vrt.precision().as_str()
             );
             let state = checkpoint::load(&ckpt, vrt.manifest())?;
             let pipeline = Pipeline::build(&dataset, 42, cfg.vocab_size, cfg.max_seq_len)?;
@@ -375,12 +400,14 @@ fn main() -> Result<()> {
         "serve" => {
             let (engine, name) = open_engine(&a, &artifacts)?;
             let threads = engine.decoder().threads();
+            let precision = engine.decoder().precision().as_str();
             let addr = a.str_or("addr", "127.0.0.1:8080");
             let max_batch: usize = a.parse_or("max-batch", 8)?;
             let server = dqt::serve::Server::bind(&addr, engine, max_batch)?;
             eprintln!(
                 "serving {name} at http://{} (POST /v1/generate, GET /healthz, \
-                 GET /v1/stats; batch {max_batch}, {threads} kernel threads)",
+                 GET /v1/stats; batch {max_batch}, {threads} kernel threads, \
+                 {precision} precision)",
                 server.local_addr()?
             );
             server.run()?;

@@ -69,19 +69,24 @@ pub fn unpack(packed: &[u32], n: usize) -> Vec<f32> {
     );
     let lut = byte_lut();
     let mut out = Vec::with_capacity(n);
-    for &word in packed {
-        if out.len() >= n {
-            break;
-        }
+    // bulk: words whose 16 trits are all wanted — pre-sliced, so the hot
+    // loop carries no remaining-count branch per byte
+    let full_words = n / 16;
+    for &word in &packed[..full_words] {
         for b in word.to_le_bytes() {
-            let vals = &lut[b as usize];
-            let remaining = n - out.len();
-            if remaining >= 4 {
-                out.extend_from_slice(vals);
-            } else {
-                out.extend_from_slice(&vals[..remaining]);
-                break;
-            }
+            out.extend_from_slice(&lut[b as usize]);
+        }
+    }
+    // tail: at most one partially-consumed word
+    let mut rem = n - full_words * 16;
+    if rem > 0 {
+        let mut bytes = packed[full_words].to_le_bytes().into_iter();
+        while rem >= 4 {
+            out.extend_from_slice(&lut[bytes.next().unwrap() as usize]);
+            rem -= 4;
+        }
+        if rem > 0 {
+            out.extend_from_slice(&lut[bytes.next().unwrap() as usize][..rem]);
         }
     }
     out
@@ -168,6 +173,84 @@ pub(crate) fn dot_rows(
     }
 }
 
+/// Fast-tier table build for the activation-block LUT GEMM (`k % 4 == 0`
+/// only — every weight row starts byte-aligned): for activation block
+/// `bj` (columns `4*bj..4*bj+4`) and every possible weight byte `b`,
+///
+/// `out[((bj - b0) * 256 + b) * m + bi] = Σ_{t<4} decode(b, t) · x[bi, 4*bj + t]`
+///
+/// i.e. the partial dot sum that byte contributes to batch row `bi`.
+/// Built once per GEMM call and amortized over every output channel.
+/// Entries are filled by the prefix recurrence — an entry is a
+/// previously-filled entry (byte with the top trit cleared) plus one
+/// signed activation — so a block-row costs 255 madds per batch row, not
+/// 256×4. Entry values depend only on `x`, never on how the block range
+/// is partitioned, so parallel builds are deterministic.
+pub(crate) fn block_tables(x: &[f32], m: usize, k: usize, b0: usize, out: &mut [f32]) {
+    debug_assert_eq!(k % 4, 0);
+    debug_assert_eq!(out.len() % (256 * m), 0);
+    for (bl, tb) in out.chunks_mut(256 * m).enumerate() {
+        let bj = b0 + bl;
+        for bi in 0..m {
+            let xb = &x[bi * k + 4 * bj..bi * k + 4 * bj + 4];
+            tb[bi] = 0.0; // byte 0b00000000 decodes to four zeros
+            for (p, &xv) in xb.iter().enumerate() {
+                let filled = 1usize << (2 * p); // complete prefixes so far
+                for code in 1usize..4 {
+                    let v = CODE_VALUES[code] * xv;
+                    for base in 0..filled {
+                        tb[((code << (2 * p)) | base) * m + bi] = tb[base * m + bi] + v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fast-tier fused dot products over prebuilt [`block_tables`]: each
+/// 4-trit weight byte of row `r` costs one table row — `m` contiguous
+/// adds, no decode and no multiply in the inner loop (the bitnet.cpp
+/// "TL" lookup idea). Output layout and `inv_s` scaling match
+/// [`dot_rows`]; the contract vs the exact core is f32 tolerance (the
+/// current table chain happens to agree bitwise — trit weights are exact
+/// and both kernels group sums by weight byte), and results are
+/// independent of how callers split the row range.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dot_rows_lut(
+    packed: &[u32],
+    tables: &[f32],
+    m: usize,
+    k: usize,
+    r0: usize,
+    rows: usize,
+    inv_s: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(k % 4, 0);
+    debug_assert_eq!(out.len(), rows * m);
+    let bpr = k / 4; // weight bytes (= activation blocks) per row
+    debug_assert!(tables.len() >= bpr * 256 * m);
+    for rr in 0..rows {
+        let byte0 = (r0 + rr) * bpr;
+        let orow = &mut out[rr * m..(rr + 1) * m];
+        orow.fill(0.0);
+        for bj in 0..bpr {
+            let b = byte0 + bj;
+            let byte = ((packed[b / 4] >> ((b % 4) * 8)) & 0xFF) as usize;
+            if byte == 0 {
+                continue;
+            }
+            let trow = &tables[(bj * 256 + byte) * m..(bj * 256 + byte) * m + m];
+            for (o, &t) in orow.iter_mut().zip(trow.iter()) {
+                *o += t;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o *= inv_s;
+        }
+    }
+}
+
 /// Fused packed-ternary GEMM against a row-major `[n_out, k]` weight whose
 /// trits live contiguously in `packed` (row `r` starts at trit `r*k`):
 /// `y[M, n_out] = x[M, k] @ Wᵀ / scale`.
@@ -232,6 +315,31 @@ mod tests {
         for n in [1usize, 7, 64, 256 * 16] {
             assert_eq!(unpack(&words, n), unpack_ref(&words, n), "n={n}");
         }
+    }
+
+    /// Regression for the tail rewrite: every `n % 16` residue class, at
+    /// several word counts, both against `pack` round-trips and against
+    /// an over-long packed stream (the pre-sliced bulk loop must stop at
+    /// exactly `n` even when more words are available).
+    #[test]
+    fn unpack_covers_every_word_residue() {
+        for words in [1usize, 2, 5] {
+            for residue in 0..16usize {
+                let n = match (words.checked_sub(1), residue) {
+                    (Some(w), 0) => w * 16 + 16, // full final word
+                    (Some(w), r) => w * 16 + r,
+                    _ => unreachable!(),
+                };
+                let v: Vec<f32> = (0..n).map(|i| ((i * 7 % 3) as f32) - 1.0).collect();
+                let p = pack(&v).unwrap();
+                assert_eq!(unpack(&p, n), v, "words={words} residue={residue}");
+                // extra trailing words must not leak into the output
+                let mut long = p.clone();
+                long.extend_from_slice(&[0x5555_5555, 0xAAAA_AAAA]);
+                assert_eq!(unpack(&long, n), v, "overlong words={words} residue={residue}");
+            }
+        }
+        assert!(unpack(&[0x1234_5678], 0).is_empty());
     }
 
     #[test]
@@ -299,6 +407,76 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The fast-tier table build agrees with brute-force decode on every
+    /// byte: entry (block, byte, batch row) == Σ decode(byte,t)·x[4b+t].
+    #[test]
+    fn block_tables_match_brute_force() {
+        use crate::data::corpus::Rng;
+        let mut rng = Rng::new(0x7AB1);
+        for &(m, k) in &[(1usize, 8usize), (3, 12), (2, 4)] {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+            let blocks = k / 4;
+            let mut tables = vec![0f32; blocks * 256 * m];
+            block_tables(&x, m, k, 0, &mut tables);
+            for bj in 0..blocks {
+                for byte in 0..256usize {
+                    for bi in 0..m {
+                        let mut want = 0f32;
+                        for t in 0..4 {
+                            want += CODE_VALUES[(byte >> (2 * t)) & 0b11] * x[bi * k + 4 * bj + t];
+                        }
+                        let got = tables[(bj * 256 + byte) * m + bi];
+                        assert!(
+                            (got - want).abs() < 1e-6,
+                            "m={m} k={k} block {bj} byte {byte} row {bi}: {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The LUT dot core matches the exact byte-LUT core to f32 tolerance
+    /// on random aligned shapes — including partial row ranges (the way
+    /// the kernel layer calls it) and the unused 0b11 code.
+    #[test]
+    fn prop_dot_rows_lut_matches_exact_core() {
+        use crate::data::corpus::Rng;
+        let mut rng = Rng::new(0x1EE7);
+        for case in 0..60 {
+            let k = 4 * (1 + rng.below(40)); // byte-aligned rows only
+            let n_out = 1 + rng.below(30);
+            let m = 1 + rng.below(5);
+            let inv_s = 1.0 / (0.5 + 10.0 * rng.next_f64() as f32);
+            let trits: Vec<f32> = (0..n_out * k).map(|_| rng.below(3) as f32 - 1.0).collect();
+            let p = pack(&trits).unwrap();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+            let mut tables = vec![0f32; (k / 4) * 256 * m];
+            block_tables(&x, m, k, 0, &mut tables);
+            let r0 = rng.below(n_out);
+            let rows = n_out - r0;
+            let mut exact = vec![0f32; rows * m];
+            dot_rows(&p, &x, m, k, r0, rows, inv_s, &mut exact);
+            let mut lut = vec![0f32; rows * m];
+            dot_rows_lut(&p, &tables, m, k, r0, rows, inv_s, &mut lut);
+            for (i, (a, b)) in lut.iter().zip(exact.iter()).enumerate() {
+                let tol = 1e-5 + 1e-6 * k as f32;
+                assert!(
+                    (a - b).abs() <= tol * (1.0 + b.abs()),
+                    "case {case} (m={m} k={k} n={n_out} r0={r0}) [{i}]: lut {a} vs exact {b}"
+                );
+            }
+        }
+        // a stream of unused 0b11 codes decodes to zero through the tables
+        let words = vec![0xFFFF_FFFFu32; 2];
+        let x = vec![1.0f32; 8];
+        let mut tables = vec![0f32; 2 * 256];
+        block_tables(&x, 1, 8, 0, &mut tables);
+        let mut y = vec![1f32; 4];
+        dot_rows_lut(&words, &tables, 1, 8, 0, 4, 1.0, &mut y);
+        assert_eq!(y, vec![0.0; 4]);
     }
 
     #[test]

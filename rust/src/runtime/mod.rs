@@ -300,6 +300,13 @@ pub trait Decoder: Send + Sync {
     fn threads(&self) -> usize {
         1
     }
+    /// Kernel numeric tier the decoder's matmuls dispatch on
+    /// (`--precision exact|fast`). Informational, like
+    /// [`Decoder::threads`] — reported by `/healthz` and `/v1/stats` so
+    /// every serving number is attributable to a configuration.
+    fn precision(&self) -> crate::config::Precision {
+        crate::config::Precision::Exact
+    }
     fn vocab_size(&self) -> usize;
     /// KV bytes one sequence adds per cached position
     /// (`2 · n_layer · d_model · 4`).
@@ -340,6 +347,13 @@ pub trait Backend {
     /// throughput knob — never a numerics knob.
     fn threads(&self) -> usize {
         1
+    }
+
+    /// Kernel numeric tier (`--precision exact|fast`): `Exact` keeps the
+    /// bitwise-deterministic chains, `Fast` opts into tolerance-gated
+    /// SIMD-friendly kernels. The native backend reports its pool's tier.
+    fn precision(&self) -> crate::config::Precision {
+        crate::config::Precision::Exact
     }
 
     fn manifest(&self) -> &Manifest;
@@ -494,6 +508,11 @@ impl VariantRuntime {
     /// Kernel-layer worker threads (see [`Backend::threads`]).
     pub fn threads(&self) -> usize {
         self.backend.threads()
+    }
+
+    /// Kernel numeric tier (see [`Backend::precision`]).
+    pub fn precision(&self) -> crate::config::Precision {
+        self.backend.precision()
     }
 
     pub fn manifest(&self) -> &Manifest {

@@ -5,10 +5,14 @@
 //!
 //! The matmuls are a thin facade over the shared parallel kernel layer
 //! ([`crate::kernels::gemm`]) — cache-blocked and fanned across the
-//! backend's [`Pool`], bitwise-deterministic at every thread count. The
-//! original scalar triple loops survive only as `#[cfg(test)]` reference
-//! oracles below, pinned against the blocked kernels by exact-equality
-//! property tests over odd (non-block-multiple) shapes. The row-wise
+//! backend's [`Pool`], bitwise-deterministic at every thread count on
+//! the default exact tier. A pool carrying `Precision::Fast` dispatches
+//! the same three entry points to the wide multi-accumulator fast
+//! kernels (tolerance vs exact, still deterministic per thread count) —
+//! the facade itself is tier-agnostic. The original scalar triple loops
+//! survive only as `#[cfg(test)]` reference oracles below, pinned
+//! against the exact blocked kernels by exact-equality property tests
+//! over odd (non-block-multiple) shapes. The row-wise
 //! norm/softmax/quant helpers remain plain loops: they are O(tokens ·
 //! width) against the matmuls' O(tokens · width²).
 

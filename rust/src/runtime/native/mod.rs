@@ -47,8 +47,9 @@ impl NativeBackend {
     /// Build the backend for `spec` (errors on unknown models or
     /// unsupported bit widths — no filesystem access involved). The
     /// kernel pool is sized from the environment (`DQT_THREADS` /
-    /// available cores); use [`NativeBackend::with_pool`] for an explicit
-    /// handle (the `--threads` CLI path and the thread-parity tests).
+    /// available cores) on the `DQT_PRECISION` tier; use
+    /// [`NativeBackend::with_pool`] for an explicit handle (the
+    /// `--threads`/`--precision` CLI path and the parity tests).
     pub fn new(vspec: &VariantSpec) -> Result<Self> {
         Self::with_pool(vspec, Arc::new(Pool::from_env()))
     }
@@ -279,6 +280,10 @@ impl Backend for NativeBackend {
         self.pool.threads()
     }
 
+    fn precision(&self) -> crate::config::Precision {
+        self.pool.precision()
+    }
+
     fn manifest(&self) -> &Manifest {
         &self.layout.manifest
     }
@@ -499,6 +504,10 @@ impl Decoder for NativeDecoder {
 
     fn threads(&self) -> usize {
         self.w.pool.threads()
+    }
+
+    fn precision(&self) -> crate::config::Precision {
+        self.w.pool.precision()
     }
 
     fn vocab_size(&self) -> usize {

@@ -601,7 +601,10 @@ impl<'a> Net<'a> {
 /// AbsMean scale — the decode-free path, where every matmul runs fused off
 /// the codes via [`kernels::ternary::gemm_nt`] and no f32 weight is
 /// materialized. Both forms fan across the serving pool: output channels
-/// of the packed stream, output rows/columns of the dense GEMM.
+/// of the packed stream, output rows/columns of the dense GEMM. The
+/// pool's precision tier rides along — a fast-tier pool routes eligible
+/// dense matmuls to the multi-accumulator microkernels and eligible
+/// packed matmuls to the activation-block LUT GEMM, with no change here.
 pub(crate) enum DecodeLin {
     Dense(Vec<f32>),
     Ternary { words: Vec<u32>, scale: f32 },

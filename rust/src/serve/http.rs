@@ -130,6 +130,7 @@ fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
                 .set("packed_projections", engine.decoder().packed_projections())
                 .set("n_projections", engine.decoder().n_projections())
                 .set("threads", engine.decoder().threads())
+                .set("precision", engine.decoder().precision().as_str())
                 .set("pending", sched.pending());
             respond(&mut stream, 200, &body)
         }
@@ -142,9 +143,11 @@ fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
                 .set("tokens_processed", st.tokens_processed)
                 .set("tokens_generated", st.tokens_generated)
                 .set("peak_batch", st.peak_batch)
-                // configuration attribution: kernel threads + cumulative
-                // decode throughput, so recorded numbers are comparable
+                // configuration attribution: kernel threads, numeric tier
+                // + cumulative decode throughput, so recorded numbers are
+                // comparable
                 .set("threads", sched.engine().decoder().threads())
+                .set("precision", sched.engine().decoder().precision().as_str())
                 .set("decode_ns", st.decode_ns)
                 .set("decode_tokens_per_sec", st.decode_tokens_per_sec())
                 .set("pending", sched.pending());

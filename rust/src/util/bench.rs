@@ -195,6 +195,13 @@ impl Bench {
         self
     }
 
+    /// Mean nanoseconds of an already-recorded benchmark — lets a bench
+    /// binary assert acceptance floors on itself (e.g. the fast-tier
+    /// kernels must beat the exact tier at equal thread count).
+    pub fn mean_ns(&self, name: &str) -> Option<f64> {
+        self.records.iter().find(|r| r.name == name).map(|r| r.mean_ns)
+    }
+
     /// Write all records as JSON under `results/bench/<group>.json`.
     pub fn save(&self) {
         use crate::util::json::Value;

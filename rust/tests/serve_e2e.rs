@@ -7,8 +7,9 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
 
-use dqt::config::{Mode, VariantSpec};
+use dqt::config::{Mode, Precision, VariantSpec};
 use dqt::data::Pipeline;
+use dqt::kernels::Pool;
 use dqt::runtime::{Decoder, NativeBackend, VariantRuntime};
 use dqt::serve::{Engine, FinishReason, GenParams, Scheduler, Server};
 use dqt::util::json;
@@ -17,8 +18,7 @@ fn ternary_spec() -> VariantSpec {
     VariantSpec::new("test", Mode::Dqt, 1.58)
 }
 
-fn engine_for(spec: &VariantSpec, seed: u32, ternary: bool) -> Engine {
-    let vrt = VariantRuntime::native(spec).unwrap();
+fn engine_on(vrt: &VariantRuntime, seed: u32, ternary: bool) -> Engine {
     let state = vrt.init_state(seed).unwrap();
     let m = vrt.manifest();
     let pipeline = Pipeline::build(
@@ -28,7 +28,11 @@ fn engine_for(spec: &VariantSpec, seed: u32, ternary: bool) -> Engine {
         m.variant.model.max_seq_len,
     )
     .unwrap();
-    Engine::new(&vrt, &state, pipeline.tokenizer.clone(), ternary).unwrap()
+    Engine::new(vrt, &state, pipeline.tokenizer.clone(), ternary).unwrap()
+}
+
+fn engine_for(spec: &VariantSpec, seed: u32, ternary: bool) -> Engine {
+    engine_on(&VariantRuntime::native(spec).unwrap(), seed, ternary)
 }
 
 /// Greedy generation is a pure function of (weights, prompt); sampled
@@ -149,6 +153,54 @@ fn continuous_batching_matches_solo_generation() {
     assert!(st.tokens_processed > 0 && st.tokens_generated > 0);
 }
 
+/// Batch invariance holds on the fast tier too: the `--precision fast`
+/// kernels reassociate sums, but a sequence's logits may never depend on
+/// which other sequences share its decode batch. Same six mixed requests
+/// as above, forced through a width-3 batch on a fast pool, compared
+/// token for token against their solo runs on the same engine.
+#[test]
+fn fast_precision_batching_matches_solo_generation() {
+    let vrt = VariantRuntime::native_with_pool(
+        &ternary_spec(),
+        Arc::new(Pool::with_precision(4, Precision::Fast)),
+    )
+    .unwrap();
+    let engine = Arc::new(engine_on(&vrt, 42, false));
+    assert_eq!(engine.decoder().precision(), Precision::Fast);
+    let sched = Scheduler::new(engine.clone(), 3);
+    let reqs: Vec<(&str, GenParams)> = vec![
+        ("the cat", GenParams { max_new_tokens: 8, ..Default::default() }),
+        ("a dog sat", GenParams { max_new_tokens: 5, ..Default::default() }),
+        (
+            "the mat",
+            GenParams { max_new_tokens: 9, temperature: 1.2, seed: 3, ..Default::default() },
+        ),
+        ("", GenParams { max_new_tokens: 6, ..Default::default() }),
+        (
+            "ran to",
+            GenParams { max_new_tokens: 7, temperature: 0.8, top_k: 8, seed: 9, ..Default::default() },
+        ),
+        (
+            "the cat sat on",
+            GenParams { max_new_tokens: 10, temperature: 1.0, top_p: 0.9, seed: 4, ..Default::default() },
+        ),
+    ];
+    for (prompt, params) in &reqs {
+        sched.submit(prompt, params.clone());
+    }
+    sched.run_until_idle().unwrap();
+    let mut finished = sched.take_finished();
+    assert_eq!(finished.len(), reqs.len());
+    finished.sort_by_key(|(id, _)| *id);
+    for ((id, gen), (prompt, params)) in finished.iter().zip(reqs.iter()) {
+        let solo = engine.generate(prompt, params).unwrap();
+        assert_eq!(gen.token_ids, solo.token_ids, "fast request {id} ({prompt:?})");
+        assert_eq!(gen.text, solo.text, "fast request {id}");
+        assert_eq!(gen.finish, solo.finish, "fast request {id}");
+    }
+    assert_eq!(sched.stats().peak_batch, 3);
+}
+
 /// The serving path is decode-free for ternary variants: every projection
 /// matmul runs off 2-bit packed codes, and resident serving weights are a
 /// fraction of dense f32.
@@ -253,6 +305,12 @@ fn http_server_round_trip() {
     assert_eq!(
         health.get("threads").and_then(|v| v.as_usize()),
         stats.get("threads").and_then(|v| v.as_usize())
+    );
+    // both endpoints attribute the numeric tier; default engine is exact
+    assert_eq!(health.get("precision").and_then(|v| v.as_str()), Some("exact"));
+    assert_eq!(
+        health.get("precision").and_then(|v| v.as_str()),
+        stats.get("precision").and_then(|v| v.as_str())
     );
 
     let (code, err) = post_generate(addr, "{\"no_prompt\": 1}");

@@ -10,11 +10,14 @@ Checks (see docs/SERVING.md for the API contract):
   4. Sampled generation is deterministic per seed and, across a sweep of
      seeds, terminates at EOS at least once (the EOS-termination leg).
   5. Bad requests get 400, unknown routes 404.
+  6. /healthz and /v1/stats attribute the numeric tier ("precision");
+     when the CI matrix pins DQT_PRECISION the server must report it.
 
 Usage: serve_smoke_assert.py <base-url>
 """
 
 import json
+import os
 import sys
 import time
 import urllib.error
@@ -59,6 +62,12 @@ def main():
     assert health["packed_projections"] == health["n_projections"] > 0, (
         f"ternary serving must be decode-free: {health}"
     )
+    # the numeric tier is attributed on /healthz; when the smoke matrix
+    # pins DQT_PRECISION the server must be running the requested tier
+    assert health.get("precision") in ("exact", "fast"), health
+    want_precision = os.environ.get("DQT_PRECISION")
+    if want_precision:
+        assert health["precision"] == want_precision, (health, want_precision)
     print(f"healthz ok: {health}")
 
     # greedy: 200, nonzero tokens, deterministic
@@ -95,6 +104,7 @@ def main():
     status, stats = get("/v1/stats")
     assert status == 200 and stats["completed"] >= 3, stats
     assert stats.get("threads", 0) >= 1, stats
+    assert stats.get("precision") == health["precision"], (stats, health)
     assert stats.get("decode_tokens_per_sec", 0) > 0, stats
     status, err = post("/v1/generate", {"nope": 1})
     assert status == 400 and "error" in err, (status, err)
