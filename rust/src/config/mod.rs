@@ -513,6 +513,41 @@ pub fn shard_band(world: usize, rank: usize, rows: usize) -> anyhow::Result<(usi
     Ok((rank * per, (rank + 1) * per))
 }
 
+/// Observability endpoints (`--metrics-addr` / `--watch-addr`; see
+/// `docs/OBSERVABILITY.md`). Both default to off: metric *recording* is
+/// always on (pure atomics behind `TrainObs`/`ServeMetrics`), these only
+/// control whether anything is exposed on the network.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsConfig {
+    /// bind a `GET /metrics` Prometheus endpoint here (e.g. `127.0.0.1:9100`)
+    pub metrics_addr: Option<String>,
+    /// bind a step-stream publisher here for `dqt watch --join ADDR`
+    pub watch_addr: Option<String>,
+}
+
+impl ObsConfig {
+    /// Resolve from CLI values with environment fallback: an explicit CLI
+    /// address wins, else `DQT_METRICS_ADDR` / `DQT_WATCH_ADDR`; empty
+    /// strings (from either source) mean "off". Mirrors the precedence of
+    /// [`effective_threads`] / [`effective_precision`].
+    pub fn resolve(cli_metrics: Option<String>, cli_watch: Option<String>) -> ObsConfig {
+        let pick = |cli: Option<String>, env_key: &str| -> Option<String> {
+            cli.or_else(|| std::env::var(env_key).ok())
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+        };
+        ObsConfig {
+            metrics_addr: pick(cli_metrics, "DQT_METRICS_ADDR"),
+            watch_addr: pick(cli_watch, "DQT_WATCH_ADDR"),
+        }
+    }
+
+    /// True when at least one endpoint is configured.
+    pub fn enabled(&self) -> bool {
+        self.metrics_addr.is_some() || self.watch_addr.is_some()
+    }
+}
+
 impl DistConfig {
     pub fn is_distributed(&self) -> bool {
         self.world > 1
@@ -656,6 +691,20 @@ mod tests {
             }
             assert!(covered.iter().all(|&c| c == 1), "world {world}");
         }
+    }
+
+    #[test]
+    fn obs_config_resolution() {
+        // CLI wins; blank strings disable; default is fully off
+        let o = ObsConfig::resolve(Some("127.0.0.1:9100".into()), None);
+        assert_eq!(o.metrics_addr.as_deref(), Some("127.0.0.1:9100"));
+        assert!(o.enabled());
+        let o = ObsConfig::resolve(Some("  ".into()), Some(String::new()));
+        assert_eq!(o, ObsConfig::default());
+        assert!(!o.enabled());
+        let o = ObsConfig::resolve(None, Some("0.0.0.0:7007".into()));
+        assert_eq!(o.watch_addr.as_deref(), Some("0.0.0.0:7007"));
+        assert!(o.metrics_addr.is_none() || std::env::var("DQT_METRICS_ADDR").is_ok());
     }
 
     #[test]

@@ -34,6 +34,9 @@ pub struct Collective {
     /// rank 0: one stream per worker, index `rank - 1`; workers: exactly
     /// one stream, to rank 0. Empty for a solo world.
     links: Vec<TcpStream>,
+    /// cumulative wire traffic (sent + received) of the training frames
+    /// this rank moved — all-reduce and grid-sync; rendezvous/Bye excluded
+    wire_bytes: u64,
 }
 
 /// One rank's contribution flowing through [`tree_reduce`].
@@ -85,6 +88,7 @@ impl Collective {
             rank: 0,
             world: 1,
             links: Vec::new(),
+            wire_bytes: 0,
         }
     }
 
@@ -179,6 +183,7 @@ impl Collective {
             rank: 0,
             world,
             links,
+            wire_bytes: 0,
         })
     }
 
@@ -223,11 +228,19 @@ impl Collective {
             rank,
             world,
             links: vec![stream],
+            wire_bytes: 0,
         })
     }
 
     pub fn rank(&self) -> usize {
         self.rank
+    }
+
+    /// Cumulative training-frame wire traffic (sent + received) this rank
+    /// has moved — the `dqt_dist_*_bytes_total` metrics read deltas of
+    /// this counter.
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire_bytes
     }
 
     pub fn world(&self) -> usize {
@@ -278,8 +291,9 @@ impl Collective {
                 count: *count,
             }];
             for r in 1..self.world {
-                let frame = Frame::read_from(&mut self.links[r - 1])
+                let (frame, bytes) = Frame::read_from_counted(&mut self.links[r - 1])
                     .with_context(|| format!("rank 0 awaiting rank {r}'s partial"))?;
+                self.wire_bytes += bytes;
                 let Frame::GradSet {
                     step: s,
                     nll,
@@ -307,6 +321,7 @@ impl Collective {
                 link.write_all(&buf)?;
                 link.flush()?;
             }
+            self.wire_bytes += buf.len() as u64 * self.links.len() as u64;
             let Frame::GradSet {
                 nll: rn,
                 count: rc,
@@ -324,15 +339,16 @@ impl Collective {
         } else {
             let local: Vec<Option<Vec<f32>>> =
                 grads.iter_mut().map(std::mem::take).collect();
-            Frame::GradSet {
+            self.wire_bytes += Frame::GradSet {
                 step,
                 nll: *nll,
                 count: *count,
                 entries: local,
             }
             .write_to(&mut self.links[0])?;
-            let frame = Frame::read_from(&mut self.links[0])
+            let (frame, bytes) = Frame::read_from_counted(&mut self.links[0])
                 .with_context(|| format!("rank {} awaiting the reduced set", self.rank))?;
+            self.wire_bytes += bytes;
             let Frame::GradSet {
                 step: s,
                 nll: rn,
@@ -462,10 +478,13 @@ impl Collective {
                 unreachable!("build_grid_sync returns GridSync");
             };
             Self::apply_grid_sync(manifest, state, entries)?;
-            Ok(buf.len() as u64 * self.links.len() as u64)
+            let total = buf.len() as u64 * self.links.len() as u64;
+            self.wire_bytes += total;
+            Ok(total)
         } else {
             let (frame, bytes) = Frame::read_from_counted(&mut self.links[0])
                 .with_context(|| format!("rank {} awaiting grid sync", self.rank))?;
+            self.wire_bytes += bytes;
             let Frame::GridSync { step: s, entries } = frame else {
                 return Err(anyhow!("rank 0 sent a non-sync frame at a sync step"));
             };
@@ -615,12 +634,16 @@ mod tests {
                     .unwrap();
                 acc.push(grads[0].as_ref().unwrap()[0]);
             }
+            let wire = col.wire_bytes();
             col.shutdown().unwrap();
-            acc
+            (acc, wire)
         });
-        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[0].0, outs[1].0);
         // step s: (s+1) + 2(s+1) = 3(s+1)
-        assert_eq!(outs[0], vec![3.0, 6.0, 9.0, 12.0, 15.0]);
+        assert_eq!(outs[0].0, vec![3.0, 6.0, 9.0, 12.0, 15.0]);
+        // in a 2-rank star both ends move the same frames: bytes agree
+        assert!(outs[0].1 > 0, "rank 0 counted no wire traffic");
+        assert_eq!(outs[0].1, outs[1].1);
     }
 
     /// A stray connection (port scanner / health check) that talks

@@ -13,6 +13,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::{DistConfig, TrainConfig, VariantSpec};
 use crate::data::Pipeline;
 use crate::kernels::Pool;
+use crate::obs::TrainObs;
 use crate::runtime::{State, VariantRuntime};
 use crate::train::{RunMetrics, Trainer};
 
@@ -36,6 +37,10 @@ impl LocalWorkers {
         let mut children = Vec::new();
         for rank in 1..world {
             let child = Command::new(&exe)
+                // spawned ranks must not inherit rank 0's observability
+                // addresses — every child would race to bind them
+                .env_remove("DQT_METRICS_ADDR")
+                .env_remove("DQT_WATCH_ADDR")
                 .arg("worker")
                 .arg("--rank")
                 .arg(rank.to_string())
@@ -91,12 +96,19 @@ pub struct DistReport {
 /// (callers need its manifest to persist the checkpoint) with the final
 /// state + metrics — bitwise equal to what `--workers 1` produces, by
 /// the determinism contract — plus a wire-traffic report.
+///
+/// When `obs` is given, the trainer reports through it: step/loss gauges
+/// and all-reduce / grid-sync accounting land in its registry (served by
+/// `--metrics-addr`) and per-step frames stream to any `--watch-addr`
+/// publisher attached to it. Observation never touches the reduction, so
+/// the bitwise contract is unaffected.
 pub fn train_distributed(
     spec: &VariantSpec,
     tcfg: &TrainConfig,
     dcfg: &DistConfig,
     pool: Option<Arc<Pool>>,
     spawn_passthrough: Option<&[String]>,
+    obs: Option<Arc<TrainObs>>,
 ) -> Result<(VariantRuntime, State, RunMetrics, DistReport)> {
     if dcfg.rank != 0 {
         return Err(anyhow!("train_distributed is the rank-0 entry"));
@@ -142,8 +154,11 @@ pub fn train_distributed(
     };
 
     let col = Collective::host(listener, dcfg.world, &variant, RENDEZVOUS_TIMEOUT)?;
-    let mut ex = DistExchange::new(col, dcfg);
+    let mut ex = DistExchange::with_obs(col, dcfg, obs.clone());
     let mut trainer = Trainer::new(&vrt, &pipeline, tcfg.clone());
+    if let Some(obs) = obs {
+        trainer.obs = obs;
+    }
     let world = dcfg.world;
     trainer.progress = Some(Box::new(move |step, loss| {
         eprintln!("[rank 0/{world}] step {step}: loss {loss:.4}");

@@ -36,9 +36,13 @@ pub mod coordinator;
 pub mod wire;
 pub mod worker;
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::config::DistConfig;
+use crate::obs::TrainObs;
 use crate::runtime::{GradReducer, Manifest, State};
 use crate::train::StepExchange;
 
@@ -50,22 +54,36 @@ pub use wire::Frame;
 /// collective as the gradient reducer plus the every-K-steps packed-grid
 /// resync. A `Collective::solo()` exchange is the 1-worker reference —
 /// same code path, no sockets.
+///
+/// The exchange is itself the [`GradReducer`] handed to the backend: it
+/// wraps [`Collective::all_reduce`] with wall-time and wire-byte
+/// accounting into an optional [`TrainObs`] (the `dqt_dist_*` metrics),
+/// without touching the reduction itself — the bitwise-determinism
+/// contract is observation-free.
 pub struct DistExchange {
     col: Collective,
     sync_every: u64,
     packed_sync: bool,
     sync_bytes: u64,
     syncs: u64,
+    obs: Option<Arc<TrainObs>>,
 }
 
 impl DistExchange {
     pub fn new(col: Collective, dcfg: &DistConfig) -> Self {
+        Self::with_obs(col, dcfg, None)
+    }
+
+    /// An exchange that reports all-reduce latency/bytes and grid-sync
+    /// bytes into `obs` (when given).
+    pub fn with_obs(col: Collective, dcfg: &DistConfig, obs: Option<Arc<TrainObs>>) -> Self {
         DistExchange {
             col,
             sync_every: dcfg.sync_every,
             packed_sync: dcfg.packed_sync,
             sync_bytes: 0,
             syncs: 0,
+            obs,
         }
     }
 
@@ -85,6 +103,28 @@ impl DistExchange {
     }
 }
 
+impl GradReducer for DistExchange {
+    fn world(&self) -> usize {
+        self.col.world()
+    }
+
+    fn reduce(
+        &mut self,
+        step: u64,
+        grads: &mut [Option<Vec<f32>>],
+        nll: &mut f32,
+        count: &mut u64,
+    ) -> Result<()> {
+        let before = self.col.wire_bytes();
+        let t0 = Instant::now();
+        self.col.all_reduce(step, grads, nll, count)?;
+        if let Some(obs) = &self.obs {
+            obs.on_allreduce(self.col.wire_bytes() - before, t0.elapsed());
+        }
+        Ok(())
+    }
+}
+
 impl StepExchange for DistExchange {
     fn rank(&self) -> usize {
         self.col.rank()
@@ -95,7 +135,7 @@ impl StepExchange for DistExchange {
     }
 
     fn reducer(&mut self) -> &mut dyn GradReducer {
-        &mut self.col
+        self
     }
 
     fn sync_state(
@@ -112,6 +152,9 @@ impl StepExchange for DistExchange {
             .sync_grids(step, manifest, state, self.packed_sync)?;
         self.sync_bytes += bytes;
         self.syncs += 1;
+        if let Some(obs) = &self.obs {
+            obs.on_grid_sync(bytes);
+        }
         Ok(bytes)
     }
 }

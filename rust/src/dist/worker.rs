@@ -16,6 +16,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{DistConfig, TrainConfig, VariantSpec};
 use crate::data::Pipeline;
 use crate::kernels::Pool;
+use crate::obs::TrainObs;
 use crate::runtime::{State, VariantRuntime};
 use crate::train::{RunMetrics, Trainer};
 
@@ -24,11 +25,14 @@ use super::DistExchange;
 
 /// Join `dcfg.addr` as rank `dcfg.rank` and train to completion. Returns
 /// the final state + metrics (bit-identical to every other rank's).
+/// When `obs` is given, this rank's steps and collective traffic are
+/// recorded through it (`--metrics-addr` / `--watch-addr` on `worker`).
 pub fn run(
     spec: &VariantSpec,
     tcfg: &TrainConfig,
     dcfg: &DistConfig,
     pool: Option<Arc<Pool>>,
+    obs: Option<Arc<TrainObs>>,
 ) -> Result<(State, RunMetrics)> {
     if dcfg.rank == 0 {
         return Err(anyhow!("rank 0 trains via `train --workers N`, not `worker`"));
@@ -53,8 +57,11 @@ pub fn run(
         vrt.threads()
     );
     let col = Collective::join(&dcfg.addr, dcfg.rank, dcfg.world, &variant, RENDEZVOUS_TIMEOUT)?;
-    let mut ex = DistExchange::new(col, dcfg);
+    let mut ex = DistExchange::with_obs(col, dcfg, obs.clone());
     let mut trainer = Trainer::new(&vrt, &pipeline, tcfg.clone());
+    if let Some(obs) = obs {
+        trainer.obs = obs;
+    }
     let (rank, world) = (dcfg.rank, dcfg.world);
     trainer.progress = Some(Box::new(move |step, loss| {
         eprintln!("[rank {rank}/{world}] step {step}: loss {loss:.4}");

@@ -39,6 +39,13 @@
 //! grids (~16× less traffic than f32) — `dqt train --workers N` /
 //! `dqt worker --join ADDR` (see `docs/DISTRIBUTED.md`).
 //!
+//! Every subsystem reports into the [`obs`] observability plane: a
+//! zero-dependency Prometheus-text registry served as `GET /metrics` by
+//! the serve HTTP server and by standalone endpoints on train/dist runs
+//! (`--metrics-addr`), plus a push channel that streams per-step training
+//! telemetry to `dqt watch --join ADDR` (`--watch-addr`) — the metric
+//! and wire contract lives in `docs/OBSERVABILITY.md`.
+//!
 //! Deployment is the [`serve`] subsystem: KV-cached incremental decoding
 //! ([`runtime::Decoder`], decode-free off 2-bit packed ternary grids via
 //! the fused GEMV in [`quant::ternary`]), deterministic sampling,
@@ -56,6 +63,7 @@ pub mod dist;
 pub mod eval;
 pub mod kernels;
 pub mod memory;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -5,6 +5,7 @@
 //!   eval     evaluate a checkpoint (perplexity + zero-shot, ±ternary)
 //!   generate KV-cached sampled decoding from a checkpoint
 //!   serve    HTTP inference server (continuous batching) on a checkpoint
+//!   watch    tail a live training run's step stream (`--watch-addr`)
 //!   sweep    run a paper experiment (fig2 … table1, abl1/abl2)
 //!   report   render paper-style tables/figures from results/
 //!   list     show available artifacts and experiments
@@ -13,13 +14,18 @@
 //! Argument parsing is the in-tree `util::cli` (offline build, no clap).
 
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use dqt::config::{BackendKind, DistConfig, Env, Mode, Optimizer, TrainConfig, VariantSpec};
+use dqt::config::{
+    BackendKind, DistConfig, Env, Mode, ObsConfig, Optimizer, TrainConfig, VariantSpec,
+};
 use dqt::coordinator;
 use dqt::data::corpus::CorpusSpec;
 use dqt::data::Pipeline;
+use dqt::obs::{MetricsServer, Publisher, StreamFrame, TrainObs};
 use dqt::runtime::VariantRuntime;
 use dqt::train::{checkpoint, Trainer};
 use dqt::util::cli::Args;
@@ -54,8 +60,15 @@ COMMANDS
           [--no-spawn]         multi-host: wait for external `worker`s
           [--sync-every 25]    packed grid-weight resync period (0 = off)
           [--sync-format packed|f32]
+          [--metrics-addr H:P] serve GET /metrics (Prometheus text) for
+                               this rank (env: DQT_METRICS_ADDR)
+          [--watch-addr H:P]   stream per-step frames for `repro watch`
+                               (env: DQT_WATCH_ADDR; docs/OBSERVABILITY.md)
   worker  --rank R --workers N --join HOST:PORT (same variant/train flags
-          as the coordinator) — one rank of a multi-host run
+          as the coordinator, plus --metrics-addr/--watch-addr) — one
+          rank of a multi-host run
+  watch   --join HOST:PORT [--timeout 30]   tail a live run's step stream
+          (the run's --watch-addr); prints one line per optimizer step
   eval    --checkpoint <model.dqt> (same variant flags) [--dataset wiki]
           [--ternary] [--items 100]
   generate --checkpoint <model.dqt> (variant flags) --prompt \"text\"
@@ -63,7 +76,9 @@ COMMANDS
           [--seed 0] [--ternary] [--dataset wiki]
           [--data-seed 42  (must match the training --seed)]
   serve   --checkpoint <model.dqt> (variant flags) [--addr 127.0.0.1:8080]
-          [--max-batch 8] [--ternary] [--dataset wiki] [--data-seed 42]
+          [--max-batch 8] [--max-queue 0  reject new requests with 429
+          when this many are queued (0 = unbounded)] [--ternary]
+          [--dataset wiki] [--data-seed 42]  — also serves GET /metrics
   sweep   --exp fig2|fig3|fig4|fig5|fig6|fig7|fig9|table1|abl1|abl2|all
           [--steps N] [--workers 1]
   report  --exp table2|table3|memory|serving|dist|<exp-id with results>
@@ -192,9 +207,41 @@ fn dist_config_from(a: &Args, world: usize, rank: usize, addr: String) -> Result
     })
 }
 
+/// Stand up the configured observability endpoints for a training run:
+/// the shared `TrainObs` handle, its registry on `--metrics-addr`
+/// (`GET /metrics`), and a step-stream publisher on `--watch-addr`.
+/// Returns `None` when neither endpoint is configured — the trainer then
+/// keeps its default handle (pure atomics, no sockets, no threads).
+fn train_obs_from(a: &Args) -> Result<Option<Arc<TrainObs>>> {
+    let ocfg = ObsConfig::resolve(
+        a.get("metrics-addr").map(|s| s.to_string()),
+        a.get("watch-addr").map(|s| s.to_string()),
+    );
+    if !ocfg.enabled() {
+        return Ok(None);
+    }
+    let obs = Arc::new(TrainObs::new());
+    if let Some(addr) = &ocfg.metrics_addr {
+        let srv = MetricsServer::spawn(addr, obs.registry())?;
+        eprintln!("metrics: GET http://{}/metrics", srv.local_addr());
+    }
+    if let Some(addr) = &ocfg.watch_addr {
+        let p = Publisher::bind(addr)?;
+        eprintln!(
+            "watch: step stream on {} (tail with `repro watch --join {}`)",
+            p.local_addr(),
+            p.local_addr()
+        );
+        obs.set_publisher(p);
+    }
+    Ok(Some(obs))
+}
+
 /// The flags a spawned local worker must replay so every rank agrees on
 /// the variant, the schedule and the sync policy (`--rank`/`--join` are
-/// appended per worker by the spawner).
+/// appended per worker by the spawner). `--metrics-addr`/`--watch-addr`
+/// are deliberately *not* forwarded: every spawned rank would race to
+/// bind the same addresses — multi-host workers opt in per rank instead.
 fn dist_passthrough(a: &Args) -> Vec<String> {
     let mut v = Vec::new();
     for k in [
@@ -274,6 +321,7 @@ fn main() -> Result<()> {
                     &dcfg,
                     pool_from_args(&a)?,
                     spawn,
+                    train_obs_from(&a)?,
                 )?;
                 metrics.save(&out_dir)?;
                 checkpoint::save(
@@ -311,6 +359,9 @@ fn main() -> Result<()> {
             let pipeline =
                 Pipeline::build(&tcfg.dataset, tcfg.seed, cfg.vocab_size, cfg.max_seq_len)?;
             let mut tr = Trainer::new(&vrt, &pipeline, tcfg);
+            if let Some(obs) = train_obs_from(&a)? {
+                tr.obs = obs;
+            }
             tr.progress = Some(Box::new(|step, loss| {
                 eprintln!("step {step}: loss {loss:.4}");
             }));
@@ -340,7 +391,42 @@ fn main() -> Result<()> {
             }
             let tcfg = train_config_from(&a)?;
             let dcfg = dist_config_from(&a, world, rank, join)?;
-            dqt::dist::worker::run(&spec, &tcfg, &dcfg, pool_from_args(&a)?)?;
+            dqt::dist::worker::run(&spec, &tcfg, &dcfg, pool_from_args(&a)?, train_obs_from(&a)?)?;
+        }
+        "watch" => {
+            let addr = a.req("join")?;
+            let timeout: u64 = a.parse_or("timeout", 30)?;
+            dqt::obs::stream::watch(&addr, Duration::from_secs(timeout), |f| match f {
+                StreamFrame::RunStart {
+                    variant,
+                    dataset,
+                    world,
+                    total_steps,
+                } => println!(
+                    "run start: {variant} on {dataset} (world {world}, {total_steps} steps)"
+                ),
+                StreamFrame::Step {
+                    step,
+                    loss,
+                    lr,
+                    upd_frac,
+                    gnorm,
+                    step_ms,
+                } => println!(
+                    "step {step}: loss {loss:.4}  lr {lr:.2e}  upd {upd_frac:.4}  \
+                     gnorm {gnorm:.3}  ({step_ms:.1} ms)"
+                ),
+                StreamFrame::RunEnd {
+                    final_dev_loss,
+                    wall_secs,
+                } => {
+                    if final_dev_loss.is_nan() {
+                        println!("run end: {wall_secs:.1}s wall (no dev loss)");
+                    } else {
+                        println!("run end: dev loss {final_dev_loss:.4}, {wall_secs:.1}s wall");
+                    }
+                }
+            })?;
         }
         "eval" => {
             let spec = variant_spec(&a)?;
@@ -403,11 +489,12 @@ fn main() -> Result<()> {
             let precision = engine.decoder().precision().as_str();
             let addr = a.str_or("addr", "127.0.0.1:8080");
             let max_batch: usize = a.parse_or("max-batch", 8)?;
-            let server = dqt::serve::Server::bind(&addr, engine, max_batch)?;
+            let max_queue: usize = a.parse_or("max-queue", 0)?;
+            let server = dqt::serve::Server::bind_with(&addr, engine, max_batch, max_queue)?;
             eprintln!(
                 "serving {name} at http://{} (POST /v1/generate, GET /healthz, \
-                 GET /v1/stats; batch {max_batch}, {threads} kernel threads, \
-                 {precision} precision)",
+                 GET /v1/stats, GET /metrics; batch {max_batch}, queue cap \
+                 {max_queue}, {threads} kernel threads, {precision} precision)",
                 server.local_addr()?
             );
             server.run()?;

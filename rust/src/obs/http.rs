@@ -1,0 +1,123 @@
+//! Minimal pull endpoint: `GET /metrics` for train and dist runs.
+//!
+//! The serve subsystem mounts `/metrics` on its own HTTP server
+//! (`serve::http`); training and the dist coordinator/workers have no
+//! HTTP surface of their own, so [`MetricsServer::spawn`] gives them one
+//! — a background accept loop that renders an [`obs::Registry`] in
+//! Prometheus text exposition format v0.0.4 and serves nothing else.
+//! Zero dependencies, one short-lived thread per scrape.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::registry::Registry;
+
+/// Content type Prometheus scrapers expect from a text endpoint.
+pub const METRICS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+const SCRAPE_TIMEOUT: Duration = Duration::from_secs(5);
+const MAX_REQUEST_BYTES: usize = 16 * 1024;
+
+/// Handle for a running metrics endpoint. Dropping it does not stop the
+/// accept thread (it lives for the process, like the serve listener);
+/// keep it to learn the bound address.
+pub struct MetricsServer {
+    addr: SocketAddr,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (port 0 picks a free port) and serve `GET /metrics`
+    /// from `registry` on a background thread until the process exits.
+    pub fn spawn(addr: &str, registry: Arc<Registry>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics address {addr}"))?;
+        let bound = listener.local_addr()?;
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                let reg = registry.clone();
+                std::thread::spawn(move || {
+                    let _ = serve_scrape(stream, &reg);
+                });
+            }
+        });
+        Ok(MetricsServer { addr: bound })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+fn serve_scrape(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(SCRAPE_TIMEOUT))?;
+    stream.set_write_timeout(Some(SCRAPE_TIMEOUT))?;
+
+    // Read until the end of the request head; the endpoint takes no body.
+    let mut head = Vec::new();
+    let mut chunk = [0u8; 1024];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 || head.len() + n > MAX_REQUEST_BYTES {
+            return Ok(());
+        }
+        head.extend_from_slice(&chunk[..n]);
+    }
+    let request_line = std::str::from_utf8(&head)
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+
+    let (status, body) = match (method, path) {
+        ("GET", "/metrics") => ("200 OK", registry.render()),
+        _ => ("404 Not Found", "only GET /metrics is served here\n".to_string()),
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {METRICS_CONTENT_TYPE}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write!(stream, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        stream.flush().unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn scrape_returns_prometheus_text_and_404_elsewhere() {
+        let registry = Arc::new(Registry::new());
+        let c = registry.counter("dqt_test_scrapes_total", "Scrapes served.");
+        c.inc_by(3);
+        let server = MetricsServer::spawn("127.0.0.1:0", registry).unwrap();
+
+        let response = get(server.local_addr(), "/metrics");
+        assert!(response.starts_with("HTTP/1.1 200 OK"), "{response}");
+        assert!(response.contains(METRICS_CONTENT_TYPE), "{response}");
+        assert!(
+            response.contains("# TYPE dqt_test_scrapes_total counter"),
+            "{response}"
+        );
+        assert!(response.contains("dqt_test_scrapes_total 3\n"), "{response}");
+
+        let response = get(server.local_addr(), "/other");
+        assert!(response.starts_with("HTTP/1.1 404"), "{response}");
+    }
+}

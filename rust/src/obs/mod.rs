@@ -1,0 +1,34 @@
+//! Observability plane: metrics registry, `/metrics` endpoints, and
+//! live step streaming.
+//!
+//! Three zero-dependency pieces, all documented as a contract in
+//! `docs/OBSERVABILITY.md`:
+//!
+//! * [`registry`] — a Prometheus-text-format registry (counters, gauges,
+//!   fixed-bucket histograms) whose handles are `Arc`-shared atomics:
+//!   hot-path recording is lock-free and allocation-free, and rendered
+//!   output is deterministic for deterministic input.
+//! * [`http`] — [`MetricsServer`], a tiny `GET /metrics` listener for
+//!   processes with no HTTP surface of their own (train runs, the dist
+//!   coordinator and workers). The serve subsystem instead mounts
+//!   `/metrics` on its existing server (`serve::http`), backed by
+//!   `serve::ServeMetrics`.
+//! * [`stream`] — length-prefixed [`StreamFrame`]s pushed over TCP by a
+//!   [`Publisher`] (`--watch-addr`) and tailed by [`stream::watch`]
+//!   (`repro watch --join ADDR`): one frame per optimizer step, so a
+//!   live run's loss curve can be followed from another terminal.
+//!
+//! [`TrainObs`] bundles the training/distributed metrics and the
+//! publisher behind one handle that rides through `Trainer` the way
+//! `kernels::Pool` does — default-on, and inert (pure atomics) unless a
+//! metrics or watch address is configured.
+
+pub mod http;
+pub mod registry;
+pub mod stream;
+pub mod train;
+
+pub use http::{MetricsServer, METRICS_CONTENT_TYPE};
+pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use stream::{Publisher, StreamFrame};
+pub use train::{TrainObs, TIME_BUCKETS};

@@ -1,0 +1,571 @@
+//! Prometheus-text-format metric registry — counters, gauges, histograms.
+//!
+//! Zero-dependency and deterministic by construction: families render in
+//! registration order, series within a family render in label order, and
+//! histogram bucket layouts are fixed at registration, so two registries
+//! built and driven identically emit byte-identical exposition text (the
+//! property the encoder tests pin). Handles ([`Counter`], [`Gauge`],
+//! [`Histogram`]) are `Arc`-shared atomics, so hot-path recording is a
+//! few relaxed atomic ops — no locks, no allocation — the same
+//! "instrumentation behind a cheap handle" shape as `kernels::Pool`.
+//!
+//! The output is the Prometheus text exposition format v0.0.4: `# HELP` /
+//! `# TYPE` comment lines, one sample per line, histogram series as
+//! cumulative `_bucket{le="..."}` counts plus `_sum` and `_count`.
+//! `docs/OBSERVABILITY.md` is the documented contract over every name
+//! registered here (enforced by `tests/obs_contract.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A monotonically increasing sample (f64 stored as atomic bits).
+/// Negative or NaN increments are ignored — counters only go up.
+#[derive(Debug, Default)]
+pub struct Counter {
+    bits: AtomicU64,
+}
+
+impl Counter {
+    fn new() -> Counter {
+        Counter {
+            bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn inc(&self) {
+        self.add(1.0);
+    }
+
+    pub fn inc_by(&self, n: u64) {
+        self.add(n as f64);
+    }
+
+    pub fn add(&self, d: f64) {
+        if d.is_nan() || d < 0.0 {
+            return;
+        }
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self
+                .bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// A sample that can go up and down (f64 stored as atomic bits).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge {
+            bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// A fixed-bucket histogram. Bucket bounds are set at registration and
+/// never change, so the rendered layout is deterministic; counts are
+/// stored per bucket (non-cumulative) and summed cumulatively at render
+/// time, as the exposition format requires.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// one slot per bound plus the final `+Inf` slot
+    buckets: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        assert!(
+            bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite (+Inf is implicit)"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_nan() { 0.0 } else { v };
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// `(upper bound, cumulative count)` per bucket, ending with the
+    /// implicit `(+Inf, total)` bucket.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.buckets.len());
+        let mut running = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            running += b.load(Ordering::Relaxed);
+            let le = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((le, running));
+        }
+        out
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Series {
+    labels: Vec<(String, String)>,
+    instrument: Instrument,
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: Kind,
+    series: Vec<Series>,
+}
+
+/// The metric registry: families in registration order, each holding one
+/// series per distinct label set. Registration is idempotent — asking for
+/// an already-registered `(name, labels)` returns the existing handle —
+/// and a name collision across kinds panics at registration time (a
+/// programmer error, never reachable from the hot path).
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn escape_label_value(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render a sample value: integral values print without a fraction (the
+/// common case for counts), everything else via the shortest `f64` form.
+fn fmt_value(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn fmt_le(le: f64) -> String {
+    if le.is_infinite() {
+        "+Inf".to_string()
+    } else {
+        format!("{le}")
+    }
+}
+
+fn label_block(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.counter_with(name, help, &[])
+    }
+
+    pub fn counter_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Counter> {
+        match self.register(name, help, Kind::Counter, labels, || {
+            Instrument::Counter(Arc::new(Counter::new()))
+        }) {
+            Instrument::Counter(c) => c,
+            _ => unreachable!("registered as counter"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        self.gauge_with(name, help, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.register(name, help, Kind::Gauge, labels, || {
+            Instrument::Gauge(Arc::new(Gauge::new()))
+        }) {
+            Instrument::Gauge(g) => g,
+            _ => unreachable!("registered as gauge"),
+        }
+    }
+
+    /// Register a histogram with a fixed, strictly ascending bucket
+    /// layout (`+Inf` is implicit).
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Arc<Histogram> {
+        match self.register(name, help, Kind::Histogram, &[], || {
+            Instrument::Histogram(Arc::new(Histogram::new(bounds)))
+        }) {
+            Instrument::Histogram(h) => h,
+            _ => unreachable!("registered as histogram"),
+        }
+    }
+
+    fn register(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Instrument,
+    ) -> Instrument {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        for (k, _) in labels {
+            assert!(valid_name(k), "invalid label name {k:?} on {name:?}");
+        }
+        let labels: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        let mut fams = self.families.lock().unwrap();
+        let fam = match fams.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                assert!(
+                    f.kind == kind,
+                    "metric {name:?} registered as {} and {}",
+                    f.kind.as_str(),
+                    kind.as_str()
+                );
+                f
+            }
+            None => {
+                fams.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    kind,
+                    series: Vec::new(),
+                });
+                fams.last_mut().unwrap()
+            }
+        };
+        if let Some(s) = fam.series.iter().find(|s| s.labels == labels) {
+            return s.instrument.clone();
+        }
+        let instrument = make();
+        fam.series.push(Series {
+            labels,
+            instrument: instrument.clone(),
+        });
+        instrument
+    }
+
+    /// Every registered family name, in registration order — the set the
+    /// docs contract test checks against `docs/OBSERVABILITY.md`.
+    pub fn metric_names(&self) -> Vec<String> {
+        self.families
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|f| f.name.clone())
+            .collect()
+    }
+
+    /// Render the full registry in the Prometheus text exposition format.
+    pub fn render(&self) -> String {
+        let fams = self.families.lock().unwrap();
+        let mut out = String::new();
+        for f in fams.iter() {
+            out.push_str("# HELP ");
+            out.push_str(&f.name);
+            out.push(' ');
+            out.push_str(&escape_help(&f.help));
+            out.push('\n');
+            out.push_str("# TYPE ");
+            out.push_str(&f.name);
+            out.push(' ');
+            out.push_str(f.kind.as_str());
+            out.push('\n');
+            let mut order: Vec<usize> = (0..f.series.len()).collect();
+            order.sort_by(|&a, &b| f.series[a].labels.cmp(&f.series[b].labels));
+            for i in order {
+                let s = &f.series[i];
+                match &s.instrument {
+                    Instrument::Counter(c) => {
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            f.name,
+                            label_block(&s.labels),
+                            fmt_value(c.value())
+                        ));
+                    }
+                    Instrument::Gauge(g) => {
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            f.name,
+                            label_block(&s.labels),
+                            fmt_value(g.value())
+                        ));
+                    }
+                    Instrument::Histogram(h) => {
+                        for (le, cum) in h.cumulative() {
+                            let mut labels = s.labels.clone();
+                            labels.push(("le".to_string(), fmt_le(le)));
+                            out.push_str(&format!(
+                                "{}_bucket{} {cum}\n",
+                                f.name,
+                                label_block(&labels)
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "{}_sum{} {}\n",
+                            f.name,
+                            label_block(&s.labels),
+                            fmt_value(h.sum())
+                        ));
+                        out.push_str(&format!(
+                            "{}_count{} {}\n",
+                            f.name,
+                            label_block(&s.labels),
+                            h.count()
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::new();
+        let c = r.counter("c_total", "a counter");
+        c.inc();
+        c.inc_by(2);
+        c.add(0.5);
+        assert_eq!(c.value(), 3.5);
+        // counters are monotonic: negative and NaN increments are ignored
+        c.add(-10.0);
+        c.add(f64::NAN);
+        assert_eq!(c.value(), 3.5);
+        let g = r.gauge("g", "a gauge");
+        g.set(7.25);
+        assert_eq!(g.value(), 7.25);
+        g.set(-1.0);
+        assert_eq!(g.value(), -1.0);
+        let text = r.render();
+        assert!(text.contains("# TYPE c_total counter\n"), "{text}");
+        assert!(text.contains("c_total 3.5\n"), "{text}");
+        assert!(text.contains("# TYPE g gauge\n"), "{text}");
+        assert!(text.contains("g -1\n"), "{text}");
+    }
+
+    #[test]
+    fn help_and_label_values_are_escaped() {
+        let r = Registry::new();
+        r.counter_with(
+            "esc_total",
+            "line one\nback\\slash",
+            &[("path", "a\"b\\c\nd")],
+        );
+        let text = r.render();
+        assert!(
+            text.contains("# HELP esc_total line one\\nback\\\\slash\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("esc_total{path=\"a\\\"b\\\\c\\nd\"} 0\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn series_render_in_label_order_regardless_of_registration_order() {
+        let r = Registry::new();
+        r.counter_with("codes_total", "by code", &[("code", "504")]).inc();
+        r.counter_with("codes_total", "by code", &[("code", "200")]).inc_by(3);
+        r.counter_with("codes_total", "by code", &[("code", "404")]).inc_by(2);
+        let text = r.render();
+        let p200 = text.find("code=\"200\"").unwrap();
+        let p404 = text.find("code=\"404\"").unwrap();
+        let p504 = text.find("code=\"504\"").unwrap();
+        assert!(p200 < p404 && p404 < p504, "{text}");
+        // one HELP/TYPE header for the whole family
+        assert_eq!(text.matches("# TYPE codes_total").count(), 1);
+    }
+
+    #[test]
+    fn registration_is_idempotent_per_label_set() {
+        let r = Registry::new();
+        let a = r.counter_with("dup_total", "d", &[("k", "v")]);
+        let b = r.counter_with("dup_total", "d", &[("k", "v")]);
+        a.inc();
+        b.inc();
+        // same underlying atomic: both handles saw both increments
+        assert_eq!(a.value(), 2.0);
+        assert_eq!(
+            r.render().matches("dup_total{k=\"v\"}").count(),
+            1,
+            "one series, not two"
+        );
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let r = Registry::new();
+        let h = r.histogram("lat_seconds", "latency", &[0.1, 1.0]);
+        for v in [0.05, 0.5, 5.0, 0.5] {
+            h.observe(v);
+        }
+        // boundary values land in their own bucket (le is inclusive)
+        h.observe(0.1);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 6.25).abs() < 1e-12);
+        assert_eq!(
+            h.cumulative(),
+            vec![(0.1, 2), (1.0, 4), (f64::INFINITY, 5)]
+        );
+        let text = r.render();
+        assert!(text.contains("lat_seconds_bucket{le=\"0.1\"} 2\n"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"1\"} 4\n"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"+Inf\"} 5\n"), "{text}");
+        assert!(text.contains("lat_seconds_sum 6.25\n"), "{text}");
+        assert!(text.contains("lat_seconds_count 5\n"), "{text}");
+        // cumulative counts never decrease across ascending bounds
+        let cum = h.cumulative();
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn render_is_deterministic_under_fixed_input() {
+        let build = || {
+            let r = Registry::new();
+            r.counter("a_total", "a").inc_by(3);
+            r.gauge("b", "b").set(1.5);
+            let h = r.histogram("c_seconds", "c", &[0.01, 0.1, 1.0]);
+            h.observe(0.02);
+            h.observe(0.2);
+            r.counter_with("d_total", "d", &[("k", "x")]).inc();
+            r.render()
+        };
+        let one = build();
+        assert_eq!(one, build(), "identical construction must render identically");
+        let r = Registry::new();
+        r.counter("a_total", "a");
+        assert_eq!(r.render(), r.render(), "repeated renders are stable");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid metric name")]
+    fn invalid_metric_name_panics_at_registration() {
+        Registry::new().counter("bad-name", "hyphens are not allowed");
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_collision_panics_at_registration() {
+        let r = Registry::new();
+        r.counter("twice", "as counter");
+        r.gauge("twice", "as gauge");
+    }
+
+    #[test]
+    fn values_render_integral_or_shortest_float() {
+        assert_eq!(fmt_value(3.0), "3");
+        assert_eq!(fmt_value(0.0), "0");
+        assert_eq!(fmt_value(3.5), "3.5");
+        assert_eq!(fmt_value(-2.0), "-2");
+        assert_eq!(fmt_le(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_le(0.25), "0.25");
+    }
+}

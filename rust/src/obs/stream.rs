@@ -1,0 +1,549 @@
+//! Live per-step training telemetry: length-prefixed frames over TCP.
+//!
+//! The push half of the observability plane. A training run binds a
+//! [`Publisher`] (`--watch-addr`), which broadcasts one [`StreamFrame`]
+//! per step to every connected subscriber; `repro watch --join ADDR`
+//! ([`watch`]) tails the stream and prints per-step loss lines while the
+//! run is live. Frames use the same wire idiom as `dist::wire`: a 1-byte
+//! tag, an 8-byte little-endian payload length, then the payload, with
+//! the same corrupt-frame hardening (truncation, oversized lengths,
+//! unknown tags and trailing bytes all error instead of panicking).
+//!
+//! The stream is strictly one-way and lossy-by-design on the publisher
+//! side: a subscriber that stalls past the write timeout is dropped so
+//! the training loop can never block on an observer. Late subscribers
+//! receive the stored [`StreamFrame::RunStart`] on connect, then every
+//! subsequent step. The frame layouts are documented in
+//! `docs/OBSERVABILITY.md` (streaming wire table).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Bumped whenever a stream frame layout changes; carried by `RunStart`.
+pub const STREAM_PROTOCOL_VERSION: u32 = 1;
+
+/// Hard cap on one frame's payload — step telemetry is tiny, so anything
+/// large is a corrupt length prefix.
+pub const MAX_STREAM_FRAME_BYTES: u64 = 1 << 20;
+
+/// How long a broadcast write may stall before the subscriber is dropped.
+const SUBSCRIBER_WRITE_TIMEOUT: Duration = Duration::from_secs(2);
+
+const TAG_RUN_START: u8 = 1;
+const TAG_STEP: u8 = 2;
+const TAG_RUN_END: u8 = 3;
+
+/// One message of the step-streaming protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StreamFrame {
+    /// Sent once at run start (and replayed to late subscribers): what is
+    /// training and how big the run is.
+    RunStart {
+        variant: String,
+        dataset: String,
+        world: u32,
+        total_steps: u64,
+    },
+    /// One completed optimizer step — the fields of
+    /// `train::metrics::StepRecord`, on the wire.
+    Step {
+        step: u64,
+        loss: f32,
+        lr: f32,
+        upd_frac: f32,
+        gnorm: f32,
+        step_ms: f32,
+    },
+    /// The run finished; subscribers should disconnect. `final_dev_loss`
+    /// is NaN when the run computed none.
+    RunEnd {
+        final_dev_loss: f32,
+        wall_secs: f64,
+    },
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked payload reader (the `dist::wire` idiom).
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow!("corrupt stream frame: {what} length overflows"))?;
+        if end > self.buf.len() {
+            return Err(anyhow!(
+                "corrupt stream frame: {what} wants {n} bytes, {} remain",
+                self.buf.len() - self.pos
+            ));
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.u32(what)? as usize;
+        let bytes = self.take(n, what)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|_| anyhow!("corrupt stream frame: {what} is not UTF-8"))?
+            .to_string())
+    }
+
+    fn finish(self, tag: &str) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(anyhow!(
+                "corrupt stream frame: {tag} has {} trailing bytes",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl StreamFrame {
+    fn tag(&self) -> u8 {
+        match self {
+            StreamFrame::RunStart { .. } => TAG_RUN_START,
+            StreamFrame::Step { .. } => TAG_STEP,
+            StreamFrame::RunEnd { .. } => TAG_RUN_END,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            StreamFrame::RunStart {
+                variant,
+                dataset,
+                world,
+                total_steps,
+            } => {
+                put_u32(&mut buf, STREAM_PROTOCOL_VERSION);
+                put_str(&mut buf, variant);
+                put_str(&mut buf, dataset);
+                put_u32(&mut buf, *world);
+                put_u64(&mut buf, *total_steps);
+            }
+            StreamFrame::Step {
+                step,
+                loss,
+                lr,
+                upd_frac,
+                gnorm,
+                step_ms,
+            } => {
+                put_u64(&mut buf, *step);
+                put_f32(&mut buf, *loss);
+                put_f32(&mut buf, *lr);
+                put_f32(&mut buf, *upd_frac);
+                put_f32(&mut buf, *gnorm);
+                put_f32(&mut buf, *step_ms);
+            }
+            StreamFrame::RunEnd {
+                final_dev_loss,
+                wall_secs,
+            } => {
+                put_f32(&mut buf, *final_dev_loss);
+                buf.extend_from_slice(&wall_secs.to_le_bytes());
+            }
+        }
+        buf
+    }
+
+    /// Serialize to the full wire form: tag, length prefix, payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.payload();
+        let mut buf = Vec::with_capacity(9 + payload.len());
+        buf.push(self.tag());
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        buf
+    }
+
+    /// Read one frame. `Ok(None)` means the stream ended cleanly at a
+    /// frame boundary (the publisher closed the connection).
+    pub fn read_from(r: &mut impl Read) -> Result<Option<StreamFrame>> {
+        let mut header = [0u8; 9];
+        let mut got = 0usize;
+        while got < header.len() {
+            let n = r
+                .read(&mut header[got..])
+                .map_err(|e| anyhow!("reading stream frame header: {e}"))?;
+            if n == 0 {
+                if got == 0 {
+                    return Ok(None); // clean EOF between frames
+                }
+                return Err(anyhow!(
+                    "truncated stream frame header (connection closed mid-frame)"
+                ));
+            }
+            got += n;
+        }
+        let tag = header[0];
+        let len = u64::from_le_bytes(header[1..9].try_into().unwrap());
+        if len > MAX_STREAM_FRAME_BYTES {
+            return Err(anyhow!(
+                "corrupt stream frame: oversized payload length {len} (cap {MAX_STREAM_FRAME_BYTES})"
+            ));
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                anyhow!("stream frame payload truncated: wanted {len} bytes")
+            } else {
+                anyhow!("reading stream frame payload: {e}")
+            }
+        })?;
+        Ok(Some(Self::decode(tag, &payload)?))
+    }
+
+    fn decode(tag: u8, payload: &[u8]) -> Result<StreamFrame> {
+        let mut c = Cursor::new(payload);
+        let frame = match tag {
+            TAG_RUN_START => {
+                let version = c.u32("run_start version")?;
+                if version != STREAM_PROTOCOL_VERSION {
+                    return Err(anyhow!(
+                        "stream protocol mismatch: publisher speaks v{version}, \
+                         this build speaks v{STREAM_PROTOCOL_VERSION}"
+                    ));
+                }
+                StreamFrame::RunStart {
+                    variant: c.str("run_start variant")?,
+                    dataset: c.str("run_start dataset")?,
+                    world: c.u32("run_start world")?,
+                    total_steps: c.u64("run_start total_steps")?,
+                }
+            }
+            TAG_STEP => StreamFrame::Step {
+                step: c.u64("step index")?,
+                loss: c.f32("step loss")?,
+                lr: c.f32("step lr")?,
+                upd_frac: c.f32("step upd_frac")?,
+                gnorm: c.f32("step gnorm")?,
+                step_ms: c.f32("step step_ms")?,
+            },
+            TAG_RUN_END => StreamFrame::RunEnd {
+                final_dev_loss: c.f32("run_end final_dev_loss")?,
+                wall_secs: c.f64("run_end wall_secs")?,
+            },
+            other => return Err(anyhow!("unknown stream frame tag {other}")),
+        };
+        c.finish(match tag {
+            TAG_RUN_START => "run_start",
+            TAG_STEP => "step",
+            _ => "run_end",
+        })?;
+        Ok(frame)
+    }
+}
+
+/// The step-stream broadcast endpoint a training run binds. An accept
+/// thread admits subscribers (replaying the stored `RunStart` to late
+/// joiners); [`Publisher::publish`] fans each frame out to every live
+/// subscriber, dropping any that stall past the write timeout — the
+/// training loop never blocks on an observer.
+pub struct Publisher {
+    addr: SocketAddr,
+    clients: Arc<Mutex<Vec<TcpStream>>>,
+    start_frame: Arc<Mutex<Option<Vec<u8>>>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Publisher {
+    /// Bind `addr` (port 0 picks a free port) and start accepting
+    /// subscribers on a background thread.
+    pub fn bind(addr: &str) -> Result<Publisher> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding watch address {addr}"))?;
+        let bound = listener.local_addr()?;
+        listener
+            .set_nonblocking(true)
+            .context("watch listener nonblocking")?;
+        let clients: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let start_frame: Arc<Mutex<Option<Vec<u8>>>> = Arc::new(Mutex::new(None));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (c2, s2, stop2) = (clients.clone(), start_frame.clone(), stop.clone());
+        std::thread::spawn(move || loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let ok = stream.set_nonblocking(false).is_ok()
+                        && stream
+                            .set_write_timeout(Some(SUBSCRIBER_WRITE_TIMEOUT))
+                            .is_ok();
+                    if !ok {
+                        continue;
+                    }
+                    let mut stream = stream;
+                    // replay the run header so late joiners have context
+                    let replay_ok = match s2.lock().unwrap().as_ref() {
+                        Some(buf) => stream.write_all(buf).and_then(|()| stream.flush()).is_ok(),
+                        None => true,
+                    };
+                    if replay_ok {
+                        c2.lock().unwrap().push(stream);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if stop2.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => return,
+            }
+        });
+        Ok(Publisher {
+            addr: bound,
+            clients,
+            start_frame,
+            stop,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Broadcast one frame to every subscriber; a failed or stalled write
+    /// evicts that subscriber. `RunStart` frames are additionally stored
+    /// for replay to late joiners.
+    pub fn publish(&self, frame: &StreamFrame) {
+        let buf = frame.encode();
+        if matches!(frame, StreamFrame::RunStart { .. }) {
+            *self.start_frame.lock().unwrap() = Some(buf.clone());
+        }
+        self.clients
+            .lock()
+            .unwrap()
+            .retain_mut(|c| c.write_all(&buf).and_then(|()| c.flush()).is_ok());
+    }
+
+    /// Subscribers currently connected (for tests and status lines).
+    pub fn subscribers(&self) -> usize {
+        self.clients.lock().unwrap().len()
+    }
+}
+
+impl Drop for Publisher {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // closing the sockets tells subscribers the stream is over
+        self.clients.lock().unwrap().clear();
+    }
+}
+
+/// Tail a live run: connect to a [`Publisher`] at `addr` (retrying until
+/// `connect_timeout` passes, so a watcher can be started slightly before
+/// the run), then invoke `on_frame` for every received frame until
+/// `RunEnd` or the publisher closes the stream.
+pub fn watch(
+    addr: &str,
+    connect_timeout: Duration,
+    mut on_frame: impl FnMut(&StreamFrame),
+) -> Result<()> {
+    let deadline = Instant::now() + connect_timeout;
+    let mut stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("connecting to {addr} timed out: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    stream.set_read_timeout(Some(Duration::from_secs(600)))?;
+    loop {
+        match StreamFrame::read_from(&mut stream)? {
+            None => return Ok(()), // publisher closed: run is over
+            Some(frame) => {
+                let done = matches!(frame, StreamFrame::RunEnd { .. });
+                on_frame(&frame);
+                if done {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor as IoCursor;
+
+    fn frames() -> Vec<StreamFrame> {
+        vec![
+            StreamFrame::RunStart {
+                variant: "test-dqt-b1p58".into(),
+                dataset: "tiny".into(),
+                world: 2,
+                total_steps: 40,
+            },
+            StreamFrame::Step {
+                step: 7,
+                loss: 3.25,
+                lr: 1e-3,
+                upd_frac: 0.015,
+                gnorm: 0.75,
+                step_ms: 12.5,
+            },
+            StreamFrame::RunEnd {
+                final_dev_loss: 2.875,
+                wall_secs: 1.5,
+            },
+        ]
+    }
+
+    #[test]
+    fn all_frames_roundtrip() {
+        for f in frames() {
+            let buf = f.encode();
+            let back = StreamFrame::read_from(&mut IoCursor::new(&buf))
+                .unwrap()
+                .unwrap();
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_truncation_errors() {
+        assert_eq!(StreamFrame::read_from(&mut IoCursor::new(&[])).unwrap(), None);
+        let buf = frames()[1].encode();
+        for cut in 1..9 {
+            let err = StreamFrame::read_from(&mut IoCursor::new(&buf[..cut])).unwrap_err();
+            assert!(err.to_string().contains("truncated"), "cut {cut}: {err}");
+        }
+        let err =
+            StreamFrame::read_from(&mut IoCursor::new(&buf[..buf.len() - 1])).unwrap_err();
+        assert!(err.to_string().contains("payload truncated"), "{err}");
+    }
+
+    #[test]
+    fn unknown_tag_oversized_length_and_trailing_bytes_rejected() {
+        let mut buf = frames()[1].encode();
+        buf[0] = 99;
+        let err = StreamFrame::read_from(&mut IoCursor::new(&buf)).unwrap_err();
+        assert!(err.to_string().contains("unknown stream frame tag"), "{err}");
+
+        let mut buf = frames()[1].encode();
+        buf[1..9].copy_from_slice(&(MAX_STREAM_FRAME_BYTES + 1).to_le_bytes());
+        let err = StreamFrame::read_from(&mut IoCursor::new(&buf)).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+
+        let mut buf = frames()[2].encode();
+        buf.push(0xAB);
+        let len = (buf.len() - 9) as u64;
+        buf[1..9].copy_from_slice(&len.to_le_bytes());
+        let err = StreamFrame::read_from(&mut IoCursor::new(&buf)).unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err}");
+    }
+
+    /// End to end over localhost TCP: a publisher broadcasts a run, a
+    /// late-joining watcher still sees the RunStart header, every step,
+    /// and the RunEnd that terminates the tail.
+    #[test]
+    fn publisher_and_watch_deliver_a_run() {
+        let publisher = Publisher::bind("127.0.0.1:0").unwrap();
+        let addr = publisher.local_addr().to_string();
+        publisher.publish(&frames()[0]); // before any subscriber: stored
+
+        let tail = std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            watch(&addr, Duration::from_secs(10), |f| seen.push(f.clone())).unwrap();
+            seen
+        });
+        // wait for the accept thread to admit the watcher
+        let t0 = Instant::now();
+        while publisher.subscribers() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "watcher never joined");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for step in 0..3u64 {
+            publisher.publish(&StreamFrame::Step {
+                step,
+                loss: 4.0 - step as f32 * 0.5,
+                lr: 1e-3,
+                upd_frac: 0.01,
+                gnorm: 1.0,
+                step_ms: 5.0,
+            });
+        }
+        publisher.publish(&frames()[2]);
+        let seen = tail.join().unwrap();
+        assert_eq!(seen.len(), 5, "run start + 3 steps + run end: {seen:?}");
+        assert_eq!(seen[0], frames()[0], "late joiner must get the stored RunStart");
+        assert!(matches!(seen[1], StreamFrame::Step { step: 0, .. }));
+        assert!(matches!(seen[4], StreamFrame::RunEnd { .. }));
+    }
+
+    /// A watcher that disconnects must be evicted on the next publish,
+    /// never stalling the training loop.
+    #[test]
+    fn dead_subscribers_are_evicted() {
+        let publisher = Publisher::bind("127.0.0.1:0").unwrap();
+        let addr = publisher.local_addr();
+        let conn = TcpStream::connect(addr).unwrap();
+        let t0 = Instant::now();
+        while publisher.subscribers() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "subscriber never joined");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        drop(conn);
+        // the drop may take a publish or two to surface as a write error
+        let t0 = Instant::now();
+        while publisher.subscribers() > 0 {
+            publisher.publish(&frames()[1]);
+            assert!(t0.elapsed() < Duration::from_secs(10), "dead subscriber kept");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! `TrainObs`: the training/distributed instrumentation handle.
+//!
+//! One `Arc<TrainObs>` rides through a run the way `kernels::Pool` does:
+//! created default-on by `Trainer::new`, cloned into the dist exchange,
+//! and recorded into from hot paths without allocating — every metric is
+//! a pre-registered atomic in the owned [`Registry`]. The registry is
+//! what `GET /metrics` renders (via [`obs::MetricsServer`]); an optional
+//! [`Publisher`] attached with [`TrainObs::set_publisher`] additionally
+//! streams one [`StreamFrame::Step`] per optimizer step for
+//! `repro watch --join`. With no metrics address and no watch address
+//! configured, the handle is pure atomics — no sockets, no threads.
+//!
+//! Metric names and units are the documented contract in
+//! `docs/OBSERVABILITY.md`; `tests/obs_contract.rs` pins every name
+//! registered here to an entry in that doc.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::registry::{Counter, Gauge, Histogram, Registry};
+use super::stream::{Publisher, StreamFrame};
+use crate::train::metrics::StepRecord;
+
+/// Bucket bounds (seconds) shared by the step-time histogram and the
+/// serve-side latency histograms — fixed so rendered output is stable.
+pub const TIME_BUCKETS: [f64; 11] = [
+    0.001, 0.005, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 10.0, 60.0,
+];
+
+/// Training + distributed metrics bundle. Field docs double as the
+/// metric help strings.
+pub struct TrainObs {
+    registry: Arc<Registry>,
+    publisher: Mutex<Option<Publisher>>,
+
+    steps_total: Arc<Counter>,
+    loss: Arc<Gauge>,
+    lr: Arc<Gauge>,
+    sr_update_fraction: Arc<Gauge>,
+    grad_norm: Arc<Gauge>,
+    dev_loss: Arc<Gauge>,
+    step_seconds: Arc<Histogram>,
+    forward_seconds_total: Arc<Counter>,
+    optimizer_seconds_total: Arc<Counter>,
+
+    dist_world: Arc<Gauge>,
+    allreduce_total: Arc<Counter>,
+    allreduce_bytes_total: Arc<Counter>,
+    allreduce_seconds_total: Arc<Counter>,
+    grid_syncs_total: Arc<Counter>,
+    grid_sync_bytes_total: Arc<Counter>,
+}
+
+impl Default for TrainObs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TrainObs {
+    pub fn new() -> TrainObs {
+        let r = Arc::new(Registry::new());
+        TrainObs {
+            steps_total: r.counter("dqt_train_steps_total", "Optimizer steps completed."),
+            loss: r.gauge("dqt_train_loss", "Training loss at the latest step (nats)."),
+            lr: r.gauge("dqt_train_lr", "Learning rate at the latest step."),
+            sr_update_fraction: r.gauge(
+                "dqt_train_sr_update_fraction",
+                "Fraction of quantized weights the stochastic-rounding update moved at the latest step.",
+            ),
+            grad_norm: r.gauge("dqt_train_grad_norm", "Global gradient norm at the latest step."),
+            dev_loss: r.gauge(
+                "dqt_train_dev_loss",
+                "Dev-set loss from the most recent periodic evaluation (nats).",
+            ),
+            step_seconds: r.histogram(
+                "dqt_train_step_seconds",
+                "Wall time per optimizer step (seconds).",
+                &TIME_BUCKETS,
+            ),
+            forward_seconds_total: r.counter(
+                "dqt_train_forward_seconds_total",
+                "Cumulative seconds in forward+backward (loss and gradients).",
+            ),
+            optimizer_seconds_total: r.counter(
+                "dqt_train_optimizer_seconds_total",
+                "Cumulative seconds applying optimizer + stochastic-rounding updates.",
+            ),
+            dist_world: r.gauge(
+                "dqt_dist_world",
+                "World size of the current run (1 when not distributed).",
+            ),
+            allreduce_total: r.counter(
+                "dqt_dist_allreduce_total",
+                "Gradient all-reduce rounds completed.",
+            ),
+            allreduce_bytes_total: r.counter(
+                "dqt_dist_allreduce_bytes_total",
+                "Bytes sent + received by gradient all-reduce on this rank.",
+            ),
+            allreduce_seconds_total: r.counter(
+                "dqt_dist_allreduce_seconds_total",
+                "Cumulative seconds blocked in gradient all-reduce on this rank.",
+            ),
+            grid_syncs_total: r.counter(
+                "dqt_dist_grid_syncs_total",
+                "Periodic packed-grid weight resyncs completed.",
+            ),
+            grid_sync_bytes_total: r.counter(
+                "dqt_dist_grid_sync_bytes_total",
+                "Bytes sent + received by packed-grid weight resync on this rank.",
+            ),
+            registry: r,
+            publisher: Mutex::new(None),
+        }
+    }
+
+    /// The registry `GET /metrics` renders.
+    pub fn registry(&self) -> Arc<Registry> {
+        self.registry.clone()
+    }
+
+    /// Attach a step-stream publisher (`--watch-addr`). At most one.
+    pub fn set_publisher(&self, publisher: Publisher) {
+        *self.publisher.lock().unwrap() = Some(publisher);
+    }
+
+    fn publish(&self, frame: &StreamFrame) {
+        if let Some(p) = self.publisher.lock().unwrap().as_ref() {
+            p.publish(frame);
+        }
+    }
+
+    /// Record run identity; announces the run to any watch subscribers.
+    pub fn on_run_start(&self, variant: &str, dataset: &str, world: u32, total_steps: u64) {
+        self.dist_world.set(world as f64);
+        self.publish(&StreamFrame::RunStart {
+            variant: variant.to_string(),
+            dataset: dataset.to_string(),
+            world,
+            total_steps,
+        });
+    }
+
+    /// Record one completed optimizer step. `fwd_ms`/`opt_ms` are the
+    /// backend's phase timings (0 when the backend does not report them).
+    pub fn on_step(&self, r: &StepRecord, fwd_ms: f32, opt_ms: f32) {
+        self.steps_total.inc();
+        self.loss.set(r.loss as f64);
+        self.lr.set(r.lr as f64);
+        self.sr_update_fraction.set(r.upd_frac as f64);
+        self.grad_norm.set(r.gnorm as f64);
+        self.step_seconds.observe(r.step_ms as f64 / 1e3);
+        self.forward_seconds_total.add(fwd_ms as f64 / 1e3);
+        self.optimizer_seconds_total.add(opt_ms as f64 / 1e3);
+        self.publish(&StreamFrame::Step {
+            step: r.step,
+            loss: r.loss,
+            lr: r.lr,
+            upd_frac: r.upd_frac,
+            gnorm: r.gnorm,
+            step_ms: r.step_ms,
+        });
+    }
+
+    /// Record a periodic dev evaluation.
+    pub fn on_dev_loss(&self, loss: f32) {
+        self.dev_loss.set(loss as f64);
+    }
+
+    /// Record one gradient all-reduce round: wire bytes moved on this
+    /// rank and wall time blocked.
+    pub fn on_allreduce(&self, bytes: u64, elapsed: Duration) {
+        self.allreduce_total.inc();
+        self.allreduce_bytes_total.inc_by(bytes);
+        self.allreduce_seconds_total.add(elapsed.as_secs_f64());
+    }
+
+    /// Record one packed-grid weight resync.
+    pub fn on_grid_sync(&self, bytes: u64) {
+        self.grid_syncs_total.inc();
+        self.grid_sync_bytes_total.inc_by(bytes);
+    }
+
+    /// Record run completion; tells watch subscribers to disconnect.
+    pub fn on_run_end(&self, final_dev_loss: Option<f32>, wall_secs: f64) {
+        if let Some(l) = final_dev_loss {
+            self.dev_loss.set(l as f64);
+        }
+        self.publish(&StreamFrame::RunEnd {
+            final_dev_loss: final_dev_loss.unwrap_or(f32::NAN),
+            wall_secs,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64) -> StepRecord {
+        StepRecord {
+            step,
+            loss: 4.5,
+            lr: 1e-3,
+            upd_frac: 0.02,
+            gnorm: 1.25,
+            step_ms: 20.0,
+        }
+    }
+
+    #[test]
+    fn steps_and_dist_events_land_in_the_registry() {
+        let obs = TrainObs::new();
+        obs.on_run_start("t130-dqt", "tiny", 2, 100);
+        obs.on_step(&rec(0), 15.0, 5.0);
+        obs.on_step(&rec(1), 15.0, 5.0);
+        obs.on_dev_loss(4.25);
+        obs.on_allreduce(1024, Duration::from_millis(3));
+        obs.on_grid_sync(256);
+        obs.on_run_end(Some(4.0), 1.5);
+
+        let text = obs.registry().render();
+        assert!(text.contains("dqt_train_steps_total 2\n"), "{text}");
+        assert!(text.contains("dqt_train_loss 4.5\n"), "{text}");
+        assert!(text.contains("dqt_train_dev_loss 4\n"), "{text}");
+        assert!(text.contains("dqt_dist_world 2\n"), "{text}");
+        assert!(text.contains("dqt_dist_allreduce_bytes_total 1024\n"), "{text}");
+        assert!(text.contains("dqt_dist_grid_sync_bytes_total 256\n"), "{text}");
+        assert!(text.contains("dqt_train_step_seconds_count 2\n"), "{text}");
+        // 20 ms lands in the 0.02 s bucket
+        assert!(
+            text.contains("dqt_train_step_seconds_bucket{le=\"0.02\"} 2\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn steps_stream_to_an_attached_publisher() {
+        let obs = TrainObs::new();
+        let publisher = Publisher::bind("127.0.0.1:0").unwrap();
+        let addr = publisher.local_addr().to_string();
+        obs.set_publisher(publisher);
+        obs.on_run_start("t130-dqt", "tiny", 1, 10);
+
+        let tail = std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            super::super::stream::watch(&addr, Duration::from_secs(10), |f| {
+                seen.push(f.clone());
+            })
+            .unwrap();
+            seen
+        });
+        // wait for the watcher to connect before streaming steps
+        let t0 = std::time::Instant::now();
+        loop {
+            let joined = obs
+                .publisher
+                .lock()
+                .unwrap()
+                .as_ref()
+                .map(|p| p.subscribers())
+                .unwrap_or(0);
+            if joined > 0 {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "watcher never joined");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        obs.on_step(&rec(0), 0.0, 0.0);
+        obs.on_run_end(None, 0.5);
+
+        let seen = tail.join().unwrap();
+        assert!(matches!(seen[0], StreamFrame::RunStart { world: 1, .. }));
+        assert!(matches!(seen[1], StreamFrame::Step { step: 0, .. }));
+        match seen[2] {
+            StreamFrame::RunEnd { final_dev_loss, .. } => assert!(final_dev_loss.is_nan()),
+            ref other => panic!("expected RunEnd, got {other:?}"),
+        }
+    }
+}

@@ -183,6 +183,12 @@ pub struct StepMetrics {
     pub loss: f32,
     pub upd_frac: f32,
     pub gnorm: f32,
+    /// forward + backward wall milliseconds (0 when the backend does not
+    /// report phase timings)
+    pub fwd_ms: f32,
+    /// optimizer + SR-update wall milliseconds (cross-rank reduce time is
+    /// excluded — the dist exchange accounts it separately)
+    pub opt_ms: f32,
 }
 
 /// Per-param gradient buffers in the manifest's flat order (`None` for

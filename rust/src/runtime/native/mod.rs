@@ -346,11 +346,14 @@ impl Backend for NativeBackend {
         if opt.len() != self.layout.manifest.opt_state.len() || opt.is_empty() {
             return Err(anyhow!("optimizer state does not match the manifest"));
         }
+        let t_fwd = std::time::Instant::now();
         let (loss, grads) = {
             let view: Vec<Cow<'_, [f32]>> =
                 params.iter().map(|v| Cow::Borrowed(v.as_slice())).collect();
             self.net().loss_and_grads(&view, &inputs, &labels, b, s)?
         };
+        let fwd_ms = t_fwd.elapsed().as_secs_f32() * 1e3;
+        let t_opt = std::time::Instant::now();
         let (upd_frac, gnorm) = optim::apply_updates(
             &self.hyper,
             &self.layout,
@@ -361,12 +364,15 @@ impl Backend for NativeBackend {
             lr,
             sr_seed,
         );
+        let opt_ms = t_opt.elapsed().as_secs_f32() * 1e3;
         Ok((
             State::from_dense(params, opt),
             StepMetrics {
                 loss,
                 upd_frac,
                 gnorm,
+                fwd_ms,
+                opt_ms,
             },
         ))
     }
@@ -427,11 +433,13 @@ impl Backend for NativeBackend {
         if opt.len() != self.layout.manifest.opt_state.len() || opt.is_empty() {
             return Err(anyhow!("optimizer state does not match the manifest"));
         }
+        let t_fwd = std::time::Instant::now();
         let (mut nll, mut count, mut grads) = {
             let view: Vec<Cow<'_, [f32]>> =
                 params.iter().map(|v| Cow::Borrowed(v.as_slice())).collect();
             self.band_grads(&view, &inputs, &labels, s, lo, lo, hi)?
         };
+        let fwd_ms = t_fwd.elapsed().as_secs_f32() * 1e3;
         reducer.reduce(step, &mut grads, &mut nll, &mut count)?;
         // global normalization, applied identically on every rank *after*
         // the reduction (the per-row leaves were built with denom = 1.0)
@@ -443,6 +451,7 @@ impl Backend for NativeBackend {
             }
         }
         let loss = nll / denom;
+        let t_opt = std::time::Instant::now();
         let (upd_frac, gnorm) = optim::apply_updates(
             &self.hyper,
             &self.layout,
@@ -453,12 +462,15 @@ impl Backend for NativeBackend {
             lr,
             sr_seed,
         );
+        let opt_ms = t_opt.elapsed().as_secs_f32() * 1e3;
         Ok((
             State::from_dense(params, opt),
             StepMetrics {
                 loss,
                 upd_frac,
                 gnorm,
+                fwd_ms,
+                opt_ms,
             },
         ))
     }

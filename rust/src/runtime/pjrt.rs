@@ -139,6 +139,9 @@ impl Backend for PjrtBackend {
                 loss: scalar_f32(&metrics[0])?,
                 upd_frac: scalar_f32(&metrics[1])?,
                 gnorm: scalar_f32(&metrics[2])?,
+                // the compiled graph reports no phase timings
+                fwd_ms: 0.0,
+                opt_ms: 0.0,
             },
         ))
     }

@@ -8,10 +8,14 @@
 //!
 //! * `GET /healthz`       → `{"status":"ok", ...}` — liveness + model info
 //! * `GET /v1/stats`      → scheduler counters (tokens/sec bookkeeping)
+//! * `GET /metrics`       → Prometheus text exposition (the `obs`
+//!   registry behind [`ServeMetrics`]: queue depth, TTFT, batch-size and
+//!   latency histograms, decode throughput — see `docs/OBSERVABILITY.md`)
 //! * `POST /v1/generate`  → request `{"prompt": "...", "max_new_tokens"?,
 //!   "temperature"?, "top_k"?, "top_p"?, "seed"?}`, response `{"id",
 //!   "text", "token_ids", "prompt_tokens", "gen_tokens",
-//!   "finish_reason"}`
+//!   "finish_reason"}`; `429` when the scheduler queue is at its
+//!   `--max-queue` cap
 //!
 //! The full schema is documented in `docs/SERVING.md`.
 
@@ -22,10 +26,12 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::obs::METRICS_CONTENT_TYPE;
 use crate::runtime::Decoder;
 use crate::util::json::{parse, Value};
 
 use super::engine::{Engine, GenParams};
+use super::metrics::ServeMetrics;
 use super::scheduler::Scheduler;
 
 const MAX_HEADER_BYTES: usize = 16 * 1024;
@@ -42,10 +48,26 @@ pub struct Server {
 impl Server {
     /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free port) and
     /// wrap `engine` in a continuous-batching scheduler of width
-    /// `max_batch`.
+    /// `max_batch` with an unbounded queue.
     pub fn bind(addr: &str, engine: Engine, max_batch: usize) -> Result<Server> {
+        Self::bind_with(addr, engine, max_batch, 0)
+    }
+
+    /// [`Server::bind`] with an admission cap: once `max_queue` requests
+    /// are waiting for a batch slot, `POST /v1/generate` returns 429
+    /// instead of queueing (0 = unbounded).
+    pub fn bind_with(
+        addr: &str,
+        engine: Engine,
+        max_batch: usize,
+        max_queue: usize,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        let scheduler = Arc::new(Scheduler::new(Arc::new(engine), max_batch));
+        let scheduler = Arc::new(Scheduler::with_queue_limit(
+            Arc::new(engine),
+            max_batch,
+            max_queue,
+        ));
         Ok(Server { listener, scheduler })
     }
 
@@ -107,12 +129,14 @@ struct Request {
 }
 
 fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
+    let metrics = sched.metrics();
+    let metrics = &*metrics;
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
     stream.set_write_timeout(Some(Duration::from_secs(30)))?;
     let req = match read_request(&mut stream) {
         Ok(r) => r,
         Err(e) => {
-            return respond(&mut stream, 400, &error_json(&e));
+            return respond(&mut stream, metrics, 400, &error_json(&e));
         }
     };
     match (req.method.as_str(), req.path.as_str()) {
@@ -132,7 +156,11 @@ fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
                 .set("threads", engine.decoder().threads())
                 .set("precision", engine.decoder().precision().as_str())
                 .set("pending", sched.pending());
-            respond(&mut stream, 200, &body)
+            respond(&mut stream, metrics, 200, &body)
+        }
+        ("GET", "/metrics") => {
+            let text = metrics.registry().render();
+            respond_text(&mut stream, metrics, 200, METRICS_CONTENT_TYPE, &text)
         }
         ("GET", "/v1/stats") => {
             let st = sched.stats();
@@ -151,14 +179,21 @@ fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
                 .set("decode_ns", st.decode_ns)
                 .set("decode_tokens_per_sec", st.decode_tokens_per_sec())
                 .set("pending", sched.pending());
-            respond(&mut stream, 200, &body)
+            respond(&mut stream, metrics, 200, &body)
         }
         ("POST", "/v1/generate") => {
             let (prompt, params) = match parse_generate(&req.body) {
                 Ok(pp) => pp,
-                Err(e) => return respond(&mut stream, 400, &error_json(&e)),
+                Err(e) => return respond(&mut stream, metrics, 400, &error_json(&e)),
             };
-            let (_, rx) = sched.submit_channel(&prompt, params);
+            let Some((_, rx)) = sched.try_submit_channel(&prompt, params) else {
+                return respond(
+                    &mut stream,
+                    metrics,
+                    429,
+                    &error_json("queue full: the scheduler is at its --max-queue cap"),
+                );
+            };
             match rx.recv_timeout(REQUEST_TIMEOUT) {
                 Ok((id, gen)) => {
                     let ids =
@@ -175,10 +210,11 @@ fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
                     } else {
                         200
                     };
-                    respond(&mut stream, code, &body)
+                    respond(&mut stream, metrics, code, &body)
                 }
                 Err(_) => respond(
                     &mut stream,
+                    metrics,
                     504,
                     &error_json("generation timed out in the scheduler"),
                 ),
@@ -186,6 +222,7 @@ fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
         }
         _ => respond(
             &mut stream,
+            metrics,
             404,
             &error_json(&format!("no route {} {}", req.method, req.path)),
         ),
@@ -290,18 +327,29 @@ fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
         .position(|w| w == needle)
 }
 
-fn respond(stream: &mut TcpStream, code: u16, body: &Value) -> Result<()> {
+fn respond(stream: &mut TcpStream, metrics: &ServeMetrics, code: u16, body: &Value) -> Result<()> {
+    respond_text(stream, metrics, code, "application/json", &body.to_string())
+}
+
+fn respond_text(
+    stream: &mut TcpStream,
+    metrics: &ServeMetrics,
+    code: u16,
+    content_type: &str,
+    text: &str,
+) -> Result<()> {
     let reason = match code {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         504 => "Gateway Timeout",
         _ => "Unknown",
     };
-    let text = body.to_string();
+    metrics.on_http_response(code);
     let head = format!(
-        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         text.len()
     );
     stream.write_all(head.as_bytes())?;

@@ -1,0 +1,192 @@
+//! `ServeMetrics`: the serving-path instrumentation bundle.
+//!
+//! One `Arc<ServeMetrics>` is created by the [`Scheduler`] (default-on)
+//! and shared with the HTTP server; `GET /metrics` renders its registry.
+//! Handles are the `obs` atomics, so recording from the decode loop's
+//! locked phases is allocation-free. Names and units are the documented
+//! contract in `docs/OBSERVABILITY.md` (pinned by `tests/obs_contract.rs`).
+//!
+//! [`Scheduler`]: super::scheduler::Scheduler
+
+use std::sync::Arc;
+
+use crate::obs::{Counter, Gauge, Histogram, Registry, TIME_BUCKETS};
+
+/// Batch-size histogram bounds: powers of two up to the plausible
+/// `--max-batch` range.
+pub const BATCH_BUCKETS: [f64; 8] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// HTTP status codes pre-registered so their series render at zero.
+const PRE_REGISTERED_CODES: [&str; 6] = ["200", "400", "404", "429", "500", "504"];
+
+/// Serving metrics: queue/admission, latency, and decode throughput.
+pub struct ServeMetrics {
+    registry: Arc<Registry>,
+
+    /// requests waiting for a batch slot
+    pub queue_depth: Arc<Gauge>,
+    /// sequences currently decoding (including the checked-out batch)
+    pub active_sequences: Arc<Gauge>,
+    pub requests_total: Arc<Counter>,
+    pub completed_total: Arc<Counter>,
+    /// submissions refused because the queue was at `--max-queue`
+    pub admission_rejections_total: Arc<Counter>,
+    /// rows per batched decode step
+    pub batch_size: Arc<Histogram>,
+    /// submission → first sampled token
+    pub ttft_seconds: Arc<Histogram>,
+    /// submission → finished generation
+    pub request_seconds: Arc<Histogram>,
+    pub decode_steps_total: Arc<Counter>,
+    pub tokens_processed_total: Arc<Counter>,
+    pub tokens_generated_total: Arc<Counter>,
+    /// wall time inside batched model forwards
+    pub decode_seconds_total: Arc<Counter>,
+    /// cumulative tokens_processed / decode_seconds, mirrored from
+    /// `SchedulerStats::decode_tokens_per_sec`
+    pub decode_tokens_per_sec: Arc<Gauge>,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        let r = Arc::new(Registry::new());
+        for code in PRE_REGISTERED_CODES {
+            r.counter_with(
+                "dqt_serve_http_responses_total",
+                "HTTP responses sent, by status code.",
+                &[("code", code)],
+            );
+        }
+        ServeMetrics {
+            queue_depth: r.gauge(
+                "dqt_serve_queue_depth",
+                "Requests queued and waiting for a batch slot.",
+            ),
+            active_sequences: r.gauge(
+                "dqt_serve_active_sequences",
+                "Sequences currently being decoded (including the checked-out batch).",
+            ),
+            requests_total: r.counter("dqt_serve_requests_total", "Generation requests accepted."),
+            completed_total: r.counter(
+                "dqt_serve_completed_total",
+                "Generation requests finished (any finish reason, including errors).",
+            ),
+            admission_rejections_total: r.counter(
+                "dqt_serve_admission_rejections_total",
+                "Submissions rejected because the queue was at its --max-queue cap.",
+            ),
+            batch_size: r.histogram(
+                "dqt_serve_batch_size",
+                "Rows per batched decode step.",
+                &BATCH_BUCKETS,
+            ),
+            ttft_seconds: r.histogram(
+                "dqt_serve_ttft_seconds",
+                "Time from submission to first sampled token (seconds).",
+                &TIME_BUCKETS,
+            ),
+            request_seconds: r.histogram(
+                "dqt_serve_request_seconds",
+                "Time from submission to finished generation (seconds).",
+                &TIME_BUCKETS,
+            ),
+            decode_steps_total: r.counter(
+                "dqt_serve_decode_steps_total",
+                "Batched decode steps issued.",
+            ),
+            tokens_processed_total: r.counter(
+                "dqt_serve_tokens_processed_total",
+                "Tokens pushed through the model (prefill + decode rows).",
+            ),
+            tokens_generated_total: r.counter(
+                "dqt_serve_tokens_generated_total",
+                "Tokens sampled and returned to requests.",
+            ),
+            decode_seconds_total: r.counter(
+                "dqt_serve_decode_seconds_total",
+                "Wall seconds inside batched model forwards.",
+            ),
+            decode_tokens_per_sec: r.gauge(
+                "dqt_serve_decode_tokens_per_sec",
+                "Cumulative decode throughput: tokens processed per second of model-forward wall time.",
+            ),
+            registry: r,
+        }
+    }
+
+    /// The registry `GET /metrics` renders.
+    pub fn registry(&self) -> Arc<Registry> {
+        self.registry.clone()
+    }
+
+    /// Count one HTTP response by status code. Common codes are
+    /// pre-registered; an unusual code registers its series on first use.
+    pub fn on_http_response(&self, code: u16) {
+        let text: &str = match code {
+            200 => "200",
+            400 => "400",
+            404 => "404",
+            429 => "429",
+            500 => "500",
+            504 => "504",
+            _ => {
+                let owned = code.to_string();
+                self.registry
+                    .counter_with(
+                        "dqt_serve_http_responses_total",
+                        "HTTP responses sent, by status code.",
+                        &[("code", &owned)],
+                    )
+                    .inc();
+                return;
+            }
+        };
+        self.registry
+            .counter_with(
+                "dqt_serve_http_responses_total",
+                "HTTP responses sent, by status code.",
+                &[("code", text)],
+            )
+            .inc();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_render_with_pre_registered_codes() {
+        let m = ServeMetrics::new();
+        m.requests_total.inc();
+        m.on_http_response(200);
+        m.on_http_response(200);
+        m.on_http_response(429);
+        m.on_http_response(418); // unusual: registered on first use
+        let text = m.registry().render();
+        assert!(text.contains("dqt_serve_requests_total 1\n"), "{text}");
+        assert!(
+            text.contains("dqt_serve_http_responses_total{code=\"200\"} 2\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dqt_serve_http_responses_total{code=\"429\"} 1\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dqt_serve_http_responses_total{code=\"418\"} 1\n"),
+            "{text}"
+        );
+        // pre-registered codes render even when untouched
+        assert!(
+            text.contains("dqt_serve_http_responses_total{code=\"504\"} 0\n"),
+            "{text}"
+        );
+    }
+}

@@ -22,8 +22,14 @@
 //!                   a sequence's output.
 //! * [`http`]      — [`Server`]: a zero-dependency HTTP/1.1 server on
 //!                   `std::net::TcpListener` exposing `POST /v1/generate`,
-//!                   `GET /healthz` and `GET /v1/stats` (JSON via the
-//!                   in-tree `util::json`).
+//!                   `GET /healthz`, `GET /v1/stats` (JSON via the
+//!                   in-tree `util::json`) and `GET /metrics` (Prometheus
+//!                   text, the contract in `docs/OBSERVABILITY.md`).
+//! * [`metrics`]   — [`ServeMetrics`]: the `obs`-backed instrumentation
+//!                   bundle behind `/metrics` — queue depth, admission
+//!                   rejections (`--max-queue` → HTTP 429), TTFT /
+//!                   request-latency / batch-size histograms, decode
+//!                   throughput.
 //!
 //! Serving memory is grid bytes + KV cache: the decode hot path performs
 //! no f32 weight unpacking — every projection matmul goes through the
@@ -37,10 +43,12 @@
 
 pub mod engine;
 pub mod http;
+pub mod metrics;
 pub mod sampler;
 pub mod scheduler;
 
 pub use engine::{Engine, FinishReason, GenParams, Generation};
 pub use http::Server;
+pub use metrics::ServeMetrics;
 pub use sampler::Sampler;
 pub use scheduler::{Scheduler, SchedulerStats};

@@ -16,11 +16,12 @@
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::engine::{Engine, FinishReason, GenParams, Generation};
+use super::metrics::ServeMetrics;
 use super::sampler::Sampler;
 use crate::data::tokenizer::DecodeStream;
 use crate::runtime::{Decoder, DecoderCache};
@@ -71,6 +72,8 @@ struct Seq {
     /// nothing until a batch slot frees up)
     cache: Option<Box<dyn DecoderCache>>,
     tx: Option<Sender<(u64, Generation)>>,
+    /// when the request entered the queue (TTFT / request latency)
+    submitted: Instant,
 }
 
 struct Inner {
@@ -92,15 +95,27 @@ struct Inner {
 pub struct Scheduler {
     engine: Arc<Engine>,
     max_batch: usize,
+    /// queue cap enforced by [`Scheduler::try_submit_channel`]; 0 means
+    /// unbounded (the non-`try` submit paths are always unbounded)
+    max_queue: usize,
+    metrics: Arc<ServeMetrics>,
     inner: Mutex<Inner>,
     work: Condvar,
 }
 
 impl Scheduler {
     pub fn new(engine: Arc<Engine>, max_batch: usize) -> Scheduler {
+        Self::with_queue_limit(engine, max_batch, 0)
+    }
+
+    /// A scheduler whose [`Scheduler::try_submit_channel`] rejects
+    /// submissions once `max_queue` requests are waiting (0 = unbounded).
+    pub fn with_queue_limit(engine: Arc<Engine>, max_batch: usize, max_queue: usize) -> Scheduler {
         Scheduler {
             engine,
             max_batch: max_batch.max(1),
+            max_queue,
+            metrics: Arc::new(ServeMetrics::new()),
             inner: Mutex::new(Inner {
                 queue: VecDeque::new(),
                 active: Vec::new(),
@@ -117,10 +132,16 @@ impl Scheduler {
         &self.engine
     }
 
+    /// The serving metrics bundle `GET /metrics` renders.
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        self.metrics.clone()
+    }
+
     /// Queue a text prompt; poll [`Scheduler::take_finished`] for the
     /// result.
     pub fn submit(&self, prompt: &str, params: GenParams) -> u64 {
-        self.enqueue(self.engine.prompt_ids(prompt), params, None)
+        self.enqueue(self.engine.prompt_ids(prompt), params, None, false)
+            .expect("unbounded submit cannot be rejected")
     }
 
     /// Queue a text prompt and get a channel the result is delivered on
@@ -131,14 +152,30 @@ impl Scheduler {
         params: GenParams,
     ) -> (u64, Receiver<(u64, Generation)>) {
         let (tx, rx) = channel();
-        let id = self.enqueue(self.engine.prompt_ids(prompt), params, Some(tx));
+        let id = self
+            .enqueue(self.engine.prompt_ids(prompt), params, Some(tx), false)
+            .expect("unbounded submit cannot be rejected");
         (id, rx)
+    }
+
+    /// Like [`Scheduler::submit_channel`], but honors the scheduler's
+    /// queue cap: returns `None` (and counts an admission rejection) when
+    /// `max_queue` requests are already waiting.
+    pub fn try_submit_channel(
+        &self,
+        prompt: &str,
+        params: GenParams,
+    ) -> Option<(u64, Receiver<(u64, Generation)>)> {
+        let (tx, rx) = channel();
+        self.enqueue(self.engine.prompt_ids(prompt), params, Some(tx), true)
+            .map(|id| (id, rx))
     }
 
     /// Queue pre-tokenized ids (no BOS prepend, no truncation — the
     /// caller owns the framing).
     pub fn submit_ids(&self, prompt: Vec<i32>, params: GenParams) -> u64 {
-        self.enqueue(prompt, params, None)
+        self.enqueue(prompt, params, None, false)
+            .expect("unbounded submit cannot be rejected")
     }
 
     fn enqueue(
@@ -146,11 +183,18 @@ impl Scheduler {
         prompt: Vec<i32>,
         params: GenParams,
         tx: Option<Sender<(u64, Generation)>>,
-    ) -> u64 {
+        bounded: bool,
+    ) -> Option<u64> {
+        let submitted = Instant::now();
         let mut g = self.inner.lock().unwrap();
+        if bounded && self.max_queue > 0 && g.queue.len() >= self.max_queue {
+            self.metrics.admission_rejections_total.inc();
+            return None;
+        }
         let id = g.next_id;
         g.next_id += 1;
         g.stats.submitted += 1;
+        self.metrics.requests_total.inc();
         if prompt.is_empty() || params.max_new_tokens == 0 {
             // nothing to condition on / nothing to produce — finish
             // immediately, matching `Engine::generate_ids`'s behavior
@@ -161,13 +205,17 @@ impl Scheduler {
                 finish: FinishReason::Length,
             };
             g.stats.completed += 1;
+            self.metrics.completed_total.inc();
+            self.metrics
+                .request_seconds
+                .observe(submitted.elapsed().as_secs_f64());
             match tx {
                 Some(tx) => {
                     let _ = tx.send((id, gen));
                 }
                 None => g.finished.push((id, gen)),
             }
-            return id;
+            return Some(id);
         }
         let seq = Seq {
             id,
@@ -180,11 +228,13 @@ impl Scheduler {
             params,
             cache: None,
             tx,
+            submitted,
         };
         g.queue.push_back(seq);
+        self.metrics.queue_depth.set(g.queue.len() as f64);
         drop(g);
         self.work.notify_all();
-        id
+        Some(id)
     }
 
     /// Queued + active (including checked-out) sequences.
@@ -255,6 +305,9 @@ impl Scheduler {
             g.stats.peak_batch = g.stats.peak_batch.max(g.active.len());
             let batch = std::mem::take(&mut g.active);
             g.in_flight = batch.len();
+            self.metrics.queue_depth.set(g.queue.len() as f64);
+            self.metrics.active_sequences.set(batch.len() as f64);
+            self.metrics.batch_size.observe(batch.len() as f64);
             // one input token per sequence: next prompt token while
             // prefilling, else the last sampled token
             let tokens: Vec<i32> = batch
@@ -287,6 +340,9 @@ impl Scheduler {
         let g = &mut *g;
         g.in_flight = 0;
         g.stats.decode_ns += decode_ns;
+        self.metrics
+            .decode_seconds_total
+            .add(decode_ns as f64 / 1e9);
         let logits = match step_result {
             Ok(l) => l,
             Err(e) => {
@@ -299,6 +355,10 @@ impl Scheduler {
                         finish: FinishReason::Error,
                     };
                     g.stats.completed += 1;
+                    self.metrics.completed_total.inc();
+                    self.metrics
+                        .request_seconds
+                        .observe(s.submitted.elapsed().as_secs_f64());
                     match s.tx.take() {
                         Some(tx) => {
                             let _ = tx.send((s.id, gen));
@@ -306,11 +366,14 @@ impl Scheduler {
                         None => g.finished.push((s.id, gen)),
                     }
                 }
+                self.metrics.active_sequences.set(0.0);
                 return Err(e);
             }
         };
         g.stats.steps += 1;
         g.stats.tokens_processed += n as u64;
+        self.metrics.decode_steps_total.inc();
+        self.metrics.tokens_processed_total.inc_by(n as u64);
         let v = self.engine.decoder().vocab_size();
         let max_pos = self.engine.decoder().max_positions();
         let eos = self.engine.eos_id();
@@ -327,6 +390,12 @@ impl Scheduler {
             let next = s.sampler.sample(&logits[i * v..(i + 1) * v]) as i32;
             s.generated.push(next);
             g.stats.tokens_generated += 1;
+            self.metrics.tokens_generated_total.inc();
+            if s.generated.len() == 1 {
+                self.metrics
+                    .ttft_seconds
+                    .observe(s.submitted.elapsed().as_secs_f64());
+            }
             let finish = if next == eos {
                 Some(FinishReason::Eos)
             } else {
@@ -352,6 +421,10 @@ impl Scheduler {
                         finish,
                     };
                     g.stats.completed += 1;
+                    self.metrics.completed_total.inc();
+                    self.metrics
+                        .request_seconds
+                        .observe(s.submitted.elapsed().as_secs_f64());
                     match s.tx.take() {
                         Some(tx) => {
                             let _ = tx.send((s.id, gen));
@@ -361,6 +434,10 @@ impl Scheduler {
                 }
             }
         }
+        self.metrics.active_sequences.set(g.active.len() as f64);
+        self.metrics
+            .decode_tokens_per_sec
+            .set(g.stats.decode_tokens_per_sec());
         if !g.active.is_empty() || !g.queue.is_empty() {
             // a thread parked in `park_until_work` while this step was
             // mid-flight (in_flight > 0) must be re-woken for the survivors
@@ -599,6 +676,51 @@ mod tests {
         assert!(st.decode_ns > 0, "model-forward time must be accounted");
         assert!(st.decode_tokens_per_sec() > 0.0);
         assert_eq!(SchedulerStats::default().decode_tokens_per_sec(), 0.0);
+    }
+
+    /// `try_submit_channel` honors the queue cap and counts rejections;
+    /// the unbounded submit paths are unaffected by the cap.
+    #[test]
+    fn queue_cap_rejects_and_counts() {
+        let engine = mock_engine(8, 64);
+        let sched = Scheduler::with_queue_limit(engine, 1, 2);
+        let params = GenParams { max_new_tokens: 4, ..Default::default() };
+        let a = sched.try_submit_channel("a", params.clone());
+        let b = sched.try_submit_channel("b", params.clone());
+        assert!(a.is_some() && b.is_some());
+        let rejected = sched.try_submit_channel("c", params.clone());
+        assert!(rejected.is_none(), "third submission must hit the cap");
+        assert_eq!(sched.metrics().admission_rejections_total.value(), 1.0);
+        // the cap does not apply to the unbounded paths
+        sched.submit_ids(vec![3], params);
+        sched.run_until_idle().unwrap();
+        assert_eq!(sched.stats().completed, 3);
+        let text = sched.metrics().registry().render();
+        assert!(
+            text.contains("dqt_serve_admission_rejections_total 1\n"),
+            "{text}"
+        );
+        assert!(text.contains("dqt_serve_completed_total 3\n"), "{text}");
+    }
+
+    /// The metrics bundle tracks the decode loop: steps, tokens, TTFT
+    /// and request-latency observations all move after a run.
+    #[test]
+    fn metrics_move_with_the_decode_loop() {
+        let engine = mock_engine(8, 64);
+        let sched = Scheduler::new(engine, 4);
+        let (_, rx) = sched.submit_channel("a", GenParams::default());
+        sched.run_until_idle().unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let m = sched.metrics();
+        assert!(m.decode_steps_total.value() > 0.0);
+        assert!(m.tokens_generated_total.value() > 0.0);
+        assert!(m.tokens_processed_total.value() >= m.tokens_generated_total.value());
+        assert_eq!(m.ttft_seconds.count(), 1);
+        assert_eq!(m.request_seconds.count(), 1);
+        assert!(m.decode_tokens_per_sec.value() > 0.0);
+        assert_eq!(m.queue_depth.value(), 0.0);
+        assert_eq!(m.active_sequences.value(), 0.0);
     }
 
     #[test]

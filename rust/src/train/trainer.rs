@@ -6,12 +6,14 @@
 //! dev loss the paper's Fig. 3 reports.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::data::{loader, Pipeline};
+use crate::obs::TrainObs;
 use crate::quant::sr::hash_u32;
 use crate::runtime::{GradReducer, Manifest, State, VariantRuntime};
 
@@ -49,6 +51,10 @@ pub struct Trainer<'a> {
     pub cfg: TrainConfig,
     /// optional live progress callback (step, loss)
     pub progress: Option<Box<dyn FnMut(u64, f32) + 'a>>,
+    /// observability handle: default-on pure atomics; `--metrics-addr`
+    /// serves its registry, `--watch-addr` streams its step frames
+    /// (see `docs/OBSERVABILITY.md`)
+    pub obs: Arc<TrainObs>,
 }
 
 impl<'a> Trainer<'a> {
@@ -58,6 +64,7 @@ impl<'a> Trainer<'a> {
             pipeline,
             cfg,
             progress: None,
+            obs: Arc::new(TrainObs::new()),
         }
     }
 
@@ -93,6 +100,8 @@ impl<'a> Trainer<'a> {
             cfg.seed,
         );
         let mut metrics = RunMetrics::new(&m.variant.variant_name, &cfg.dataset);
+        self.obs
+            .on_run_start(&m.variant.variant_name, &cfg.dataset, 1, cfg.steps);
         let wall = Instant::now();
         while let Some(batch) = loader.next() {
             let step = start_step + batch.step;
@@ -109,6 +118,7 @@ impl<'a> Trainer<'a> {
                 gnorm: sm.gnorm,
                 step_ms: t0.elapsed().as_secs_f32() * 1e3,
             };
+            self.obs.on_step(&rec, sm.fwd_ms, sm.opt_ms);
             if cfg.log_every > 0 && step % cfg.log_every == 0 {
                 if let Some(cb) = self.progress.as_mut() {
                     cb(step, sm.loss);
@@ -117,11 +127,14 @@ impl<'a> Trainer<'a> {
             metrics.push(rec);
             if cfg.eval_every > 0 && step > 0 && step % cfg.eval_every == 0 {
                 let dl = self.dev_loss(&state, false)?;
+                self.obs.on_dev_loss(dl);
                 metrics.dev_losses.push((step, dl));
             }
         }
         metrics.final_dev_loss = Some(self.dev_loss(&state, false)?);
         metrics.wall_secs = wall.elapsed().as_secs_f64();
+        self.obs
+            .on_run_end(metrics.final_dev_loss, metrics.wall_secs);
         Ok((state, metrics))
     }
 
@@ -146,6 +159,12 @@ impl<'a> Trainer<'a> {
             .pipeline
             .loader_sharded(rows, cfg.steps, cfg.seed, band);
         let mut metrics = RunMetrics::new(&m.variant.variant_name, &cfg.dataset);
+        self.obs.on_run_start(
+            &m.variant.variant_name,
+            &cfg.dataset,
+            ex.world() as u32,
+            cfg.steps,
+        );
         let wall = Instant::now();
         while let Some(batch) = loader.next() {
             let step = batch.step;
@@ -172,6 +191,7 @@ impl<'a> Trainer<'a> {
                 gnorm: sm.gnorm,
                 step_ms: t0.elapsed().as_secs_f32() * 1e3,
             };
+            self.obs.on_step(&rec, sm.fwd_ms, sm.opt_ms);
             if cfg.log_every > 0 && step % cfg.log_every == 0 {
                 if let Some(cb) = self.progress.as_mut() {
                     cb(step, sm.loss);
@@ -180,11 +200,14 @@ impl<'a> Trainer<'a> {
             metrics.push(rec);
             if cfg.eval_every > 0 && step > 0 && step % cfg.eval_every == 0 {
                 let dl = self.dev_loss(&state, false)?;
+                self.obs.on_dev_loss(dl);
                 metrics.dev_losses.push((step, dl));
             }
         }
         metrics.final_dev_loss = Some(self.dev_loss(&state, false)?);
         metrics.wall_secs = wall.elapsed().as_secs_f64();
+        self.obs
+            .on_run_end(metrics.final_dev_loss, metrics.wall_secs);
         Ok((state, metrics))
     }
 }

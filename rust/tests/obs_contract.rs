@@ -1,0 +1,74 @@
+//! The observability contract: every metric name a build can export must
+//! be documented in `docs/OBSERVABILITY.md`. The metric registries are
+//! code (`serve::ServeMetrics`, `obs::TrainObs`); the doc is the contract
+//! scrapers and dashboards are written against — this test keeps the two
+//! from drifting.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use dqt::obs::TrainObs;
+use dqt::serve::ServeMetrics;
+
+fn doc_text() -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("docs")
+        .join("OBSERVABILITY.md");
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Every name either bundle registers, deduplicated — the full exported
+/// surface of `/metrics` on serve, train and dist processes.
+fn all_metric_names() -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    names.extend(ServeMetrics::new().registry().metric_names());
+    names.extend(TrainObs::new().registry().metric_names());
+    names
+}
+
+#[test]
+fn every_exported_metric_is_documented() {
+    let doc = doc_text();
+    let names = all_metric_names();
+    assert!(names.len() >= 25, "registries shrank suspiciously: {names:?}");
+    let missing: Vec<&String> = names.iter().filter(|n| !doc.contains(n.as_str())).collect();
+    assert!(
+        missing.is_empty(),
+        "metrics exported but not documented in docs/OBSERVABILITY.md: {missing:?}"
+    );
+}
+
+#[test]
+fn metric_names_follow_the_naming_convention() {
+    for name in all_metric_names() {
+        assert!(
+            name.starts_with("dqt_serve_")
+                || name.starts_with("dqt_train_")
+                || name.starts_with("dqt_dist_"),
+            "metric {name} is outside the dqt_(serve|train|dist)_ namespaces"
+        );
+        assert!(
+            name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+            "metric {name} is not lower_snake_case"
+        );
+    }
+}
+
+#[test]
+fn documented_streaming_tags_match_the_wire() {
+    // the doc's wire table pins the frame tags and version; a tag or
+    // version bump must update the table
+    let doc = doc_text();
+    for needle in ["| `1` |", "| `2` |", "| `3` |"] {
+        assert!(doc.contains(needle), "wire table row {needle} missing");
+    }
+    assert!(
+        doc.contains(&format!(
+            "protocol version {}",
+            dqt::obs::stream::STREAM_PROTOCOL_VERSION
+        )),
+        "doc must state the current stream protocol version"
+    );
+}

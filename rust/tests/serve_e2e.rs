@@ -321,3 +321,70 @@ fn http_server_round_trip() {
     let (code, _) = http_request(addr, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
     assert_eq!(code, 404);
 }
+
+/// Raw (non-JSON) request helper for the text-format `/metrics` endpoint:
+/// returns (status, full head, body).
+fn http_get_text(addr: SocketAddr, path: &str) -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8_lossy(&buf).into_owned();
+    let code: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("status code");
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    (code, head.to_string(), body.to_string())
+}
+
+/// The value of `name` (an unlabeled series) in rendered exposition text.
+fn metric_value(body: &str, name: &str) -> Option<f64> {
+    body.lines()
+        .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()) == Some(&b' '))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+}
+
+/// `GET /metrics` serves valid Prometheus text whose decode counters move
+/// once a generation completes — the serving half of the observability
+/// contract (docs/OBSERVABILITY.md).
+#[test]
+fn metrics_endpoint_reflects_decode_activity() {
+    let engine = engine_for(&ternary_spec(), 42, false);
+    let server = Server::bind("127.0.0.1:0", engine, 4).unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.run().unwrap());
+
+    let (code, head, body) = http_get_text(addr, "/metrics");
+    assert_eq!(code, 200);
+    assert!(head.contains("text/plain; version=0.0.4"), "{head}");
+    // every non-comment line is `series value` with a finite float value
+    for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (series, value) = line.rsplit_once(' ').expect("series + value");
+        assert!(series.starts_with("dqt_serve_"), "foreign series: {line}");
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+        assert!(v.is_finite(), "{line}");
+    }
+    assert!(body.contains("# TYPE dqt_serve_requests_total counter"), "{body}");
+    assert!(body.contains("# TYPE dqt_serve_ttft_seconds histogram"), "{body}");
+    assert_eq!(metric_value(&body, "dqt_serve_tokens_generated_total"), Some(0.0));
+
+    let (code, _) = post_generate(addr, r#"{"prompt": "the cat", "max_new_tokens": 6}"#);
+    assert_eq!(code, 200);
+
+    let (_, _, body) = http_get_text(addr, "/metrics");
+    assert!(metric_value(&body, "dqt_serve_tokens_generated_total").unwrap() > 0.0);
+    assert!(metric_value(&body, "dqt_serve_decode_steps_total").unwrap() > 0.0);
+    assert_eq!(metric_value(&body, "dqt_serve_requests_total"), Some(1.0));
+    assert_eq!(metric_value(&body, "dqt_serve_completed_total"), Some(1.0));
+    assert_eq!(metric_value(&body, "dqt_serve_ttft_seconds_count"), Some(1.0));
+    assert_eq!(metric_value(&body, "dqt_serve_request_seconds_count"), Some(1.0));
+    // the first scrape plus the generate: exactly two 200s at render time
+    assert!(
+        body.contains("dqt_serve_http_responses_total{code=\"200\"} 2\n"),
+        "{body}"
+    );
+}

@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Fail on dead relative links in the markdown docs.
+
+Scans README.md, docs/*.md and the other root-level markdown files for
+`[text](target)` links, resolves each relative target against the file
+that contains it, and errors if the target does not exist. External
+links (http/https/mailto) and pure in-page anchors are skipped — this
+guards the cross-reference graph between the in-repo documents (the
+docs index, subsystem guides, and code paths they point at), which is
+exactly what silently rots when files move.
+
+CI runs this in the docs job; run locally with:
+    python3 scripts/check_docs_links.py
+"""
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+SCANNED = sorted(
+    [ROOT / "README.md", *(ROOT / "docs").glob("*.md")]
+)
+
+# [text](target) — target up to the first unescaped ')'; tolerate titles
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path):
+    problems = []
+    text = path.read_text()
+    in_code_fence = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code_fence = not in_code_fence
+            continue
+        if in_code_fence:
+            continue
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            if ROOT not in resolved.parents and resolved != ROOT:
+                problems.append(
+                    f"{path.relative_to(ROOT)}:{lineno}: link escapes the repo: {target}"
+                )
+            elif not resolved.exists():
+                problems.append(
+                    f"{path.relative_to(ROOT)}:{lineno}: dead link: {target}"
+                )
+    return problems
+
+
+def main() -> int:
+    problems = []
+    for path in SCANNED:
+        problems.extend(check_file(path))
+    if problems:
+        print("DEAD DOC LINKS:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print(f"docs links OK across {len(SCANNED)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,12 @@
 # and the saved checkpoint bytes. CI runs this as the required dist-smoke
 # job; the same property is pinned in-process by rust/tests/dist.rs.
 #
+# The 2-worker leg also exercises the observability plane: rank 0 runs
+# with --watch-addr and a background `repro watch --join` tails the live
+# stream; afterwards its log must show the run header, per-step loss
+# frames, and the run-end line (docs/OBSERVABILITY.md). Observation is
+# read-only, so the bitwise assertions above hold with it enabled.
+#
 # Usage: scripts/dist_smoke.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -25,7 +31,24 @@ echo "== 1-worker reference run (dist path, identity reducer) =="
 "$BIN" train "${COMMON[@]}" --workers 1 --out "$OUT/w1"
 
 echo "== 2-worker run (rank 0 + spawned local worker, packed sync) =="
-"$BIN" train "${COMMON[@]}" --workers 2 --out "$OUT/w2"
+# watcher first: `repro watch` retries the connect until the publisher
+# binds, so it sees the RunStart header and every step frame
+WATCH_ADDR=127.0.0.1:17961
+"$BIN" watch --join "$WATCH_ADDR" --timeout 60 > "$OUT/watch.log" &
+WATCH_PID=$!
+"$BIN" train "${COMMON[@]}" --workers 2 --out "$OUT/w2" \
+    --watch-addr "$WATCH_ADDR"
+wait "$WATCH_PID"
+
+echo "== watch tail of the 2-worker run =="
+cat "$OUT/watch.log"
+grep -q "^run start: .* (world 2, 20 steps)$" "$OUT/watch.log"
+STEP_LINES=$(grep -c "^step [0-9]*: loss " "$OUT/watch.log")
+[ "$STEP_LINES" -eq 20 ] || {
+    echo "expected 20 per-step frames in the watch tail, saw $STEP_LINES" >&2
+    exit 1
+}
+grep -q "^run end: dev loss " "$OUT/watch.log"
 
 python3 scripts/dist_smoke_assert.py "$OUT/w1" "$OUT/w2"
 echo "dist-smoke OK"

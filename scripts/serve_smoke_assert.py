@@ -12,6 +12,9 @@ Checks (see docs/SERVING.md for the API contract):
   5. Bad requests get 400, unknown routes 404.
   6. /healthz and /v1/stats attribute the numeric tier ("precision");
      when the CI matrix pins DQT_PRECISION the server must report it.
+  7. /metrics serves valid Prometheus text (docs/OBSERVABILITY.md):
+     decode throughput nonzero, TTFT observations recorded, request
+     counters consistent with the traffic this script generated.
 
 Usage: serve_smoke_assert.py <base-url>
 """
@@ -43,6 +46,45 @@ def post(path, body):
             return r.status, json.loads(r.read().decode())
     except urllib.error.HTTPError as e:
         return e.code, json.loads(e.read().decode())
+
+
+def get_text(path):
+    with urllib.request.urlopen(BASE + path, timeout=30) as r:
+        return r.status, r.headers.get("Content-Type", ""), r.read().decode()
+
+
+def metric_value(body, name):
+    """Value of an exposition series; `name` may include its label set."""
+    for line in body.splitlines():
+        if line.startswith(name + " "):
+            return float(line.rsplit(" ", 1)[1])
+    return None
+
+
+def check_metrics():
+    status, content_type, body = get_text("/metrics")
+    assert status == 200, status
+    assert "text/plain; version=0.0.4" in content_type, content_type
+    # every non-comment line is `series value` with a finite float value
+    for line in body.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        series, value = line.rsplit(" ", 1)
+        assert series.startswith("dqt_serve_"), f"foreign series: {line}"
+        float(value)
+    # the traffic above must have moved the decode counters
+    assert metric_value(body, "dqt_serve_tokens_generated_total") > 0, body
+    assert metric_value(body, "dqt_serve_decode_tokens_per_sec") > 0, body
+    assert metric_value(body, "dqt_serve_ttft_seconds_count") > 0, body
+    assert metric_value(body, "dqt_serve_request_seconds_count") > 0, body
+    completed = metric_value(body, "dqt_serve_completed_total")
+    assert completed == metric_value(body, "dqt_serve_requests_total") >= 3, body
+    assert metric_value(body, 'dqt_serve_http_responses_total{code="200"}') >= 3, body
+    assert metric_value(body, 'dqt_serve_http_responses_total{code="400"}') >= 1, body
+    print(
+        f"metrics ok: {completed:.0f} completed, "
+        f"{metric_value(body, 'dqt_serve_decode_tokens_per_sec'):.1f} decode tok/s"
+    )
 
 
 def wait_healthy():
@@ -114,6 +156,9 @@ def main():
         status = e.code
     assert status == 404, status
     print(f"stats + error paths ok: {stats}")
+
+    # /metrics last, so the scrape sees everything this script sent
+    check_metrics()
 
 
 if __name__ == "__main__":
