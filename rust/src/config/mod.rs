@@ -513,24 +513,34 @@ pub fn shard_band(world: usize, rank: usize, rows: usize) -> anyhow::Result<(usi
     Ok((rank * per, (rank + 1) * per))
 }
 
-/// Observability endpoints (`--metrics-addr` / `--watch-addr`; see
-/// `docs/OBSERVABILITY.md`). Both default to off: metric *recording* is
-/// always on (pure atomics behind `TrainObs`/`ServeMetrics`), these only
-/// control whether anything is exposed on the network.
+/// Observability endpoints and sinks (`--metrics-addr` / `--watch-addr`
+/// / `--trace-out`; see `docs/OBSERVABILITY.md`). All default to off:
+/// metric *recording* is always on (pure atomics behind
+/// `TrainObs`/`ServeMetrics`), these only control whether anything is
+/// exposed on the network or written to disk — and span *tracing* is
+/// fully off (one atomic load per span site) unless `trace_out` is set.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ObsConfig {
     /// bind a `GET /metrics` Prometheus endpoint here (e.g. `127.0.0.1:9100`)
     pub metrics_addr: Option<String>,
     /// bind a step-stream publisher here for `dqt watch --join ADDR`
     pub watch_addr: Option<String>,
+    /// enable span tracing and write a Chrome trace-event JSON here at
+    /// run end (e.g. `trace.json`)
+    pub trace_out: Option<String>,
 }
 
 impl ObsConfig {
     /// Resolve from CLI values with environment fallback: an explicit CLI
-    /// address wins, else `DQT_METRICS_ADDR` / `DQT_WATCH_ADDR`; empty
-    /// strings (from either source) mean "off". Mirrors the precedence of
-    /// [`effective_threads`] / [`effective_precision`].
-    pub fn resolve(cli_metrics: Option<String>, cli_watch: Option<String>) -> ObsConfig {
+    /// value wins, else `DQT_METRICS_ADDR` / `DQT_WATCH_ADDR` /
+    /// `DQT_TRACE_OUT`; empty strings (from either source) mean "off".
+    /// Mirrors the precedence of [`effective_threads`] /
+    /// [`effective_precision`].
+    pub fn resolve(
+        cli_metrics: Option<String>,
+        cli_watch: Option<String>,
+        cli_trace: Option<String>,
+    ) -> ObsConfig {
         let pick = |cli: Option<String>, env_key: &str| -> Option<String> {
             cli.or_else(|| std::env::var(env_key).ok())
                 .map(|s| s.trim().to_string())
@@ -539,10 +549,12 @@ impl ObsConfig {
         ObsConfig {
             metrics_addr: pick(cli_metrics, "DQT_METRICS_ADDR"),
             watch_addr: pick(cli_watch, "DQT_WATCH_ADDR"),
+            trace_out: pick(cli_trace, "DQT_TRACE_OUT"),
         }
     }
 
-    /// True when at least one endpoint is configured.
+    /// True when at least one network endpoint is configured (the trace
+    /// sink is file-only and gates nothing here).
     pub fn enabled(&self) -> bool {
         self.metrics_addr.is_some() || self.watch_addr.is_some()
     }
@@ -696,15 +708,19 @@ mod tests {
     #[test]
     fn obs_config_resolution() {
         // CLI wins; blank strings disable; default is fully off
-        let o = ObsConfig::resolve(Some("127.0.0.1:9100".into()), None);
+        let o = ObsConfig::resolve(Some("127.0.0.1:9100".into()), None, None);
         assert_eq!(o.metrics_addr.as_deref(), Some("127.0.0.1:9100"));
         assert!(o.enabled());
-        let o = ObsConfig::resolve(Some("  ".into()), Some(String::new()));
+        let o = ObsConfig::resolve(Some("  ".into()), Some(String::new()), Some("\t".into()));
         assert_eq!(o, ObsConfig::default());
         assert!(!o.enabled());
-        let o = ObsConfig::resolve(None, Some("0.0.0.0:7007".into()));
+        let o = ObsConfig::resolve(None, Some("0.0.0.0:7007".into()), None);
         assert_eq!(o.watch_addr.as_deref(), Some("0.0.0.0:7007"));
         assert!(o.metrics_addr.is_none() || std::env::var("DQT_METRICS_ADDR").is_ok());
+        // trace sink rides the same precedence but does not flip enabled()
+        let o = ObsConfig::resolve(None, None, Some(" trace.json ".into()));
+        assert_eq!(o.trace_out.as_deref(), Some("trace.json"));
+        assert!(!o.enabled());
     }
 
     #[test]

@@ -42,6 +42,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::DistConfig;
+use crate::obs::trace;
 use crate::obs::TrainObs;
 use crate::runtime::{GradReducer, Manifest, State};
 use crate::train::StepExchange;
@@ -117,7 +118,10 @@ impl GradReducer for DistExchange {
     ) -> Result<()> {
         let before = self.col.wire_bytes();
         let t0 = Instant::now();
-        self.col.all_reduce(step, grads, nll, count)?;
+        {
+            let _sp = trace::span("dist", trace::names::DIST_ALLREDUCE);
+            self.col.all_reduce(step, grads, nll, count)?;
+        }
         if let Some(obs) = &self.obs {
             obs.on_allreduce(self.col.wire_bytes() - before, t0.elapsed());
         }
@@ -147,9 +151,11 @@ impl StepExchange for DistExchange {
         if self.sync_every == 0 || step == 0 || step % self.sync_every != 0 {
             return Ok(0);
         }
-        let bytes = self
-            .col
-            .sync_grids(step, manifest, state, self.packed_sync)?;
+        let bytes = {
+            let _sp = trace::span("dist", trace::names::DIST_GRID_SYNC);
+            self.col
+                .sync_grids(step, manifest, state, self.packed_sync)?
+        };
         self.sync_bytes += bytes;
         self.syncs += 1;
         if let Some(obs) = &self.obs {

@@ -24,6 +24,7 @@
 use std::sync::OnceLock;
 
 use crate::config::Precision;
+use crate::obs::trace;
 
 /// A fixed-width fan-out handle for the kernel layer, carrying the
 /// numeric tier the kernels should dispatch on. Cheap to clone via
@@ -143,14 +144,20 @@ impl Pool {
                 chunk0 += per;
             }
             let last = bands.pop();
-            for (c0, band) in bands {
+            let last_worker = bands.len();
+            let precision = self.precision.as_str();
+            for (w, (c0, band)) in bands.into_iter().enumerate() {
                 s.spawn(move || {
+                    // one kernel.task span per worker band, on the
+                    // worker's stable trace track (no-op unless tracing)
+                    let _sp = trace::worker_span(w, precision);
                     for (j, c) in band.chunks_mut(chunk_len).enumerate() {
                         f(c0 + j, c);
                     }
                 });
             }
             if let Some((c0, band)) = last {
+                let _sp = trace::worker_span(last_worker, precision);
                 for (j, c) in band.chunks_mut(chunk_len).enumerate() {
                     f(c0 + j, c);
                 }
@@ -173,11 +180,13 @@ impl Pool {
         }
         let mut out: Vec<Option<T>> = Vec::with_capacity(n);
         out.resize_with(n, || None);
+        let precision = self.precision.as_str();
         std::thread::scope(|s| {
             let f = &f;
             let handles: Vec<_> = (1..workers)
                 .map(|w| {
                     s.spawn(move || {
+                        let _sp = trace::worker_span(w, precision);
                         let mut acc = Vec::new();
                         let mut i = w;
                         while i < n {
@@ -190,10 +199,13 @@ impl Pool {
                 .collect();
             // stride 0 runs on the calling thread
             let mut mine = Vec::new();
-            let mut i = 0;
-            while i < n {
-                mine.push((i, f(i)));
-                i += workers;
+            {
+                let _sp = trace::worker_span(0, precision);
+                let mut i = 0;
+                while i < n {
+                    mine.push((i, f(i)));
+                    i += workers;
+                }
             }
             for (i, v) in mine {
                 out[i] = Some(v);

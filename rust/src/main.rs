@@ -47,6 +47,12 @@ GLOBAL: --artifacts <dir>  --results <dir>
                       SIMD-friendly reassociated kernels, identical to
                       exact within f32 tolerance and still deterministic
                       per thread count (docs/PERFORMANCE.md)
+        --trace-out FILE   span tracing (train/worker/serve/generate):
+                      write a Chrome trace-event JSON there at run end
+                      and print a per-phase profile table (default:
+                      DQT_TRACE_OUT env, else off; docs/OBSERVABILITY.md
+                      has the span-name contract). Off = one atomic
+                      load per span site, results bitwise unchanged
 
 COMMANDS
   train   --model t130 --mode dqt --bits 1.58 [--env fp32] [--optimizer adamw]
@@ -81,7 +87,9 @@ COMMANDS
           [--dataset wiki] [--data-seed 42]  — also serves GET /metrics
   sweep   --exp fig2|fig3|fig4|fig5|fig6|fig7|fig9|table1|abl1|abl2|all
           [--steps N] [--workers 1]
-  report  --exp table2|table3|memory|serving|dist|<exp-id with results>
+  report  --exp table2|table3|memory|serving|dist|profile|<exp-id with
+          results>   (profile: [--trace trace.json] re-renders the
+          per-phase table from a --trace-out file)
   list
   memory  (variant flags) [--batch 1] [--workers N  distributed estimate:
           per-rank resident bytes + wire bytes per sync, f32 vs packed]
@@ -216,6 +224,7 @@ fn train_obs_from(a: &Args) -> Result<Option<Arc<TrainObs>>> {
     let ocfg = ObsConfig::resolve(
         a.get("metrics-addr").map(|s| s.to_string()),
         a.get("watch-addr").map(|s| s.to_string()),
+        None, // the trace sink is process-wide: see trace_from
     );
     if !ocfg.enabled() {
         return Ok(None);
@@ -237,11 +246,33 @@ fn train_obs_from(a: &Args) -> Result<Option<Arc<TrainObs>>> {
     Ok(Some(obs))
 }
 
+/// Enable the span tracer when `--trace-out` / `DQT_TRACE_OUT` is set
+/// (docs/OBSERVABILITY.md §Tracing). One-shot commands pair this with
+/// [`finish_trace`]; the serve decode loop instead flushes the file
+/// incrementally whenever it drains to idle.
+fn trace_from(a: &Args) {
+    let ocfg = ObsConfig::resolve(None, None, a.get("trace-out").map(|s| s.to_string()));
+    if let Some(path) = &ocfg.trace_out {
+        dqt::obs::trace::set_out_path(path);
+        dqt::obs::trace::enable();
+        eprintln!("trace: spans → {path} (Chrome trace-event JSON)");
+    }
+}
+
+/// Run-end half of [`trace_from`]: write the trace file and print the
+/// per-phase profile table. No-op when tracing is off.
+fn finish_trace() {
+    if let Some(table) = dqt::obs::trace::finish() {
+        eprintln!("trace profile (docs/OBSERVABILITY.md §Tracing):\n{table}");
+    }
+}
+
 /// The flags a spawned local worker must replay so every rank agrees on
 /// the variant, the schedule and the sync policy (`--rank`/`--join` are
-/// appended per worker by the spawner). `--metrics-addr`/`--watch-addr`
-/// are deliberately *not* forwarded: every spawned rank would race to
-/// bind the same addresses — multi-host workers opt in per rank instead.
+/// appended per worker by the spawner). `--metrics-addr`/`--watch-addr`/
+/// `--trace-out` are deliberately *not* forwarded: every spawned rank
+/// would race to bind the same addresses (or clobber the same trace
+/// file) — multi-host workers opt in per rank instead.
 fn dist_passthrough(a: &Args) -> Vec<String> {
     let mut v = Vec::new();
     for k in [
@@ -298,6 +329,7 @@ fn main() -> Result<()> {
                 .get("out")
                 .map(PathBuf::from)
                 .unwrap_or_else(|| results.join("train").join(&name));
+            trace_from(&a);
             if a.has("workers") {
                 // distributed data-parallel path (native backend only —
                 // the PJRT path has no sharded train entry): rank 0 hosts
@@ -341,6 +373,7 @@ fn main() -> Result<()> {
                     dr.sync_bytes,
                     out_dir.display()
                 );
+                finish_trace();
                 return Ok(());
             }
             let vrt = VariantRuntime::open_with_pool(
@@ -380,6 +413,7 @@ fn main() -> Result<()> {
                 metrics.final_dev_loss.unwrap_or(f32::NAN),
                 out_dir.display()
             );
+            finish_trace();
         }
         "worker" => {
             let spec = variant_spec(&a)?;
@@ -391,7 +425,9 @@ fn main() -> Result<()> {
             }
             let tcfg = train_config_from(&a)?;
             let dcfg = dist_config_from(&a, world, rank, join)?;
+            trace_from(&a);
             dqt::dist::worker::run(&spec, &tcfg, &dcfg, pool_from_args(&a)?, train_obs_from(&a)?)?;
+            finish_trace();
         }
         "watch" => {
             let addr = a.req("join")?;
@@ -461,6 +497,7 @@ fn main() -> Result<()> {
             }
         }
         "generate" => {
+            trace_from(&a);
             let (engine, name) = open_engine(&a, &artifacts)?;
             let prompt = a.str_or("prompt", "");
             let params = dqt::serve::GenParams {
@@ -482,8 +519,10 @@ fn main() -> Result<()> {
                 (g.prompt_tokens + g.token_ids.len()) as f64 / secs.max(1e-9),
                 g.finish.as_str()
             );
+            finish_trace();
         }
         "serve" => {
+            trace_from(&a);
             let (engine, name) = open_engine(&a, &artifacts)?;
             let threads = engine.decoder().threads();
             let precision = engine.decoder().precision().as_str();
@@ -531,6 +570,10 @@ fn main() -> Result<()> {
                 "dist" => println!(
                     "{}",
                     report::dist_memory("p1b", a.parse_or("workers", 4)?)?
+                ),
+                "profile" => println!(
+                    "{}",
+                    report::profile_from_trace(&PathBuf::from(a.str_or("trace", "trace.json")))?
                 ),
                 e => {
                     let runs = report::load_runs(&results, e)?;

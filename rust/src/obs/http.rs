@@ -9,6 +9,7 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -21,6 +22,12 @@ pub const METRICS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
 
 const SCRAPE_TIMEOUT: Duration = Duration::from_secs(5);
 const MAX_REQUEST_BYTES: usize = 16 * 1024;
+/// Scrape handlers allowed in flight at once. A scrape endpoint has one
+/// or two well-behaved clients; anything past this is a stuck scraper or
+/// a misdirected load test, and the accept loop sheds it by closing the
+/// connection immediately instead of spawning an unbounded thread pile
+/// (each spawned handler can hold its thread for [`SCRAPE_TIMEOUT`]).
+pub const MAX_CONCURRENT_SCRAPES: usize = 8;
 
 /// Handle for a running metrics endpoint. Dropping it does not stop the
 /// accept thread (it lives for the process, like the serve listener);
@@ -36,12 +43,22 @@ impl MetricsServer {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding metrics address {addr}"))?;
         let bound = listener.local_addr()?;
+        let active = Arc::new(AtomicUsize::new(0));
         std::thread::spawn(move || {
             for stream in listener.incoming() {
                 let Ok(stream) = stream else { continue };
+                // overload shed: past the cap, drop the connection on the
+                // floor (close = EOF for the client) rather than queue it
+                if active.load(Ordering::Acquire) >= MAX_CONCURRENT_SCRAPES {
+                    drop(stream);
+                    continue;
+                }
+                active.fetch_add(1, Ordering::AcqRel);
                 let reg = registry.clone();
+                let active = active.clone();
                 std::thread::spawn(move || {
                     let _ = serve_scrape(stream, &reg);
+                    active.fetch_sub(1, Ordering::AcqRel);
                 });
             }
         });
@@ -119,5 +136,63 @@ mod tests {
 
         let response = get(server.local_addr(), "/other");
         assert!(response.starts_with("HTTP/1.1 404"), "{response}");
+    }
+
+    /// Past [`MAX_CONCURRENT_SCRAPES`] in-flight handlers the accept loop
+    /// closes new connections instead of spawning more threads — and
+    /// recovers once the pile drains.
+    #[test]
+    fn accept_loop_sheds_connections_past_the_cap() {
+        let registry = Arc::new(Registry::new());
+        registry
+            .counter("dqt_test_shed_total", "Shed-test counter.")
+            .inc();
+        let server = MetricsServer::spawn("127.0.0.1:0", registry).unwrap();
+        let addr = server.local_addr();
+
+        // saturate: hold handler threads mid-request (partial head, no
+        // terminating blank line) so they stay in flight
+        let mut holds: Vec<TcpStream> = (0..MAX_CONCURRENT_SCRAPES)
+            .map(|_| {
+                let mut s = TcpStream::connect(addr).unwrap();
+                write!(s, "GET /metrics HTT").unwrap();
+                s.flush().unwrap();
+                s
+            })
+            .collect();
+
+        // a shed connection reads as EOF (or a reset when the request
+        // raced the close) — either way, no status line comes back
+        let try_get = |path: &str| -> String {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let _ = write!(stream, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n");
+            let mut out = String::new();
+            let _ = stream.read_to_string(&mut out);
+            out
+        };
+
+        // the holds are accepted asynchronously, so poll until a probe is
+        // shed
+        let mut shed = false;
+        for _ in 0..200 {
+            if !try_get("/metrics").starts_with("HTTP/1.1") {
+                shed = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(shed, "probe was never shed at {MAX_CONCURRENT_SCRAPES} held scrapes");
+
+        // drain: dropping the holds EOFs their handlers; scrapes recover
+        holds.clear();
+        let mut recovered = false;
+        for _ in 0..200 {
+            if try_get("/metrics").starts_with("HTTP/1.1 200 OK") {
+                recovered = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(recovered, "scrapes must succeed again after the pile drains");
     }
 }

@@ -17,6 +17,10 @@
 //!   [`Publisher`] (`--watch-addr`) and tailed by [`stream::watch`]
 //!   (`repro watch --join ADDR`): one frame per optimizer step, so a
 //!   live run's loss curve can be followed from another terminal.
+//! * [`trace`] — the span tracer (`--trace-out trace.json`): RAII-guard
+//!   phase spans folded into a per-phase profile and exported as Chrome
+//!   trace-event JSON. Off by default; one atomic load per span site
+//!   when disabled.
 //!
 //! [`TrainObs`] bundles the training/distributed metrics and the
 //! publisher behind one handle that rides through `Trainer` the way
@@ -26,6 +30,7 @@
 pub mod http;
 pub mod registry;
 pub mod stream;
+pub mod trace;
 pub mod train;
 
 pub use http::{MetricsServer, METRICS_CONTENT_TYPE};

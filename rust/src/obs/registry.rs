@@ -526,6 +526,68 @@ mod tests {
         assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1));
     }
 
+    /// A histogram with zero observations still renders a complete,
+    /// well-formed series: every bucket at 0, sum 0, count 0.
+    #[test]
+    fn histogram_with_zero_observations_renders_empty_buckets() {
+        let r = Registry::new();
+        let h = r.histogram("idle_seconds", "never observed", &[0.5, 2.0]);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(
+            h.cumulative(),
+            vec![(0.5, 0), (2.0, 0), (f64::INFINITY, 0)]
+        );
+        let text = r.render();
+        assert!(text.contains("idle_seconds_bucket{le=\"0.5\"} 0\n"), "{text}");
+        assert!(text.contains("idle_seconds_bucket{le=\"2\"} 0\n"), "{text}");
+        assert!(text.contains("idle_seconds_bucket{le=\"+Inf\"} 0\n"), "{text}");
+        assert!(text.contains("idle_seconds_sum 0\n"), "{text}");
+        assert!(text.contains("idle_seconds_count 0\n"), "{text}");
+    }
+
+    /// `le` is inclusive: a value exactly on a bound lands in that bound's
+    /// bucket, not the next one — for every bound in the layout.
+    #[test]
+    fn histogram_boundary_values_land_in_their_own_bucket() {
+        let r = Registry::new();
+        let h = r.histogram("edge_seconds", "boundary landings", &[0.25, 1.0, 4.0]);
+        h.observe(0.25);
+        h.observe(1.0);
+        h.observe(4.0);
+        // per-bucket (non-cumulative) expectation: one landing each
+        assert_eq!(
+            h.cumulative(),
+            vec![(0.25, 1), (1.0, 2), (4.0, 3), (f64::INFINITY, 3)]
+        );
+        // the next representable value past a bound spills over
+        h.observe(0.25 + f64::EPSILON);
+        assert_eq!(
+            h.cumulative(),
+            vec![(0.25, 1), (1.0, 3), (4.0, 4), (f64::INFINITY, 4)]
+        );
+    }
+
+    /// Values beyond the last finite bound only move the implicit `+Inf`
+    /// bucket, and the cumulative `+Inf` count always equals `_count` —
+    /// including for infinite observations.
+    #[test]
+    fn histogram_overflow_accumulates_in_inf_bucket_only() {
+        let r = Registry::new();
+        let h = r.histogram("big_seconds", "overflow landings", &[1.0]);
+        h.observe(100.0);
+        h.observe(1e18);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.cumulative(), vec![(1.0, 0), (f64::INFINITY, 3)]);
+        assert_eq!(h.count(), 3);
+        let inf_cum = h.cumulative().last().unwrap().1;
+        assert_eq!(inf_cum, h.count(), "+Inf bucket must equal _count");
+        let text = r.render();
+        assert!(text.contains("big_seconds_bucket{le=\"1\"} 0\n"), "{text}");
+        assert!(text.contains("big_seconds_bucket{le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("big_seconds_count 3\n"), "{text}");
+    }
+
     #[test]
     fn render_is_deterministic_under_fixed_input() {
         let build = || {

@@ -31,8 +31,31 @@ pub const STREAM_PROTOCOL_VERSION: u32 = 1;
 /// large is a corrupt length prefix.
 pub const MAX_STREAM_FRAME_BYTES: u64 = 1 << 20;
 
-/// How long a broadcast write may stall before the subscriber is dropped.
-const SUBSCRIBER_WRITE_TIMEOUT: Duration = Duration::from_secs(2);
+/// Default for the subscriber write-stall eviction timeout, in ms.
+const SUBSCRIBER_WRITE_TIMEOUT_MS: u64 = 2000;
+
+/// Resolve a `DQT_WATCH_TIMEOUT_MS`-style value: positive integer
+/// milliseconds, whitespace tolerated; anything else (unset, empty,
+/// non-numeric, zero) falls back to the 2 s default. Pure so it is
+/// testable without mutating the process environment.
+fn parse_watch_timeout(raw: Option<String>) -> Duration {
+    let ms = raw
+        .as_deref()
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .unwrap_or(SUBSCRIBER_WRITE_TIMEOUT_MS);
+    Duration::from_millis(ms)
+}
+
+/// How long a broadcast write may stall before the subscriber is
+/// dropped — `DQT_WATCH_TIMEOUT_MS` (default 2000). Raise it for
+/// watchers on slow links, lower it to shed stalls faster; either way
+/// the training loop never blocks longer than this per subscriber.
+fn subscriber_write_timeout() -> Duration {
+    parse_watch_timeout(std::env::var("DQT_WATCH_TIMEOUT_MS").ok())
+}
 
 const TAG_RUN_START: u8 = 1;
 const TAG_STEP: u8 = 2;
@@ -315,7 +338,7 @@ impl Publisher {
                 Ok((stream, _peer)) => {
                     let ok = stream.set_nonblocking(false).is_ok()
                         && stream
-                            .set_write_timeout(Some(SUBSCRIBER_WRITE_TIMEOUT))
+                            .set_write_timeout(Some(subscriber_write_timeout()))
                             .is_ok();
                     if !ok {
                         continue;
@@ -383,6 +406,12 @@ impl Drop for Publisher {
 /// `connect_timeout` passes, so a watcher can be started slightly before
 /// the run), then invoke `on_frame` for every received frame until
 /// `RunEnd` or the publisher closes the stream.
+///
+/// The same `connect_timeout` budget also bounds the wait for the *first
+/// frame*: a publisher replays its stored `RunStart` on connect, so a
+/// connection that stays silent past the deadline means no run is live —
+/// `watch` errors instead of hanging, and `repro watch --join` exits
+/// nonzero.
 pub fn watch(
     addr: &str,
     connect_timeout: Duration,
@@ -400,6 +429,25 @@ pub fn watch(
             }
         }
     };
+    let remaining = deadline.saturating_duration_since(Instant::now());
+    stream.set_read_timeout(Some(remaining.max(Duration::from_millis(10))))?;
+    let first = match StreamFrame::read_from(&mut stream) {
+        Ok(f) => f,
+        Err(e) if Instant::now() >= deadline => {
+            return Err(anyhow!(
+                "no RunStart from {addr} within {connect_timeout:?} — is a run publishing there? ({e})"
+            ));
+        }
+        Err(e) => return Err(e),
+    };
+    let Some(first) = first else {
+        return Ok(()); // publisher closed before any frame: run is over
+    };
+    let done = matches!(first, StreamFrame::RunEnd { .. });
+    on_frame(&first);
+    if done {
+        return Ok(());
+    }
     stream.set_read_timeout(Some(Duration::from_secs(600)))?;
     loop {
         match StreamFrame::read_from(&mut stream)? {
@@ -523,6 +571,42 @@ mod tests {
         assert_eq!(seen[0], frames()[0], "late joiner must get the stored RunStart");
         assert!(matches!(seen[1], StreamFrame::Step { step: 0, .. }));
         assert!(matches!(seen[4], StreamFrame::RunEnd { .. }));
+    }
+
+    /// A publisher that never sends a `RunStart` must not hang the
+    /// watcher: the connect-timeout budget also bounds the first-frame
+    /// wait, and the error propagates (`repro watch --join` exits
+    /// nonzero through `main`'s `?`).
+    #[test]
+    fn watch_times_out_when_no_run_start_arrives() {
+        let publisher = Publisher::bind("127.0.0.1:0").unwrap();
+        let addr = publisher.local_addr().to_string();
+        let t0 = Instant::now();
+        let err = watch(&addr, Duration::from_millis(300), |_| {
+            panic!("no frame was ever published")
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("RunStart"), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "watch must give up promptly, took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    /// The subscriber write-stall eviction timeout parses leniently and
+    /// always lands on something usable (pure helper, no env mutation).
+    #[test]
+    fn watch_timeout_parsing_defaults_and_rejects_garbage() {
+        let default = Duration::from_millis(SUBSCRIBER_WRITE_TIMEOUT_MS);
+        assert_eq!(parse_watch_timeout(None), default);
+        assert_eq!(parse_watch_timeout(Some("500".into())), Duration::from_millis(500));
+        assert_eq!(parse_watch_timeout(Some(" 750 ".into())), Duration::from_millis(750));
+        assert_eq!(parse_watch_timeout(Some(String::new())), default);
+        assert_eq!(parse_watch_timeout(Some("  ".into())), default);
+        assert_eq!(parse_watch_timeout(Some("abc".into())), default);
+        assert_eq!(parse_watch_timeout(Some("-5".into())), default);
+        assert_eq!(parse_watch_timeout(Some("0".into())), default);
     }
 
     /// A watcher that disconnects must be evicted on the next publish,

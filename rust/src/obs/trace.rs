@@ -1,0 +1,819 @@
+//! Span tracing & profiling: per-phase attribution of where wall time
+//! goes inside a train step or a served request.
+//!
+//! Design, in the house style (zero dependencies, std only):
+//!
+//! * **One global tracer, off by default.** The only cost a span site
+//!   pays while tracing is disabled is a single relaxed atomic load —
+//!   [`span`] returns an inert guard without even reading the clock.
+//! * **RAII guards** ([`Span`]): entering a phase is
+//!   `let _sp = trace::span("train", names::TRAIN_STEP);` and the span
+//!   ends when the guard drops — including during a panic unwind, so
+//!   enter/exit always stay balanced.
+//! * **Monotonic timestamps**: every event is measured with
+//!   [`Instant`] against the tracer's epoch (the moment tracing was
+//!   enabled); wall-clock time never appears, so traces are immune to
+//!   clock steps.
+//! * **Bounded ring**: finished spans land in a drop-oldest ring of
+//!   [`RING_CAPACITY`] events behind a short mutex push; a runaway run
+//!   degrades to losing the *oldest* events (counted, and reported in
+//!   the export), never to unbounded memory.
+//! * **Two sinks**: [`write_chrome_trace`] emits Chrome trace-event
+//!   format JSON (`--trace-out trace.json`, loadable in
+//!   `chrome://tracing` or Perfetto, with named per-thread tracks for
+//!   kernel-pool workers), and [`profile`] folds the same events into a
+//!   per-phase table (count / total / mean / p95 / % of wall) rendered
+//!   by [`render_table`] at run end and by `report --exp profile`.
+//!
+//! Span names are a documented contract (`docs/OBSERVABILITY.md`
+//! §Tracing), pinned by `rust/tests/trace_contract.rs` exactly like the
+//! metric names — every name the code can record is listed in
+//! [`names::ALL`].
+//!
+//! Observation is read-only: spans wrap calls and never touch the
+//! arithmetic inside them, so the bitwise-determinism contracts
+//! (`docs/PERFORMANCE.md`, `docs/DISTRIBUTED.md`) hold with tracing on
+//! or off.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Finished spans buffered for export before drop-oldest kicks in
+/// (~30 MB worst case; a 20-step smoke train records a few percent of
+/// this).
+pub const RING_CAPACITY: usize = 1 << 18;
+
+/// The span-name contract. Everything the instrumentation can record
+/// is a constant here; [`names::ALL`] is the pinned list the contract
+/// test checks against `docs/OBSERVABILITY.md`.
+pub mod names {
+    /// One optimizer step, fetch to metrics, on the training thread.
+    pub const TRAIN_STEP: &str = "train.step";
+    /// Pulling the step's token batch from the data pipeline.
+    pub const TRAIN_DATA_LOAD: &str = "train.data_load";
+    /// The forward pass of the loss computation.
+    pub const TRAIN_FORWARD: &str = "train.forward";
+    /// The hand-written backward pass (head CE gradient to embeddings).
+    pub const TRAIN_BACKWARD: &str = "train.backward";
+    /// Optimizer + §3 stochastic-rounding update, all params.
+    pub const TRAIN_OPTIMIZER: &str = "train.optimizer";
+    /// The SR projection back onto the quantized grid, per grid tensor
+    /// (nested inside `train.optimizer`).
+    pub const TRAIN_SR_PROJECT: &str = "train.sr_project";
+    /// Cross-rank gradient all-reduce (blocked wall time on this rank).
+    pub const DIST_ALLREDUCE: &str = "dist.allreduce";
+    /// Periodic packed-grid weight resync.
+    pub const DIST_GRID_SYNC: &str = "dist.grid_sync";
+    /// Per-layer RMSNorm (attention and MLP norms both record it).
+    pub const FWD_RMSNORM: &str = "fwd.rmsnorm";
+    /// Per-layer attention block: QKV projections, RoPE, scores, WO.
+    pub const FWD_ATTENTION: &str = "fwd.attention";
+    /// Per-layer SwiGLU MLP: gate/up projections, silu·up, down.
+    pub const FWD_SWIGLU: &str = "fwd.swiglu";
+    /// Final norm + tied vocabulary head.
+    pub const FWD_HEAD: &str = "fwd.head";
+    /// One served request, submission to eviction.
+    pub const SERVE_REQUEST: &str = "serve.request";
+    /// Submission → first checkout into a decode batch.
+    pub const SERVE_QUEUE_WAIT: &str = "serve.queue_wait";
+    /// First checkout → first sampled token (prompt consumption).
+    pub const SERVE_PREFILL: &str = "serve.prefill";
+    /// One batched decode step (model forward for all checked-out rows).
+    pub const SERVE_DECODE: &str = "serve.decode";
+    /// Sampling next tokens from the step's logits.
+    pub const SERVE_SAMPLE: &str = "serve.sample";
+    /// Incremental detokenization of sampled tokens.
+    pub const SERVE_DETOKENIZE: &str = "serve.detokenize";
+    /// One kernel-pool worker executing its band of a fanned op
+    /// (labelled with the pool's precision tier; its track is the
+    /// worker index).
+    pub const KERNEL_TASK: &str = "kernel.task";
+
+    /// Every span name the code can record — the contract surface.
+    pub const ALL: &[&str] = &[
+        TRAIN_STEP,
+        TRAIN_DATA_LOAD,
+        TRAIN_FORWARD,
+        TRAIN_BACKWARD,
+        TRAIN_OPTIMIZER,
+        TRAIN_SR_PROJECT,
+        DIST_ALLREDUCE,
+        DIST_GRID_SYNC,
+        FWD_RMSNORM,
+        FWD_ATTENTION,
+        FWD_SWIGLU,
+        FWD_HEAD,
+        SERVE_REQUEST,
+        SERVE_QUEUE_WAIT,
+        SERVE_PREFILL,
+        SERVE_DECODE,
+        SERVE_SAMPLE,
+        SERVE_DETOKENIZE,
+        KERNEL_TASK,
+    ];
+}
+
+/// One finished span.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// static key=value annotation (e.g. `("precision", "fast")`)
+    pub label: Option<(&'static str, &'static str)>,
+    /// numeric annotation (e.g. `("layer", 3)` or `("rows", 16)`)
+    pub arg: Option<(&'static str, u64)>,
+    /// track id: caller threads get small ids, pool workers
+    /// [`pool_track`] ids — rendered as separate named Chrome tracks
+    pub track: u32,
+    /// microseconds since the tracer epoch
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+struct Ring {
+    events: VecDeque<SpanEvent>,
+    /// events discarded because the ring was full
+    dropped: u64,
+    /// events ever pushed (dirty marker for incremental flushing)
+    total: u64,
+}
+
+struct TracerState {
+    epoch: Instant,
+    ring: Mutex<Ring>,
+    /// track id → display name for the Chrome thread-name metadata
+    tracks: Mutex<BTreeMap<u32, String>>,
+    out_path: Mutex<Option<String>>,
+    /// `Ring::total` at the last successful write (see [`flush_if_dirty`])
+    flushed_total: AtomicU64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_THREAD_TRACK: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    static THREAD_TRACK: std::cell::Cell<u32> = const { std::cell::Cell::new(u32::MAX) };
+}
+
+fn state() -> &'static TracerState {
+    static STATE: OnceLock<TracerState> = OnceLock::new();
+    STATE.get_or_init(|| TracerState {
+        epoch: Instant::now(),
+        ring: Mutex::new(Ring {
+            events: VecDeque::new(),
+            dropped: 0,
+            total: 0,
+        }),
+        tracks: Mutex::new(BTreeMap::new()),
+        out_path: Mutex::new(None),
+        flushed_total: AtomicU64::new(0),
+    })
+}
+
+/// Turn tracing on (sets the epoch on first call). Safe to call more
+/// than once.
+pub fn enable() {
+    state();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn tracing off. Already-buffered events stay exportable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// The one check every span site pays while tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Remember where [`flush_if_dirty`] / [`finish`] should write the
+/// Chrome trace.
+pub fn set_out_path(path: &str) {
+    *state().out_path.lock().unwrap() = Some(path.to_string());
+}
+
+/// The configured `--trace-out` path, if any.
+pub fn out_path() -> Option<String> {
+    if !enabled() {
+        return None;
+    }
+    state().out_path.lock().unwrap().clone()
+}
+
+/// Track id for kernel-pool worker `i` — stable across pool scopes, so
+/// every fanned op's band for worker `i` lands on one named Chrome
+/// track even though the pool spawns fresh scoped threads per call.
+pub fn pool_track(worker: usize) -> u32 {
+    100_000 + worker as u32
+}
+
+fn register_track(track: u32, name: impl FnOnce() -> String) {
+    let mut tracks = state().tracks.lock().unwrap();
+    tracks.entry(track).or_insert_with(name);
+}
+
+/// Name the current thread's track in the export (e.g.
+/// `"serve-decode-loop"`). Cheap no-op while disabled.
+pub fn set_thread_name(name: &str) {
+    if !enabled() {
+        return;
+    }
+    let track = current_track();
+    let owned = name.to_string();
+    state()
+        .tracks
+        .lock()
+        .unwrap()
+        .insert(track, owned);
+}
+
+fn current_track() -> u32 {
+    THREAD_TRACK.with(|t| {
+        let v = t.get();
+        if v != u32::MAX {
+            return v;
+        }
+        let id = NEXT_THREAD_TRACK.fetch_add(1, Ordering::Relaxed);
+        t.set(id);
+        register_track(id, || {
+            std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{id}"))
+        });
+        id
+    })
+}
+
+/// A live span: created by [`span`] and friends, recorded when dropped
+/// — also during panic unwinds, which is what keeps enter/exit
+/// balanced under failure.
+#[must_use = "a span measures the scope it lives in — bind it to a variable"]
+pub struct Span(Option<ActiveSpan>);
+
+struct ActiveSpan {
+    name: &'static str,
+    cat: &'static str,
+    label: Option<(&'static str, &'static str)>,
+    arg: Option<(&'static str, u64)>,
+    track: u32,
+    start: Instant,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(a) = self.0.take() {
+            let end = Instant::now();
+            push_event(SpanEvent {
+                name: a.name,
+                cat: a.cat,
+                label: a.label,
+                arg: a.arg,
+                track: a.track,
+                start_us: since_epoch_us(a.start),
+                dur_us: end.saturating_duration_since(a.start).as_micros() as u64,
+            });
+        }
+    }
+}
+
+/// Start a span on the current thread's track. Inert (no clock read,
+/// no allocation) while tracing is disabled.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(ActiveSpan {
+        name,
+        cat,
+        label: None,
+        arg: None,
+        track: current_track(),
+        start: Instant::now(),
+    }))
+}
+
+/// [`span`] with a numeric annotation (layer index, batch rows, …).
+#[inline]
+pub fn span_arg(cat: &'static str, name: &'static str, key: &'static str, value: u64) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(ActiveSpan {
+        name,
+        cat,
+        label: None,
+        arg: Some((key, value)),
+        track: current_track(),
+        start: Instant::now(),
+    }))
+}
+
+/// A kernel-pool worker span: lands on worker `i`'s stable track and
+/// carries the pool's precision tier, so exact-vs-fast attribution
+/// falls out of the trace for free.
+#[inline]
+pub fn worker_span(worker: usize, precision: &'static str) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    let track = pool_track(worker);
+    register_track(track, || format!("pool-worker-{worker}"));
+    Span(Some(ActiveSpan {
+        name: names::KERNEL_TASK,
+        cat: "kernel",
+        label: Some(("precision", precision)),
+        arg: Some(("worker", worker as u64)),
+        track,
+        start: Instant::now(),
+    }))
+}
+
+/// Record a span whose endpoints were measured elsewhere (e.g. a
+/// request's queue wait, clocked from its submission `Instant`).
+pub fn record_interval(cat: &'static str, name: &'static str, start: Instant, end: Instant) {
+    if !enabled() {
+        return;
+    }
+    push_event(SpanEvent {
+        name,
+        cat,
+        label: None,
+        arg: None,
+        track: current_track(),
+        start_us: since_epoch_us(start),
+        dur_us: end.saturating_duration_since(start).as_micros() as u64,
+    });
+}
+
+fn since_epoch_us(t: Instant) -> u64 {
+    t.saturating_duration_since(state().epoch).as_micros() as u64
+}
+
+fn push_event(ev: SpanEvent) {
+    let mut ring = state().ring.lock().unwrap();
+    if ring.events.len() >= RING_CAPACITY {
+        ring.events.pop_front();
+        ring.dropped += 1;
+    }
+    ring.events.push_back(ev);
+    ring.total += 1;
+}
+
+/// Snapshot of the buffered events (oldest first).
+pub fn snapshot() -> Vec<SpanEvent> {
+    state().ring.lock().unwrap().events.iter().cloned().collect()
+}
+
+/// Events dropped because the ring was full.
+pub fn dropped() -> u64 {
+    state().ring.lock().unwrap().dropped
+}
+
+/// Clear all buffered events and track names (test isolation).
+pub fn reset() {
+    let st = state();
+    let mut ring = st.ring.lock().unwrap();
+    ring.events.clear();
+    ring.dropped = 0;
+    ring.total = 0;
+    drop(ring);
+    st.tracks.lock().unwrap().clear();
+    st.flushed_total.store(0, Ordering::SeqCst);
+    *st.out_path.lock().unwrap() = None;
+}
+
+// ---------------------------------------------------------------------
+// Sink 1: Chrome trace-event-format JSON
+// ---------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render every buffered event as Chrome trace-event-format JSON —
+/// `{"traceEvents": [...]}` with `ph:"X"` complete events (µs
+/// timestamps) plus `thread_name` metadata rows for every named track.
+/// Loadable in `chrome://tracing` and Perfetto.
+pub fn render_chrome_trace() -> String {
+    let st = state();
+    let ring = st.ring.lock().unwrap();
+    let tracks = st.tracks.lock().unwrap();
+    let mut out = String::with_capacity(128 + ring.events.len() * 120);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for (tid, name) in tracks.iter() {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            json_escape(name)
+        ));
+    }
+    for ev in ring.events.iter() {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"name\":\"{}\",\"cat\":\"{}\",\
+             \"ts\":{},\"dur\":{}",
+            ev.track, ev.name, ev.cat, ev.start_us, ev.dur_us
+        ));
+        match (ev.label, ev.arg) {
+            (None, None) => {}
+            (label, arg) => {
+                out.push_str(",\"args\":{");
+                let mut inner_first = true;
+                if let Some((k, v)) = label {
+                    out.push_str(&format!("\"{k}\":\"{v}\""));
+                    inner_first = false;
+                }
+                if let Some((k, v)) = arg {
+                    if !inner_first {
+                        out.push(',');
+                    }
+                    out.push_str(&format!("\"{k}\":{v}"));
+                }
+                out.push('}');
+            }
+        }
+        out.push('}');
+    }
+    out.push_str(&format!(
+        "],\"otherData\":{{\"dropped_events\":{}}}}}",
+        ring.dropped
+    ));
+    out
+}
+
+/// Write the Chrome trace to `path` (atomically: tmp file + rename).
+pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
+    let text = render_chrome_trace();
+    let tmp = format!("{path}.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(text.as_bytes())?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    let total = state().ring.lock().unwrap().total;
+    state().flushed_total.store(total, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Write the trace to the configured `--trace-out` path if any events
+/// arrived since the last write. The serve decode loop calls this when
+/// it drains to idle, so a long-lived server keeps its trace file
+/// current without an explicit shutdown hook.
+pub fn flush_if_dirty() {
+    let Some(path) = out_path() else { return };
+    let st = state();
+    let total = st.ring.lock().unwrap().total;
+    if total == st.flushed_total.load(Ordering::SeqCst) {
+        return;
+    }
+    if let Err(e) = write_chrome_trace(&path) {
+        eprintln!("trace: writing {path}: {e}");
+    }
+}
+
+/// Run-end hook for one-shot commands (train / worker / generate):
+/// write the Chrome trace to the configured path and return the
+/// rendered per-phase profile table for the caller to print. `None`
+/// when tracing was never enabled or nothing was recorded.
+pub fn finish() -> Option<String> {
+    if !enabled() {
+        return None;
+    }
+    if let Some(path) = out_path() {
+        if let Err(e) = write_chrome_trace(&path) {
+            eprintln!("trace: writing {path}: {e}");
+        }
+    }
+    let stats = profile();
+    if stats.is_empty() {
+        return None;
+    }
+    Some(render_table(&stats))
+}
+
+// ---------------------------------------------------------------------
+// Sink 2: the per-phase profile
+// ---------------------------------------------------------------------
+
+/// Aggregated statistics for one span name.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseStat {
+    pub name: String,
+    pub count: u64,
+    pub total_us: u64,
+    pub mean_us: f64,
+    pub p95_us: u64,
+    /// total span time over the trace's wall span (first start → last
+    /// end). Nested and parallel spans each count fully, so the column
+    /// can legitimately exceed 100% and the per-layer rows overlap
+    /// their parents — it reads as *attribution*, not a partition.
+    pub pct_wall: f64,
+}
+
+/// Fold `(name, start_us, dur_us)` spans into per-name statistics,
+/// sorted by total time descending (ties by name). The generic input
+/// shape lets `report --exp profile` feed spans parsed back out of a
+/// trace JSON through the same math.
+pub fn aggregate(spans: impl IntoIterator<Item = (String, u64, u64)>) -> Vec<PhaseStat> {
+    let mut durs: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+    let mut wall_lo = u64::MAX;
+    let mut wall_hi = 0u64;
+    for (name, start, dur) in spans {
+        wall_lo = wall_lo.min(start);
+        wall_hi = wall_hi.max(start + dur);
+        durs.entry(name).or_default().push(dur);
+    }
+    let wall = wall_hi.saturating_sub(wall_lo).max(1);
+    let mut stats: Vec<PhaseStat> = durs
+        .into_iter()
+        .map(|(name, mut ds)| {
+            ds.sort_unstable();
+            let count = ds.len() as u64;
+            let total: u64 = ds.iter().sum();
+            let p95_idx = ((count as f64 * 0.95).ceil() as usize).clamp(1, ds.len()) - 1;
+            PhaseStat {
+                name,
+                count,
+                total_us: total,
+                mean_us: total as f64 / count as f64,
+                p95_us: ds[p95_idx],
+                pct_wall: 100.0 * total as f64 / wall as f64,
+            }
+        })
+        .collect();
+    stats.sort_by(|a, b| b.total_us.cmp(&a.total_us).then(a.name.cmp(&b.name)));
+    stats
+}
+
+/// [`aggregate`] over the in-process ring.
+pub fn profile() -> Vec<PhaseStat> {
+    aggregate(
+        state()
+            .ring
+            .lock()
+            .unwrap()
+            .events
+            .iter()
+            .map(|e| (e.name.to_string(), e.start_us, e.dur_us)),
+    )
+}
+
+/// Render the profile as an aligned text table.
+pub fn render_table(stats: &[PhaseStat]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<20} {:>8} {:>12} {:>10} {:>10} {:>8}\n",
+        "phase", "count", "total ms", "mean ms", "p95 ms", "% wall"
+    ));
+    for s in stats {
+        out.push_str(&format!(
+            "{:<20} {:>8} {:>12.1} {:>10.3} {:>10.3} {:>8.1}\n",
+            s.name,
+            s.count,
+            s.total_us as f64 / 1e3,
+            s.mean_us / 1e3,
+            s.p95_us as f64 / 1e3,
+            s.pct_wall
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tracer is one global; tests that flip it serialize here.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_mode_records_nothing() {
+        let _g = test_lock();
+        disable();
+        reset();
+        {
+            let _sp = span(TEST_CAT, names::TRAIN_STEP);
+            let _sp2 = worker_span(0, "exact");
+            record_interval(TEST_CAT, names::SERVE_QUEUE_WAIT, Instant::now(), Instant::now());
+        }
+        assert!(our_events().is_empty());
+        assert!(finish().is_none());
+        assert!(out_path().is_none());
+    }
+
+    // Other tests in this binary exercise instrumented code paths; while
+    // a tracing test has the global tracer enabled they may record too.
+    // Tests below therefore filter on a category only they use and never
+    // assert on the total event count.
+    const TEST_CAT: &str = "tracetest";
+
+    fn our_events() -> Vec<SpanEvent> {
+        snapshot().into_iter().filter(|e| e.cat == TEST_CAT).collect()
+    }
+
+    #[test]
+    fn nested_spans_record_balanced_and_ordered() {
+        let _g = test_lock();
+        reset();
+        enable();
+        {
+            let _outer = span(TEST_CAT, names::TRAIN_STEP);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _inner = span(TEST_CAT, names::TRAIN_FORWARD);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        let evs = our_events();
+        disable();
+        assert_eq!(evs.len(), 2);
+        // inner drops first, so it is recorded first
+        assert_eq!(evs[0].name, names::TRAIN_FORWARD);
+        assert_eq!(evs[1].name, names::TRAIN_STEP);
+        // the outer span covers the inner one
+        assert!(evs[1].start_us <= evs[0].start_us);
+        assert!(
+            evs[1].start_us + evs[1].dur_us >= evs[0].start_us + evs[0].dur_us,
+            "outer must end at or after inner: {evs:?}"
+        );
+        reset();
+    }
+
+    #[test]
+    fn guard_drop_survives_panics() {
+        let _g = test_lock();
+        reset();
+        enable();
+        let result = std::panic::catch_unwind(|| {
+            let _sp = span(TEST_CAT, names::TRAIN_OPTIMIZER);
+            panic!("mid-span failure");
+        });
+        assert!(result.is_err());
+        let evs = our_events();
+        disable();
+        assert_eq!(evs.len(), 1, "the unwound span must still be recorded");
+        assert_eq!(evs[0].name, names::TRAIN_OPTIMIZER);
+        reset();
+    }
+
+    #[test]
+    fn ring_is_bounded_and_drops_oldest() {
+        let _g = test_lock();
+        reset();
+        enable();
+        let n = RING_CAPACITY + 10;
+        for i in 0..n {
+            push_event(SpanEvent {
+                name: names::KERNEL_TASK,
+                cat: TEST_CAT,
+                label: None,
+                arg: Some(("worker", i as u64)),
+                track: 0,
+                start_us: i as u64,
+                dur_us: 1,
+            });
+        }
+        let total = snapshot().len();
+        let evs = our_events();
+        disable();
+        assert_eq!(total, RING_CAPACITY, "ring must clamp at capacity");
+        assert!(dropped() >= 10, "at least the 10 overflow events dropped");
+        // drops are oldest-first, so the surviving test events are a
+        // suffix of what we pushed
+        assert!(evs[0].start_us >= 10, "oldest events must be the dropped ones");
+        assert_eq!(evs.last().unwrap().start_us, n as u64 - 1);
+        reset();
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_event_json() {
+        let _g = test_lock();
+        reset();
+        enable();
+        {
+            let _w = worker_span(3, "fast");
+        }
+        {
+            let _sp = span_arg(TEST_CAT, names::FWD_ATTENTION, "layer", 2);
+        }
+        let text = render_chrome_trace();
+        disable();
+        let v = crate::util::json::parse(&text).expect("trace must parse as JSON");
+        let evs = v.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // ≥2 span events + a thread_name metadata row for the pool track
+        assert!(evs.len() >= 3, "{text}");
+        let meta: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .collect();
+        assert!(meta.iter().any(|m| {
+            m.get("args")
+                .and_then(|a| a.get("name"))
+                .and_then(|n| n.as_str())
+                == Some("pool-worker-3")
+        }));
+        let spans: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        for s in &spans {
+            assert!(s.get("ts").is_some() && s.get("dur").is_some());
+        }
+        // the labelled worker span round-trips its precision + worker args
+        assert!(spans.iter().any(|s| {
+            s.get("name").and_then(|n| n.as_str()) == Some(names::KERNEL_TASK)
+                && s.get("args").and_then(|a| a.get("precision")).and_then(|p| p.as_str())
+                    == Some("fast")
+                && s.get("args").and_then(|a| a.get("worker")).and_then(|w| w.as_u64())
+                    == Some(3)
+        }));
+        // the span_arg numeric annotation round-trips
+        assert!(spans.iter().any(|s| {
+            s.get("cat").and_then(|c| c.as_str()) == Some(TEST_CAT)
+                && s.get("args").and_then(|a| a.get("layer")).and_then(|l| l.as_u64())
+                    == Some(2)
+        }));
+        assert!(text.contains("\"dropped_events\":"));
+        reset();
+    }
+
+    #[test]
+    fn aggregate_computes_count_total_mean_p95_and_wall() {
+        // 20 spans of 1..=20 µs laid end to end: wall = 210 µs
+        let spans: Vec<(String, u64, u64)> = (1..=20u64)
+            .scan(0u64, |at, d| {
+                let s = (names::SERVE_DECODE.to_string(), *at, d);
+                *at += d;
+                Some(s)
+            })
+            .collect();
+        let stats = aggregate(spans);
+        assert_eq!(stats.len(), 1);
+        let s = &stats[0];
+        assert_eq!(s.count, 20);
+        assert_eq!(s.total_us, 210);
+        assert!((s.mean_us - 10.5).abs() < 1e-9);
+        assert_eq!(s.p95_us, 19); // ceil(20·0.95) = 19th of 1..=20
+        assert!((s.pct_wall - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_sorts_by_total_descending() {
+        let stats = aggregate(vec![
+            ("small".to_string(), 0, 5),
+            ("big".to_string(), 0, 100),
+            ("small".to_string(), 50, 5),
+        ]);
+        assert_eq!(stats[0].name, "big");
+        assert_eq!(stats[1].name, "small");
+        assert_eq!(stats[1].count, 2);
+        let table = render_table(&stats);
+        assert!(table.contains("phase") && table.contains("% wall"));
+        assert!(table.find("big").unwrap() < table.find("small").unwrap());
+    }
+
+    #[test]
+    fn span_names_are_unique_and_well_formed() {
+        let mut seen = std::collections::BTreeSet::new();
+        for name in names::ALL {
+            assert!(seen.insert(*name), "duplicate span name {name}");
+            assert!(
+                name.chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '.' || c == '_'),
+                "span name {name} is not lower.dot_case"
+            );
+            assert!(name.contains('.'), "span name {name} has no subsystem prefix");
+        }
+    }
+}

@@ -191,6 +191,41 @@ pub fn dist_memory(model: &str, workers: usize) -> Result<String> {
     Ok(out)
 }
 
+/// Re-render the per-phase profile table from a `--trace-out` Chrome
+/// trace file (`repro report --exp profile --trace trace.json`) — the
+/// exact aggregation the traced run printed at exit, replayable offline
+/// from the exported JSON.
+pub fn profile_from_trace(path: &Path) -> Result<String> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        anyhow!(
+            "no trace at {}: {e} — produce one with --trace-out (docs/OBSERVABILITY.md §Tracing)",
+            path.display()
+        )
+    })?;
+    let v = crate::util::json::parse(&text)?;
+    let evs = v
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow!("not a Chrome trace: no traceEvents array"))?;
+    // ph:"X" complete events carry (name, ts, dur); metadata rows don't
+    let spans: Vec<(String, u64, u64)> = evs
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .filter_map(|e| {
+            Some((
+                e.get("name")?.as_str()?.to_string(),
+                e.get("ts")?.as_u64()?,
+                e.get("dur")?.as_u64()?,
+            ))
+        })
+        .collect();
+    if spans.is_empty() {
+        return Err(anyhow!("no span events in {}", path.display()));
+    }
+    let stats = crate::obs::trace::aggregate(spans);
+    Ok(crate::obs::trace::render_table(&stats))
+}
+
 fn human(bytes: f64) -> String {
     if bytes >= 1e9 {
         format!("{:.2}G", bytes / 1e9)
@@ -378,6 +413,26 @@ mod tests {
         let plot = ascii_curves(&[r], 40, 10);
         assert!(plot.contains('o'));
         assert!(plot.contains("steps"));
+    }
+
+    #[test]
+    fn profile_from_trace_round_trips() {
+        let p = std::env::temp_dir().join("dqt_report_trace_test.json");
+        std::fs::write(
+            &p,
+            r#"{"traceEvents":[
+                {"ph":"M","pid":1,"tid":0,"name":"thread_name","args":{"name":"main"}},
+                {"ph":"X","pid":1,"tid":0,"name":"train.step","cat":"train","ts":0,"dur":100},
+                {"ph":"X","pid":1,"tid":0,"name":"train.forward","cat":"train","ts":0,"dur":60}
+            ],"otherData":{"dropped_events":0}}"#,
+        )
+        .unwrap();
+        let t = profile_from_trace(&p).unwrap();
+        // sorted by total descending; the metadata row is not a phase
+        assert!(t.find("train.step").unwrap() < t.find("train.forward").unwrap());
+        assert!(!t.contains("thread_name"));
+        std::fs::remove_file(&p).ok();
+        assert!(profile_from_trace(Path::new("/nonexistent/trace.json")).is_err());
     }
 
     #[test]

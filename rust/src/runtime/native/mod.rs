@@ -24,6 +24,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{Mode, ModelConfig, VariantSpec};
 use crate::kernels::Pool;
+use crate::obs::trace;
 use crate::quant::codec::Format;
 use crate::quant::sr::{hash_u32, uniform01};
 use crate::quant::{absmean_quantize, absmean_scale, ternary};
@@ -354,16 +355,19 @@ impl Backend for NativeBackend {
         };
         let fwd_ms = t_fwd.elapsed().as_secs_f32() * 1e3;
         let t_opt = std::time::Instant::now();
-        let (upd_frac, gnorm) = optim::apply_updates(
-            &self.hyper,
-            &self.layout,
-            &self.pool,
-            &mut params,
-            grads,
-            &mut opt,
-            lr,
-            sr_seed,
-        );
+        let (upd_frac, gnorm) = {
+            let _sp = trace::span("train", trace::names::TRAIN_OPTIMIZER);
+            optim::apply_updates(
+                &self.hyper,
+                &self.layout,
+                &self.pool,
+                &mut params,
+                grads,
+                &mut opt,
+                lr,
+                sr_seed,
+            )
+        };
         let opt_ms = t_opt.elapsed().as_secs_f32() * 1e3;
         Ok((
             State::from_dense(params, opt),
@@ -452,16 +456,19 @@ impl Backend for NativeBackend {
         }
         let loss = nll / denom;
         let t_opt = std::time::Instant::now();
-        let (upd_frac, gnorm) = optim::apply_updates(
-            &self.hyper,
-            &self.layout,
-            &self.pool,
-            &mut params,
-            grads,
-            &mut opt,
-            lr,
-            sr_seed,
-        );
+        let (upd_frac, gnorm) = {
+            let _sp = trace::span("train", trace::names::TRAIN_OPTIMIZER);
+            optim::apply_updates(
+                &self.hyper,
+                &self.layout,
+                &self.pool,
+                &mut params,
+                grads,
+                &mut opt,
+                lr,
+                sr_seed,
+            )
+        };
         let opt_ms = t_opt.elapsed().as_secs_f32() * 1e3;
         Ok((
             State::from_dense(params, opt),

@@ -19,6 +19,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{Mode, ModelConfig};
 use crate::data::tokenizer::PAD_ID;
 use crate::kernels::{self, Pool};
+use crate::obs::trace;
 use crate::quant::{absmean_quantize, absmean_scale};
 
 use super::math::{
@@ -204,10 +205,14 @@ impl<'a> Net<'a> {
         let inv_sqrt_d = 1.0 / (d as f32).sqrt();
         let mut layers = Vec::with_capacity(self.cfg.num_hidden_layers);
 
-        for li in self.layout.layers.iter() {
+        for (l, li) in self.layout.layers.iter().enumerate() {
             let x_in = x;
             // --- attention block ---
-            let (xn, inv1) = rmsnorm(&x_in, &params[li.attn_norm], self.hyper.rms_eps, h);
+            let (xn, inv1) = {
+                let _sp = trace::span_arg("fwd", trace::names::FWD_RMSNORM, "layer", l as u64);
+                rmsnorm(&x_in, &params[li.attn_norm], self.hyper.rms_eps, h)
+            };
+            let attn_sp = trace::span_arg("fwd", trace::names::FWD_ATTENTION, "layer", l as u64);
             let xq = self.maybe_quant(&xn, h);
             let mut q = self.lin_fwd(params, li.wq, &xq, m, h, h, ternary);
             let mut k = self.lin_fwd(params, li.wk, &xq, m, h, h, ternary);
@@ -263,9 +268,14 @@ impl<'a> Net<'a> {
             for (o, &a) in h_mid.iter_mut().zip(attn_out.iter()) {
                 *o += a;
             }
+            drop(attn_sp);
 
             // --- MLP block (SwiGLU) ---
-            let (xn2, inv2) = rmsnorm(&h_mid, &params[li.mlp_norm], self.hyper.rms_eps, h);
+            let (xn2, inv2) = {
+                let _sp = trace::span_arg("fwd", trace::names::FWD_RMSNORM, "layer", l as u64);
+                rmsnorm(&h_mid, &params[li.mlp_norm], self.hyper.rms_eps, h)
+            };
+            let mlp_sp = trace::span_arg("fwd", trace::names::FWD_SWIGLU, "layer", l as u64);
             let xq2 = self.maybe_quant(&xn2, h);
             let gate = self.lin_fwd(params, li.w_gate, &xq2, m, h, i_, ternary);
             let up = self.lin_fwd(params, li.w_up, &xq2, m, h, i_, ternary);
@@ -279,6 +289,7 @@ impl<'a> Net<'a> {
             for (o, &dv) in x_out.iter_mut().zip(down_out.iter()) {
                 *o += dv;
             }
+            drop(mlp_sp);
 
             layers.push(LayerCache {
                 x_in,
@@ -300,6 +311,7 @@ impl<'a> Net<'a> {
         }
 
         let x_final_in = x;
+        let _head_sp = trace::span("fwd", trace::names::FWD_HEAD);
         let (xf, invf) =
             rmsnorm(&x_final_in, &params[self.layout.final_norm], self.hyper.rms_eps, h);
         // tied LM head — high precision, never quantized
@@ -381,7 +393,12 @@ impl<'a> Net<'a> {
         let half = d / 2;
         let m = b * s;
         let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-        let fwd = self.forward(params, inputs, b, s, false)?;
+        let fwd = {
+            let _sp = trace::span("train", trace::names::TRAIN_FORWARD);
+            self.forward(params, inputs, b, s, false)?
+        };
+        // everything from here back to the embeddings is the backward pass
+        let _bwd_sp = trace::span("train", trace::names::TRAIN_BACKWARD);
 
         let mut grads: Grads = self
             .layout

@@ -7,6 +7,7 @@
 
 use crate::config::{Env, Mode};
 use crate::kernels::Pool;
+use crate::obs::trace;
 use crate::quant::sr::{hash_u32, sr_scalar};
 use crate::quant::{absmean_scale, bf16, fp8, qrange};
 
@@ -197,6 +198,8 @@ pub(super) fn apply_updates(
 
         // --- projection back onto the grid / storage format ---
         if let Some(sidx) = t.scale {
+            let _sp =
+                trace::span_arg("train", trace::names::TRAIN_SR_PROJECT, "tensor", idx as u64);
             let (qn, qp) = qrange(hyper.grid_bits);
             let (qn, qp) = (qn as f32, qp as f32);
             let mut s = params[sidx][0];

@@ -10,6 +10,7 @@
 use anyhow::Result;
 
 use crate::data::tokenizer::{Tokenizer, BOS_ID};
+use crate::obs::trace;
 use crate::runtime::{Decoder, DecoderCache, State, VariantRuntime};
 
 use super::sampler::Sampler;
@@ -144,10 +145,18 @@ impl Engine {
 
     /// One-shot generation from pre-tokenized ids.
     pub fn generate_ids(&self, prompt: Vec<i32>, params: &GenParams) -> Result<Generation> {
+        // one serve.request span per one-shot generation, with the same
+        // prefill/decode/sample/detokenize children the scheduler emits
+        // (all no-ops unless `--trace-out` is set)
+        let _req_sp = trace::span("serve", trace::names::SERVE_REQUEST);
         let mut cache = self.decoder.new_cache();
         let mut logits = Vec::new();
-        for &t in &prompt {
-            logits = self.decoder.step(cache.as_mut(), t)?;
+        {
+            let _sp =
+                trace::span_arg("serve", trace::names::SERVE_PREFILL, "tokens", prompt.len() as u64);
+            for &t in &prompt {
+                logits = self.decoder.step(cache.as_mut(), t)?;
+            }
         }
         let mut sampler = Sampler::new(params);
         let mut stream = self.tokenizer.decode_stream();
@@ -157,22 +166,32 @@ impl Engine {
             FinishReason::Length
         } else {
             loop {
-                let next = sampler.sample(&logits) as i32;
+                let next = {
+                    let _sp = trace::span("serve", trace::names::SERVE_SAMPLE);
+                    sampler.sample(&logits) as i32
+                };
                 out.push(next);
                 if next == self.eos_id {
                     break FinishReason::Eos;
                 }
-                text.push_str(&stream.push(next));
+                {
+                    let _sp = trace::span("serve", trace::names::SERVE_DETOKENIZE);
+                    text.push_str(&stream.push(next));
+                }
                 if out.len() >= params.max_new_tokens {
                     break FinishReason::Length;
                 }
                 if cache.position() >= self.decoder.max_positions() {
                     break FinishReason::CacheFull;
                 }
+                let _sp = trace::span_arg("serve", trace::names::SERVE_DECODE, "rows", 1);
                 logits = self.decoder.step(cache.as_mut(), next)?;
             }
         };
-        text.push_str(&stream.finish());
+        {
+            let _sp = trace::span("serve", trace::names::SERVE_DETOKENIZE);
+            text.push_str(&stream.finish());
+        }
         Ok(Generation {
             prompt_tokens: prompt.len(),
             token_ids: out,

@@ -112,7 +112,14 @@ impl Server {
 fn decode_loop(sched: &Scheduler) {
     loop {
         match sched.step() {
-            Ok(0) => sched.park_until_work(),
+            Ok(0) => {
+                // idle moment: persist any buffered trace spans before
+                // parking (no-op unless `--trace-out` is set), so a
+                // long-lived server's trace file stays current without a
+                // flush on the request path
+                crate::obs::trace::flush_if_dirty();
+                sched.park_until_work()
+            }
             Ok(_) => {}
             Err(e) => {
                 eprintln!("serve: decode step failed: {e}");
@@ -179,6 +186,26 @@ fn handle_conn(mut stream: TcpStream, sched: &Scheduler) -> Result<()> {
                 .set("decode_ns", st.decode_ns)
                 .set("decode_tokens_per_sec", st.decode_tokens_per_sec())
                 .set("pending", sched.pending());
+            // per-request span summaries (oldest first): the serve-side
+            // request hierarchy folded to TTFT / decode-step counts
+            let recent = Value::Arr(
+                sched
+                    .recent_requests()
+                    .into_iter()
+                    .map(|r| {
+                        Value::obj()
+                            .set("id", r.id)
+                            .set(
+                                "ttft_ms",
+                                r.ttft_ms.map(Value::from).unwrap_or(Value::Null),
+                            )
+                            .set("decode_steps", r.decode_steps)
+                            .set("total_ms", r.total_ms)
+                            .set("finish", r.finish)
+                    })
+                    .collect(),
+            );
+            let body = body.set("recent_requests", recent);
             respond(&mut stream, metrics, 200, &body)
         }
         ("POST", "/v1/generate") => {

@@ -24,7 +24,30 @@ use super::engine::{Engine, FinishReason, GenParams, Generation};
 use super::metrics::ServeMetrics;
 use super::sampler::Sampler;
 use crate::data::tokenizer::DecodeStream;
+use crate::obs::trace;
 use crate::runtime::{Decoder, DecoderCache};
+
+/// Finished-request summaries kept for `/v1/stats` (`recent_requests`) —
+/// newest last, oldest evicted past this cap.
+pub const RECENT_REQUESTS_CAP: usize = 32;
+
+/// Per-request span summary surfaced by `/v1/stats`: the serve-side
+/// request hierarchy (queue-wait → prefill → decode steps) folded to the
+/// numbers a client-side latency investigation reaches for first.
+#[derive(Clone, Debug)]
+pub struct RequestSummary {
+    pub id: u64,
+    /// ms from submission to the first sampled token (`None` when the
+    /// request finished without sampling — empty prompt, `max_new 0`,
+    /// decode error before the first token)
+    pub ttft_ms: Option<f64>,
+    /// batched decode steps this request rode (its serve.decode span
+    /// count, prefill steps included)
+    pub decode_steps: u64,
+    /// ms from submission to eviction
+    pub total_ms: f64,
+    pub finish: &'static str,
+}
 
 /// Aggregate serving counters (monotonic since scheduler creation).
 #[derive(Clone, Copy, Debug, Default)]
@@ -74,6 +97,13 @@ struct Seq {
     tx: Option<Sender<(u64, Generation)>>,
     /// when the request entered the queue (TTFT / request latency)
     submitted: Instant,
+    /// when the request was first checked out into a decode batch
+    /// (serve.queue_wait ends, serve.prefill starts)
+    first_checkout: Option<Instant>,
+    /// submission → first sampled token, for the request summary
+    ttft_ms: Option<f64>,
+    /// batched decode steps this sequence rode
+    decode_steps: u64,
 }
 
 struct Inner {
@@ -88,6 +118,17 @@ struct Inner {
     finished: Vec<(u64, Generation)>,
     next_id: u64,
     stats: SchedulerStats,
+    /// last [`RECENT_REQUESTS_CAP`] finished-request summaries
+    recent: VecDeque<RequestSummary>,
+}
+
+impl Inner {
+    fn push_recent(&mut self, r: RequestSummary) {
+        if self.recent.len() >= RECENT_REQUESTS_CAP {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(r);
+    }
 }
 
 /// The continuous-batching scheduler. Shared across submitter threads and
@@ -123,6 +164,7 @@ impl Scheduler {
                 finished: Vec::new(),
                 next_id: 0,
                 stats: SchedulerStats::default(),
+                recent: VecDeque::new(),
             }),
             work: Condvar::new(),
         }
@@ -209,6 +251,19 @@ impl Scheduler {
             self.metrics
                 .request_seconds
                 .observe(submitted.elapsed().as_secs_f64());
+            trace::record_interval(
+                "serve",
+                trace::names::SERVE_REQUEST,
+                submitted,
+                Instant::now(),
+            );
+            g.push_recent(RequestSummary {
+                id,
+                ttft_ms: None,
+                decode_steps: 0,
+                total_ms: submitted.elapsed().as_secs_f64() * 1e3,
+                finish: gen.finish.as_str(),
+            });
             match tx {
                 Some(tx) => {
                     let _ = tx.send((id, gen));
@@ -229,6 +284,9 @@ impl Scheduler {
             cache: None,
             tx,
             submitted,
+            first_checkout: None,
+            ttft_ms: None,
+            decode_steps: 0,
         };
         g.queue.push_back(seq);
         self.metrics.queue_depth.set(g.queue.len() as f64);
@@ -245,6 +303,12 @@ impl Scheduler {
 
     pub fn stats(&self) -> SchedulerStats {
         self.inner.lock().unwrap().stats
+    }
+
+    /// Summaries of the last [`RECENT_REQUESTS_CAP`] finished requests,
+    /// oldest first (the `/v1/stats` `recent_requests` payload).
+    pub fn recent_requests(&self) -> Vec<RequestSummary> {
+        self.inner.lock().unwrap().recent.iter().cloned().collect()
     }
 
     /// Results of channel-less submissions finished since the last call.
@@ -297,6 +361,14 @@ impl Scheduler {
                     break;
                 };
                 seq.cache = Some(self.engine.decoder().new_cache());
+                let now = Instant::now();
+                seq.first_checkout = Some(now);
+                trace::record_interval(
+                    "serve",
+                    trace::names::SERVE_QUEUE_WAIT,
+                    seq.submitted,
+                    now,
+                );
                 g.active.push(seq);
             }
             if g.active.is_empty() {
@@ -327,6 +399,7 @@ impl Scheduler {
         let n = batch.len();
         let t0 = std::time::Instant::now();
         let step_result = {
+            let _sp = trace::span_arg("serve", trace::names::SERVE_DECODE, "rows", n as u64);
             let mut caches: Vec<&mut dyn DecoderCache> = batch
                 .iter_mut()
                 .map(|s| &mut **s.cache.as_mut().expect("active sequence has a cache"))
@@ -359,6 +432,19 @@ impl Scheduler {
                     self.metrics
                         .request_seconds
                         .observe(s.submitted.elapsed().as_secs_f64());
+                    trace::record_interval(
+                        "serve",
+                        trace::names::SERVE_REQUEST,
+                        s.submitted,
+                        Instant::now(),
+                    );
+                    g.push_recent(RequestSummary {
+                        id: s.id,
+                        ttft_ms: s.ttft_ms,
+                        decode_steps: s.decode_steps + 1,
+                        total_ms: s.submitted.elapsed().as_secs_f64() * 1e3,
+                        finish: gen.finish.as_str(),
+                    });
                     match s.tx.take() {
                         Some(tx) => {
                             let _ = tx.send((s.id, gen));
@@ -379,6 +465,7 @@ impl Scheduler {
         let eos = self.engine.eos_id();
 
         for (i, mut s) in batch.into_iter().enumerate() {
+            s.decode_steps += 1;
             let prefilling = s.fed < s.prompt.len();
             if prefilling {
                 s.fed += 1;
@@ -387,19 +474,34 @@ impl Scheduler {
                 g.active.push(s); // still prefilling — logits row unused
                 continue;
             }
-            let next = s.sampler.sample(&logits[i * v..(i + 1) * v]) as i32;
+            let next = {
+                let _sp = trace::span("serve", trace::names::SERVE_SAMPLE);
+                s.sampler.sample(&logits[i * v..(i + 1) * v]) as i32
+            };
             s.generated.push(next);
             g.stats.tokens_generated += 1;
             self.metrics.tokens_generated_total.inc();
             if s.generated.len() == 1 {
-                self.metrics
-                    .ttft_seconds
-                    .observe(s.submitted.elapsed().as_secs_f64());
+                let ttft = s.submitted.elapsed();
+                s.ttft_ms = Some(ttft.as_secs_f64() * 1e3);
+                self.metrics.ttft_seconds.observe(ttft.as_secs_f64());
+                if let Some(fc) = s.first_checkout {
+                    // first checkout → first sampled token
+                    trace::record_interval(
+                        "serve",
+                        trace::names::SERVE_PREFILL,
+                        fc,
+                        Instant::now(),
+                    );
+                }
             }
             let finish = if next == eos {
                 Some(FinishReason::Eos)
             } else {
-                let piece = s.stream.push(next);
+                let piece = {
+                    let _sp = trace::span("serve", trace::names::SERVE_DETOKENIZE);
+                    s.stream.push(next)
+                };
                 s.text.push_str(&piece);
                 if s.generated.len() >= s.params.max_new_tokens {
                     Some(FinishReason::Length)
@@ -413,7 +515,10 @@ impl Scheduler {
                 None => g.active.push(s),
                 Some(finish) => {
                     let mut text = std::mem::take(&mut s.text);
-                    text.push_str(&s.stream.finish());
+                    {
+                        let _sp = trace::span("serve", trace::names::SERVE_DETOKENIZE);
+                        text.push_str(&s.stream.finish());
+                    }
                     let gen = Generation {
                         prompt_tokens: s.prompt.len(),
                         token_ids: std::mem::take(&mut s.generated),
@@ -425,6 +530,19 @@ impl Scheduler {
                     self.metrics
                         .request_seconds
                         .observe(s.submitted.elapsed().as_secs_f64());
+                    trace::record_interval(
+                        "serve",
+                        trace::names::SERVE_REQUEST,
+                        s.submitted,
+                        Instant::now(),
+                    );
+                    g.push_recent(RequestSummary {
+                        id: s.id,
+                        ttft_ms: s.ttft_ms,
+                        decode_steps: s.decode_steps,
+                        total_ms: s.submitted.elapsed().as_secs_f64() * 1e3,
+                        finish: gen.finish.as_str(),
+                    });
                     match s.tx.take() {
                         Some(tx) => {
                             let _ = tx.send((s.id, gen));
@@ -721,6 +839,49 @@ mod tests {
         assert!(m.decode_tokens_per_sec.value() > 0.0);
         assert_eq!(m.queue_depth.value(), 0.0);
         assert_eq!(m.active_sequences.value(), 0.0);
+    }
+
+    /// Finished requests leave a summary behind: TTFT observed, decode
+    /// steps counted, finish reason recorded (the `/v1/stats`
+    /// `recent_requests` payload).
+    #[test]
+    fn recent_request_summaries_surface_ttft_and_decode_steps() {
+        let engine = mock_engine(16, 256);
+        let sched = Scheduler::new(engine, 4);
+        let params = GenParams { max_new_tokens: 3, ..Default::default() };
+        let id = sched.submit_ids(vec![2, 3], params);
+        sched.run_until_idle().unwrap();
+        let rs = sched.recent_requests();
+        assert_eq!(rs.len(), 1);
+        let r = &rs[0];
+        assert_eq!(r.id, id);
+        assert!(r.ttft_ms.is_some(), "sampled requests must record TTFT");
+        // 2-token prompt + 3 sampled tokens = 1 prefill-only step + 3
+        // sampling steps ridden
+        assert!(r.decode_steps >= 3, "decode_steps = {}", r.decode_steps);
+        assert!(r.total_ms >= r.ttft_ms.unwrap());
+        assert_eq!(r.finish, "length");
+    }
+
+    /// The summary ring holds the last [`RECENT_REQUESTS_CAP`] requests —
+    /// oldest evicted, newest kept, order preserved.
+    #[test]
+    fn recent_requests_ring_is_bounded() {
+        let engine = mock_engine(8, 64);
+        let sched = Scheduler::new(engine, 4);
+        let n = RECENT_REQUESTS_CAP + 8;
+        for _ in 0..n {
+            // empty prompt: finishes immediately, no decode loop needed
+            sched.submit_ids(vec![], GenParams::default());
+        }
+        let rs = sched.recent_requests();
+        assert_eq!(rs.len(), RECENT_REQUESTS_CAP);
+        assert_eq!(rs[0].id, 8, "oldest 8 summaries evicted");
+        assert_eq!(rs.last().unwrap().id, n as u64 - 1);
+        for r in &rs {
+            assert_eq!(r.ttft_ms, None);
+            assert_eq!(r.decode_steps, 0);
+        }
     }
 
     #[test]

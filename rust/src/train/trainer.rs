@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::data::{loader, Pipeline};
+use crate::obs::trace;
 use crate::obs::TrainObs;
 use crate::quant::sr::hash_u32;
 use crate::runtime::{GradReducer, Manifest, State, VariantRuntime};
@@ -103,7 +104,17 @@ impl<'a> Trainer<'a> {
         self.obs
             .on_run_start(&m.variant.variant_name, &cfg.dataset, 1, cfg.steps);
         let wall = Instant::now();
-        while let Some(batch) = loader.next() {
+        loop {
+            // train.step covers fetch → metrics; data_load is the fetch
+            // (record_interval is a no-op unless --trace-out is set)
+            let step_start = Instant::now();
+            let Some(batch) = loader.next() else { break };
+            trace::record_interval(
+                "train",
+                trace::names::TRAIN_DATA_LOAD,
+                step_start,
+                Instant::now(),
+            );
             let step = start_step + batch.step;
             let lr = sched.lr(step) as f32;
             let seed = step_seed(cfg.seed, step);
@@ -119,6 +130,7 @@ impl<'a> Trainer<'a> {
                 step_ms: t0.elapsed().as_secs_f32() * 1e3,
             };
             self.obs.on_step(&rec, sm.fwd_ms, sm.opt_ms);
+            trace::record_interval("train", trace::names::TRAIN_STEP, step_start, Instant::now());
             if cfg.log_every > 0 && step % cfg.log_every == 0 {
                 if let Some(cb) = self.progress.as_mut() {
                     cb(step, sm.loss);
@@ -166,7 +178,15 @@ impl<'a> Trainer<'a> {
             cfg.steps,
         );
         let wall = Instant::now();
-        while let Some(batch) = loader.next() {
+        loop {
+            let step_start = Instant::now();
+            let Some(batch) = loader.next() else { break };
+            trace::record_interval(
+                "train",
+                trace::names::TRAIN_DATA_LOAD,
+                step_start,
+                Instant::now(),
+            );
             let step = batch.step;
             let lr = sched.lr(step) as f32;
             let seed = step_seed(cfg.seed, step);
@@ -192,6 +212,7 @@ impl<'a> Trainer<'a> {
                 step_ms: t0.elapsed().as_secs_f32() * 1e3,
             };
             self.obs.on_step(&rec, sm.fwd_ms, sm.opt_ms);
+            trace::record_interval("train", trace::names::TRAIN_STEP, step_start, Instant::now());
             if cfg.log_every > 0 && step % cfg.log_every == 0 {
                 if let Some(cb) = self.progress.as_mut() {
                     cb(step, sm.loss);

@@ -1,0 +1,71 @@
+//! The tracing contract: every span name the tracer can emit must be
+//! documented in `docs/OBSERVABILITY.md`. The span vocabulary is code
+//! (`obs::trace::names`); the doc's span-name table is the contract
+//! `check_trace.py`, Perfetto queries and profiling notes are written
+//! against — this test keeps the two from drifting.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use dqt::obs::trace::names;
+
+fn doc_text() -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("docs")
+        .join("OBSERVABILITY.md");
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+#[test]
+fn every_span_name_is_documented() {
+    let doc = doc_text();
+    assert!(
+        names::ALL.len() >= 19,
+        "span vocabulary shrank suspiciously: {:?}",
+        names::ALL
+    );
+    let missing: Vec<&&str> = names::ALL
+        .iter()
+        .filter(|n| !doc.contains(&format!("`{}`", **n)))
+        .collect();
+    assert!(
+        missing.is_empty(),
+        "span names emitted but not documented in docs/OBSERVABILITY.md: {missing:?}"
+    );
+}
+
+#[test]
+fn span_names_follow_the_naming_convention() {
+    for name in names::ALL {
+        assert!(
+            name.contains('.'),
+            "span name {name} must be subsystem.phase dotted"
+        );
+        assert!(
+            name.chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '.'),
+            "span name {name} is not lower.dot_case"
+        );
+        assert!(
+            !name.starts_with('.') && !name.ends_with('.') && !name.contains(".."),
+            "span name {name} has empty dotted segments"
+        );
+        let subsystem = name.split('.').next().unwrap();
+        assert!(
+            matches!(subsystem, "train" | "fwd" | "dist" | "serve" | "kernel"),
+            "span name {name} is outside the known subsystems"
+        );
+    }
+}
+
+#[test]
+fn span_vocabulary_has_no_duplicates() {
+    let unique: BTreeSet<&&str> = names::ALL.iter().collect();
+    assert_eq!(
+        unique.len(),
+        names::ALL.len(),
+        "duplicate entries in obs::trace::names::ALL"
+    );
+}

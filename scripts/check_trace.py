@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Validate a --trace-out Chrome trace-event JSON file against the span
+contract (docs/OBSERVABILITY.md §Tracing). CI's trace-smoke job runs this
+on a real train trace and a real serve trace.
+
+Checks:
+  1. The file is well-formed Chrome trace JSON: a top-level object with a
+     "traceEvents" array; every complete ("X") event carries name/cat/
+     ts/dur/pid/tid; every metadata ("M") event is a thread_name row.
+  2. Every span name is in the documented vocabulary — an undocumented
+     name in a real trace means code and contract drifted.
+  3. The mode's required spans are present (--expect train|serve), with
+     at least --min-steps train.step (or serve.request) spans.
+  4. Train coverage: the per-phase children (data_load, forward,
+     backward, optimizer, allreduce, grid_sync) must account for >= 90%
+     of total train.step wall time — if they don't, a phase went
+     uninstrumented and the profile table is lying by omission.
+
+Usage: check_trace.py <trace.json> --expect train|serve [--min-steps N]
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+# the span vocabulary of rust/src/obs/trace.rs::names::ALL, pinned to
+# docs/OBSERVABILITY.md by rust/tests/trace_contract.rs
+KNOWN_SPANS = {
+    "train.step",
+    "train.data_load",
+    "train.forward",
+    "train.backward",
+    "train.optimizer",
+    "train.sr_project",
+    "dist.allreduce",
+    "dist.grid_sync",
+    "fwd.rmsnorm",
+    "fwd.attention",
+    "fwd.swiglu",
+    "fwd.head",
+    "serve.request",
+    "serve.queue_wait",
+    "serve.prefill",
+    "serve.decode",
+    "serve.sample",
+    "serve.detokenize",
+    "kernel.task",
+}
+
+REQUIRED = {
+    "train": {
+        "train.step",
+        "train.data_load",
+        "train.forward",
+        "train.backward",
+        "train.optimizer",
+        "train.sr_project",
+        "fwd.rmsnorm",
+        "fwd.attention",
+        "fwd.swiglu",
+        "fwd.head",
+    },
+    "serve": {
+        "serve.request",
+        "serve.queue_wait",
+        "serve.prefill",
+        "serve.decode",
+        "serve.sample",
+        "serve.detokenize",
+    },
+}
+
+# disjoint phases nested directly under train.step; their summed duration
+# is the accounted-for share of step wall time
+STEP_PHASES = {
+    "train.data_load",
+    "train.forward",
+    "train.backward",
+    "train.optimizer",
+    "dist.allreduce",
+    "dist.grid_sync",
+}
+
+COVERAGE_FLOOR = 0.90
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", type=pathlib.Path)
+    ap.add_argument("--expect", choices=["train", "serve"], required=True)
+    ap.add_argument("--min-steps", type=int, default=1)
+    args = ap.parse_args()
+
+    try:
+        doc = json.loads(args.trace.read_text())
+    except (OSError, ValueError) as e:
+        fail(f"{args.trace} is not readable well-formed JSON: {e}")
+
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        fail('top level must be an object with a "traceEvents" array')
+    events = doc["traceEvents"]
+    if not events:
+        fail("traceEvents is empty — was tracing actually enabled?")
+
+    spans = []
+    for e in events:
+        ph = e.get("ph")
+        if ph == "M":
+            if e.get("name") != "thread_name" or "name" not in e.get("args", {}):
+                fail(f"malformed metadata event: {e}")
+            continue
+        if ph != "X":
+            fail(f"unexpected event phase {ph!r} (only X spans and M metadata): {e}")
+        for field in ("name", "cat", "ts", "dur", "pid", "tid"):
+            if field not in e:
+                fail(f"X event lacks {field!r}: {e}")
+        if not isinstance(e["ts"], (int, float)) or not isinstance(e["dur"], (int, float)):
+            fail(f"ts/dur must be numeric: {e}")
+        if e["ts"] < 0 or e["dur"] < 0:
+            fail(f"negative ts/dur: {e}")
+        if e["name"] not in KNOWN_SPANS:
+            fail(
+                f"undocumented span name {e['name']!r} — update "
+                "rust/src/obs/trace.rs::names, docs/OBSERVABILITY.md and "
+                "this script together"
+            )
+        spans.append(e)
+
+    present = {e["name"] for e in spans}
+    missing = REQUIRED[args.expect] - present
+    if missing:
+        fail(f"required {args.expect} spans absent from the trace: {sorted(missing)}")
+
+    root = "train.step" if args.expect == "train" else "serve.request"
+    n_roots = sum(1 for e in spans if e["name"] == root)
+    if n_roots < args.min_steps:
+        fail(f"only {n_roots} {root} spans recorded, expected >= {args.min_steps}")
+
+    dropped = doc.get("otherData", {}).get("dropped_events", 0)
+    if dropped:
+        print(f"check_trace: note: ring dropped {dropped} oldest events")
+
+    if args.expect == "train":
+        step_us = sum(e["dur"] for e in spans if e["name"] == root)
+        phase_us = sum(e["dur"] for e in spans if e["name"] in STEP_PHASES)
+        if step_us <= 0:
+            fail("train.step spans have zero total duration")
+        coverage = phase_us / step_us
+        if coverage < COVERAGE_FLOOR:
+            fail(
+                f"per-phase spans cover only {coverage:.1%} of train.step wall "
+                f"time (floor {COVERAGE_FLOOR:.0%}) — a phase went uninstrumented"
+            )
+        print(
+            f"check_trace: OK — {len(spans)} spans, {n_roots} {root}, "
+            f"phase coverage {coverage:.1%}"
+        )
+    else:
+        print(f"check_trace: OK — {len(spans)} spans, {n_roots} {root}")
+
+
+if __name__ == "__main__":
+    main()

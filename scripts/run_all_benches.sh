@@ -1,0 +1,80 @@
+#!/usr/bin/env bash
+# One-shot baseline filler (docs/PERFORMANCE.md §Filling in baselines):
+# build + test sanity gate, then every tracked bench suite at full
+# iteration counts, with the measured records merged into the matching
+# BENCH_*.json `runs` arrays — labeled with the git SHA and hostname so
+# numbers stay attributable. Run on an otherwise idle machine with
+# DQT_BENCH_FAST unset.
+#
+# Usage: scripts/run_all_benches.sh [label]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ -n "${DQT_BENCH_FAST+x}" ]; then
+    echo "run_all_benches: unset DQT_BENCH_FAST first — its mere presence" >&2
+    echo "(even =0) shrinks iteration counts to the CI validation budget." >&2
+    exit 1
+fi
+
+label="${1:-$(git rev-parse --short HEAD 2>/dev/null || echo unlabeled)}"
+host="$(hostname 2>/dev/null || echo unknown-host)"
+
+echo "== sanity gate: build + tests must be green before recording =="
+(cd rust && cargo build --release && cargo test -q)
+
+echo "== quant_codecs (bench_codecs.sh appends its own record) =="
+scripts/bench_codecs.sh "$label"
+
+for suite in gemm serving dist data_pipeline; do
+    echo "== $suite =="
+    (cd rust && cargo bench --bench "$suite")
+done
+
+echo "== merging records into BENCH_*.json =="
+python3 - "$label" "$host" <<'PY'
+import json
+import pathlib
+import sys
+
+label, host = sys.argv[1], sys.argv[2]
+root = pathlib.Path(".")
+
+# bench group output file -> repo-root baseline (bench_codecs.sh already
+# handled quant_codecs above)
+SUITES = {
+    "kernels": "BENCH_kernels.json",
+    "serving": "BENCH_serving.json",
+    "dist": "BENCH_dist.json",
+    "data_pipeline": "BENCH_data_pipeline.json",
+}
+
+for group, baseline_name in SUITES.items():
+    measured_path = root / "rust/results/bench" / f"{group}.json"
+    records = json.loads(measured_path.read_text())
+    baseline_path = root / baseline_name
+    baseline = json.loads(baseline_path.read_text())
+    run = {
+        "label": label,
+        "host": host,
+        "results": {
+            r["name"]: {
+                "mean_ns": r["mean_ns"],
+                "p50_ns": r["p50_ns"],
+                "p95_ns": r["p95_ns"],
+                "threads": r["threads"],
+            }
+            for r in records
+        },
+    }
+    baseline["runs"] = [
+        r for r in baseline.get("runs", []) if r.get("label") != label
+    ]
+    baseline["runs"].append(run)
+    baseline_path.write_text(json.dumps(baseline, indent=2) + "\n")
+    print(f"{baseline_name}: recorded run '{label}' ({len(run['results'])} benchmarks)")
+PY
+
+echo "== validating against the tracked schemas =="
+python3 scripts/check_bench_schema.py
+
+echo "run_all_benches OK — review the BENCH_*.json diffs and commit them"
