@@ -1,16 +1,67 @@
 //! Distributed-plane benchmarks: world-2 all-reduce throughput over
-//! localhost TCP (MB/s of f32 gradient traffic through the fixed-rank-
-//! order tree reduce), and the weight-resync frame sizes — packed grid
-//! codes vs f32 — that the memory model's `dist_estimate` predicts.
-//! §Perf target: the t130 packed sync ships >10× fewer bytes than f32.
+//! localhost TCP — dense f32 gradient traffic vs the `--grad-format`
+//! quantized exchange (int8 / ternary stochastically rounded grids
+//! through the same fixed-rank-order tree reduce) — and the weight-resync
+//! frame sizes that the memory model's `dist_estimate` predicts.
+//! §Perf targets: the t130 packed sync ships >10× fewer bytes than f32,
+//! a t130 int8 gradient frame is >3.99× smaller than its f32 frame, and
+//! a ternary one >10× smaller (both asserted below, frames measured).
 
 use std::net::TcpListener;
 use std::time::Duration;
 
 use dqt::config::{Mode, ModelConfig, VariantSpec};
-use dqt::dist::Collective;
+use dqt::dist::{Collective, Frame};
+use dqt::quant::{Format, GradCodec};
 use dqt::runtime::VariantRuntime;
 use dqt::util::bench::Bench;
+
+/// A smooth non-constant gradient stand-in: constant buffers quantize
+/// degenerately (every element sits on the absmax), which would flatter
+/// the stochastic-rounding path.
+fn fake_grads(n: usize) -> Vec<Option<Vec<f32>>> {
+    vec![Some((0..n).map(|i| 1e-3 + (i % 97) as f32 * 1e-4).collect())]
+}
+
+/// One world-2 quantized all-reduce bench: rank 1 on its own thread,
+/// both ranks carrying their own error-feedback codec, lockstep until
+/// the coordinator hangs up. The bytes column is the packed payload
+/// size, so mean_ns reads as effective gradient-plane MB/s.
+fn bench_allreduce_quantized(b: &mut Bench, name: &str, format: Format, n: usize) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || {
+        let Ok(mut col) = Collective::join(&addr, 1, 2, "bench", Duration::from_secs(30))
+        else {
+            return;
+        };
+        let mut codec = GradCodec::new(format).unwrap();
+        let mut grads = fake_grads(n);
+        let (mut nll, mut count) = (0.0f32, 0u64);
+        let mut step = 0u64;
+        while col
+            .all_reduce_quantized(step, &mut codec, &mut grads, &mut nll, &mut count)
+            .is_ok()
+        {
+            step += 1;
+        }
+    });
+    {
+        let mut col =
+            Collective::host(listener, 2, "bench", Duration::from_secs(30)).unwrap();
+        let mut codec = GradCodec::new(format).unwrap();
+        let mut grads = fake_grads(n);
+        let (mut nll, mut count) = (0.0f32, 0u64);
+        let mut step = 0u64;
+        b.bench_bytes(name, format.packed_bytes(n) as u64, || {
+            col.all_reduce_quantized(step, &mut codec, &mut grads, &mut nll, &mut count)
+                .expect("quantized all-reduce");
+            step += 1;
+        });
+        // dropping the collective hangs up on the worker
+    }
+    let _ = worker.join();
+}
 
 fn main() {
     let mut b = Bench::new("dist");
@@ -47,6 +98,49 @@ fn main() {
         // dropping the collective hangs up on the worker
     }
     let _ = worker.join();
+
+    // --- the same tree, gradients stochastically rounded for the wire ---
+    bench_allreduce_quantized(&mut b, "allreduce_w2_t130_int8", Format::IntN(8), n);
+    bench_allreduce_quantized(&mut b, "allreduce_w2_t130_ternary", Format::Ternary2bit, n);
+
+    // --- measured gradient frame sizes: quantized vs dense f32 ---
+    // One t130-sized single-buffer frame of each shape, actually encoded.
+    // The int8 whole-frame ratio approaches exactly 4.0 from below as the
+    // per-entry metadata amortizes (1 byte/value vs 4), hence the 3.99
+    // floor; ternary (2 bits/value, 16x asymptote) clears 10x easily.
+    let grads = fake_grads(n);
+    let f32_frame = Frame::GradSet {
+        step: 0,
+        nll: 1.0,
+        count: 1,
+        entries: grads.clone(),
+    }
+    .encode()
+    .len() as f64;
+    for (format, name, floor) in [
+        (Format::IntN(8), "int8", 3.99),
+        (Format::Ternary2bit, "ternary", 10.0),
+    ] {
+        let mut codec = GradCodec::new(format).unwrap();
+        let packed = Frame::PackedGradSet {
+            step: 0,
+            nll: 1.0,
+            count: 1,
+            format,
+            entries: codec.encode_set(0, 0, &grads).unwrap(),
+        }
+        .encode()
+        .len() as f64;
+        let ratio = f32_frame / packed;
+        assert!(
+            ratio > floor,
+            "{name} gradient frame is only {ratio:.2}x under f32 ({packed}B vs {f32_frame}B), need >{floor}x"
+        );
+        println!(
+            "dist/grad frame sizes: {name} {packed} B vs f32 {f32_frame} B \
+             ({ratio:.2}x less on the wire)"
+        );
+    }
 
     // --- weight-resync frames: packed grid codes + scales vs f32 ---
     let vrt = VariantRuntime::native(&VariantSpec::new("t130", Mode::Dqt, 1.58)).unwrap();

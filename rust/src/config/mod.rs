@@ -459,6 +459,13 @@ impl TrainConfig {
 /// divides the model's global batch size ([`DistConfig::validate`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct DistConfig {
+    /// how per-step gradient partials travel
+    /// (`--grad-format f32|int8|ternary`): `F32` keeps the bitwise
+    /// N-worker == 1-worker contract; the quantized formats trade it for
+    /// a pinned convergence tolerance at 4× / 16× less wire traffic
+    /// (stochastic rounding + per-rank error-feedback residuals — see
+    /// `docs/DISTRIBUTED.md` §Quantized gradient exchange)
+    pub grad_format: GradFormat,
     /// total ranks (1 = the single-process reference run)
     pub world: usize,
     /// this process's rank; rank 0 hosts the rendezvous and owns outputs
@@ -480,12 +487,54 @@ pub struct DistConfig {
 impl Default for DistConfig {
     fn default() -> Self {
         DistConfig {
+            grad_format: GradFormat::F32,
             world: 1,
             rank: 0,
             addr: "127.0.0.1:0".into(),
             sync_every: 25,
             packed_sync: true,
         }
+    }
+}
+
+/// Wire format of the every-step gradient exchange
+/// (`--grad-format f32|int8|ternary`). Mirrors the [`Precision`] two-tier
+/// pattern: `F32` is the unconditional default and keeps the bitwise
+/// determinism contract; the quantized tiers are strictly opt-in and
+/// carry their own convergence contract instead (`rust/tests/dist.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum GradFormat {
+    /// dense f32 partials — bitwise N-worker == 1-worker
+    #[default]
+    F32,
+    /// stochastically rounded int8 + per-tensor absmax scale (~4× smaller)
+    Int8,
+    /// stochastically rounded ternary, 2-bit packed (~16× smaller)
+    Ternary,
+}
+
+impl GradFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GradFormat::F32 => "f32",
+            GradFormat::Int8 => "int8",
+            GradFormat::Ternary => "ternary",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "f32" => GradFormat::F32,
+            "int8" => GradFormat::Int8,
+            "ternary" => GradFormat::Ternary,
+            _ => return None,
+        })
+    }
+
+    /// True for the formats that quantize the wire (and so swap the
+    /// bitwise contract for the convergence contract).
+    pub fn is_quantized(&self) -> bool {
+        !matches!(self, GradFormat::F32)
     }
 }
 
@@ -661,6 +710,21 @@ mod tests {
         // an explicit CLI tier always wins; no CLI and no env ⇒ exact
         assert_eq!(effective_precision(Some(Precision::Fast)), Precision::Fast);
         assert_eq!(effective_precision(Some(Precision::Exact)), Precision::Exact);
+    }
+
+    #[test]
+    fn grad_format_parse_roundtrip_and_default() {
+        assert_eq!(GradFormat::parse("f32"), Some(GradFormat::F32));
+        assert_eq!(GradFormat::parse("int8"), Some(GradFormat::Int8));
+        assert_eq!(GradFormat::parse("ternary"), Some(GradFormat::Ternary));
+        assert_eq!(GradFormat::parse("int4"), None);
+        // f32 is the unconditional default: quantization is opt-in
+        assert_eq!(GradFormat::default(), GradFormat::F32);
+        assert_eq!(DistConfig::default().grad_format, GradFormat::F32);
+        for f in [GradFormat::F32, GradFormat::Int8, GradFormat::Ternary] {
+            assert_eq!(GradFormat::parse(f.as_str()), Some(f));
+            assert_eq!(f.is_quantized(), f != GradFormat::F32);
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::runtime::{State, VariantRuntime};
 use crate::train::{RunMetrics, Trainer};
 
 use super::collective::{Collective, RENDEZVOUS_TIMEOUT};
-use super::DistExchange;
+use super::{rendezvous_variant, DistExchange};
 
 /// Child worker processes spawned by rank 0. Dropped children are killed
 /// (a failed coordinator never leaves orphan trainers burning CPU);
@@ -86,6 +86,28 @@ pub struct DistReport {
     /// resyncs performed and their cumulative wire bytes (rank 0's side)
     pub syncs: u64,
     pub sync_bytes: u64,
+    /// the gradient wire format tag (`f32|int8|ternary`)
+    pub grad_format: String,
+    /// cumulative all-reduce wire bytes rank 0 moved (sent + received) —
+    /// the number `--grad-format int8|ternary` shrinks ~4×/~16×
+    pub allreduce_bytes: u64,
+    /// error-feedback residual state held on rank 0 (bytes; 0 for f32)
+    pub residual_bytes: u64,
+}
+
+impl DistReport {
+    /// JSON for `out_dir/dist.json` — what the dist-smoke CI legs assert
+    /// wire shrinkage against.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj()
+            .set("world", Value::Num(self.world as f64))
+            .set("grad_format", Value::Str(self.grad_format.clone()))
+            .set("allreduce_bytes", Value::Num(self.allreduce_bytes as f64))
+            .set("syncs", Value::Num(self.syncs as f64))
+            .set("sync_bytes", Value::Num(self.sync_bytes as f64))
+            .set("residual_bytes", Value::Num(self.residual_bytes as f64))
+    }
 }
 
 /// Run rank 0 of a distributed training job end to end: bind the
@@ -153,7 +175,12 @@ pub fn train_distributed(
         }
     };
 
-    let col = Collective::host(listener, dcfg.world, &variant, RENDEZVOUS_TIMEOUT)?;
+    let col = Collective::host(
+        listener,
+        dcfg.world,
+        &rendezvous_variant(&variant, dcfg.grad_format),
+        RENDEZVOUS_TIMEOUT,
+    )?;
     let mut ex = DistExchange::with_obs(col, dcfg, obs.clone());
     let mut trainer = Trainer::new(&vrt, &pipeline, tcfg.clone());
     if let Some(obs) = obs {
@@ -168,6 +195,9 @@ pub fn train_distributed(
         world: dcfg.world,
         syncs: ex.syncs(),
         sync_bytes: ex.sync_bytes(),
+        grad_format: dcfg.grad_format.as_str().to_string(),
+        allreduce_bytes: ex.allreduce_bytes(),
+        residual_bytes: ex.residual_bytes(),
     };
     // end the trainer's borrow of `vrt` so it can be handed back
     drop(trainer);

@@ -8,6 +8,7 @@
 //! training-plane twin of the `serve` subsystem's data plane:
 //!
 //! * [`wire`] — length-prefixed binary frames (f32 gradient sets,
+//!   SR-quantized [`crate::quant::gradcodec::PackedGrad`] gradient sets,
 //!   [`crate::quant::codec::PackedTensor`] grid syncs via the codec
 //!   registry), with checkpoint-grade corrupt-frame hardening.
 //! * [`collective`] — rendezvous over `TcpListener`, fixed-rank-order
@@ -41,15 +42,40 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::DistConfig;
+use crate::config::{DistConfig, GradFormat};
 use crate::obs::trace;
 use crate::obs::TrainObs;
+use crate::quant::codec::Format;
+use crate::quant::gradcodec::GradCodec;
 use crate::runtime::{GradReducer, Manifest, State};
 use crate::train::StepExchange;
 
 pub use collective::Collective;
 pub use coordinator::{train_distributed, DistReport, LocalWorkers};
 pub use wire::Frame;
+
+/// The codec-registry format behind a `--grad-format` tier. The mapping
+/// lives here (not in `config`, which stays dependency-free): int8 is the
+/// full 8-bit grid, ternary the paper's 2-bit packing.
+pub fn grad_wire_format(gf: GradFormat) -> Option<Format> {
+    match gf {
+        GradFormat::F32 => None,
+        GradFormat::Int8 => Some(Format::IntN(8)),
+        GradFormat::Ternary => Some(Format::Ternary2bit),
+    }
+}
+
+/// The rendezvous variant string for a run: quantized gradient exchange
+/// changes training semantics, so it is part of run identity — a worker
+/// joining with a different `--grad-format` must be rejected at Hello,
+/// not silently mis-decode mid-step. `f32` keeps the bare variant name
+/// so the default path (and every pre-existing invocation) is unchanged.
+pub fn rendezvous_variant(variant: &str, gf: GradFormat) -> String {
+    match gf {
+        GradFormat::F32 => variant.to_string(),
+        other => format!("{variant}+grad-{}", other.as_str()),
+    }
+}
 
 /// The [`StepExchange`] a distributed rank trains through: the TCP
 /// collective as the gradient reducer plus the every-K-steps packed-grid
@@ -67,6 +93,14 @@ pub struct DistExchange {
     packed_sync: bool,
     sync_bytes: u64,
     syncs: u64,
+    /// how gradient partials travel; `F32` keeps the bitwise contract
+    grad_format: GradFormat,
+    /// the SR + error-feedback wire codec — `Some` iff `grad_format` is
+    /// quantized. One per rank: workers encode their uplink through it,
+    /// rank 0 its reduced-set downlink.
+    grad_codec: Option<GradCodec>,
+    /// cumulative all-reduce wire bytes this rank moved (sent + received)
+    allreduce_bytes: u64,
     obs: Option<Arc<TrainObs>>,
 }
 
@@ -78,12 +112,18 @@ impl DistExchange {
     /// An exchange that reports all-reduce latency/bytes and grid-sync
     /// bytes into `obs` (when given).
     pub fn with_obs(col: Collective, dcfg: &DistConfig, obs: Option<Arc<TrainObs>>) -> Self {
+        let grad_codec = grad_wire_format(dcfg.grad_format).map(|f| {
+            GradCodec::new(f).expect("grad wire formats are grid formats by construction")
+        });
         DistExchange {
             col,
             sync_every: dcfg.sync_every,
             packed_sync: dcfg.packed_sync,
             sync_bytes: 0,
             syncs: 0,
+            grad_format: dcfg.grad_format,
+            grad_codec,
+            allreduce_bytes: 0,
             obs,
         }
     }
@@ -96,6 +136,23 @@ impl DistExchange {
     /// Number of resyncs performed.
     pub fn syncs(&self) -> u64 {
         self.syncs
+    }
+
+    /// Cumulative wire bytes the per-step all-reduces moved on this rank
+    /// (sent + received) — the number the quantized formats shrink.
+    pub fn allreduce_bytes(&self) -> u64 {
+        self.allreduce_bytes
+    }
+
+    /// The gradient wire format this exchange runs.
+    pub fn grad_format(&self) -> GradFormat {
+        self.grad_format
+    }
+
+    /// Bytes of error-feedback residual state held on this rank (one f32
+    /// copy of the gradient set when quantized, 0 for f32).
+    pub fn residual_bytes(&self) -> u64 {
+        self.grad_codec.as_ref().map_or(0, GradCodec::residual_bytes)
     }
 
     /// Hand the collective back (for the shutdown handshake).
@@ -120,10 +177,17 @@ impl GradReducer for DistExchange {
         let t0 = Instant::now();
         {
             let _sp = trace::span("dist", trace::names::DIST_ALLREDUCE);
-            self.col.all_reduce(step, grads, nll, count)?;
+            match &mut self.grad_codec {
+                None => self.col.all_reduce(step, grads, nll, count)?,
+                Some(codec) => self
+                    .col
+                    .all_reduce_quantized(step, codec, grads, nll, count)?,
+            }
         }
+        let bytes = self.col.wire_bytes() - before;
+        self.allreduce_bytes += bytes;
         if let Some(obs) = &self.obs {
-            obs.on_allreduce(self.col.wire_bytes() - before, t0.elapsed());
+            obs.on_allreduce(self.grad_format.as_str(), bytes, t0.elapsed());
         }
         Ok(())
     }

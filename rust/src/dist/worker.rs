@@ -21,7 +21,7 @@ use crate::runtime::{State, VariantRuntime};
 use crate::train::{RunMetrics, Trainer};
 
 use super::collective::{Collective, RENDEZVOUS_TIMEOUT};
-use super::DistExchange;
+use super::{rendezvous_variant, DistExchange};
 
 /// Join `dcfg.addr` as rank `dcfg.rank` and train to completion. Returns
 /// the final state + metrics (bit-identical to every other rank's).
@@ -56,7 +56,13 @@ pub fn run(
         dcfg.addr,
         vrt.threads()
     );
-    let col = Collective::join(&dcfg.addr, dcfg.rank, dcfg.world, &variant, RENDEZVOUS_TIMEOUT)?;
+    let col = Collective::join(
+        &dcfg.addr,
+        dcfg.rank,
+        dcfg.world,
+        &rendezvous_variant(&variant, dcfg.grad_format),
+        RENDEZVOUS_TIMEOUT,
+    )?;
     let mut ex = DistExchange::with_obs(col, dcfg, obs.clone());
     let mut trainer = Trainer::new(&vrt, &pipeline, tcfg.clone());
     if let Some(obs) = obs {

@@ -66,6 +66,12 @@ COMMANDS
           [--no-spawn]         multi-host: wait for external `worker`s
           [--sync-every 25]    packed grid-weight resync period (0 = off)
           [--sync-format packed|f32]
+          [--grad-format f32|int8|ternary]  per-step gradient wire: f32
+                               keeps the bitwise contract; int8/ternary
+                               stochastically round the exchange (~4x/16x
+                               less wire) with error-feedback residuals
+                               and a pinned convergence contract
+                               (docs/DISTRIBUTED.md)
           [--metrics-addr H:P] serve GET /metrics (Prometheus text) for
                                this rank (env: DQT_METRICS_ADDR)
           [--watch-addr H:P]   stream per-step frames for `repro watch`
@@ -206,12 +212,16 @@ fn dist_config_from(a: &Args, world: usize, rank: usize, addr: String) -> Result
         "f32" => false,
         other => return Err(anyhow!("bad --sync-format {other:?} (packed|f32)")),
     };
+    let gf = a.str_or("grad-format", "f32");
+    let grad_format = dqt::config::GradFormat::parse(&gf)
+        .ok_or_else(|| anyhow!("bad --grad-format {gf:?} (f32|int8|ternary)"))?;
     Ok(DistConfig {
         world,
         rank,
         addr,
         sync_every: a.parse_or("sync-every", DistConfig::default().sync_every)?,
         packed_sync,
+        grad_format,
     })
 }
 
@@ -288,6 +298,7 @@ fn dist_passthrough(a: &Args) -> Vec<String> {
         "seed",
         "sync-every",
         "sync-format",
+        "grad-format",
         "threads",
         "precision",
     ] {
@@ -363,12 +374,21 @@ fn main() -> Result<()> {
                     checkpoint::Codec::F32,
                     true,
                 )?;
+                // wire-traffic report — the dist-smoke CI legs assert the
+                // quantized formats' shrinkage against this file
+                std::fs::write(
+                    out_dir.join("dist.json"),
+                    dr.to_json().to_string_pretty(),
+                )?;
                 println!(
                     "trained {name} on {} workers: final loss {:.4}, dev loss {:.4} \
-                     ({} grid resyncs, {} sync bytes on the wire) → {}",
+                     ({} grad exchange, {} all-reduce bytes, {} grid resyncs, \
+                     {} sync bytes on the wire) → {}",
                     dr.world,
                     metrics.tail_loss(10).unwrap_or(f32::NAN),
                     metrics.final_dev_loss.unwrap_or(f32::NAN),
+                    dr.grad_format,
+                    dr.allreduce_bytes,
                     dr.syncs,
                     dr.sync_bytes,
                     out_dir.display()

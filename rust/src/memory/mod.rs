@@ -227,10 +227,13 @@ pub fn serving_estimate(spec: &VariantSpec, batch: usize, ternary: bool) -> Opti
 /// Data parallelism replicates the model state (weights + grads +
 /// optimizer) on every rank and shards the *batch*, so activations divide
 /// by the world while state does not — and the wire costs are where DQT's
-/// §1 argument compounds: the per-step gradient exchange is f32 (one full
-/// parameter-sized partial each way per worker link), but the periodic
-/// weight resync ships the 2-bit packed grid + scales, ~16× less than an
-/// f32 weight broadcast (`dist::wire`'s `GridSync` framing).
+/// §1 argument compounds: the per-step gradient exchange defaults to f32
+/// (one full parameter-sized partial each way per worker link), shrinks
+/// ~4×/~16× under `--grad-format int8|ternary` (stochastic rounding +
+/// error feedback, `dist::wire`'s `PackedGradSet` framing — at the cost
+/// of one f32 residual copy per rank), and the periodic weight resync
+/// ships the 2-bit packed grid + scales, ~16× less than an f32 weight
+/// broadcast (`GridSync` framing).
 #[derive(Clone, Debug)]
 pub struct DistBreakdown {
     pub workers: usize,
@@ -239,7 +242,17 @@ pub struct DistBreakdown {
     /// activation memory for one rank's contiguous batch shard
     pub per_rank_activations: f64,
     /// f32 gradient partial one worker link carries per step, each way
+    /// (`--grad-format f32`, the default)
     pub grad_bytes_per_step: f64,
+    /// the same partial stochastically rounded to int8 + absmax scales
+    /// (`--grad-format int8`)
+    pub grad_bytes_per_step_int8: f64,
+    /// the same partial as 2-bit packed ternary (`--grad-format ternary`)
+    pub grad_bytes_per_step_ternary: f64,
+    /// error-feedback residual state a quantized exchange keeps resident
+    /// per rank — one f32 copy of the gradient set, reported honestly
+    /// (0 under f32)
+    pub ef_residual_bytes: f64,
     /// one weight resync as f32 values (grid matrices + scales)
     pub sync_bytes_f32: f64,
     /// one weight resync as packed grid codes + f32 scales
@@ -256,12 +269,37 @@ impl DistBreakdown {
         }
     }
 
+    /// Wire saved per step by an int8 / ternary gradient exchange.
+    pub fn grad_ratio_int8(&self) -> f64 {
+        if self.grad_bytes_per_step_int8 > 0.0 {
+            self.grad_bytes_per_step / self.grad_bytes_per_step_int8
+        } else {
+            1.0
+        }
+    }
+
+    pub fn grad_ratio_ternary(&self) -> f64 {
+        if self.grad_bytes_per_step_ternary > 0.0 {
+            self.grad_bytes_per_step / self.grad_bytes_per_step_ternary
+        } else {
+            1.0
+        }
+    }
+
     pub fn to_json(&self) -> crate::util::json::Value {
         crate::util::json::Value::obj()
             .set("workers", self.workers)
             .set("per_rank_state", self.per_rank_state)
             .set("per_rank_activations", self.per_rank_activations)
             .set("grad_bytes_per_step", self.grad_bytes_per_step)
+            .set("grad_bytes_per_step_int8", self.grad_bytes_per_step_int8)
+            .set(
+                "grad_bytes_per_step_ternary",
+                self.grad_bytes_per_step_ternary,
+            )
+            .set("ef_residual_bytes", self.ef_residual_bytes)
+            .set("grad_ratio_int8", self.grad_ratio_int8())
+            .set("grad_ratio_ternary", self.grad_ratio_ternary())
             .set("sync_bytes_f32", self.sync_bytes_f32)
             .set("sync_bytes_packed", self.sync_bytes_packed)
             .set("sync_ratio", self.sync_ratio())
@@ -302,6 +340,18 @@ pub fn dist_estimate(spec: &VariantSpec, workers: usize) -> Option<DistBreakdown
         per_rank_state: b.state_bytes(),
         per_rank_activations: b.activations / workers as f64,
         grad_bytes_per_step: p_total * 4.0,
+        // SR + error feedback quantize *all* gradient buffers (the wire
+        // codec is mode-agnostic): 1 byte/value for int8, 2 bits/value
+        // for ternary, plus one f32 absmax scale per buffer (negligible,
+        // not modeled here — the measured assertions in benches/dist.rs
+        // cover the true frame overhead)
+        grad_bytes_per_step_int8: p_total,
+        grad_bytes_per_step_ternary: p_total
+            * crate::quant::Format::Ternary2bit.bits_per_weight()
+            / 8.0,
+        // the honest cost of error feedback: one f32 residual per
+        // gradient value, resident on every rank that quantizes its wire
+        ef_residual_bytes: p_total * 4.0,
         sync_bytes_f32: p_quant * 4.0 + n_scales * 4.0,
         sync_bytes_packed: p_quant * bpw / 8.0 + n_scales * 4.0,
     })
@@ -436,6 +486,15 @@ mod tests {
         // the per-step gradient exchange is a full f32 parameter set
         let cfg = ModelConfig::by_name("p1b").unwrap();
         assert_eq!(d.grad_bytes_per_step, cfg.param_count() as f64 * 4.0);
+        // quantized exchange tiers: int8 is 4x, ternary 2-bit is 16x, and
+        // the error-feedback residual is one f32 copy of the gradients
+        assert_eq!(d.grad_bytes_per_step_int8, cfg.param_count() as f64);
+        assert!((d.grad_ratio_int8() - 4.0).abs() < 1e-9, "{}", d.grad_ratio_int8());
+        assert!((d.grad_ratio_ternary() - 16.0).abs() < 1e-9, "{}", d.grad_ratio_ternary());
+        assert_eq!(d.ef_residual_bytes, d.grad_bytes_per_step);
+        let j = d.to_json();
+        assert!(j.get("grad_bytes_per_step_int8").is_some());
+        assert!(j.get("ef_residual_bytes").is_some());
         // state replicates; activations shard with the batch
         let d1 = dist_estimate(&spec(Mode::Dqt, 1.58, Env::Fp32, Optimizer::Adamw), 1).unwrap();
         assert_eq!(d.per_rank_state, d1.per_rank_state);

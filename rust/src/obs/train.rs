@@ -27,6 +27,16 @@ pub const TIME_BUCKETS: [f64; 11] = [
     0.001, 0.005, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 10.0, 60.0,
 ];
 
+/// The `format` label values of the per-format all-reduce series — the
+/// gradient wire tiers of `--grad-format`. Order is the series index.
+pub const GRAD_FORMATS: [&str; 3] = ["f32", "int8", "ternary"];
+
+/// Index of a gradient-format tag into [`GRAD_FORMATS`]-shaped series;
+/// unknown tags account under `f32` rather than dropping the sample.
+fn grad_format_idx(format: &str) -> usize {
+    GRAD_FORMATS.iter().position(|f| *f == format).unwrap_or(0)
+}
+
 /// Training + distributed metrics bundle. Field docs double as the
 /// metric help strings.
 pub struct TrainObs {
@@ -45,8 +55,9 @@ pub struct TrainObs {
 
     dist_world: Arc<Gauge>,
     allreduce_total: Arc<Counter>,
-    allreduce_bytes_total: Arc<Counter>,
-    allreduce_seconds_total: Arc<Counter>,
+    /// one series per `--grad-format` tier, indexed by [`GRAD_FORMATS`]
+    allreduce_bytes_total: [Arc<Counter>; 3],
+    allreduce_seconds_total: [Arc<Counter>; 3],
     grid_syncs_total: Arc<Counter>,
     grid_sync_bytes_total: Arc<Counter>,
 }
@@ -94,14 +105,20 @@ impl TrainObs {
                 "dqt_dist_allreduce_total",
                 "Gradient all-reduce rounds completed.",
             ),
-            allreduce_bytes_total: r.counter(
-                "dqt_dist_allreduce_bytes_total",
-                "Bytes sent + received by gradient all-reduce on this rank.",
-            ),
-            allreduce_seconds_total: r.counter(
-                "dqt_dist_allreduce_seconds_total",
-                "Cumulative seconds blocked in gradient all-reduce on this rank.",
-            ),
+            allreduce_bytes_total: GRAD_FORMATS.map(|f| {
+                r.counter_with(
+                    "dqt_dist_allreduce_bytes_total",
+                    "Bytes sent + received by gradient all-reduce on this rank, by wire format.",
+                    &[("format", f)],
+                )
+            }),
+            allreduce_seconds_total: GRAD_FORMATS.map(|f| {
+                r.counter_with(
+                    "dqt_dist_allreduce_seconds_total",
+                    "Cumulative seconds blocked in gradient all-reduce on this rank, by wire format.",
+                    &[("format", f)],
+                )
+            }),
             grid_syncs_total: r.counter(
                 "dqt_dist_grid_syncs_total",
                 "Periodic packed-grid weight resyncs completed.",
@@ -169,11 +186,13 @@ impl TrainObs {
     }
 
     /// Record one gradient all-reduce round: wire bytes moved on this
-    /// rank and wall time blocked.
-    pub fn on_allreduce(&self, bytes: u64, elapsed: Duration) {
+    /// rank and wall time blocked, accounted under the run's gradient
+    /// wire format (`f32|int8|ternary` — the `format` label).
+    pub fn on_allreduce(&self, format: &str, bytes: u64, elapsed: Duration) {
+        let i = grad_format_idx(format);
         self.allreduce_total.inc();
-        self.allreduce_bytes_total.inc_by(bytes);
-        self.allreduce_seconds_total.add(elapsed.as_secs_f64());
+        self.allreduce_bytes_total[i].inc_by(bytes);
+        self.allreduce_seconds_total[i].add(elapsed.as_secs_f64());
     }
 
     /// Record one packed-grid weight resync.
@@ -216,7 +235,8 @@ mod tests {
         obs.on_step(&rec(0), 15.0, 5.0);
         obs.on_step(&rec(1), 15.0, 5.0);
         obs.on_dev_loss(4.25);
-        obs.on_allreduce(1024, Duration::from_millis(3));
+        obs.on_allreduce("f32", 1024, Duration::from_millis(3));
+        obs.on_allreduce("int8", 256, Duration::from_millis(1));
         obs.on_grid_sync(256);
         obs.on_run_end(Some(4.0), 1.5);
 
@@ -225,7 +245,20 @@ mod tests {
         assert!(text.contains("dqt_train_loss 4.5\n"), "{text}");
         assert!(text.contains("dqt_train_dev_loss 4\n"), "{text}");
         assert!(text.contains("dqt_dist_world 2\n"), "{text}");
-        assert!(text.contains("dqt_dist_allreduce_bytes_total 1024\n"), "{text}");
+        // all-reduce traffic splits by wire format
+        assert!(
+            text.contains("dqt_dist_allreduce_bytes_total{format=\"f32\"} 1024\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dqt_dist_allreduce_bytes_total{format=\"int8\"} 256\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dqt_dist_allreduce_bytes_total{format=\"ternary\"} 0\n"),
+            "{text}"
+        );
+        assert!(text.contains("dqt_dist_allreduce_total 2\n"), "{text}");
         assert!(text.contains("dqt_dist_grid_sync_bytes_total 256\n"), "{text}");
         assert!(text.contains("dqt_train_step_seconds_count 2\n"), "{text}");
         // 20 ms lands in the 0.02 s bucket

@@ -21,6 +21,8 @@
 //! * [`bf16`]    — BF16 round-to-nearest-even storage
 //! * [`sr`]      — stochastic rounding on the host (checkpoint conversion +
 //!                 the counter-hash PRNG shared with the Pallas kernel)
+//! * [`gradcodec`] — SR + error-feedback gradient wire codec: int8/ternary
+//!                 gradient frames for the distributed exchange (`dist/`)
 //!
 //! The paper's `bits == 1.58` ternary sentinel is interpreted in exactly
 //! one place: [`codec::Format::from_bits`].
@@ -28,11 +30,13 @@
 pub mod bf16;
 pub mod codec;
 pub mod fp8;
+pub mod gradcodec;
 pub mod intn;
 pub mod sr;
 pub mod ternary;
 
 pub use codec::{Codec, Format, PackedTensor};
+pub use gradcodec::{GradCodec, PackedGrad};
 
 /// Integer grid range `[q_min, q_max]` for an n-bit format; `bits == 1.58`
 /// selects the paper's ternary format {-1, 0, 1} (Eq. Qn/Qp in §3.2).

@@ -188,6 +188,20 @@ pub fn dist_memory(model: &str, workers: usize) -> Result<String> {
          link; sync: an every-K-steps weight resync as f32 vs the packed \
          grid codes + scales (dist::wire GridSync framing).\n",
     );
+    // the quantized gradient-exchange tiers apply uniformly — wire cost
+    // depends only on parameter count, not the variant's weight mode
+    let q = memory::dist_estimate(&VariantSpec::new(model, Mode::Dqt, 1.58), workers)
+        .ok_or_else(|| anyhow!("bad model"))?;
+    out.push_str(&format!(
+        "quantized exchange (--grad-format): int8 puts {} on the wire per \
+         step ({:.1}x smaller), ternary {} ({:.1}x); error-feedback \
+         residuals hold {} of f32 state per rank.\n",
+        human(q.grad_bytes_per_step_int8),
+        q.grad_ratio_int8(),
+        human(q.grad_bytes_per_step_ternary),
+        q.grad_ratio_ternary(),
+        human(q.ef_residual_bytes),
+    ));
     Ok(out)
 }
 
@@ -391,7 +405,15 @@ mod tests {
     #[test]
     fn dist_memory_renders_and_shows_packed_savings() {
         let t = dist_memory("p1b", 4).unwrap();
-        for needle in ["fp32", "bitnet b1.58", "dqt ternary", "dqt 8bit", "sync packed"] {
+        for needle in [
+            "fp32",
+            "bitnet b1.58",
+            "dqt ternary",
+            "dqt 8bit",
+            "sync packed",
+            "--grad-format",
+            "error-feedback",
+        ] {
             assert!(t.contains(needle), "{needle} missing:\n{t}");
         }
         assert!(dist_memory("nope", 4).is_err());

@@ -56,6 +56,37 @@ fn metric_names_follow_the_naming_convention() {
     }
 }
 
+/// The all-reduce traffic series split by gradient wire format: all
+/// three `format` label values must exist from process start (zeroed
+/// series, so dashboards can rate() them without gaps) and render with
+/// the label attached.
+#[test]
+fn allreduce_series_carry_the_format_label() {
+    let obs = TrainObs::new();
+    obs.on_allreduce("ternary", 512, std::time::Duration::from_millis(2));
+    let text = obs.registry().render();
+    for f in dqt::obs::train::GRAD_FORMATS {
+        for family in [
+            "dqt_dist_allreduce_bytes_total",
+            "dqt_dist_allreduce_seconds_total",
+        ] {
+            assert!(
+                text.contains(&format!("{family}{{format=\"{f}\"}}")),
+                "missing series {family}{{format=\"{f}\"}} in:\n{text}"
+            );
+        }
+    }
+    assert!(
+        text.contains("dqt_dist_allreduce_bytes_total{format=\"ternary\"} 512\n"),
+        "{text}"
+    );
+    // and the doc names the label so the contract covers it
+    assert!(
+        doc_text().contains("`format`"),
+        "docs/OBSERVABILITY.md must document the format label"
+    );
+}
+
 #[test]
 fn documented_streaming_tags_match_the_wire() {
     // the doc's wire table pins the frame tags and version; a tag or

@@ -1,21 +1,36 @@
 #!/usr/bin/env bash
-# Dist-smoke: train the tiny ternary DQT variant for 20 steps twice —
-# once with --workers 1 (the single-process reference through the dist
-# code path) and once with --workers 2 (rank 0 + one spawned local worker
-# process over localhost TCP, packed grid resync active) — then assert
-# the two runs are BITWISE equal: loss curve, final dev loss (eval NLL)
-# and the saved checkpoint bytes. CI runs this as the required dist-smoke
-# job; the same property is pinned in-process by rust/tests/dist.rs.
+# Dist-smoke: train the tiny ternary DQT variant for 20 steps through the
+# distributed code path and assert the gradient-exchange contract for one
+# `--grad-format` leg (CI runs both as a matrix):
 #
-# The 2-worker leg also exercises the observability plane: rank 0 runs
-# with --watch-addr and a background `repro watch --join` tails the live
+#   f32 leg (default): --workers 1 reference vs --workers 2 (rank 0 + one
+#   spawned local worker over localhost TCP, packed grid resync active)
+#   must be BITWISE equal — loss curve, final dev loss (eval NLL) and the
+#   saved checkpoint bytes. Same property as rust/tests/dist.rs, across
+#   OS processes via the CLI.
+#
+#   int8 leg: the quantized gradient exchange trades that bitwise
+#   contract for a convergence contract — the 2-worker int8 run's loss
+#   curve must track the 1-worker reference within a tolerance while its
+#   reported all-reduce wire bytes (out/dist.json) shrink >=3.9x vs a
+#   2-worker f32 run (the whole-frame int8 ratio approaches 4.0 from
+#   below as per-entry metadata amortizes).
+#
+# The f32 leg also exercises the observability plane: rank 0 runs with
+# --watch-addr and a background `repro watch --join` tails the live
 # stream; afterwards its log must show the run header, per-step loss
 # frames, and the run-end line (docs/OBSERVABILITY.md). Observation is
-# read-only, so the bitwise assertions above hold with it enabled.
+# read-only, so the bitwise assertions hold with it enabled.
 #
-# Usage: scripts/dist_smoke.sh
+# Usage: scripts/dist_smoke.sh [f32|int8]
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+GRAD_FORMAT="${1:-f32}"
+case "$GRAD_FORMAT" in
+    f32|int8) ;;
+    *) echo "usage: scripts/dist_smoke.sh [f32|int8]" >&2; exit 2 ;;
+esac
 
 OUT="$(mktemp -d)"
 cleanup() { rm -rf "$OUT"; }
@@ -30,25 +45,36 @@ COMMON=(--model test --mode dqt --bits 1.58 --backend native
 echo "== 1-worker reference run (dist path, identity reducer) =="
 "$BIN" train "${COMMON[@]}" --workers 1 --out "$OUT/w1"
 
-echo "== 2-worker run (rank 0 + spawned local worker, packed sync) =="
-# watcher first: `repro watch` retries the connect until the publisher
-# binds, so it sees the RunStart header and every step frame
-WATCH_ADDR=127.0.0.1:17961
-"$BIN" watch --join "$WATCH_ADDR" --timeout 60 > "$OUT/watch.log" &
-WATCH_PID=$!
-"$BIN" train "${COMMON[@]}" --workers 2 --out "$OUT/w2" \
-    --watch-addr "$WATCH_ADDR"
-wait "$WATCH_PID"
+if [ "$GRAD_FORMAT" = f32 ]; then
+    echo "== 2-worker run (rank 0 + spawned local worker, packed sync) =="
+    # watcher first: `repro watch` retries the connect until the publisher
+    # binds, so it sees the RunStart header and every step frame
+    WATCH_ADDR=127.0.0.1:17961
+    "$BIN" watch --join "$WATCH_ADDR" --timeout 60 > "$OUT/watch.log" &
+    WATCH_PID=$!
+    "$BIN" train "${COMMON[@]}" --workers 2 --out "$OUT/w2" \
+        --watch-addr "$WATCH_ADDR"
+    wait "$WATCH_PID"
 
-echo "== watch tail of the 2-worker run =="
-cat "$OUT/watch.log"
-grep -q "^run start: .* (world 2, 20 steps)$" "$OUT/watch.log"
-STEP_LINES=$(grep -c "^step [0-9]*: loss " "$OUT/watch.log")
-[ "$STEP_LINES" -eq 20 ] || {
-    echo "expected 20 per-step frames in the watch tail, saw $STEP_LINES" >&2
-    exit 1
-}
-grep -q "^run end: dev loss " "$OUT/watch.log"
+    echo "== watch tail of the 2-worker run =="
+    cat "$OUT/watch.log"
+    grep -q "^run start: .* (world 2, 20 steps)$" "$OUT/watch.log"
+    STEP_LINES=$(grep -c "^step [0-9]*: loss " "$OUT/watch.log")
+    [ "$STEP_LINES" -eq 20 ] || {
+        echo "expected 20 per-step frames in the watch tail, saw $STEP_LINES" >&2
+        exit 1
+    }
+    grep -q "^run end: dev loss " "$OUT/watch.log"
 
-python3 scripts/dist_smoke_assert.py "$OUT/w1" "$OUT/w2"
-echo "dist-smoke OK"
+    python3 scripts/dist_smoke_assert.py "$OUT/w1" "$OUT/w2"
+else
+    echo "== 2-worker f32 run (wire-bytes baseline) =="
+    "$BIN" train "${COMMON[@]}" --workers 2 --grad-format f32 --out "$OUT/w2f32"
+
+    echo "== 2-worker int8 run (quantized gradient exchange) =="
+    "$BIN" train "${COMMON[@]}" --workers 2 --grad-format int8 --out "$OUT/w2int8"
+
+    python3 scripts/dist_smoke_assert.py "$OUT/w1" "$OUT/w2int8" \
+        --tolerance 0.35 --wire-baseline "$OUT/w2f32" --wire-shrink 3.9
+fi
+echo "dist-smoke OK ($GRAD_FORMAT leg)"

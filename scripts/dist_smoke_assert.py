@@ -1,10 +1,20 @@
 #!/usr/bin/env python3
-"""Assert a 2-worker distributed run is bitwise equal to the 1-worker run.
+"""Assert the distributed gradient-exchange contract between two runs.
 
-Usage: dist_smoke_assert.py <dir_w1> <dir_w2>
+Usage:
+  dist_smoke_assert.py <dir_w1> <dir_w2>
+      Bitwise mode (the --grad-format f32 contract): the 2-worker run
+      must be bit-identical to the 1-worker run.
+  dist_smoke_assert.py <dir_ref> <dir_q> --tolerance NATS \\
+      --wire-baseline <dir_f32_w2> --wire-shrink RATIO
+      Convergence mode (the --grad-format int8 contract): the quantized
+      run must track the reference within the tolerance while its
+      reported all-reduce wire bytes shrink by at least RATIO.
 
 Each directory is a `repro train --out` result: metrics.json + curve.csv +
-model.dqt. Checks, in order:
+model.dqt (+ dist.json for --workers runs).
+
+Bitwise mode checks, in order:
 
   1. the per-step loss curve (loss, lr, upd_frac, gnorm columns of
      curve.csv — step_ms is wall time and legitimately differs) is
@@ -14,9 +24,20 @@ model.dqt. Checks, in order:
   3. the saved checkpoints (model.dqt: every weight, scale and optimizer
      tensor) are byte-identical files.
 
-Any diff prints the first offending step/field and exits non-zero.
+Convergence mode instead checks:
+
+  1. per-step |loss_q - loss_ref| <= tolerance at every step, AND the
+     curves are NOT identical text (a quantizer that secretly ships f32
+     would pass any tolerance vacuously);
+  2. |final_dev_loss_q - final_dev_loss_ref| <= tolerance;
+  3. dist.json wire accounting: the quantized run's allreduce_bytes are
+     at least --wire-shrink times under the f32 baseline's, both runs
+     report world 2, and the grad_format tags are int8 vs f32.
+
+Any failure prints the first offending step/field and exits non-zero.
 """
 
+import argparse
 import hashlib
 import json
 import pathlib
@@ -32,31 +53,42 @@ def curve_rows(d: pathlib.Path):
     lines = (d / "curve.csv").read_text().strip().splitlines()
     header = lines[0].split(",")
     keep = [i for i, name in enumerate(header) if name != "step_ms"]
-    return [tuple(line.split(",")[i] for i in keep) for line in lines[1:]]
+    rows = [tuple(line.split(",")[i] for i in keep) for line in lines[1:]]
+    names = [header[i] for i in keep]
+    return names, rows
 
 
-def main() -> None:
-    if len(sys.argv) != 3:
-        die("usage: dist_smoke_assert.py <dir_w1> <dir_w2>")
-    w1, w2 = pathlib.Path(sys.argv[1]), pathlib.Path(sys.argv[2])
-
-    # 1. loss curve, field by field
-    c1, c2 = curve_rows(w1), curve_rows(w2)
-    if len(c1) != len(c2):
-        die(f"step counts differ: {len(c1)} vs {len(c2)}")
-    if not c1:
+def load_curves(a: pathlib.Path, b: pathlib.Path):
+    names_a, ca = curve_rows(a)
+    names_b, cb = curve_rows(b)
+    if names_a != names_b:
+        die(f"curve columns differ: {names_a} vs {names_b}")
+    if len(ca) != len(cb):
+        die(f"step counts differ: {len(ca)} vs {len(cb)}")
+    if not ca:
         die("empty loss curves")
+    return names_a, ca, cb
+
+
+def dev_losses(a: pathlib.Path, b: pathlib.Path):
+    ma = json.loads((a / "metrics.json").read_text())
+    mb = json.loads((b / "metrics.json").read_text())
+    da, db = ma.get("final_dev_loss"), mb.get("final_dev_loss")
+    if da is None or db is None:
+        die(f"missing final_dev_loss: {da} vs {db}")
+    return da, db
+
+
+def assert_bitwise(w1: pathlib.Path, w2: pathlib.Path) -> None:
+    # 1. loss curve, field by field
+    _, c1, c2 = load_curves(w1, w2)
     for row1, row2 in zip(c1, c2):
         if row1 != row2:
             die(f"loss curve diverged at step {row1[0]}: {row1} vs {row2}")
     print(f"curve OK: {len(c1)} steps bitwise equal")
 
     # 2. eval NLL (final dev loss)
-    m1 = json.loads((w1 / "metrics.json").read_text())
-    m2 = json.loads((w2 / "metrics.json").read_text())
-    d1, d2 = m1.get("final_dev_loss"), m2.get("final_dev_loss")
-    if d1 is None or d2 is None:
-        die(f"missing final_dev_loss: {d1} vs {d2}")
+    d1, d2 = dev_losses(w1, w2)
     if d1 != d2:
         die(f"final dev loss (eval NLL) differs: {d1} vs {d2}")
     print(f"eval NLL OK: {d1}")
@@ -67,6 +99,74 @@ def main() -> None:
     if h1 != h2:
         die(f"checkpoints differ: {h1} vs {h2}")
     print(f"checkpoint OK: sha256 {h1[:16]}… identical")
+
+
+def assert_convergence(
+    ref: pathlib.Path,
+    quant: pathlib.Path,
+    tol: float,
+    wire_baseline: pathlib.Path,
+    wire_shrink: float,
+) -> None:
+    # 1. loss curve within tolerance, but not secretly identical
+    names, cr, cq = load_curves(ref, quant)
+    loss_col = names.index("loss")
+    worst = 0.0
+    for row_r, row_q in zip(cr, cq):
+        gap = abs(float(row_q[loss_col]) - float(row_r[loss_col]))
+        worst = max(worst, gap)
+        if gap > tol:
+            die(
+                f"quantized loss drifted at step {row_q[0]}: "
+                f"{row_q[loss_col]} vs f32 {row_r[loss_col]} (> {tol} nats)"
+            )
+    if cr == cq:
+        die("quantized curve is bitwise equal to f32 — quantization isn't happening")
+    print(f"curve OK: {len(cq)} steps within {tol} nats of f32 (worst gap {worst:.6f})")
+
+    # 2. eval NLL within tolerance
+    dr, dq = dev_losses(ref, quant)
+    if abs(dq - dr) > tol:
+        die(f"final dev loss drifted: {dq} vs f32 {dr} (> {tol} nats)")
+    print(f"eval NLL OK: {dq} vs f32 {dr}")
+
+    # 3. reported all-reduce wire bytes shrink
+    dist_q = json.loads((quant / "dist.json").read_text())
+    dist_f = json.loads((wire_baseline / "dist.json").read_text())
+    for d, want in ((dist_q, "int8"), (dist_f, "f32")):
+        if d.get("grad_format") != want:
+            die(f"dist.json grad_format is {d.get('grad_format')!r}, expected {want!r}")
+        if d.get("world") != 2:
+            die(f"dist.json world is {d.get('world')}, expected 2")
+    bytes_q, bytes_f = dist_q["allreduce_bytes"], dist_f["allreduce_bytes"]
+    if not bytes_q or not bytes_f:
+        die(f"zero all-reduce bytes reported: int8 {bytes_q}, f32 {bytes_f}")
+    ratio = bytes_f / bytes_q
+    if ratio < wire_shrink:
+        die(
+            f"int8 all-reduce moved {bytes_q} bytes vs f32 {bytes_f} — "
+            f"only {ratio:.2f}x smaller, need >= {wire_shrink}x"
+        )
+    print(f"wire OK: int8 {bytes_q} B vs f32 {bytes_f} B ({ratio:.2f}x smaller)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("ref", type=pathlib.Path)
+    ap.add_argument("run", type=pathlib.Path)
+    ap.add_argument("--tolerance", type=float, default=None, help="nats; enables convergence mode")
+    ap.add_argument("--wire-baseline", type=pathlib.Path, default=None)
+    ap.add_argument("--wire-shrink", type=float, default=3.9)
+    args = ap.parse_args()
+
+    if args.tolerance is None:
+        assert_bitwise(args.ref, args.run)
+    else:
+        if args.wire_baseline is None:
+            die("--tolerance requires --wire-baseline")
+        assert_convergence(
+            args.ref, args.run, args.tolerance, args.wire_baseline, args.wire_shrink
+        )
 
 
 if __name__ == "__main__":
