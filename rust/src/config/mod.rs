@@ -29,6 +29,26 @@ pub fn effective_threads(cli: Option<usize>) -> usize {
         .unwrap_or(1)
 }
 
+/// Default cadence, in optimizer steps, of the `QuantHealth` stream frame.
+pub const QUANT_FRAME_EVERY_DEFAULT: u64 = 10;
+
+/// Resolve the `QuantHealth` stream-frame cadence (steps between frames).
+/// Precedence: an explicit CLI value > the `DQT_QUANT_FRAME_EVERY`
+/// environment variable > 10. Unlike `effective_threads`, zero is a
+/// meaningful value: it disables QuantHealth frames entirely (per-layer
+/// metrics and `quant_health.json` are unaffected).
+pub fn effective_quant_frame_every(cli: Option<u64>) -> u64 {
+    if let Some(n) = cli {
+        return n;
+    }
+    if let Ok(s) = std::env::var("DQT_QUANT_FRAME_EVERY") {
+        if let Ok(n) = s.trim().parse::<u64>() {
+            return n;
+        }
+    }
+    QUANT_FRAME_EVERY_DEFAULT
+}
+
 /// Kernel numeric tier (`--precision exact|fast` / `DQT_PRECISION`).
 ///
 /// `Exact` keeps every kernel on the scalar, ascending-`k` accumulation
@@ -696,6 +716,17 @@ mod tests {
         // Some(0) and None fall through to env/cores — at least one thread
         assert!(effective_threads(Some(0)) >= 1);
         assert!(effective_threads(None) >= 1);
+    }
+
+    #[test]
+    fn effective_quant_frame_every_prefers_explicit_value() {
+        // explicit CLI wins, including the meaningful 0 = frames off
+        assert_eq!(effective_quant_frame_every(Some(25)), 25);
+        assert_eq!(effective_quant_frame_every(Some(0)), 0);
+        // no CLI: env or the documented default (no env mutation in tests,
+        // so just pin that the fallback path yields a sane cadence)
+        let n = effective_quant_frame_every(None);
+        assert!(n == QUANT_FRAME_EVERY_DEFAULT || std::env::var("DQT_QUANT_FRAME_EVERY").is_ok());
     }
 
     #[test]

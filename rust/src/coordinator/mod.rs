@@ -130,6 +130,9 @@ pub fn run_job(
     }));
     let (state, metrics) = trainer.run()?;
     metrics.save(&out_dir)?;
+    // per-layer quant telemetry rides the default obs handle; a no-op for
+    // variants without grid-quantized layers
+    trainer.obs.save_quant_health(&out_dir)?;
     checkpoint::save(
         &out_dir.join("model.dqt"),
         vrt.manifest(),

@@ -75,7 +75,11 @@ COMMANDS
           [--metrics-addr H:P] serve GET /metrics (Prometheus text) for
                                this rank (env: DQT_METRICS_ADDR)
           [--watch-addr H:P]   stream per-step frames for `repro watch`
-                               (env: DQT_WATCH_ADDR; docs/OBSERVABILITY.md)
+                               (env: DQT_WATCH_ADDR; docs/OBSERVABILITY.md).
+                               Runs with grid-quantized layers also stream
+                               a per-layer QuantHealth frame every
+                               DQT_QUANT_FRAME_EVERY steps (default 10,
+                               0 = off)
   worker  --rank R --workers N --join HOST:PORT (same variant/train flags
           as the coordinator, plus --metrics-addr/--watch-addr) — one
           rank of a multi-host run
@@ -93,9 +97,12 @@ COMMANDS
           [--dataset wiki] [--data-seed 42]  — also serves GET /metrics
   sweep   --exp fig2|fig3|fig4|fig5|fig6|fig7|fig9|table1|abl1|abl2|all
           [--steps N] [--workers 1]
-  report  --exp table2|table3|memory|serving|dist|profile|<exp-id with
-          results>   (profile: [--trace trace.json] re-renders the
-          per-phase table from a --trace-out file)
+  report  --exp table2|table3|memory|serving|dist|profile|quant-health|
+          <exp-id with results>
+          (profile: [--trace trace.json] re-renders the per-phase table
+          from a --trace-out file; quant-health: [--run DIR] renders a
+          train run's quant_health.json per-layer table + anomaly
+          verdicts — defaults to the newest run under results/train)
   list
   memory  (variant flags) [--batch 1] [--workers N  distributed estimate:
           per-rank resident bytes + wire bytes per sync, f32 vs packed]
@@ -358,15 +365,19 @@ fn main() -> Result<()> {
                 } else {
                     Some(passthrough.as_slice())
                 };
+                // always hand rank 0 a concrete TrainObs so quant health
+                // aggregates (and persists below) even with no endpoints
+                let obs = train_obs_from(&a)?.unwrap_or_else(|| Arc::new(TrainObs::new()));
                 let (vrt, state, metrics, dr) = dqt::dist::train_distributed(
                     &spec,
                     &tcfg,
                     &dcfg,
                     pool_from_args(&a)?,
                     spawn,
-                    train_obs_from(&a)?,
+                    Some(obs.clone()),
                 )?;
                 metrics.save(&out_dir)?;
+                obs.save_quant_health(&out_dir)?;
                 checkpoint::save(
                     &out_dir.join("model.dqt"),
                     vrt.manifest(),
@@ -420,6 +431,7 @@ fn main() -> Result<()> {
             }));
             let (state, metrics) = tr.run()?;
             metrics.save(&out_dir)?;
+            tr.obs.save_quant_health(&out_dir)?;
             checkpoint::save(
                 &out_dir.join("model.dqt"),
                 vrt.manifest(),
@@ -480,6 +492,26 @@ fn main() -> Result<()> {
                         println!("run end: {wall_secs:.1}s wall (no dev loss)");
                     } else {
                         println!("run end: dev loss {final_dev_loss:.4}, {wall_secs:.1}s wall");
+                    }
+                }
+                StreamFrame::QuantHealth { step, layers } => {
+                    println!("quant health @ step {step}:");
+                    println!(
+                        "  {:<18} {:>7} {:>8} {:>8} {:>7} {:>7} {:>6} {:>9}",
+                        "layer", "flips", "flip%/st", "|d|gs", "sat%", "zero%", "osc", "gnorm"
+                    );
+                    for l in layers {
+                        println!(
+                            "  {:<18} {:>7} {:>8.3} {:>8.4} {:>7.1} {:>7.1} {:>6.2} {:>9.4}",
+                            l.name,
+                            l.flips,
+                            l.flip_rate * 100.0,
+                            l.abs_upd,
+                            l.saturation * 100.0,
+                            l.zero_frac * 100.0,
+                            l.oscillation,
+                            l.grad_norm
+                        );
                     }
                 }
             })?;
@@ -595,6 +627,13 @@ fn main() -> Result<()> {
                     "{}",
                     report::profile_from_trace(&PathBuf::from(a.str_or("trace", "trace.json")))?
                 ),
+                "quant-health" => {
+                    let dir = match a.get("run") {
+                        Some(d) => PathBuf::from(d),
+                        None => report::latest_quant_health_run(&results)?,
+                    };
+                    println!("{}", report::quant_health(&dir)?);
+                }
                 e => {
                     let runs = report::load_runs(&results, e)?;
                     println!("{}", report::summary_table(&runs));

@@ -94,7 +94,13 @@ fn serve_scrape(mut stream: TcpStream, registry: &Registry) -> std::io::Result<(
 
     let (status, body) = match (method, path) {
         ("GET", "/metrics") => ("200 OK", registry.render()),
-        _ => ("404 Not Found", "only GET /metrics is served here\n".to_string()),
+        // liveness probe, mirroring the serve server's endpoint: a rank
+        // behind --metrics-addr answers as long as its accept loop is up
+        ("GET", "/healthz") => ("200 OK", "ok\n".to_string()),
+        _ => (
+            "404 Not Found",
+            format!("{method} {path} is not served here; try GET /metrics or GET /healthz\n"),
+        ),
     };
     let response = format!(
         "HTTP/1.1 {status}\r\nContent-Type: {METRICS_CONTENT_TYPE}\r\n\
@@ -136,6 +142,24 @@ mod tests {
 
         let response = get(server.local_addr(), "/other");
         assert!(response.starts_with("HTTP/1.1 404"), "{response}");
+    }
+
+    /// `GET /healthz` answers 200 (train ranks are liveness-probeable),
+    /// and unknown paths get a 404 body naming what *is* served.
+    #[test]
+    fn healthz_answers_and_404_body_names_the_endpoints() {
+        let registry = Arc::new(Registry::new());
+        let server = MetricsServer::spawn("127.0.0.1:0", registry).unwrap();
+
+        let response = get(server.local_addr(), "/healthz");
+        assert!(response.starts_with("HTTP/1.1 200 OK"), "{response}");
+        assert!(response.ends_with("ok\n"), "{response}");
+
+        let response = get(server.local_addr(), "/nope");
+        assert!(response.starts_with("HTTP/1.1 404 Not Found"), "{response}");
+        assert!(response.contains("GET /nope is not served here"), "{response}");
+        assert!(response.contains("/metrics"), "{response}");
+        assert!(response.contains("/healthz"), "{response}");
     }
 
     /// Past [`MAX_CONCURRENT_SCRAPES`] in-flight handlers the accept loop

@@ -21,6 +21,10 @@
 //!   phase spans folded into a per-phase profile and exported as Chrome
 //!   trace-event JSON. Off by default; one atomic load per span site
 //!   when disabled.
+//! * [`quant`] — quantization-health telemetry: per-layer SR/grid
+//!   introspection recorded inside the optimizer pass, aggregated into
+//!   per-layer-labeled metrics, a `QuantHealth` stream frame,
+//!   `quant_health.json`, and the three documented anomaly verdicts.
 //!
 //! [`TrainObs`] bundles the training/distributed metrics and the
 //! publisher behind one handle that rides through `Trainer` the way
@@ -28,12 +32,14 @@
 //! metrics or watch address is configured.
 
 pub mod http;
+pub mod quant;
 pub mod registry;
 pub mod stream;
 pub mod trace;
 pub mod train;
 
 pub use http::{MetricsServer, METRICS_CONTENT_TYPE};
+pub use quant::{QuantHealth, QuantStepRecord};
 pub use registry::{Counter, Gauge, Histogram, Registry};
 pub use stream::{Publisher, StreamFrame};
 pub use train::{TrainObs, TIME_BUCKETS};

@@ -1,0 +1,581 @@
+//! Quantization-health telemetry: per-layer introspection of the §3
+//! stochastic-rounding projection.
+//!
+//! The optimizer already walks every grid tensor once per step
+//! (`runtime::native::optim::apply_updates`); [`LayerStep::record`]
+//! piggybacks on that pass and is strictly read-only with respect to
+//! training state — it observes `(w_old, w_new, s_new, g)` and touches
+//! nothing else, so the bitwise-determinism contracts
+//! (`rust/tests/parallel_determinism.rs`, `rust/tests/dist.rs`) hold
+//! with recording on. The hot path is allocation-free: the trainer
+//! pre-sizes one [`QuantStepRecord`] slot per grid tensor from the
+//! manifest at run start and resets it in place every step.
+//!
+//! Per-run aggregation ([`QuantHealth`]) adds the derived signals the
+//! paper's stability story needs per layer: flip rate, update magnitude
+//! in grid-step units, level-occupancy histogram, scale drift,
+//! saturation, and an oscillation score — plus the three documented
+//! anomaly verdicts (dead layer / saturation / oscillation; see
+//! `docs/OBSERVABILITY.md` §Quant health). Thresholds are warnings,
+//! never hard failures.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::{parse, Value};
+
+/// Smoothing factor of the per-layer oscillation EMA (per step).
+pub const QUANT_EMA_ALPHA: f64 = 0.1;
+/// Dead-layer verdict: run-average flips per weight per step below this
+/// while the layer still receives gradient.
+pub const DEAD_FLIP_RATE: f64 = 1e-4;
+/// Gradient-norm floor for the dead-layer verdict — below this the layer
+/// is legitimately idle, not dead.
+pub const DEAD_GNORM_FLOOR: f64 = 1e-12;
+/// Saturation verdict: fraction of weights at the extreme grid levels.
+/// Healthy ternary AbsMean sits near ~0.7; 0.9 flags absmax blowup or
+/// zero-level collapse without tripping on normal runs.
+pub const SATURATION_WARN: f64 = 0.9;
+/// Oscillation verdict: EMA of sign-alternating flip steps above this.
+pub const OSCILLATION_WARN: f64 = 0.6;
+/// Level-occupancy bins: `[min level, other < 0, zero, other > 0, max
+/// level]` (the middle two are empty for ternary grids).
+pub const OCCUPANCY_BINS: usize = 5;
+
+/// Raw single-step stats for one grid tensor, filled by one read-only
+/// pass inside the optimizer. All counters reset every step.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerStep {
+    /// weights in the tensor
+    pub n: u64,
+    /// weights whose stored value changed this step
+    pub flips: u64,
+    /// flips that moved the weight up / down the grid
+    pub flips_up: u64,
+    pub flips_down: u64,
+    /// Σ (w_new − w_old)·s_new — signed update in grid-step units
+    pub net_upd: f64,
+    /// Σ |w_new − w_old|·s_new — absolute update in grid-step units
+    pub abs_upd: f64,
+    /// post-update level occupancy, binned per [`OCCUPANCY_BINS`]
+    pub occupancy: [u64; OCCUPANCY_BINS],
+    /// the stored `.s` companion after the step (inverse scale: grid
+    /// level = round(w·s), grid step in weight units = 1/s)
+    pub scale: f32,
+    /// Σ g² over the tensor's post-clip gradient
+    pub gsq: f64,
+}
+
+impl LayerStep {
+    /// One pass over a grid tensor's update: `w_old` is the stored
+    /// weights before the step, `w_new` the projected weights about to
+    /// replace them, `s_new` the (inverse) scale being stored, `qn`/`qp`
+    /// the grid's level range and `g` the post-clip gradient. Read-only
+    /// on every argument; no allocation.
+    pub fn record(&mut self, w_old: &[f32], w_new: &[f32], s_new: f32, qn: f32, qp: f32, g: &[f32]) {
+        self.n = w_new.len() as u64;
+        self.scale = s_new;
+        for i in 0..w_new.len() {
+            let (a, b) = (w_old[i], w_new[i]);
+            if a != b {
+                self.flips += 1;
+                if b > a {
+                    self.flips_up += 1;
+                } else {
+                    self.flips_down += 1;
+                }
+            }
+            let d = ((b - a) * s_new) as f64;
+            self.net_upd += d;
+            self.abs_upd += d.abs();
+            let lvl = (b * s_new).round();
+            let bin = if lvl <= qn {
+                0
+            } else if lvl < 0.0 {
+                1
+            } else if lvl == 0.0 {
+                2
+            } else if lvl >= qp {
+                4
+            } else {
+                3
+            };
+            self.occupancy[bin] += 1;
+            let gv = g[i] as f64;
+            self.gsq += gv * gv;
+        }
+    }
+}
+
+/// Pre-sized per-step scratch: one [`LayerStep`] slot per grid tensor,
+/// in `Layout::trainables` grid order (== manifest grid-param order).
+/// Built once at run start, reset in place every step.
+#[derive(Clone, Debug, Default)]
+pub struct QuantStepRecord {
+    pub slots: Vec<LayerStep>,
+}
+
+impl QuantStepRecord {
+    pub fn new(layers: usize) -> Self {
+        QuantStepRecord {
+            slots: vec![LayerStep::default(); layers],
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Zero every slot without reallocating.
+    pub fn reset(&mut self) {
+        for s in &mut self.slots {
+            *s = LayerStep::default();
+        }
+    }
+}
+
+/// Per-layer run aggregate: totals plus the latest step's derived
+/// gauges, exactly the fields `quant_health.json` persists.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerHealth {
+    /// manifest param name (e.g. `layers.0.wq`) — also the `layer`
+    /// metric label value
+    pub name: String,
+    pub weights: u64,
+    /// steps recorded for this layer
+    pub steps: u64,
+    pub flips_total: u64,
+    /// latest step's flip count
+    pub last_flips: u64,
+    /// latest step's mean signed update per weight, grid-step units
+    pub net_upd_grid_steps: f32,
+    /// latest step's mean |update| per weight, grid-step units
+    pub abs_upd_grid_steps: f32,
+    /// latest step's level occupancy (sums to `weights`)
+    pub occupancy: [u64; OCCUPANCY_BINS],
+    /// latest stored `.s` (inverse scale)
+    pub scale: f32,
+    /// |s_t − s_{t−1}| / |s_{t−1}|, latest step (0 until two steps seen)
+    pub scale_drift: f32,
+    /// latest fraction of weights at the extreme grid levels
+    pub saturation: f32,
+    /// latest fraction of weights at the zero level
+    pub zero_frac: f32,
+    /// EMA of sign-alternating flip steps (see [`OSCILLATION_WARN`])
+    pub oscillation: f32,
+    /// latest √(Σg²) over the layer's post-clip gradient
+    pub grad_norm: f32,
+    prev_dir: i8,
+    prev_scale: f32,
+}
+
+impl LayerHealth {
+    /// Run-average flips per weight per step.
+    pub fn flip_rate(&self) -> f64 {
+        if self.weights == 0 || self.steps == 0 {
+            return 0.0;
+        }
+        self.flips_total as f64 / (self.weights as f64 * self.steps as f64)
+    }
+}
+
+/// Whole-run quantization-health aggregate: one [`LayerHealth`] per grid
+/// tensor, fed a [`QuantStepRecord`] per optimizer step.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QuantHealth {
+    pub steps: u64,
+    pub layers: Vec<LayerHealth>,
+}
+
+impl QuantHealth {
+    /// `layers` = (manifest param name, element count) per grid tensor,
+    /// in grid order.
+    pub fn new(layers: &[(String, u64)]) -> Self {
+        QuantHealth {
+            steps: 0,
+            layers: layers
+                .iter()
+                .map(|(name, n)| LayerHealth {
+                    name: name.clone(),
+                    weights: *n,
+                    ..LayerHealth::default()
+                })
+                .collect(),
+        }
+    }
+
+    /// Fold one step's raw stats into the per-layer aggregates.
+    pub fn record_step(&mut self, rec: &QuantStepRecord) {
+        self.steps += 1;
+        for (l, s) in self.layers.iter_mut().zip(rec.slots.iter()) {
+            if l.weights == 0 {
+                l.weights = s.n;
+            }
+            let n = l.weights.max(1) as f64;
+            l.steps += 1;
+            l.last_flips = s.flips;
+            l.flips_total += s.flips;
+            l.net_upd_grid_steps = (s.net_upd / n) as f32;
+            l.abs_upd_grid_steps = (s.abs_upd / n) as f32;
+            l.occupancy = s.occupancy;
+            l.saturation = ((s.occupancy[0] + s.occupancy[4]) as f64 / n) as f32;
+            l.zero_frac = (s.occupancy[2] as f64 / n) as f32;
+            l.grad_norm = s.gsq.sqrt() as f32;
+            if l.steps > 1 && l.prev_scale.abs() > 0.0 {
+                l.scale_drift = (s.scale - l.prev_scale).abs() / l.prev_scale.abs();
+            }
+            l.prev_scale = s.scale;
+            l.scale = s.scale;
+            // oscillation: does this step's net flip direction reverse
+            // the previous flipping step's?
+            let dir: i8 = match s.flips_up.cmp(&s.flips_down) {
+                std::cmp::Ordering::Greater => 1,
+                std::cmp::Ordering::Less => -1,
+                std::cmp::Ordering::Equal => 0,
+            };
+            let event = if dir != 0 && l.prev_dir != 0 && dir == -l.prev_dir {
+                1.0
+            } else {
+                0.0
+            };
+            l.oscillation =
+                ((1.0 - QUANT_EMA_ALPHA) * l.oscillation as f64 + QUANT_EMA_ALPHA * event) as f32;
+            if dir != 0 {
+                l.prev_dir = dir;
+            }
+        }
+    }
+
+    /// The three documented anomaly verdicts, as warning lines (empty on
+    /// a healthy run). Thresholds: [`DEAD_FLIP_RATE`],
+    /// [`SATURATION_WARN`], [`OSCILLATION_WARN`].
+    pub fn anomalies(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            if l.steps == 0 {
+                continue;
+            }
+            if l.flip_rate() < DEAD_FLIP_RATE && l.grad_norm as f64 > DEAD_GNORM_FLOOR {
+                out.push(format!(
+                    "warn[dead-layer] {}: flip rate {:.2e}/weight/step over {} steps while grad norm {:.3e} > 0 — SR updates are not landing",
+                    l.name,
+                    l.flip_rate(),
+                    l.steps,
+                    l.grad_norm
+                ));
+            }
+            if l.saturation as f64 > SATURATION_WARN {
+                out.push(format!(
+                    "warn[saturation] {}: {:.1}% of weights sit at the extreme grid levels (threshold {:.0}%)",
+                    l.name,
+                    l.saturation * 100.0,
+                    SATURATION_WARN * 100.0
+                ));
+            }
+            if l.oscillation as f64 > OSCILLATION_WARN {
+                out.push(format!(
+                    "warn[oscillation] {}: oscillation score {:.2} (threshold {:.2}) — flips are dominated by A↔B↔A reversals",
+                    l.name, l.oscillation, OSCILLATION_WARN
+                ));
+            }
+        }
+        out
+    }
+
+    /// The per-layer table `repro watch` and `repro report --exp
+    /// quant-health` both render, anomaly verdicts appended.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("quant health ({} steps recorded)\n", self.steps));
+        out.push_str(&format!(
+            "{:<18} {:>9} {:>8} {:>8} {:>7} {:>7} {:>10} {:>8} {:>6} {:>9}\n",
+            "layer", "weights", "flip%/st", "|d|gs", "sat%", "zero%", "scale", "drift", "osc", "gnorm"
+        ));
+        for l in &self.layers {
+            out.push_str(&format!(
+                "{:<18} {:>9} {:>8.3} {:>8.4} {:>7.1} {:>7.1} {:>10.4} {:>8.5} {:>6.2} {:>9.4}\n",
+                l.name,
+                l.weights,
+                l.flip_rate() * 100.0,
+                l.abs_upd_grid_steps,
+                l.saturation * 100.0,
+                l.zero_frac * 100.0,
+                l.scale,
+                l.scale_drift,
+                l.oscillation,
+                l.grad_norm
+            ));
+        }
+        for a in self.anomalies() {
+            out.push_str(&a);
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        let layers = Value::Arr(
+            self.layers
+                .iter()
+                .map(|l| {
+                    Value::obj()
+                        .set("name", l.name.as_str())
+                        .set("weights", l.weights)
+                        .set("steps", l.steps)
+                        .set("flips_total", l.flips_total)
+                        .set("flip_rate", l.flip_rate())
+                        .set("last_flips", l.last_flips)
+                        .set("net_upd_grid_steps", l.net_upd_grid_steps)
+                        .set("abs_upd_grid_steps", l.abs_upd_grid_steps)
+                        .set(
+                            "occupancy",
+                            Value::Arr(l.occupancy.iter().map(|&c| Value::from(c)).collect()),
+                        )
+                        .set("scale", l.scale)
+                        .set("scale_drift", l.scale_drift)
+                        .set("saturation", l.saturation)
+                        .set("zero_frac", l.zero_frac)
+                        .set("oscillation", l.oscillation)
+                        .set("grad_norm", l.grad_norm)
+                })
+                .collect(),
+        );
+        let anomalies = Value::Arr(self.anomalies().into_iter().map(Value::from).collect());
+        Value::obj()
+            .set("version", 1u64)
+            .set("steps", self.steps)
+            .set("layers", layers)
+            .set("anomalies", anomalies)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let u = |x: &Value, k: &str| x.get(k).and_then(|y| y.as_u64()).unwrap_or(0);
+        let f = |x: &Value, k: &str| x.get(k).and_then(|y| y.as_f64()).unwrap_or(0.0) as f32;
+        let layers = v
+            .req("layers")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|x| {
+                let mut occupancy = [0u64; OCCUPANCY_BINS];
+                if let Some(a) = x.get("occupancy").and_then(|o| o.as_arr()) {
+                    for (slot, val) in occupancy.iter_mut().zip(a.iter()) {
+                        *slot = val.as_u64().unwrap_or(0);
+                    }
+                }
+                LayerHealth {
+                    name: x
+                        .get("name")
+                        .and_then(|n| n.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    weights: u(x, "weights"),
+                    steps: u(x, "steps"),
+                    flips_total: u(x, "flips_total"),
+                    last_flips: u(x, "last_flips"),
+                    net_upd_grid_steps: f(x, "net_upd_grid_steps"),
+                    abs_upd_grid_steps: f(x, "abs_upd_grid_steps"),
+                    occupancy,
+                    scale: f(x, "scale"),
+                    scale_drift: f(x, "scale_drift"),
+                    saturation: f(x, "saturation"),
+                    zero_frac: f(x, "zero_frac"),
+                    oscillation: f(x, "oscillation"),
+                    grad_norm: f(x, "grad_norm"),
+                    prev_dir: 0,
+                    prev_scale: 0.0,
+                }
+            })
+            .collect();
+        Ok(QuantHealth {
+            steps: v.req("steps")?.as_u64().unwrap_or(0),
+            layers,
+        })
+    }
+
+    /// Write `quant_health.json` under `dir` (the run's out dir).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(
+            dir.join("quant_health.json"),
+            self.to_json().to_string_pretty(),
+        )?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        Self::from_json(&parse(&std::fs::read_to_string(
+            dir.join("quant_health.json"),
+        )?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(flips_up: u64, flips_down: u64, gsq: f64) -> QuantStepRecord {
+        let mut r = QuantStepRecord::new(1);
+        r.slots[0] = LayerStep {
+            n: 100,
+            flips: flips_up + flips_down,
+            flips_up,
+            flips_down,
+            net_upd: flips_up as f64 - flips_down as f64,
+            abs_upd: (flips_up + flips_down) as f64,
+            occupancy: [30, 0, 40, 0, 30],
+            scale: 4.0,
+            gsq,
+        };
+        r
+    }
+
+    #[test]
+    fn record_counts_flips_occupancy_and_update_magnitude() {
+        // ternary grid, s = 2 (grid step 0.5), levels {-0.5, 0, 0.5}
+        let w_old = [0.0f32, 0.5, -0.5, 0.5];
+        let w_new = [0.5f32, 0.5, 0.0, -0.5];
+        let g = [1.0f32, 0.0, 2.0, 2.0];
+        let mut ls = LayerStep::default();
+        ls.record(&w_old, &w_new, 2.0, -1.0, 1.0, &g);
+        assert_eq!(ls.n, 4);
+        assert_eq!(ls.flips, 3);
+        assert_eq!(ls.flips_up, 2); // 0→0.5 and −0.5→0
+        assert_eq!(ls.flips_down, 1); // 0.5→−0.5
+        // net = (1 + 1 − 2) grid steps, abs = 4 grid steps
+        assert!((ls.net_upd - 0.0).abs() < 1e-9);
+        assert!((ls.abs_upd - 4.0).abs() < 1e-9);
+        // levels of w_new: [+1, +1, 0, −1]
+        assert_eq!(ls.occupancy, [1, 0, 1, 0, 2]);
+        assert_eq!(ls.scale, 2.0);
+        assert!((ls.gsq - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_record_resets_in_place() {
+        let mut r = QuantStepRecord::new(2);
+        r.slots[1].flips = 9;
+        r.reset();
+        assert_eq!(r.slots[1], LayerStep::default());
+        assert_eq!(r.slots.len(), 2);
+    }
+
+    #[test]
+    fn aggregate_derives_rates_saturation_and_drift() {
+        let mut h = QuantHealth::new(&[("layers.0.wq".into(), 100)]);
+        h.record_step(&step(6, 4, 4.0));
+        let mut s2 = step(5, 5, 4.0);
+        s2.slots[0].scale = 5.0;
+        h.record_step(&s2);
+        let l = &h.layers[0];
+        assert_eq!(h.steps, 2);
+        assert_eq!(l.flips_total, 20);
+        assert!((l.flip_rate() - 0.1).abs() < 1e-9);
+        assert!((l.saturation - 0.6).abs() < 1e-6);
+        assert!((l.zero_frac - 0.4).abs() < 1e-6);
+        assert!((l.scale_drift - 0.25).abs() < 1e-6);
+        assert!((l.grad_norm - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn oscillation_fires_on_alternation_and_not_on_monotone_flips() {
+        // positive: net flip direction reverses every step
+        let mut h = QuantHealth::new(&[("layers.0.wq".into(), 100)]);
+        for i in 0..30 {
+            let s = if i % 2 == 0 { step(8, 2, 1.0) } else { step(2, 8, 1.0) };
+            h.record_step(&s);
+        }
+        assert!(
+            h.layers[0].oscillation as f64 > OSCILLATION_WARN,
+            "{}",
+            h.layers[0].oscillation
+        );
+        assert!(h
+            .anomalies()
+            .iter()
+            .any(|a| a.contains("warn[oscillation]") && a.contains("layers.0.wq")));
+        // negative: the same flip volume, always in one direction
+        let mut h = QuantHealth::new(&[("layers.0.wq".into(), 100)]);
+        for _ in 0..30 {
+            h.record_step(&step(8, 2, 1.0));
+        }
+        assert!((h.layers[0].oscillation as f64) < OSCILLATION_WARN);
+        assert!(!h.anomalies().iter().any(|a| a.contains("oscillation")));
+    }
+
+    #[test]
+    fn dead_layer_fires_only_when_gradient_flows_but_flips_do_not() {
+        // positive: gradient present, zero flips across the run
+        let mut h = QuantHealth::new(&[("layers.1.wo".into(), 100)]);
+        for _ in 0..10 {
+            h.record_step(&step(0, 0, 1.0));
+        }
+        assert!(h
+            .anomalies()
+            .iter()
+            .any(|a| a.contains("warn[dead-layer]") && a.contains("layers.1.wo")));
+        // negative 1: flips landing → healthy
+        let mut h = QuantHealth::new(&[("layers.1.wo".into(), 100)]);
+        for _ in 0..10 {
+            h.record_step(&step(3, 2, 1.0));
+        }
+        assert!(!h.anomalies().iter().any(|a| a.contains("dead-layer")));
+        // negative 2: no flips but no gradient either → idle, not dead
+        let mut h = QuantHealth::new(&[("layers.1.wo".into(), 100)]);
+        for _ in 0..10 {
+            h.record_step(&step(0, 0, 0.0));
+        }
+        assert!(!h.anomalies().iter().any(|a| a.contains("dead-layer")));
+    }
+
+    #[test]
+    fn saturation_fires_above_threshold_only() {
+        let mut h = QuantHealth::new(&[("layers.0.w_up".into(), 100)]);
+        let mut s = step(5, 5, 1.0);
+        s.slots[0].occupancy = [95, 0, 5, 0, 0];
+        h.record_step(&s);
+        assert!(h
+            .anomalies()
+            .iter()
+            .any(|a| a.contains("warn[saturation]") && a.contains("layers.0.w_up")));
+        // negative: healthy ternary occupancy (~60% extremes)
+        let mut h = QuantHealth::new(&[("layers.0.w_up".into(), 100)]);
+        h.record_step(&step(5, 5, 1.0));
+        assert!(!h.anomalies().iter().any(|a| a.contains("saturation")));
+    }
+
+    #[test]
+    fn json_roundtrip_and_save_load() {
+        let mut h = QuantHealth::new(&[("layers.0.wq".into(), 100), ("layers.0.wk".into(), 100)]);
+        let mut r = QuantStepRecord::new(2);
+        r.slots[0] = step(6, 4, 4.0).slots[0];
+        r.slots[1] = step(1, 1, 1.0).slots[0];
+        h.record_step(&r);
+        let back = QuantHealth::from_json(&h.to_json()).unwrap();
+        assert_eq!(back.steps, h.steps);
+        assert_eq!(back.layers.len(), 2);
+        assert_eq!(back.layers[0].name, "layers.0.wq");
+        assert_eq!(back.layers[0].flips_total, 10);
+        assert_eq!(back.layers[0].occupancy, h.layers[0].occupancy);
+        assert_eq!(back.layers[1].scale, 4.0);
+        let dir = std::env::temp_dir().join("dqt_quant_health_test");
+        h.save(&dir).unwrap();
+        let loaded = QuantHealth::load(&dir).unwrap();
+        assert_eq!(loaded.layers[0].flips_total, 10);
+        assert!(dir.join("quant_health.json").is_file());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn render_table_lists_layers_and_verdicts() {
+        let mut h = QuantHealth::new(&[("layers.0.wq".into(), 100)]);
+        for _ in 0..5 {
+            h.record_step(&step(0, 0, 1.0));
+        }
+        let t = h.render_table();
+        assert!(t.contains("layers.0.wq"));
+        assert!(t.contains("warn[dead-layer]"));
+        assert!(t.contains("5 steps recorded"));
+    }
+}

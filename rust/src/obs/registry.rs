@@ -469,6 +469,30 @@ mod tests {
         );
     }
 
+    /// Manifest param names become `layer` label values verbatim (the
+    /// quant-health convention); escaping must keep the exposition
+    /// parseable even for hostile names, and leave normal dotted param
+    /// names untouched.
+    #[test]
+    fn layer_label_values_escape_quotes_backslashes_and_newlines() {
+        let r = Registry::new();
+        r.gauge_with("dqt_train_quant_scale", "s", &[("layer", "layers.0.wq")])
+            .set(4.0);
+        r.gauge_with("dqt_train_quant_scale", "s", &[("layer", "odd\"layer\\name\nx")])
+            .set(1.0);
+        let text = r.render();
+        assert!(
+            text.contains("dqt_train_quant_scale{layer=\"layers.0.wq\"} 4\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dqt_train_quant_scale{layer=\"odd\\\"layer\\\\name\\nx\"} 1\n"),
+            "{text}"
+        );
+        // the escaped series still renders on a single line
+        assert_eq!(text.lines().filter(|l| l.starts_with("dqt_train_quant_scale{")).count(), 2);
+    }
+
     #[test]
     fn series_render_in_label_order_regardless_of_registration_order() {
         let r = Registry::new();

@@ -25,7 +25,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 /// Bumped whenever a stream frame layout changes; carried by `RunStart`.
-pub const STREAM_PROTOCOL_VERSION: u32 = 1;
+/// v2 added the `QuantHealth` frame (tag 4).
+pub const STREAM_PROTOCOL_VERSION: u32 = 2;
 
 /// Hard cap on one frame's payload — step telemetry is tiny, so anything
 /// large is a corrupt length prefix.
@@ -60,6 +61,31 @@ fn subscriber_write_timeout() -> Duration {
 const TAG_RUN_START: u8 = 1;
 const TAG_STEP: u8 = 2;
 const TAG_RUN_END: u8 = 3;
+const TAG_QUANT_HEALTH: u8 = 4;
+
+/// One layer's row of a [`StreamFrame::QuantHealth`] frame — the live
+/// subset of `obs::quant::LayerHealth` a watcher renders.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantLayerFrame {
+    /// manifest param name (the `layer` metric label value)
+    pub name: String,
+    /// latest step's flip count
+    pub flips: u64,
+    /// run-average flips per weight per step
+    pub flip_rate: f32,
+    /// latest mean |update| per weight, grid-step units
+    pub abs_upd: f32,
+    /// latest stored inverse scale
+    pub scale: f32,
+    /// latest fraction of weights at the extreme grid levels
+    pub saturation: f32,
+    /// latest fraction of weights at the zero level
+    pub zero_frac: f32,
+    /// EMA of sign-alternating flip steps
+    pub oscillation: f32,
+    /// latest post-clip gradient norm over the layer
+    pub grad_norm: f32,
+}
 
 /// One message of the step-streaming protocol.
 #[derive(Clone, Debug, PartialEq)]
@@ -88,6 +114,24 @@ pub enum StreamFrame {
         final_dev_loss: f32,
         wall_secs: f64,
     },
+    /// Periodic per-layer quantization-health snapshot (cadence:
+    /// `config::effective_quant_frame_every`). Only emitted by runs with
+    /// grid-quantized layers.
+    QuantHealth {
+        step: u64,
+        layers: Vec<QuantLayerFrame>,
+    },
+}
+
+/// Outcome of a forward-compatible frame read ([`StreamFrame::read_lenient`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LenientFrame {
+    /// a known, fully decoded frame
+    Frame(StreamFrame),
+    /// an unknown tag whose payload was consumed and discarded
+    SkippedUnknown(u8),
+    /// the stream ended cleanly at a frame boundary
+    Eof,
 }
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
@@ -175,6 +219,7 @@ impl StreamFrame {
             StreamFrame::RunStart { .. } => TAG_RUN_START,
             StreamFrame::Step { .. } => TAG_STEP,
             StreamFrame::RunEnd { .. } => TAG_RUN_END,
+            StreamFrame::QuantHealth { .. } => TAG_QUANT_HEALTH,
         }
     }
 
@@ -215,6 +260,21 @@ impl StreamFrame {
                 put_f32(&mut buf, *final_dev_loss);
                 buf.extend_from_slice(&wall_secs.to_le_bytes());
             }
+            StreamFrame::QuantHealth { step, layers } => {
+                put_u64(&mut buf, *step);
+                put_u32(&mut buf, layers.len() as u32);
+                for l in layers {
+                    put_str(&mut buf, &l.name);
+                    put_u64(&mut buf, l.flips);
+                    put_f32(&mut buf, l.flip_rate);
+                    put_f32(&mut buf, l.abs_upd);
+                    put_f32(&mut buf, l.scale);
+                    put_f32(&mut buf, l.saturation);
+                    put_f32(&mut buf, l.zero_frac);
+                    put_f32(&mut buf, l.oscillation);
+                    put_f32(&mut buf, l.grad_norm);
+                }
+            }
         }
         buf
     }
@@ -229,9 +289,9 @@ impl StreamFrame {
         buf
     }
 
-    /// Read one frame. `Ok(None)` means the stream ended cleanly at a
-    /// frame boundary (the publisher closed the connection).
-    pub fn read_from(r: &mut impl Read) -> Result<Option<StreamFrame>> {
+    /// Read one raw `(tag, payload)` off the wire. `Ok(None)` means the
+    /// stream ended cleanly at a frame boundary.
+    fn read_raw(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>> {
         let mut header = [0u8; 9];
         let mut got = 0usize;
         while got < header.len() {
@@ -263,7 +323,34 @@ impl StreamFrame {
                 anyhow!("reading stream frame payload: {e}")
             }
         })?;
-        Ok(Some(Self::decode(tag, &payload)?))
+        Ok(Some((tag, payload)))
+    }
+
+    /// Read one frame. `Ok(None)` means the stream ended cleanly at a
+    /// frame boundary (the publisher closed the connection). Strict: an
+    /// unknown tag is an error (the `dist::wire` hardening posture).
+    pub fn read_from(r: &mut impl Read) -> Result<Option<StreamFrame>> {
+        match Self::read_raw(r)? {
+            None => Ok(None),
+            Some((tag, payload)) => Ok(Some(Self::decode(tag, &payload)?)),
+        }
+    }
+
+    /// Forward-compatible read for tailing clients ([`watch`]): an
+    /// unknown tag has its (length-bounded) payload consumed and is
+    /// reported as [`LenientFrame::SkippedUnknown`] so an old watcher
+    /// survives a newer producer's stream. Known-tag payloads still get
+    /// the full strict decode.
+    pub fn read_lenient(r: &mut impl Read) -> Result<LenientFrame> {
+        match Self::read_raw(r)? {
+            None => Ok(LenientFrame::Eof),
+            Some((tag, payload)) => match tag {
+                TAG_RUN_START | TAG_STEP | TAG_RUN_END | TAG_QUANT_HEALTH => {
+                    Ok(LenientFrame::Frame(Self::decode(tag, &payload)?))
+                }
+                unknown => Ok(LenientFrame::SkippedUnknown(unknown)),
+            },
+        }
     }
 
     fn decode(tag: u8, payload: &[u8]) -> Result<StreamFrame> {
@@ -296,11 +383,31 @@ impl StreamFrame {
                 final_dev_loss: c.f32("run_end final_dev_loss")?,
                 wall_secs: c.f64("run_end wall_secs")?,
             },
+            TAG_QUANT_HEALTH => {
+                let step = c.u64("quant_health step")?;
+                let count = c.u32("quant_health layer count")? as usize;
+                let mut layers = Vec::with_capacity(count.min(1024));
+                for _ in 0..count {
+                    layers.push(QuantLayerFrame {
+                        name: c.str("quant_health layer name")?,
+                        flips: c.u64("quant_health flips")?,
+                        flip_rate: c.f32("quant_health flip_rate")?,
+                        abs_upd: c.f32("quant_health abs_upd")?,
+                        scale: c.f32("quant_health scale")?,
+                        saturation: c.f32("quant_health saturation")?,
+                        zero_frac: c.f32("quant_health zero_frac")?,
+                        oscillation: c.f32("quant_health oscillation")?,
+                        grad_norm: c.f32("quant_health grad_norm")?,
+                    });
+                }
+                StreamFrame::QuantHealth { step, layers }
+            }
             other => return Err(anyhow!("unknown stream frame tag {other}")),
         };
         c.finish(match tag {
             TAG_RUN_START => "run_start",
             TAG_STEP => "step",
+            TAG_QUANT_HEALTH => "quant_health",
             _ => "run_end",
         })?;
         Ok(frame)
@@ -431,14 +538,31 @@ pub fn watch(
     };
     let remaining = deadline.saturating_duration_since(Instant::now());
     stream.set_read_timeout(Some(remaining.max(Duration::from_millis(10))))?;
-    let first = match StreamFrame::read_from(&mut stream) {
-        Ok(f) => f,
-        Err(e) if Instant::now() >= deadline => {
-            return Err(anyhow!(
-                "no RunStart from {addr} within {connect_timeout:?} — is a run publishing there? ({e})"
-            ));
+    // forward compatibility: a newer producer may interleave frame tags
+    // this build does not know — skip each with one note per distinct tag
+    // instead of erroring (reads stay strict for known tags)
+    let mut noted: Vec<u8> = Vec::new();
+    let mut note_skip = |tag: u8| {
+        if !noted.contains(&tag) {
+            noted.push(tag);
+            eprintln!(
+                "watch: skipping unknown frame tag {tag} (producer is newer than \
+                 this build's protocol v{STREAM_PROTOCOL_VERSION})"
+            );
         }
-        Err(e) => return Err(e),
+    };
+    let first = loop {
+        match StreamFrame::read_lenient(&mut stream) {
+            Ok(LenientFrame::Frame(f)) => break Some(f),
+            Ok(LenientFrame::SkippedUnknown(tag)) => note_skip(tag),
+            Ok(LenientFrame::Eof) => break None,
+            Err(e) if Instant::now() >= deadline => {
+                return Err(anyhow!(
+                    "no RunStart from {addr} within {connect_timeout:?} — is a run publishing there? ({e})"
+                ));
+            }
+            Err(e) => return Err(e),
+        }
     };
     let Some(first) = first else {
         return Ok(()); // publisher closed before any frame: run is over
@@ -450,9 +574,10 @@ pub fn watch(
     }
     stream.set_read_timeout(Some(Duration::from_secs(600)))?;
     loop {
-        match StreamFrame::read_from(&mut stream)? {
-            None => return Ok(()), // publisher closed: run is over
-            Some(frame) => {
+        match StreamFrame::read_lenient(&mut stream)? {
+            LenientFrame::Eof => return Ok(()), // publisher closed: run is over
+            LenientFrame::SkippedUnknown(tag) => note_skip(tag),
+            LenientFrame::Frame(frame) => {
                 let done = matches!(frame, StreamFrame::RunEnd { .. });
                 on_frame(&frame);
                 if done {
@@ -491,15 +616,106 @@ mod tests {
         ]
     }
 
+    fn quant_frame() -> StreamFrame {
+        StreamFrame::QuantHealth {
+            step: 30,
+            layers: vec![
+                QuantLayerFrame {
+                    name: "layers.0.wq".into(),
+                    flips: 12,
+                    flip_rate: 0.01,
+                    abs_upd: 0.02,
+                    scale: 4.0,
+                    saturation: 0.55,
+                    zero_frac: 0.4,
+                    oscillation: 0.1,
+                    grad_norm: 1.5,
+                },
+                QuantLayerFrame {
+                    name: "layers.1.w_down".into(),
+                    flips: 0,
+                    flip_rate: 0.0,
+                    abs_upd: 0.0,
+                    scale: 2.5,
+                    saturation: 0.6,
+                    zero_frac: 0.35,
+                    oscillation: 0.0,
+                    grad_norm: 0.25,
+                },
+            ],
+        }
+    }
+
     #[test]
     fn all_frames_roundtrip() {
-        for f in frames() {
+        for f in frames().into_iter().chain([quant_frame()]) {
             let buf = f.encode();
             let back = StreamFrame::read_from(&mut IoCursor::new(&buf))
                 .unwrap()
                 .unwrap();
             assert_eq!(back, f);
         }
+    }
+
+    /// An unknown tag is an error on the strict path but a
+    /// `SkippedUnknown` on the lenient path, with the payload fully
+    /// consumed so the following frame still decodes — the
+    /// forward-compatibility contract `watch` relies on.
+    #[test]
+    fn lenient_read_skips_unknown_tags_and_resumes() {
+        // synthetic future frame: tag 9, 5-byte opaque payload
+        let mut wire = vec![9u8];
+        wire.extend_from_slice(&5u64.to_le_bytes());
+        wire.extend_from_slice(&[0xDE, 0xAD, 0xBE, 0xEF, 0x01]);
+        wire.extend_from_slice(&frames()[1].encode());
+        wire.extend_from_slice(&quant_frame().encode());
+
+        let mut cur = IoCursor::new(&wire);
+        assert_eq!(
+            StreamFrame::read_lenient(&mut cur).unwrap(),
+            LenientFrame::SkippedUnknown(9)
+        );
+        assert_eq!(
+            StreamFrame::read_lenient(&mut cur).unwrap(),
+            LenientFrame::Frame(frames()[1].clone())
+        );
+        assert_eq!(
+            StreamFrame::read_lenient(&mut cur).unwrap(),
+            LenientFrame::Frame(quant_frame())
+        );
+        assert_eq!(StreamFrame::read_lenient(&mut cur).unwrap(), LenientFrame::Eof);
+
+        // strict read still rejects the same bytes
+        let err = StreamFrame::read_from(&mut IoCursor::new(&wire)).unwrap_err();
+        assert!(err.to_string().contains("unknown stream frame tag"), "{err}");
+        // lenient is not a corruption amnesty: an oversized length still errors
+        let mut bad = vec![9u8];
+        bad.extend_from_slice(&(MAX_STREAM_FRAME_BYTES + 1).to_le_bytes());
+        let err = StreamFrame::read_lenient(&mut IoCursor::new(&bad)).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+    }
+
+    /// End to end: a watcher tailing a stream that interleaves a
+    /// future-protocol frame still delivers every known frame in order.
+    #[test]
+    fn watch_survives_unknown_frames_from_a_newer_producer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let mut wire = frames()[0].encode();
+            wire.push(77); // unknown tag with an 8-byte opaque payload
+            wire.extend_from_slice(&8u64.to_le_bytes());
+            wire.extend_from_slice(&[0u8; 8]);
+            wire.extend_from_slice(&frames()[1].encode());
+            wire.extend_from_slice(&frames()[2].encode());
+            conn.write_all(&wire).unwrap();
+            conn.flush().unwrap();
+        });
+        let mut seen = Vec::new();
+        watch(&addr, Duration::from_secs(10), |f| seen.push(f.clone())).unwrap();
+        server.join().unwrap();
+        assert_eq!(seen, frames(), "known frames delivered, unknown skipped");
     }
 
     #[test]

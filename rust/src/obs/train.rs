@@ -14,11 +14,15 @@
 //! `docs/OBSERVABILITY.md`; `tests/obs_contract.rs` pins every name
 //! registered here to an entry in that doc.
 
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use anyhow::Result;
+
+use super::quant::{QuantHealth, QuantStepRecord};
 use super::registry::{Counter, Gauge, Histogram, Registry};
-use super::stream::{Publisher, StreamFrame};
+use super::stream::{Publisher, QuantLayerFrame, StreamFrame};
 use crate::train::metrics::StepRecord;
 
 /// Bucket bounds (seconds) shared by the step-time histogram and the
@@ -60,6 +64,30 @@ pub struct TrainObs {
     allreduce_seconds_total: [Arc<Counter>; 3],
     grid_syncs_total: Arc<Counter>,
     grid_sync_bytes_total: Arc<Counter>,
+
+    /// per-layer quant-health state; `None` until [`TrainObs::init_quant`]
+    /// (i.e. until the run turns out to have grid-quantized layers)
+    quant: Mutex<Option<QuantObsState>>,
+}
+
+/// Per-layer quant-health aggregation plus the pre-registered per-layer
+/// metric handles, built once per run by [`TrainObs::init_quant`]. Handle
+/// vectors are indexed like `QuantHealth::layers` (manifest grid order).
+struct QuantObsState {
+    health: QuantHealth,
+    /// `QuantHealth` stream-frame cadence in steps (0 = frames off);
+    /// see `config::effective_quant_frame_every`
+    frame_every: u64,
+    flips_total: Vec<Arc<Counter>>,
+    flip_rate: Vec<Arc<Gauge>>,
+    update_net: Vec<Arc<Gauge>>,
+    update_abs: Vec<Arc<Gauge>>,
+    scale: Vec<Arc<Gauge>>,
+    scale_drift: Vec<Arc<Gauge>>,
+    saturation: Vec<Arc<Gauge>>,
+    zero_fraction: Vec<Arc<Gauge>>,
+    oscillation: Vec<Arc<Gauge>>,
+    grad_norm: Vec<Arc<Gauge>>,
 }
 
 impl Default for TrainObs {
@@ -129,6 +157,7 @@ impl TrainObs {
             ),
             registry: r,
             publisher: Mutex::new(None),
+            quant: Mutex::new(None),
         }
     }
 
@@ -183,6 +212,133 @@ impl TrainObs {
     /// Record a periodic dev evaluation.
     pub fn on_dev_loss(&self, loss: f32) {
         self.dev_loss.set(loss as f64);
+    }
+
+    /// Register the per-layer quant-health series and size the run
+    /// aggregate. `layers` = (manifest param name, element count) per
+    /// grid tensor, in grid order — each param name becomes the `layer`
+    /// label value of every series. Called once per run by `Trainer`
+    /// when the variant has grid-quantized layers; registration is
+    /// idempotent per `(name, labels)`, so re-initializing with the same
+    /// layer set reuses the existing handles.
+    pub fn init_quant(&self, layers: &[(String, u64)]) {
+        let r = &self.registry;
+        let gauges = |name: &str, help: &str| -> Vec<Arc<Gauge>> {
+            layers
+                .iter()
+                .map(|(l, _)| r.gauge_with(name, help, &[("layer", l.as_str())]))
+                .collect()
+        };
+        let state = QuantObsState {
+            health: QuantHealth::new(layers),
+            frame_every: crate::config::effective_quant_frame_every(None),
+            flips_total: layers
+                .iter()
+                .map(|(l, _)| {
+                    r.counter_with(
+                        "dqt_train_quant_flips_total",
+                        "Grid-level flips (weights whose stored quantized value changed) accumulated over the run, per layer.",
+                        &[("layer", l.as_str())],
+                    )
+                })
+                .collect(),
+            flip_rate: gauges(
+                "dqt_train_quant_flip_rate",
+                "Run-average grid flips per weight per step, per layer.",
+            ),
+            update_net: gauges(
+                "dqt_train_quant_update_net_grid_steps",
+                "Latest step's mean signed weight update per weight, in grid-step units, per layer.",
+            ),
+            update_abs: gauges(
+                "dqt_train_quant_update_abs_grid_steps",
+                "Latest step's mean absolute weight update per weight, in grid-step units, per layer.",
+            ),
+            scale: gauges(
+                "dqt_train_quant_scale",
+                "Stored inverse scale (the `.s` companion) after the latest step, per layer.",
+            ),
+            scale_drift: gauges(
+                "dqt_train_quant_scale_drift",
+                "Relative change of the stored scale at the latest step, per layer.",
+            ),
+            saturation: gauges(
+                "dqt_train_quant_saturation",
+                "Fraction of weights at the extreme grid levels after the latest step, per layer.",
+            ),
+            zero_fraction: gauges(
+                "dqt_train_quant_zero_fraction",
+                "Fraction of weights at the zero grid level after the latest step, per layer.",
+            ),
+            oscillation: gauges(
+                "dqt_train_quant_oscillation",
+                "EMA of sign-alternating flip steps (A<->B<->A reversals), per layer.",
+            ),
+            grad_norm: gauges(
+                "dqt_train_quant_grad_norm",
+                "Post-clip gradient norm over the layer's weights at the latest step, per layer.",
+            ),
+        };
+        *self.quant.lock().unwrap() = Some(state);
+    }
+
+    /// Fold one step's raw per-layer stats into the run aggregate, update
+    /// the per-layer series, and (on the configured cadence) publish a
+    /// [`StreamFrame::QuantHealth`]. No-op until [`TrainObs::init_quant`].
+    pub fn on_quant(&self, step: u64, rec: &QuantStepRecord) {
+        let mut guard = self.quant.lock().unwrap();
+        let Some(q) = guard.as_mut() else { return };
+        q.health.record_step(rec);
+        for (i, l) in q.health.layers.iter().enumerate() {
+            q.flips_total[i].inc_by(l.last_flips);
+            q.flip_rate[i].set(l.flip_rate());
+            q.update_net[i].set(l.net_upd_grid_steps as f64);
+            q.update_abs[i].set(l.abs_upd_grid_steps as f64);
+            q.scale[i].set(l.scale as f64);
+            q.scale_drift[i].set(l.scale_drift as f64);
+            q.saturation[i].set(l.saturation as f64);
+            q.zero_fraction[i].set(l.zero_frac as f64);
+            q.oscillation[i].set(l.oscillation as f64);
+            q.grad_norm[i].set(l.grad_norm as f64);
+        }
+        if q.frame_every == 0 || step % q.frame_every != 0 {
+            return;
+        }
+        let frame = StreamFrame::QuantHealth {
+            step,
+            layers: q
+                .health
+                .layers
+                .iter()
+                .map(|l| QuantLayerFrame {
+                    name: l.name.clone(),
+                    flips: l.last_flips,
+                    flip_rate: l.flip_rate() as f32,
+                    abs_upd: l.abs_upd_grid_steps,
+                    scale: l.scale,
+                    saturation: l.saturation,
+                    zero_frac: l.zero_frac,
+                    oscillation: l.oscillation,
+                    grad_norm: l.grad_norm,
+                })
+                .collect(),
+        };
+        drop(guard);
+        self.publish(&frame);
+    }
+
+    /// Snapshot of the run aggregate (`None` until [`TrainObs::init_quant`]).
+    pub fn quant_health(&self) -> Option<QuantHealth> {
+        self.quant.lock().unwrap().as_ref().map(|q| q.health.clone())
+    }
+
+    /// Persist `quant_health.json` under the run's out dir. No-op `Ok`
+    /// when the run had no grid-quantized layers.
+    pub fn save_quant_health(&self, dir: &Path) -> Result<()> {
+        if let Some(q) = self.quant.lock().unwrap().as_ref() {
+            q.health.save(dir)?;
+        }
+        Ok(())
     }
 
     /// Record one gradient all-reduce round: wire bytes moved on this
@@ -266,6 +422,54 @@ mod tests {
             text.contains("dqt_train_step_seconds_bucket{le=\"0.02\"} 2\n"),
             "{text}"
         );
+    }
+
+    #[test]
+    fn quant_health_series_land_in_the_registry_per_layer() {
+        let obs = TrainObs::new();
+        obs.init_quant(&[("layers.0.wq".to_string(), 4)]);
+        let mut qrec = QuantStepRecord::new(1);
+        qrec.slots[0] = crate::obs::quant::LayerStep {
+            n: 4,
+            flips: 2,
+            flips_up: 2,
+            flips_down: 0,
+            net_upd: 2.0,
+            abs_upd: 2.0,
+            occupancy: [1, 0, 2, 0, 1],
+            scale: 2.0,
+            gsq: 4.0,
+        };
+        obs.on_quant(0, &qrec);
+        obs.on_quant(1, &qrec);
+        let text = obs.registry().render();
+        assert!(
+            text.contains("dqt_train_quant_flips_total{layer=\"layers.0.wq\"} 4\n"),
+            "{text}"
+        );
+        // 4 flips / (4 weights × 2 steps)
+        assert!(
+            text.contains("dqt_train_quant_flip_rate{layer=\"layers.0.wq\"} 0.5\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dqt_train_quant_scale{layer=\"layers.0.wq\"} 2\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dqt_train_quant_saturation{layer=\"layers.0.wq\"} 0.5\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dqt_train_quant_grad_norm{layer=\"layers.0.wq\"} 2\n"),
+            "{text}"
+        );
+        // before init_quant, on_quant is a no-op and registers nothing
+        let idle = TrainObs::new();
+        idle.on_quant(0, &qrec);
+        assert!(!idle.registry().render().contains("dqt_train_quant"));
+        assert!(idle.quant_health().is_none());
+        assert_eq!(obs.quant_health().unwrap().steps, 2);
     }
 
     #[test]

@@ -70,6 +70,44 @@ pub fn table3() -> String {
     out
 }
 
+/// Render a train run's `quant_health.json` as the per-layer table plus
+/// anomaly verdicts — the offline twin of the `repro watch` QuantHealth
+/// view (`repro report --exp quant-health [--run DIR]`).
+pub fn quant_health(run_dir: &Path) -> Result<String> {
+    let h = crate::obs::quant::QuantHealth::load(run_dir).map_err(|e| {
+        anyhow!(
+            "no quant health for {}: {e} (quant_health.json is written by \
+             train runs with grid-quantized layers)",
+            run_dir.display()
+        )
+    })?;
+    Ok(format!("run: {}\n{}", run_dir.display(), h.render_table()))
+}
+
+/// Default run dir for `report --exp quant-health`: the most recently
+/// modified directory under `results/train` that holds a
+/// `quant_health.json`.
+pub fn latest_quant_health_run(results: &Path) -> Result<std::path::PathBuf> {
+    let train = results.join("train");
+    let mut best: Option<(std::time::SystemTime, std::path::PathBuf)> = None;
+    if let Ok(entries) = std::fs::read_dir(&train) {
+        for e in entries.flatten() {
+            let file = e.path().join("quant_health.json");
+            let Ok(meta) = std::fs::metadata(&file) else { continue };
+            let t = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            if best.as_ref().map_or(true, |(bt, _)| t > *bt) {
+                best = Some((t, e.path()));
+            }
+        }
+    }
+    best.map(|(_, p)| p).ok_or_else(|| {
+        anyhow!(
+            "no run with quant_health.json under {} — pass --run DIR or train first",
+            train.display()
+        )
+    })
+}
+
 /// DQT-vs-BitNet state memory comparison (the §1 motivation table). The
 /// deployed-checkpoint column reads packed sizes from the codec registry
 /// (`quant::codec::Format`) instead of re-deriving bit widths.
@@ -372,6 +410,41 @@ pub fn summary_table(runs: &[RunMetrics]) -> String {
 mod tests {
     use super::*;
     use crate::train::StepRecord;
+
+    /// `quant-health` renders saved runs, picks the newest by default,
+    /// and errors helpfully when nothing has been trained yet.
+    #[test]
+    fn quant_health_report_renders_and_finds_latest_run() {
+        use crate::obs::quant::{LayerStep, QuantHealth, QuantStepRecord};
+        let results = std::env::temp_dir().join("dqt_report_quant_health_test");
+        std::fs::remove_dir_all(&results).ok();
+        assert!(latest_quant_health_run(&results).is_err());
+
+        let run = results.join("train").join("test-dqt-b1p58");
+        let mut h = QuantHealth::new(&[("layers.0.wq".to_string(), 4)]);
+        let mut rec = QuantStepRecord::new(1);
+        rec.slots[0] = LayerStep {
+            n: 4,
+            flips: 2,
+            flips_up: 2,
+            flips_down: 0,
+            net_upd: 2.0,
+            abs_upd: 2.0,
+            occupancy: [1, 0, 2, 0, 1],
+            scale: 2.0,
+            gsq: 4.0,
+        };
+        h.record_step(&rec);
+        h.save(&run).unwrap();
+
+        assert_eq!(latest_quant_health_run(&results).unwrap(), run);
+        let out = quant_health(&run).unwrap();
+        assert!(out.contains("layers.0.wq"), "{out}");
+        assert!(out.contains("1 steps recorded"), "{out}");
+        let err = quant_health(&results.join("train").join("missing")).unwrap_err();
+        assert!(err.to_string().contains("no quant health"), "{err}");
+        std::fs::remove_dir_all(&results).ok();
+    }
 
     #[test]
     fn table2_contains_all_presets() {

@@ -25,6 +25,7 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use crate::config::{BackendKind, VariantSpec};
+use crate::obs::quant::QuantStepRecord;
 use crate::quant::codec::{Format, PackedTensor};
 
 pub use artifact::{ArtifactDir, Manifest};
@@ -407,6 +408,52 @@ pub trait Backend {
         ))
     }
 
+    /// Grid tensors this backend's optimizer can introspect, as
+    /// `(manifest param name, element count)` in grid order — the slot
+    /// layout of [`QuantStepRecord`]. Empty when the variant has no grid
+    /// params or the backend exposes no quant telemetry (PJRT), which
+    /// turns quant-health recording off for the run.
+    fn quant_layers(&self) -> Vec<(String, u64)> {
+        Vec::new()
+    }
+
+    /// [`Backend::train_step`] with an optional quantization-health
+    /// recorder: slot *k* of `quant` receives grid tensor *k*'s per-step
+    /// stats (see `obs::quant`). Recording is read-only on training
+    /// state, so the step's numerics are identical with or without it.
+    /// The default ignores the recorder.
+    fn train_step_quant(
+        &self,
+        state: State,
+        tokens: &[i32],
+        sr_seed: u32,
+        lr: f32,
+        quant: Option<&mut QuantStepRecord>,
+    ) -> Result<(State, StepMetrics)> {
+        let _ = quant;
+        self.train_step(state, tokens, sr_seed, lr)
+    }
+
+    /// [`Backend::train_step_sharded`] with the optional quant-health
+    /// recorder ([`Backend::train_step_quant`] semantics). The default
+    /// ignores the recorder.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_sharded_quant(
+        &self,
+        state: State,
+        tokens: &[i32],
+        band: (usize, usize),
+        global_rows: usize,
+        step: u64,
+        sr_seed: u32,
+        lr: f32,
+        reducer: &mut dyn GradReducer,
+        quant: Option<&mut QuantStepRecord>,
+    ) -> Result<(State, StepMetrics)> {
+        let _ = quant;
+        self.train_step_sharded(state, tokens, band, global_rows, step, sr_seed, lr, reducer)
+    }
+
     /// Sum-NLL + token count over one batch (dev loss / perplexity).
     fn eval_step(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<(f32, f32)>;
 
@@ -555,6 +602,52 @@ impl VariantRuntime {
     ) -> Result<(State, StepMetrics)> {
         self.backend
             .train_step_sharded(state, tokens, band, global_rows, step, sr_seed, lr, reducer)
+    }
+
+    /// Grid-tensor telemetry layout (see [`Backend::quant_layers`]).
+    pub fn quant_layers(&self) -> Vec<(String, u64)> {
+        self.backend.quant_layers()
+    }
+
+    /// Train step with an optional quant-health recorder (see
+    /// [`Backend::train_step_quant`]).
+    pub fn train_step_quant(
+        &self,
+        state: State,
+        tokens: &[i32],
+        sr_seed: u32,
+        lr: f32,
+        quant: Option<&mut QuantStepRecord>,
+    ) -> Result<(State, StepMetrics)> {
+        self.backend.train_step_quant(state, tokens, sr_seed, lr, quant)
+    }
+
+    /// Sharded train step with an optional quant-health recorder (see
+    /// [`Backend::train_step_sharded_quant`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step_sharded_quant(
+        &self,
+        state: State,
+        tokens: &[i32],
+        band: (usize, usize),
+        global_rows: usize,
+        step: u64,
+        sr_seed: u32,
+        lr: f32,
+        reducer: &mut dyn GradReducer,
+        quant: Option<&mut QuantStepRecord>,
+    ) -> Result<(State, StepMetrics)> {
+        self.backend.train_step_sharded_quant(
+            state,
+            tokens,
+            band,
+            global_rows,
+            step,
+            sr_seed,
+            lr,
+            reducer,
+            quant,
+        )
     }
 
     pub fn eval_step(&self, state: &State, tokens: &[i32], ternary: bool) -> Result<(f32, f32)> {

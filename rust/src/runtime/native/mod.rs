@@ -24,6 +24,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{Mode, ModelConfig, VariantSpec};
 use crate::kernels::Pool;
+use crate::obs::quant::QuantStepRecord;
 use crate::obs::trace;
 use crate::quant::codec::Format;
 use crate::quant::sr::{hash_u32, uniform01};
@@ -336,6 +337,32 @@ impl Backend for NativeBackend {
         sr_seed: u32,
         lr: f32,
     ) -> Result<(State, StepMetrics)> {
+        self.train_step_quant(state, tokens, sr_seed, lr, None)
+    }
+
+    /// Grid tensors in `trainables` order — identical to the manifest's
+    /// grid-param order (`spec::build_layout` enumerates the manifest),
+    /// which fixes the quant-health slot layout.
+    fn quant_layers(&self) -> Vec<(String, u64)> {
+        self.layout
+            .trainables
+            .iter()
+            .filter(|t| t.scale.is_some())
+            .map(|t| {
+                let meta = &self.layout.manifest.params[t.param];
+                (meta.name.clone(), meta.numel() as u64)
+            })
+            .collect()
+    }
+
+    fn train_step_quant(
+        &self,
+        state: State,
+        tokens: &[i32],
+        sr_seed: u32,
+        lr: f32,
+        quant: Option<&mut QuantStepRecord>,
+    ) -> Result<(State, StepMetrics)> {
         let (inputs, labels, b, s) = self.split_rows(tokens)?;
         self.check_state(&state)?;
         let mut params: Vec<Vec<f32>> = state
@@ -366,6 +393,7 @@ impl Backend for NativeBackend {
                 &mut opt,
                 lr,
                 sr_seed,
+                quant,
             )
         };
         let opt_ms = t_opt.elapsed().as_secs_f32() * 1e3;
@@ -400,6 +428,32 @@ impl Backend for NativeBackend {
         sr_seed: u32,
         lr: f32,
         reducer: &mut dyn GradReducer,
+    ) -> Result<(State, StepMetrics)> {
+        self.train_step_sharded_quant(
+            state,
+            tokens,
+            band,
+            global_rows,
+            step,
+            sr_seed,
+            lr,
+            reducer,
+            None,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_sharded_quant(
+        &self,
+        state: State,
+        tokens: &[i32],
+        band: (usize, usize),
+        global_rows: usize,
+        step: u64,
+        sr_seed: u32,
+        lr: f32,
+        reducer: &mut dyn GradReducer,
+        quant: Option<&mut QuantStepRecord>,
     ) -> Result<(State, StepMetrics)> {
         let shape = &self.layout.manifest.tokens_shape;
         let (bsz, w) = (shape[0], shape[1]);
@@ -467,6 +521,7 @@ impl Backend for NativeBackend {
                 &mut opt,
                 lr,
                 sr_seed,
+                quant,
             )
         };
         let opt_ms = t_opt.elapsed().as_secs_f32() * 1e3;

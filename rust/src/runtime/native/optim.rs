@@ -7,6 +7,7 @@
 
 use crate::config::{Env, Mode};
 use crate::kernels::Pool;
+use crate::obs::quant::QuantStepRecord;
 use crate::obs::trace;
 use crate::quant::sr::{hash_u32, sr_scalar};
 use crate::quant::{absmean_scale, bf16, fp8, qrange};
@@ -72,6 +73,12 @@ fn two_mut(v: &mut [Vec<f32>], i: usize, j: usize) -> (&mut Vec<f32>, &mut Vec<f
 /// Returns `(upd_frac, gnorm)` — the fraction of quantized weights whose
 /// value changed (Fig. 6) and the pre-clip global gradient norm.
 ///
+/// `quant` taps the pass the loop already makes over each grid tensor:
+/// when present, slot *k* (grid order) records the projection's
+/// per-layer health stats from `(w_old, w_new, s_new, g)` before the
+/// new weights are stored. Recording is read-only on training state —
+/// see `obs::quant`.
+///
 /// The §3 stochastic-rounding projection (the per-weight hot loop of the
 /// DQT update) fans across `pool`; `sr_scalar` is a pure function of the
 /// weight index, so the partition cannot change a bit of the result. The
@@ -88,6 +95,7 @@ pub(super) fn apply_updates(
     opt: &mut [Vec<f32>],
     lr: f32,
     sr_seed: u32,
+    mut quant: Option<&mut QuantStepRecord>,
 ) -> (f32, f32) {
     let step = opt[0][0] + 1.0;
     opt[0][0] = step;
@@ -119,6 +127,7 @@ pub(super) fn apply_updates(
     let c2 = 1.0 - b2.powf(step);
     let mut changed = 0u64;
     let mut total = 0u64;
+    let mut grid_ord = 0usize;
 
     for (idx, t) in layout.trainables.iter().enumerate() {
         let g = grads[t.param].take().expect("trainable param has a gradient");
@@ -271,6 +280,12 @@ pub(super) fn apply_updates(
                     }
                 }
             };
+            if let Some(q) = quant.as_deref_mut() {
+                if let Some(slot) = q.slots.get_mut(grid_ord) {
+                    slot.record(&params[t.param], &w_new, s_new, qn, qp, &g);
+                }
+            }
+            grid_ord += 1;
             changed += w_new
                 .iter()
                 .zip(params[t.param].iter())

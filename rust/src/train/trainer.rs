@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::data::{loader, Pipeline};
+use crate::obs::quant::QuantStepRecord;
 use crate::obs::trace;
 use crate::obs::TrainObs;
 use crate::quant::sr::hash_u32;
@@ -103,6 +104,13 @@ impl<'a> Trainer<'a> {
         let mut metrics = RunMetrics::new(&m.variant.variant_name, &cfg.dataset);
         self.obs
             .on_run_start(&m.variant.variant_name, &cfg.dataset, 1, cfg.steps);
+        // Pre-size the per-layer quant-health slots once from the manifest so
+        // the per-step recording pass stays allocation-free (see obs/quant.rs).
+        let qlayers = self.vrt.quant_layers();
+        let mut qrec = QuantStepRecord::new(qlayers.len());
+        if !qlayers.is_empty() {
+            self.obs.init_quant(&qlayers);
+        }
         let wall = Instant::now();
         loop {
             // train.step covers fetch → metrics; data_load is the fetch
@@ -119,7 +127,9 @@ impl<'a> Trainer<'a> {
             let lr = sched.lr(step) as f32;
             let seed = step_seed(cfg.seed, step);
             let t0 = Instant::now();
-            let (new_state, sm) = self.vrt.train_step(state, &batch.tokens, seed, lr)?;
+            qrec.reset();
+            let tap = (!qlayers.is_empty()).then_some(&mut qrec);
+            let (new_state, sm) = self.vrt.train_step_quant(state, &batch.tokens, seed, lr, tap)?;
             state = new_state;
             let rec = StepRecord {
                 step,
@@ -130,6 +140,9 @@ impl<'a> Trainer<'a> {
                 step_ms: t0.elapsed().as_secs_f32() * 1e3,
             };
             self.obs.on_step(&rec, sm.fwd_ms, sm.opt_ms);
+            if !qlayers.is_empty() {
+                self.obs.on_quant(step, &qrec);
+            }
             trace::record_interval("train", trace::names::TRAIN_STEP, step_start, Instant::now());
             if cfg.log_every > 0 && step % cfg.log_every == 0 {
                 if let Some(cb) = self.progress.as_mut() {
@@ -177,6 +190,11 @@ impl<'a> Trainer<'a> {
             ex.world() as u32,
             cfg.steps,
         );
+        let qlayers = self.vrt.quant_layers();
+        let mut qrec = QuantStepRecord::new(qlayers.len());
+        if !qlayers.is_empty() {
+            self.obs.init_quant(&qlayers);
+        }
         let wall = Instant::now();
         loop {
             let step_start = Instant::now();
@@ -191,7 +209,9 @@ impl<'a> Trainer<'a> {
             let lr = sched.lr(step) as f32;
             let seed = step_seed(cfg.seed, step);
             let t0 = Instant::now();
-            let (new_state, sm) = self.vrt.train_step_sharded(
+            qrec.reset();
+            let tap = (!qlayers.is_empty()).then_some(&mut qrec);
+            let (new_state, sm) = self.vrt.train_step_sharded_quant(
                 state,
                 &batch.tokens,
                 band,
@@ -200,6 +220,7 @@ impl<'a> Trainer<'a> {
                 seed,
                 lr,
                 ex.reducer(),
+                tap,
             )?;
             state = new_state;
             ex.sync_state(m, &mut state, step)?;
@@ -212,6 +233,9 @@ impl<'a> Trainer<'a> {
                 step_ms: t0.elapsed().as_secs_f32() * 1e3,
             };
             self.obs.on_step(&rec, sm.fwd_ms, sm.opt_ms);
+            if !qlayers.is_empty() {
+                self.obs.on_quant(step, &qrec);
+            }
             trace::record_interval("train", trace::names::TRAIN_STEP, step_start, Instant::now());
             if cfg.log_every > 0 && step % cfg.log_every == 0 {
                 if let Some(cb) = self.progress.as_mut() {
@@ -243,6 +267,7 @@ pub fn train_and_save(
     let mut tr = Trainer::new(vrt, pipeline, cfg);
     let (state, metrics) = tr.run()?;
     metrics.save(out_dir)?;
+    tr.obs.save_quant_health(out_dir)?;
     super::checkpoint::save(
         &out_dir.join("model.dqt"),
         vrt.manifest(),

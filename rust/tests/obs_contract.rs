@@ -20,11 +20,15 @@ fn doc_text() -> String {
 }
 
 /// Every name either bundle registers, deduplicated — the full exported
-/// surface of `/metrics` on serve, train and dist processes.
+/// surface of `/metrics` on serve, train and dist processes. The quant
+/// families only register once a run reveals its grid layers, so one
+/// synthetic layer stands in for the manifest here.
 fn all_metric_names() -> BTreeSet<String> {
     let mut names = BTreeSet::new();
     names.extend(ServeMetrics::new().registry().metric_names());
-    names.extend(TrainObs::new().registry().metric_names());
+    let train = TrainObs::new();
+    train.init_quant(&[("layers.0.wq".to_string(), 1)]);
+    names.extend(train.registry().metric_names());
     names
 }
 
@@ -32,7 +36,7 @@ fn all_metric_names() -> BTreeSet<String> {
 fn every_exported_metric_is_documented() {
     let doc = doc_text();
     let names = all_metric_names();
-    assert!(names.len() >= 25, "registries shrank suspiciously: {names:?}");
+    assert!(names.len() >= 35, "registries shrank suspiciously: {names:?}");
     let missing: Vec<&String> = names.iter().filter(|n| !doc.contains(n.as_str())).collect();
     assert!(
         missing.is_empty(),
@@ -87,12 +91,103 @@ fn allreduce_series_carry_the_format_label() {
     );
 }
 
+/// Per-layer contract, from a real 20-step native run on the test
+/// preset: every quant series' `layer` label value is a manifest grid
+/// param name (and every grid param gets a series), and the run's
+/// `quant_health.json` carries the full documented schema with nonzero
+/// flip counts.
+#[test]
+fn quant_health_layer_labels_and_json_schema_from_a_native_run() {
+    use dqt::config::{Mode, TrainConfig, VariantSpec};
+    use dqt::data::Pipeline;
+    use dqt::runtime::VariantRuntime;
+    use dqt::train::Trainer;
+
+    let spec = VariantSpec::new("test", Mode::Dqt, 1.58);
+    let cfg = spec.model_config().unwrap();
+    let vrt = VariantRuntime::native(&spec).unwrap();
+    let pipeline = Pipeline::build("tiny", 42, cfg.vocab_size, cfg.max_seq_len).unwrap();
+    let tcfg = TrainConfig {
+        steps: 20,
+        warmup_steps: 2,
+        peak_lr: 1e-2,
+        dataset: "tiny".into(),
+        seed: 42,
+        log_every: 0,
+        eval_every: 0,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(&vrt, &pipeline, tcfg);
+    tr.run().unwrap();
+
+    let expected = vrt.quant_layers();
+    assert!(!expected.is_empty(), "the test preset must have grid layers");
+    let text = tr.obs.registry().render();
+    for (name, _) in &expected {
+        assert!(
+            text.contains(&format!("dqt_train_quant_flips_total{{layer=\"{name}\"}}")),
+            "missing per-layer series for {name} in:\n{text}"
+        );
+    }
+
+    let dir = std::env::temp_dir().join("dqt_obs_contract_quant_health");
+    std::fs::remove_dir_all(&dir).ok();
+    tr.obs.save_quant_health(&dir).unwrap();
+    let raw = std::fs::read_to_string(dir.join("quant_health.json")).unwrap();
+    let v = dqt::util::json::parse(&raw).unwrap();
+    assert_eq!(v.get("version").and_then(|x| x.as_u64()), Some(1));
+    assert_eq!(v.get("steps").and_then(|x| x.as_u64()), Some(20));
+    assert!(v.get("anomalies").and_then(|x| x.as_arr()).is_some());
+    let layers = v.get("layers").and_then(|x| x.as_arr()).unwrap();
+    assert_eq!(layers.len(), expected.len());
+    let fields = [
+        "name",
+        "weights",
+        "steps",
+        "flips_total",
+        "flip_rate",
+        "last_flips",
+        "net_upd_grid_steps",
+        "abs_upd_grid_steps",
+        "occupancy",
+        "scale",
+        "scale_drift",
+        "saturation",
+        "zero_frac",
+        "oscillation",
+        "grad_norm",
+    ];
+    for (l, (name, weights)) in layers.iter().zip(&expected) {
+        for f in fields {
+            assert!(l.get(f).is_some(), "layer {name} missing field {f}");
+        }
+        assert_eq!(l.get("name").and_then(|x| x.as_str()), Some(name.as_str()));
+        assert_eq!(l.get("weights").and_then(|x| x.as_u64()), Some(*weights));
+        assert_eq!(l.get("steps").and_then(|x| x.as_u64()), Some(20));
+        let occ: u64 = l
+            .get("occupancy")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_u64().unwrap())
+            .sum();
+        assert_eq!(occ, *weights, "{name}: occupancy must sum to the weight count");
+    }
+    let flips: u64 = layers
+        .iter()
+        .map(|l| l.get("flips_total").unwrap().as_u64().unwrap())
+        .sum();
+    assert!(flips > 0, "SR moved no weights in 20 steps — recording is broken");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn documented_streaming_tags_match_the_wire() {
     // the doc's wire table pins the frame tags and version; a tag or
     // version bump must update the table
     let doc = doc_text();
-    for needle in ["| `1` |", "| `2` |", "| `3` |"] {
+    for needle in ["| `1` |", "| `2` |", "| `3` |", "| `4` |"] {
         assert!(doc.contains(needle), "wire table row {needle} missing");
     }
     assert!(

@@ -1,0 +1,230 @@
+#!/usr/bin/env python3
+"""Validate a train run's quant_health.json against the quant-health
+contract (docs/OBSERVABILITY.md §Quant health). CI's e2e-smoke-train job
+runs this on a real 20-step native run.
+
+Checks:
+  1. The run dir's model.dqt header (the JSON first line of the `.dqt`
+     format, docs/CHECKPOINT_FORMAT.md) names the grid-quantized params —
+     the entries carrying an absmax scale. quant_health.json must report
+     exactly those layers, in manifest order, with matching weight counts.
+  2. Schema: version 1, every documented per-layer field present and
+     finite; fractions in [0, 1]; the 5-bin occupancy histogram sums to
+     the layer's weight count; per-layer steps equals the run's steps.
+  3. Liveness: the run moved weights — total level flips > 0 and the
+     stored lifetime flip_rate is consistent with
+     flips_total / (weights * steps).
+  4. Anomaly verdicts: a Python replica of the three documented detectors
+     (dead layer, saturation, oscillation, thresholds from
+     docs/OBSERVABILITY.md) must agree with the file's `anomalies` array
+     on which (kind, layer) pairs are flagged — so the emitted verdicts
+     can never drift from the documented thresholds. The replica itself
+     is self-tested on a synthetic dead layer before it judges anything.
+
+Usage: check_quant_health.py <run_dir>
+"""
+
+import json
+import math
+import pathlib
+import sys
+
+# thresholds of rust/src/obs/quant.rs, pinned to docs/OBSERVABILITY.md
+DEAD_FLIP_RATE = 1e-4
+DEAD_GNORM_FLOOR = 1e-12
+SATURATION_WARN = 0.9
+OSCILLATION_WARN = 0.6
+
+LAYER_FIELDS = [
+    "name",
+    "weights",
+    "steps",
+    "flips_total",
+    "flip_rate",
+    "last_flips",
+    "net_upd_grid_steps",
+    "abs_upd_grid_steps",
+    "occupancy",
+    "scale",
+    "scale_drift",
+    "saturation",
+    "zero_frac",
+    "oscillation",
+    "grad_norm",
+]
+
+FRACTION_FIELDS = ["flip_rate", "saturation", "zero_frac", "oscillation"]
+
+failures = []
+
+
+def check(ok, msg):
+    if not ok:
+        failures.append(msg)
+
+
+def grid_params_from_checkpoint(path):
+    """(name, numel) for every grid-quantized param, from the .dqt JSON
+    header: exactly the entries written with a non-null absmax scale."""
+    with open(path, "rb") as f:
+        header = json.loads(f.readline().decode("utf-8"))
+    out = []
+    for p in header["params"]:
+        if p.get("scale") is not None:
+            numel = 1
+            for d in p["shape"]:
+                numel *= d
+            out.append((p["name"], numel))
+    return out
+
+
+def replica_verdicts(layers):
+    """The documented anomaly detectors, reimplemented: {(kind, layer)}."""
+    flagged = set()
+    for l in layers:
+        if l["steps"] == 0:
+            continue
+        rate = l["flips_total"] / (l["weights"] * l["steps"]) if l["weights"] else 0.0
+        if rate < DEAD_FLIP_RATE and l["grad_norm"] > DEAD_GNORM_FLOOR:
+            flagged.add(("dead-layer", l["name"]))
+        if l["saturation"] > SATURATION_WARN:
+            flagged.add(("saturation", l["name"]))
+        if l["oscillation"] > OSCILLATION_WARN:
+            flagged.add(("oscillation", l["name"]))
+    return flagged
+
+
+def parse_verdicts(anomalies):
+    """The file's anomaly lines → {(kind, layer)}. Lines are
+    `warn[kind] layer: ...` (rust/src/obs/quant.rs::anomalies)."""
+    out = set()
+    for line in anomalies:
+        if not (line.startswith("warn[") and "] " in line and ":" in line):
+            failures.append(f"unparseable anomaly line {line!r}")
+            continue
+        kind = line[len("warn[") : line.index("]")]
+        layer = line[line.index("] ") + 2 :].split(":", 1)[0]
+        out.add((kind, layer))
+    return out
+
+
+def self_test_replica():
+    """A synthetic dead layer must trip the replica (and a healthy one
+    must not) — guards against the detectors rotting into no-ops."""
+    dead = {
+        "name": "synthetic.dead",
+        "weights": 1000,
+        "steps": 100,
+        "flips_total": 1,  # rate 1e-5 < 1e-4
+        "grad_norm": 0.5,
+        "saturation": 0.0,
+        "oscillation": 0.0,
+    }
+    healthy = {
+        "name": "synthetic.healthy",
+        "weights": 1000,
+        "steps": 100,
+        "flips_total": 5000,
+        "grad_norm": 0.5,
+        "saturation": 0.2,
+        "oscillation": 0.1,
+    }
+    got = replica_verdicts([dead, healthy])
+    assert got == {("dead-layer", "synthetic.dead")}, got
+    # saturation + oscillation fire independently of flips
+    hot = dict(healthy, name="synthetic.hot", saturation=0.95, oscillation=0.7)
+    got = replica_verdicts([hot])
+    assert got == {("saturation", "synthetic.hot"), ("oscillation", "synthetic.hot")}, got
+
+
+def main():
+    if len(sys.argv) != 2:
+        sys.exit(__doc__)
+    self_test_replica()
+    run_dir = pathlib.Path(sys.argv[1])
+    health_path = run_dir / "quant_health.json"
+    ckpt_path = run_dir / "model.dqt"
+    check(health_path.is_file(), f"{health_path} missing")
+    check(ckpt_path.is_file(), f"{ckpt_path} missing")
+    if failures:
+        report()
+
+    h = json.loads(health_path.read_text())
+    check(h.get("version") == 1, f"version {h.get('version')!r} != 1")
+    steps = h.get("steps", 0)
+    check(steps > 0, "run recorded 0 steps")
+    layers = h.get("layers", [])
+    check(isinstance(h.get("anomalies"), list), "anomalies array missing")
+
+    # 1. layer set == the checkpoint manifest's grid params, in order
+    expected = grid_params_from_checkpoint(ckpt_path)
+    check(expected, "checkpoint has no grid-quantized params — wrong run dir?")
+    got = [(l.get("name"), l.get("weights")) for l in layers]
+    check(
+        got == expected,
+        f"layers disagree with the manifest grid params:\n  json: {got}\n  ckpt: {expected}",
+    )
+
+    # 2. schema per layer
+    for l in layers:
+        name = l.get("name", "<unnamed>")
+        for f in LAYER_FIELDS:
+            check(f in l, f"{name}: field {f!r} missing")
+        occ = l.get("occupancy", [])
+        check(
+            isinstance(occ, list) and len(occ) == 5,
+            f"{name}: occupancy must be a 5-bin histogram, got {occ!r}",
+        )
+        if isinstance(occ, list) and all(isinstance(c, int) for c in occ):
+            check(
+                sum(occ) == l.get("weights"),
+                f"{name}: occupancy sums to {sum(occ)}, weights = {l.get('weights')}",
+            )
+        for f in FRACTION_FIELDS:
+            v = l.get(f)
+            if isinstance(v, (int, float)):
+                check(0.0 <= v <= 1.0, f"{name}: {f} = {v} outside [0, 1]")
+        for f in LAYER_FIELDS:
+            v = l.get(f)
+            if isinstance(v, float):
+                check(math.isfinite(v), f"{name}: {f} = {v} is not finite")
+        check(
+            l.get("steps") == steps,
+            f"{name}: layer steps {l.get('steps')} != run steps {steps}",
+        )
+
+    # 3. SR liveness + stored-rate consistency
+    total_flips = sum(l.get("flips_total", 0) for l in layers)
+    check(total_flips > 0, "total flips == 0 — SR recording is broken or the run is dead")
+    for l in layers:
+        if l.get("weights") and l.get("steps"):
+            want = l["flips_total"] / (l["weights"] * l["steps"])
+            got_rate = l.get("flip_rate", -1.0)
+            check(
+                abs(got_rate - want) <= max(1e-9, 1e-5 * want),
+                f"{l['name']}: stored flip_rate {got_rate} != {want}",
+            )
+
+    # 4. emitted verdicts == documented thresholds applied to the data
+    check(
+        parse_verdicts(h.get("anomalies", [])) == replica_verdicts(layers),
+        "anomalies array disagrees with the documented thresholds: "
+        f"file={sorted(parse_verdicts(h.get('anomalies', [])))} "
+        f"replica={sorted(replica_verdicts(layers))}",
+    )
+
+    report()
+
+
+def report():
+    if failures:
+        print(f"check_quant_health: {len(failures)} failure(s)")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("check_quant_health: OK")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()
